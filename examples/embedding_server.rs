@@ -1,0 +1,101 @@
+//! End-to-end serving driver (the mandated e2e validation): train CBE-opt,
+//! start the EmbeddingService (dynamic batching over the compiled PJRT
+//! artifact), index a corpus, serve batched encode+search traffic, and
+//! report latency/throughput + recall. Results are recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example embedding_server`
+
+use cbe::bits::BitCode;
+use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::data::{gather, generate, train_query_split, SynthConfig};
+use cbe::encoders::CbeOpt;
+use cbe::eval::{recall_auc, recall_curve};
+use cbe::fft::Planner;
+use cbe::groundtruth::exact_knn;
+use cbe::opt::TimeFreqConfig;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let d = 2048;
+    let bits = 512;
+    let n_db = 4000;
+    let n_queries = 200;
+    let artifacts = PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        anyhow::bail!("run `make artifacts` first");
+    }
+
+    println!("== embedding server e2e: d={d} bits={bits} db={n_db} ==");
+
+    // Data + training (build phase; python is NOT involved at runtime).
+    let ds = generate(&SynthConfig::imagenet(n_db + n_queries, d, 11));
+    let (db_idx, q_idx) = train_query_split(n_db + n_queries, n_queries, 12);
+    let db_rows = gather(&ds.x, &db_idx);
+    let queries = gather(&ds.x, &q_idx);
+    let train = gather(&ds.x, &db_idx[..800]);
+
+    let t0 = Instant::now();
+    let mut tf = TimeFreqConfig::new(bits);
+    tf.iters = 5;
+    let enc = CbeOpt::train(&train, tf, 13, Planner::new(), None);
+    println!("CBE-opt trained in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Start the service over the compiled artifact.
+    let svc = EmbeddingService::start(
+        &artifacts,
+        ServiceConfig {
+            d,
+            bits,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+            },
+        },
+        enc.proj.r.clone(),
+        enc.proj.signs.clone(),
+    )?;
+
+    // Index the corpus through the serving path (batched).
+    let rows: Vec<Vec<f32>> = (0..db_rows.rows).map(|i| db_rows.row(i).to_vec()).collect();
+    let t0 = Instant::now();
+    let index = svc.build_index(&rows)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "indexed {} vectors in {:.2}s ({:.0} vec/s through PJRT path)",
+        index.len(),
+        dt,
+        index.len() as f64 / dt
+    );
+
+    // Serve query traffic: concurrent async submits (exercises batching).
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..queries.rows)
+        .map(|i| svc.encode_async(queries.row(i).to_vec()).unwrap())
+        .collect();
+    let mut q_codes = BitCode::new(queries.rows, bits);
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.recv()?;
+        q_codes.set_row_from_signs(i, &resp.signs);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "encoded {} queries in {:.3}s → {:.0} qps",
+        queries.rows,
+        dt,
+        queries.rows as f64 / dt
+    );
+
+    // Retrieval quality vs exact ground truth.
+    let gt = exact_knn(&db_rows, &queries, 10);
+    let curve = recall_curve(&index, &q_codes, &gt, 100);
+    println!(
+        "recall@10={:.3} recall@100={:.3} AUC={:.3}",
+        curve[9],
+        curve[99],
+        recall_auc(&curve)
+    );
+    println!("service metrics: {}", svc.metrics.summary(32));
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Domain example: the paper's motivating workload — large-scale image
+//! retrieval with long binary codes. Compares all five high-dim methods at
+//! a fixed time budget (the paper's Figure 2/3/4 first-row regime) on a
+//! synthetic Flickr-like corpus, then prints a ranked leaderboard.
+//!
+//! Run: `cargo run --release --example image_retrieval`
+
+use cbe::experiments::recall_sweep::{run, Corpus, SweepConfig};
+
+fn main() {
+    let mut cfg = SweepConfig::quick(Corpus::Flickr, 2048);
+    cfg.n = 4000;
+    cfg.n_train = 800;
+    cfg.n_queries = 80;
+    cfg.bits = vec![512];
+    println!("running fixed-time + fixed-bits retrieval comparison (d=2048, k=512)…");
+    let result = run(&cfg);
+    println!("{}", result.report);
+
+    // Leaderboard at fixed time (the paper's headline regime).
+    let mut ranked: Vec<_> = result
+        .entries
+        .iter()
+        .filter(|e| e.regime == "fixed-time" || e.method.starts_with("CBE"))
+        .collect();
+    ranked.sort_by(|a, b| b.auc.partial_cmp(&a.auc).unwrap());
+    println!("fixed-time leaderboard (AUC):");
+    for (i, e) in ranked.iter().enumerate() {
+        println!(
+            "  {}. {:<14} bits={:<5} auc={:.3}",
+            i + 1,
+            e.method,
+            e.bits,
+            e.auc
+        );
+    }
+}

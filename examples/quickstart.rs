@@ -1,0 +1,67 @@
+//! Quickstart: train CBE-opt on synthetic data, encode, retrieve.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cbe::bits::BinaryIndex;
+use cbe::data::{gather, generate, train_query_split, SynthConfig};
+use cbe::encoders::{BinaryEncoder, CbeOpt, CbeRand};
+use cbe::eval::{recall_auc, recall_curve};
+use cbe::fft::Planner;
+use cbe::groundtruth::exact_knn;
+use cbe::opt::TimeFreqConfig;
+
+fn main() -> anyhow::Result<()> {
+    let d = 1024; // feature dimension
+    let k = 256; // code bits
+    let n = 3000;
+
+    println!("== CBE quickstart: d={d}, k={k}, n={n} ==");
+
+    // 1. Data: ℓ2-normalized synthetic image-like features.
+    let ds = generate(&SynthConfig::flickr(n, d, 1));
+    let (db_idx, q_idx) = train_query_split(n, 50, 2);
+    let db = gather(&ds.x, &db_idx);
+    let queries = gather(&ds.x, &q_idx);
+    let train = gather(&ds.x, &db_idx[..500]);
+
+    // 2. Train CBE-opt (time–frequency alternating optimization, §4).
+    let mut cfg = TimeFreqConfig::new(k);
+    cfg.iters = 6;
+    let planner = Planner::new();
+    let enc = CbeOpt::train(&train, cfg, 3, planner.clone(), None);
+    println!(
+        "trained CBE-opt; objective {:.1} → {:.1}",
+        enc.objective_trace[1],
+        enc.objective_trace.last().unwrap()
+    );
+
+    // 3. Encode database + queries, build the Hamming index.
+    let index = BinaryIndex::new(enc.encode_batch(&db));
+    let q_codes = enc.encode_batch(&queries);
+
+    // 4. Evaluate recall@R against exact ℓ2 ground truth.
+    let gt = exact_knn(&db, &queries, 10);
+    let curve = recall_curve(&index, &q_codes, &gt, 100);
+    println!(
+        "CBE-opt : recall@10={:.3} recall@100={:.3} AUC={:.3}",
+        curve[9],
+        curve[99],
+        recall_auc(&curve)
+    );
+
+    // 5. Compare with CBE-rand (no training, same speed).
+    let rand = CbeRand::new(d, k, 4, planner);
+    let curve_r = recall_curve(
+        &BinaryIndex::new(rand.encode_batch(&db)),
+        &rand.encode_batch(&queries),
+        &gt,
+        100,
+    );
+    println!(
+        "CBE-rand: recall@10={:.3} recall@100={:.3} AUC={:.3}",
+        curve_r[9],
+        curve_r[99],
+        recall_auc(&curve_r)
+    );
+    Ok(())
+}

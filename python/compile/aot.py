@@ -1,0 +1,122 @@
+"""AOT bridge: lower the L2 graphs to HLO text + a JSON manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--dims 512,2048]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, *specs):
+    """Lower a jax function at the given ShapeDtypeStructs to HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def near_square(d):
+    best = (1, d)
+    f = 1
+    while f * f <= d:
+        if d % f == 0:
+            best = (f, d // f)
+        f += 1
+    return best
+
+
+def build_entries(dims, batch):
+    """The artifact set: one entry per (graph, shape signature)."""
+    entries = []
+    for d in dims:
+        entries.append({
+            "name": f"cbe_encode_d{d}_b{batch}",
+            "fn": model.cbe_encode,
+            "specs": [f32(batch, d), f32(d), f32(d)],
+            "kind": "cbe_encode", "d": d, "batch": batch,
+        })
+        entries.append({
+            "name": f"cbe_project_d{d}_b{batch}",
+            "fn": model.cbe_project,
+            "specs": [f32(batch, d), f32(d), f32(d)],
+            "kind": "cbe_project", "d": d, "batch": batch,
+        })
+        k = min(d, 256)
+        entries.append({
+            "name": f"lsh_encode_d{d}_k{k}_b{batch}",
+            "fn": model.lsh_encode,
+            "specs": [f32(batch, d), f32(k, d)],
+            "kind": "lsh_encode", "d": d, "k": k, "batch": batch,
+        })
+        d1, d2 = near_square(d)
+        k1, k2 = near_square(k)
+        entries.append({
+            "name": f"bilinear_encode_d{d}_k{k}_b{batch}",
+            "fn": model.bilinear_encode,
+            "specs": [f32(batch, d1, d2), f32(d1, k1), f32(d2, k2)],
+            "kind": "bilinear_encode", "d": d, "k": k, "batch": batch,
+            "d1": d1, "d2": d2, "k1": k1, "k2": k2,
+        })
+        entries.append({
+            "name": f"opt_encode_b_d{d}_b{batch}",
+            "fn": model.opt_encode_b,
+            "specs": [f32(batch, d), f32(d)],
+            "kind": "opt_encode_b", "d": d, "batch": batch,
+        })
+        entries.append({
+            "name": f"opt_hg_d{d}_b{batch}",
+            "fn": model.opt_hg,
+            "specs": [f32(batch, d), f32(batch, d)],
+            "kind": "opt_hg", "d": d, "batch": batch,
+        })
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dims", default="512,2048",
+                    help="comma-separated feature dims to compile")
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    dims = [int(t) for t in args.dims.split(",") if t]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"artifacts": []}
+    for e in build_entries(dims, args.batch):
+        text = to_hlo_text(e["fn"], *e["specs"])
+        path = f"{e['name']}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        meta = {k: v for k, v in e.items() if k not in ("fn", "specs")}
+        meta["path"] = path
+        meta["inputs"] = [list(s.shape) for s in e["specs"]]
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""L1 Pallas kernels for the CBE hot paths.
+
+Two kernels:
+
+* ``spectral_hadamard`` — the frequency-domain complex Hadamard product
+  at the center of eq. (10). Tiled over batch rows; each grid step holds
+  one (block_b × D) tile of the four real planes in VMEM.
+* ``sign_matmul`` — blocked projection + binarization used by the LSH and
+  bilinear baselines (and the B-update of §4.1): sign(X·Wᵀ).
+
+Both run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic (real-TPU) custom calls, so kernels lower to plain HLO. TPU
+considerations (VMEM footprint, MXU tiling) are documented in
+DESIGN.md §Hardware-Adaptation and estimated in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------- spectral
+
+def _spectral_hadamard_kernel(x_re_ref, x_im_ref, r_re_ref, r_im_ref,
+                              y_re_ref, y_im_ref):
+    """One batch tile: complex multiply of spectra, elementwise on VPU."""
+    xr = x_re_ref[...]
+    xi = x_im_ref[...]
+    rr = r_re_ref[...]
+    ri = r_im_ref[...]
+    y_re_ref[...] = xr * rr[None, :] - xi * ri[None, :]
+    y_im_ref[...] = xr * ri[None, :] + xi * rr[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def spectral_hadamard(x_re, x_im, r_re, r_im, block_b: int = 8):
+    """Batched complex Hadamard product via Pallas.
+
+    x_re, x_im: [B, D]; r_re, r_im: [D] → (y_re, y_im): [B, D].
+    block_b is shrunk to a divisor of B when needed.
+    """
+    b, d = x_re.shape
+    block_b = _largest_divisor_leq(b, block_b)
+    grid = (b // block_b,)
+    row_spec = pl.BlockSpec((block_b, d), lambda i: (i, 0))
+    filt_spec = pl.BlockSpec((d,), lambda i: (0,))
+    out_shape = jax.ShapeDtypeStruct((b, d), x_re.dtype)
+    y_re, y_im = pl.pallas_call(
+        _spectral_hadamard_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, filt_spec, filt_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(x_re, x_im, r_re, r_im)
+    return y_re, y_im
+
+
+# ---------------------------------------------------------------- matmul
+
+def _sign_matmul_kernel(x_ref, w_ref, o_ref):
+    """One (block_b × block_k) output tile: full-depth matmul + sign."""
+    x = x_ref[...]          # [bb, D]
+    w = w_ref[...]          # [bk, D]
+    y = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.where(y >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is ≤ cap (≥ 1)."""
+    best = 1
+    f = 1
+    while f * f <= n:
+        if n % f == 0:
+            if f <= cap:
+                best = max(best, f)
+            if n // f <= cap:
+                best = max(best, n // f)
+        f += 1
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k"))
+def sign_matmul(x, w, block_b: int = 8, block_k: int = 128):
+    """sign(X · Wᵀ) via Pallas. x: [B, D], w: [K, D] → [B, K] of ±1.
+
+    Grid tiles the output; the D (depth) axis stays whole per tile — the
+    paper's d fits VMEM for the AOT shapes we ship (see DESIGN.md).
+    Block sizes are shrunk to divisors of the actual shape when needed.
+    """
+    b, d = x.shape
+    k, d2 = w.shape
+    assert d == d2, "depth mismatch"
+    block_b = _largest_divisor_leq(b, block_b)
+    block_k = _largest_divisor_leq(k, block_k)
+    grid = (b // block_b, k // block_k)
+    return pl.pallas_call(
+        _sign_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_k), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact reference here; pytest
+pins the kernels to these functions (the CORE correctness signal for L1).
+"""
+
+import jax.numpy as jnp
+
+
+def spectral_hadamard_ref(x_re, x_im, r_re, r_im):
+    """Complex Hadamard product of a batch of spectra with one filter
+    spectrum: Y = X ∘ R, split into real/imag planes.
+
+    x_re, x_im: [B, D] — real/imag parts of FFT(x_i) rows.
+    r_re, r_im: [D]    — real/imag parts of FFT(r).
+    Returns (y_re, y_im): [B, D].
+    """
+    y_re = x_re * r_re[None, :] - x_im * r_im[None, :]
+    y_im = x_re * r_im[None, :] + x_im * r_re[None, :]
+    return y_re, y_im
+
+
+def sign_matmul_ref(x, w):
+    """sign(X @ Wᵀ) with the paper's convention sign(0) = +1.
+
+    x: [B, D], w: [K, D]. Returns [B, K] of ±1 (f32).
+    """
+    y = x @ w.T
+    return jnp.where(y >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def cbe_encode_ref(x, r, signs):
+    """Full-precision reference of the CBE encode pipeline (eq. 10):
+    sign(IFFT(FFT(r) ∘ FFT(D·x))). x: [B, D]; r, signs: [D]."""
+    xf = jnp.fft.fft(x * signs[None, :], axis=-1)
+    rf = jnp.fft.fft(r)
+    y = jnp.fft.ifft(xf * rf[None, :], axis=-1).real
+    return jnp.where(y >= 0, 1.0, -1.0).astype(jnp.float32)

@@ -1,0 +1,97 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+
+These functions are AOT-lowered by ``aot.py`` into HLO-text artifacts that
+the Rust runtime loads — python never runs on the request path.
+
+Graphs:
+
+* ``cbe_encode``       — eq. (10): sign(IFFT(FFT(r) ∘ FFT(D·x))).
+* ``cbe_project``      — same without binarization (for the asymmetric
+                         classification protocol of Table 3).
+* ``lsh_encode``       — sign(X·Wᵀ), the full-projection baseline.
+* ``bilinear_encode``  — sign(R1ᵀ·Z·R2), the bilinear baseline.
+* ``opt_encode_b``     — §4.1 B-update: codes of pre-flipped data.
+* ``opt_hg``           — §4.1 frequency-domain h, g accumulators (the
+                         O(n·d log d) heavy lifting of each iteration; the
+                         O(d) per-bin closed-form solve stays in Rust).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import circulant as kernels
+
+
+def _split_fft(x, axis=-1):
+    f = jnp.fft.fft(x, axis=axis)
+    return f.real.astype(jnp.float32), f.imag.astype(jnp.float32)
+
+
+def cbe_project(x, r, signs):
+    """Circulant projection R·D·x for a batch. x: [B,D]; r, signs: [D].
+
+    Returns the full-precision projections [B, D] (f32).
+    """
+    x_re, x_im = _split_fft(x * signs[None, :])
+    r_re, r_im = _split_fft(r)
+    y_re, y_im = kernels.spectral_hadamard(x_re, x_im, r_re, r_im)
+    y = jnp.fft.ifft(y_re + 1j * y_im, axis=-1).real
+    return y.astype(jnp.float32)
+
+
+def cbe_encode(x, r, signs):
+    """k=d-bit CBE codes as ±1 f32 [B, D] (Rust slices the first k)."""
+    y = cbe_project(x, r, signs)
+    return jnp.where(y >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def lsh_encode(x, w):
+    """LSH baseline: sign(X·Wᵀ). x: [B,D], w: [K,D] → ±1 [B,K]."""
+    return kernels.sign_matmul(x, w)
+
+
+def bilinear_encode(z, r1, r2):
+    """Bilinear baseline: sign(R1ᵀ·Z·R2) flattened to [B, k1·k2].
+
+    z: [B, d1, d2]; r1: [d1, k1]; r2: [d2, k2].
+    The second-stage projection + sign runs through the Pallas sign_matmul
+    kernel (depth = d2 after the first contraction).
+    """
+    b, d1, d2 = z.shape
+    k1 = r1.shape[1]
+    k2 = r2.shape[1]
+    t = jnp.einsum("bij,ik->bkj", z, r1)          # [B, k1, d2]
+    t2 = t.reshape(b * k1, d2)                    # rows to project
+    y = kernels.sign_matmul(t2, r2.T)             # sign(T·R2): [B·k1, k2]
+    return y.reshape(b, k1 * k2)
+
+
+def opt_encode_b(x, r):
+    """§4.1 B-update on pre-flipped data (D already applied): sign(X·Rᵀ)
+    computed via FFT. Returns ±1 f32 [B, D]; Rust zeroes columns ≥ k."""
+    ones = jnp.ones((x.shape[1],), jnp.float32)
+    return cbe_encode(x, r, ones)
+
+
+def opt_hg(x, b):
+    """§4.1 frequency-domain accumulators for a batch:
+
+    h = −2 Σ_i Re(x̃_i)∘Re(b̃_i) + Im(x̃_i)∘Im(b̃_i)
+    g = +2 Σ_i Im(x̃_i)∘Re(b̃_i) − Re(x̃_i)∘Im(b̃_i)
+    m =    Σ_i |x̃_i|²            (per-bin energies)
+
+    x, b: [B, D] (b holds the current binary codes, zero-padded past k).
+    Returns (m, h, g): [D] each. Rust sums across batches and runs the
+    closed-form per-bin solve.
+    """
+    x_re, x_im = _split_fft(x)
+    b_re, b_im = _split_fft(b)
+    # The products are elementwise over [B, D] — route them through the
+    # spectral_hadamard kernel with the conjugate trick:
+    # conj(b̃)∘x̃ = (br·xr + bi·xi) + i(br·xi − bi·xr), so
+    # h = −2 Σ Re(conj(b̃)∘x̃), g = +2 Σ Im(conj(b̃)∘x̃).
+    m = jnp.sum(x_re * x_re + x_im * x_im, axis=0)
+    prod_re = b_re * x_re + b_im * x_im
+    prod_im = b_re * x_im - b_im * x_re
+    h = -2.0 * jnp.sum(prod_re, axis=0)
+    g = 2.0 * jnp.sum(prod_im, axis=0)
+    return m.astype(jnp.float32), h.astype(jnp.float32), g.astype(jnp.float32)

@@ -1,0 +1,44 @@
+"""AOT path: every artifact entry lowers to parseable HLO text and the
+manifest matches what was written."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_build_entries_cover_all_kinds():
+    entries = aot.build_entries([64], batch=8)
+    kinds = {e["kind"] for e in entries}
+    assert kinds == {
+        "cbe_encode", "cbe_project", "lsh_encode",
+        "bilinear_encode", "opt_encode_b", "opt_hg",
+    }
+
+
+def test_lowering_produces_hlo_text():
+    entries = aot.build_entries([32], batch=8)
+    for e in entries:
+        text = aot.to_hlo_text(e["fn"], *e["specs"])
+        assert "HloModule" in text, e["name"]
+        # the CBE graphs must contain real FFT ops (the paper's speedup)
+        if e["kind"].startswith(("cbe", "opt")):
+            assert "fft(" in text, f"{e['name']} lost its FFT"
+
+
+def test_manifest_roundtrip(tmp_path):
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path), "--dims", "16", "--batch", "4"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert len(manifest["artifacts"]) == 6
+    for a in manifest["artifacts"]:
+        p = tmp_path / a["path"]
+        assert p.exists() and p.stat().st_size > 0
+        assert a["inputs"], a

@@ -1,0 +1,79 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import circulant as kernels
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ------------------------------------------------------- spectral_hadamard
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_blocks=st.integers(1, 4),
+    block_b=st.sampled_from([1, 2, 8]),
+    d=st.integers(2, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spectral_hadamard_matches_ref(b_blocks, block_b, d, seed):
+    rng = np.random.default_rng(seed)
+    b = b_blocks * block_b
+    x_re, x_im = rand(rng, b, d), rand(rng, b, d)
+    r_re, r_im = rand(rng, d), rand(rng, d)
+    got_re, got_im = kernels.spectral_hadamard(
+        x_re, x_im, r_re, r_im, block_b=block_b)
+    want_re, want_im = ref.spectral_hadamard_ref(x_re, x_im, r_re, r_im)
+    assert_allclose(got_re, want_re, rtol=1e-5, atol=1e-5)
+    assert_allclose(got_im, want_im, rtol=1e-5, atol=1e-5)
+
+
+def test_spectral_hadamard_shrinks_block_to_divisor():
+    rng = np.random.default_rng(0)
+    # b=3 is not divisible by the requested block of 2; the kernel falls
+    # back to the largest divisor (1) instead of failing.
+    got_re, got_im = kernels.spectral_hadamard(
+        rand(rng, 3, 8), rand(rng, 3, 8), rand(rng, 8), rand(rng, 8),
+        block_b=2)
+    assert got_re.shape == (3, 8) and got_im.shape == (3, 8)
+
+
+# ------------------------------------------------------------ sign_matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_blocks=st.integers(1, 3),
+    k_blocks=st.integers(1, 3),
+    block_b=st.sampled_from([1, 4]),
+    block_k=st.sampled_from([2, 8]),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sign_matmul_matches_ref(b_blocks, k_blocks, block_b, block_k, d, seed):
+    rng = np.random.default_rng(seed)
+    b, k = b_blocks * block_b, k_blocks * block_k
+    x, w = rand(rng, b, d), rand(rng, k, d)
+    got = kernels.sign_matmul(x, w, block_b=block_b, block_k=block_k)
+    want = ref.sign_matmul_ref(x, w)
+    # ±1 outputs: any disagreement is a sign flip at a near-zero projection;
+    # require bitwise equality except where |y| < tol.
+    y = x @ w.T
+    mask = np.abs(y) > 1e-4
+    assert np.array_equal(np.asarray(got)[mask], np.asarray(want)[mask])
+    assert set(np.unique(got)).issubset({-1.0, 1.0})
+
+
+def test_sign_matmul_zero_is_positive():
+    x = np.zeros((4, 8), np.float32)
+    w = np.zeros((8, 8), np.float32)
+    got = kernels.sign_matmul(x, w, block_b=4, block_k=8)
+    assert np.all(np.asarray(got) == 1.0)

@@ -1,0 +1,86 @@
+"""L2 correctness: the jax graphs vs direct dense-math references, plus the
+structural identities the paper relies on (circulant ↔ FFT equivalence)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def circ(r):
+    """Materialize circ(r) per eq. (3): first column r, each column a
+    downward rotation of the previous — R[i, j] = r[(i − j) mod d]."""
+    d = len(r)
+    return np.stack([np.roll(r, j) for j in range(d)], axis=1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(2, 48), seed=st.integers(0, 2**31 - 1))
+def test_cbe_project_equals_dense_circulant(d, seed):
+    rng = np.random.default_rng(seed)
+    b = 8
+    x = rng.standard_normal((b, d)).astype(np.float32)
+    r = rng.standard_normal(d).astype(np.float32)
+    signs = np.where(rng.random(d) < 0.5, 1.0, -1.0).astype(np.float32)
+    got = np.asarray(model.cbe_project(x, r, signs))
+    R = circ(r)
+    want = (x * signs) @ R.T
+    assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+def test_cbe_encode_matches_ref(d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((8, d)).astype(np.float32)
+    r = rng.standard_normal(d).astype(np.float32)
+    signs = np.where(rng.random(d) < 0.5, 1.0, -1.0).astype(np.float32)
+    got = np.asarray(model.cbe_encode(x, r, signs))
+    want = np.asarray(ref.cbe_encode_ref(x, r, signs))
+    y = (x * signs) @ circ(r).T
+    mask = np.abs(y) > 1e-4  # ignore near-zero sign races
+    assert np.array_equal(got[mask], want[mask])
+
+
+def test_bilinear_encode_matches_dense():
+    rng = np.random.default_rng(7)
+    b, d1, d2, k1, k2 = 8, 4, 6, 2, 4
+    z = rng.standard_normal((b, d1, d2)).astype(np.float32)
+    r1 = rng.standard_normal((d1, k1)).astype(np.float32)
+    r2 = rng.standard_normal((d2, k2)).astype(np.float32)
+    got = np.asarray(model.bilinear_encode(z, r1, r2))
+    want = np.sign(np.einsum("bij,ik,jl->bkl", z, r1, r2)).reshape(b, k1 * k2)
+    want[want == 0] = 1
+    y = np.einsum("bij,ik,jl->bkl", z, r1, r2).reshape(b, k1 * k2)
+    mask = np.abs(y) > 1e-4
+    assert np.array_equal(got[mask], want[mask])
+
+
+def test_opt_hg_matches_paper_formulas():
+    rng = np.random.default_rng(11)
+    b, d = 16, 24
+    x = rng.standard_normal((b, d)).astype(np.float32)
+    codes = np.where(rng.random((b, d)) < 0.5, 1.0, -1.0).astype(np.float32)
+    m, h, g = (np.asarray(v) for v in model.opt_hg(x, codes))
+    xf = np.fft.fft(x, axis=-1)
+    bf = np.fft.fft(codes, axis=-1)
+    m_want = np.sum(np.abs(xf) ** 2, axis=0)
+    h_want = -2 * np.sum(xf.real * bf.real + xf.imag * bf.imag, axis=0)
+    g_want = 2 * np.sum(xf.imag * bf.real - xf.real * bf.imag, axis=0)
+    assert_allclose(m, m_want, rtol=1e-3)
+    assert_allclose(h, h_want, rtol=1e-3, atol=1e-2)
+    assert_allclose(g, g_want, rtol=1e-3, atol=1e-2)
+
+
+def test_opt_encode_b_is_unflipped_cbe():
+    rng = np.random.default_rng(13)
+    b, d = 8, 20
+    x = rng.standard_normal((b, d)).astype(np.float32)
+    r = rng.standard_normal(d).astype(np.float32)
+    ones = np.ones(d, np.float32)
+    got = np.asarray(model.opt_encode_b(x, r))
+    want = np.asarray(model.cbe_encode(x, r, ones))
+    assert np.array_equal(got, want)

@@ -1,0 +1,7 @@
+//! Bench: ablations — λ robustness, iteration count, sign-flip diagonal.
+
+fn main() {
+    let full = std::env::var("CBE_BENCH_FULL").is_ok();
+    let r = cbe::experiments::ablations::run(if full { 2048 } else { 256 }, 5);
+    println!("{}", r.report);
+}

@@ -1,0 +1,48 @@
+//! Bench: serving-path throughput/latency of the coordinator (batched PJRT
+//! encode). Not a paper table — the L3 perf target of DESIGN.md §Perf.
+
+use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipping coordinator bench: run `make artifacts` first");
+        return;
+    }
+    let d = 512;
+    let mut rng = Pcg64::new(1);
+    for max_batch in [1usize, 8, 32] {
+        let svc = EmbeddingService::start(
+            &dir,
+            ServiceConfig {
+                d,
+                bits: 256,
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(1),
+                },
+            },
+            rng.normal_vec(d),
+            rng.sign_vec(d),
+        )
+        .unwrap();
+        let n = 512;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n)
+            .map(|_| svc.encode_async(rng.normal_vec(d)).unwrap())
+            .collect();
+        for h in handles {
+            h.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "max_batch={max_batch:<3} {n} reqs in {:.3}s → {:>8.0} enc/s | {}",
+            dt,
+            n as f64 / dt,
+            svc.metrics.summary(max_batch)
+        );
+    }
+}

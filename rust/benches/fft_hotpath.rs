@@ -1,0 +1,23 @@
+//! Perf-pass microbench: the circulant encode hot path (L3's dominant
+//! cost). Reports ms/encode for power-of-two (radix-2) and paper-native
+//! (25600, Bluestein) sizes. Used for the EXPERIMENTS.md §Perf log.
+
+use cbe::bench::Bench;
+use cbe::fft::Planner;
+use cbe::projections::CirculantProjection;
+use cbe::util::rng::Pcg64;
+
+fn main() {
+    let planner = Planner::new();
+    let mut rng = Pcg64::new(1);
+    let mut bench = Bench::new(3, 15);
+    for d in [4096usize, 65536, 25600] {
+        let proj = CirculantProjection::random(d, &mut rng, planner.clone());
+        let x = rng.normal_vec(d);
+        let _ = proj.project(&x); // warm plan cache
+        bench.run(&format!("encode d={d}"), || {
+            std::hint::black_box(proj.encode(std::hint::black_box(&x), 256));
+        });
+    }
+    println!("{}", bench.report("fft hot path"));
+}

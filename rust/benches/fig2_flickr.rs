@@ -1,0 +1,15 @@
+//! Bench: Figure 2 — recall on synth-Flickr, fixed-time and fixed-bits.
+
+use cbe::experiments::recall_sweep::{run, Corpus, SweepConfig};
+
+fn main() {
+    let full = std::env::var("CBE_BENCH_FULL").is_ok();
+    let mut cfg = SweepConfig::quick(Corpus::Flickr, if full { 25600 } else { 1024 });
+    if full {
+        cfg.n = 20_000;
+        cfg.n_train = 2_000;
+        cfg.n_queries = 500;
+    }
+    let r = run(&cfg);
+    println!("{}", r.report);
+}

@@ -1,0 +1,10 @@
+//! Bench: Figure 3 — recall on synth-ImageNet-25600 analogue.
+
+use cbe::experiments::recall_sweep::{run, Corpus, SweepConfig};
+
+fn main() {
+    let full = std::env::var("CBE_BENCH_FULL").is_ok();
+    let cfg = SweepConfig::quick(Corpus::ImageNet, if full { 25600 } else { 1024 });
+    let r = run(&cfg);
+    println!("{}", r.report);
+}

@@ -1,0 +1,11 @@
+//! Bench: Figure 4 — recall on synth-ImageNet-51200 analogue (d doubled
+//! relative to fig3; non-power-of-two to exercise the Bluestein path).
+
+use cbe::experiments::recall_sweep::{run, Corpus, SweepConfig};
+
+fn main() {
+    let full = std::env::var("CBE_BENCH_FULL").is_ok();
+    let cfg = SweepConfig::quick(Corpus::ImageNet, if full { 51200 } else { 2560 });
+    let r = run(&cfg);
+    println!("{}", r.report);
+}

@@ -1,0 +1,16 @@
+//! Bench: Figure 5 — low-dimensional comparison vs ITQ/SH/SKLSH/AQBC.
+
+use cbe::experiments::fig5_lowdim::{run, Fig5Config};
+
+fn main() {
+    let full = std::env::var("CBE_BENCH_FULL").is_ok();
+    let mut cfg = Fig5Config::quick(if full { 2048 } else { 512 });
+    if full {
+        cfg.n = 10_000;
+        cfg.n_train = 1_000;
+        cfg.n_queries = 200;
+        cfg.bits = vec![64, 128, 256, 512];
+    }
+    let r = run(&cfg);
+    println!("{}", r.report);
+}

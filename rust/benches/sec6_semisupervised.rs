@@ -1,0 +1,15 @@
+//! Bench: §6 — semi-supervised CBE AUC delta.
+
+use cbe::experiments::semi_supervised::{run, Sec6Config};
+
+fn main() {
+    let full = std::env::var("CBE_BENCH_FULL").is_ok();
+    let mut cfg = Sec6Config::quick(if full { 2560 } else { 256 });
+    if full {
+        cfg.n = 10_000;
+        cfg.n_train = 1_000;
+        cfg.n_pairs = 2_000;
+    }
+    let r = run(&cfg);
+    println!("{}", r.report);
+}

@@ -1,0 +1,20 @@
+//! Bench: Table 2 — projection time vs d for full/bilinear/circulant.
+//! Run with `cargo bench --bench table2_timing` (add CBE_BENCH_FULL=1 for
+//! the paper-scale dims up to 2^20).
+
+use cbe::experiments::table2_timing::{run, DEFAULT_MEM_BUDGET};
+
+fn main() {
+    let full = std::env::var("CBE_BENCH_FULL").is_ok();
+    let dims: Vec<usize> = if full {
+        vec![1 << 13, 1 << 15, 1 << 17, 1 << 20]
+    } else {
+        vec![1 << 10, 1 << 12, 1 << 14, 1 << 16]
+    };
+    let r = run(&dims, DEFAULT_MEM_BUDGET, 7);
+    println!("{}", r.report);
+    // Shape assertions (the reproduction contract).
+    let last = r.rows.last().unwrap();
+    assert!(last.circulant_ms < last.bilinear_ms,
+        "circulant must beat bilinear at d={}", last.d);
+}

@@ -1,0 +1,15 @@
+//! Bench: Table 3 — classification accuracy on binary-coded features.
+
+use cbe::experiments::table3_classify::{run, Table3Config};
+
+fn main() {
+    let full = std::env::var("CBE_BENCH_FULL").is_ok();
+    let mut cfg = Table3Config::quick(if full { 2560 } else { 256 });
+    if full {
+        cfg.classes = 50;
+        cfg.per_class_train = 100;
+        cfg.per_class_test = 50;
+    }
+    let r = run(&cfg);
+    println!("{}", r.report);
+}

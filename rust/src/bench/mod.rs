@@ -1,0 +1,98 @@
+//! Criterion-lite benchmark harness (no criterion in the vendor set):
+//! warmup, timed iterations, mean/std/p50/p99, ASCII reporting, and a
+//! `cargo bench` entry style with `harness = false`.
+
+use crate::util::table::Table;
+use crate::util::timer::Samples;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Samples,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.samples.mean()
+    }
+}
+
+/// Bench runner with fixed warmup/iteration counts (deterministic wall
+/// budget — this repo benches scaling *shapes*, not nanosecond jitter).
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 2,
+            iters: 7,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Bench {
+        Bench {
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (ms per call) with warmup; records and returns the mean.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> f64 {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Samples::default();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            samples,
+        };
+        let mean = m.mean_ms();
+        self.results.push(m);
+        mean
+    }
+
+    /// Render all measurements as a table.
+    pub fn report(&self, title: &str) -> String {
+        let mut t = Table::new(title, &["bench", "mean ms", "p50 ms", "p99 ms", "std"]);
+        for m in &self.results {
+            t.row(vec![
+                m.name.clone(),
+                format!("{:.3}", m.samples.mean()),
+                format!("{:.3}", m.samples.percentile(50.0)),
+                format!("{:.3}", m.samples.percentile(99.0)),
+                format!("{:.3}", m.samples.std()),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_runs() {
+        let mut b = Bench::new(1, 3);
+        let mean = b.run("noop", || {});
+        assert!(mean >= 0.0);
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].samples.len(), 3);
+        assert!(b.report("t").contains("noop"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Packed binary codes: sign(+) → 1-bit, 64 bits per u64 word.
+
+/// A set of n fixed-length binary codes, bit-packed row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitCode {
+    pub n: usize,
+    pub bits: usize,
+    pub words_per_code: usize,
+    pub data: Vec<u64>,
+}
+
+impl BitCode {
+    pub fn new(n: usize, bits: usize) -> BitCode {
+        let wpc = bits.div_ceil(64);
+        BitCode {
+            n,
+            bits,
+            words_per_code: wpc,
+            data: vec![0u64; n * wpc],
+        }
+    }
+
+    /// Pack rows of ±1 (or arbitrary-sign f32) values; v ≥ 0 → bit set.
+    pub fn from_signs(rows: &[f32], n: usize, bits: usize) -> BitCode {
+        assert_eq!(rows.len(), n * bits);
+        let mut bc = BitCode::new(n, bits);
+        for i in 0..n {
+            let row = &rows[i * bits..(i + 1) * bits];
+            bc.set_row_from_signs(i, row);
+        }
+        bc
+    }
+
+    /// Overwrite code i from a slice of sign values (len == bits).
+    pub fn set_row_from_signs(&mut self, i: usize, signs: &[f32]) {
+        assert_eq!(signs.len(), self.bits);
+        let base = i * self.words_per_code;
+        for w in 0..self.words_per_code {
+            let mut word = 0u64;
+            let lo = w * 64;
+            let hi = (lo + 64).min(self.bits);
+            for (b, &s) in signs[lo..hi].iter().enumerate() {
+                if s >= 0.0 {
+                    word |= 1u64 << b;
+                }
+            }
+            self.data[base + w] = word;
+        }
+    }
+
+    #[inline]
+    pub fn code(&self, i: usize) -> &[u64] {
+        &self.data[i * self.words_per_code..(i + 1) * self.words_per_code]
+    }
+
+    /// Unpack code i back to ±1 f32 values.
+    pub fn to_signs(&self, i: usize) -> Vec<f32> {
+        let code = self.code(i);
+        (0..self.bits)
+            .map(|b| {
+                if code[b / 64] >> (b % 64) & 1 == 1 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_signs() {
+        let mut rng = Pcg64::new(71);
+        for bits in [1usize, 63, 64, 65, 100, 256] {
+            let n = 5;
+            let signs: Vec<f32> = (0..n * bits)
+                .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+                .collect();
+            let bc = BitCode::from_signs(&signs, n, bits);
+            for i in 0..n {
+                assert_eq!(bc.to_signs(i), signs[i * bits..(i + 1) * bits].to_vec());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_positive() {
+        let bc = BitCode::from_signs(&[0.0, -0.0, 1.0, -1.0], 1, 4);
+        // IEEE -0.0 >= 0.0 is true, so both zeros set the bit.
+        assert_eq!(bc.to_signs(0), vec![1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn padding_bits_zero() {
+        let bc = BitCode::from_signs(&vec![1.0; 65], 1, 65);
+        // word 1 must only have bit 0 set.
+        assert_eq!(bc.code(0)[1], 1);
+    }
+}

@@ -1,0 +1,102 @@
+//! XOR + popcount Hamming distance over packed codes.
+
+use super::BitCode;
+
+/// Hamming distance between two packed codes (same word count).
+#[inline]
+pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for i in 0..a.len() {
+        acc += (a[i] ^ b[i]).count_ones();
+    }
+    acc
+}
+
+/// Hamming distance between code i of `a` and code j of `b`.
+#[inline]
+pub fn hamming(a: &BitCode, i: usize, b: &BitCode, j: usize) -> u32 {
+    hamming_words(a.code(i), b.code(j))
+}
+
+/// Distances from query code `q` (packed words) to every code in `db`,
+/// written into `out` (len db.n).
+pub fn hamming_to_all(q: &[u64], db: &BitCode, out: &mut [u32]) {
+    assert_eq!(out.len(), db.n);
+    let wpc = db.words_per_code;
+    match wpc {
+        1 => {
+            let qw = q[0];
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = (qw ^ db.data[i]).count_ones();
+            }
+        }
+        2 => {
+            let (q0, q1) = (q[0], q[1]);
+            for (i, o) in out.iter_mut().enumerate() {
+                let base = i * 2;
+                *o = (q0 ^ db.data[base]).count_ones() + (q1 ^ db.data[base + 1]).count_ones();
+            }
+        }
+        _ => {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = hamming_words(q, db.code(i));
+            }
+        }
+    }
+}
+
+/// Normalized Hamming distance (eq. 11 of the paper) between sign rows.
+pub fn normalized_hamming(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let diff = a
+        .iter()
+        .zip(b)
+        .filter(|(x, y)| (**x >= 0.0) != (**y >= 0.0))
+        .count();
+    diff as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn hamming_known() {
+        let a = BitCode::from_signs(&[1.0, 1.0, -1.0, -1.0], 1, 4);
+        let b = BitCode::from_signs(&[1.0, -1.0, -1.0, 1.0], 1, 4);
+        assert_eq!(hamming(&a, 0, &b, 0), 2);
+    }
+
+    #[test]
+    fn packed_matches_unpacked() {
+        let mut rng = Pcg64::new(81);
+        for bits in [32usize, 64, 128, 200] {
+            let s1: Vec<f32> = rng.sign_vec(bits);
+            let s2: Vec<f32> = rng.sign_vec(bits);
+            let a = BitCode::from_signs(&s1, 1, bits);
+            let b = BitCode::from_signs(&s2, 1, bits);
+            let packed = hamming(&a, 0, &b, 0) as f64 / bits as f64;
+            let unpacked = normalized_hamming(&s1, &s2);
+            assert!((packed - unpacked).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hamming_to_all_consistent() {
+        let mut rng = Pcg64::new(83);
+        for bits in [64usize, 128, 320] {
+            let n = 20;
+            let signs: Vec<f32> = rng.sign_vec(n * bits);
+            let db = BitCode::from_signs(&signs, n, bits);
+            let q: Vec<f32> = rng.sign_vec(bits);
+            let qc = BitCode::from_signs(&q, 1, bits);
+            let mut out = vec![0u32; n];
+            hamming_to_all(qc.code(0), &db, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], hamming(&qc, 0, &db, i));
+            }
+        }
+    }
+}

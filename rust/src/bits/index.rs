@@ -1,0 +1,138 @@
+//! Linear-scan binary index with top-k selection.
+//!
+//! The retrieval engine behind the recall experiments (Figs. 2–5) and the
+//! serving path: stores packed codes, answers k-NN-by-Hamming queries with a
+//! bounded max-heap so selection is O(n log k).
+
+use super::bitcode::BitCode;
+use super::hamming::hamming_to_all;
+use std::collections::BinaryHeap;
+
+/// Immutable binary index over n packed codes.
+pub struct BinaryIndex {
+    pub codes: BitCode,
+    /// Optional external ids (defaults to 0..n).
+    pub ids: Vec<u32>,
+}
+
+/// One retrieval hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hit {
+    pub id: u32,
+    pub dist: u32,
+}
+
+impl BinaryIndex {
+    pub fn new(codes: BitCode) -> BinaryIndex {
+        let ids = (0..codes.n as u32).collect();
+        BinaryIndex { codes, ids }
+    }
+
+    pub fn with_ids(codes: BitCode, ids: Vec<u32>) -> BinaryIndex {
+        assert_eq!(codes.n, ids.len());
+        BinaryIndex { codes, ids }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.n
+    }
+    pub fn is_empty(&self) -> bool {
+        self.codes.n == 0
+    }
+
+    /// Top-k nearest codes by Hamming distance. Ties broken by insertion
+    /// order (stable for reproducibility). Returns hits sorted by distance.
+    pub fn search(&self, query: &[u64], k: usize) -> Vec<Hit> {
+        let n = self.len();
+        let k = k.min(n);
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut dists = vec![0u32; n];
+        hamming_to_all(query, &self.codes, &mut dists);
+        // Bounded max-heap of (dist, insertion idx).
+        let mut heap: BinaryHeap<(u32, u32)> = BinaryHeap::with_capacity(k + 1);
+        for (i, &d) in dists.iter().enumerate() {
+            if heap.len() < k {
+                heap.push((d, i as u32));
+            } else if let Some(&(top, _)) = heap.peek() {
+                if d < top {
+                    heap.pop();
+                    heap.push((d, i as u32));
+                }
+            }
+        }
+        let mut hits: Vec<Hit> = heap
+            .into_iter()
+            .map(|(d, i)| Hit {
+                id: self.ids[i as usize],
+                dist: d,
+            })
+            .collect();
+        hits.sort_by_key(|h| (h.dist, h.id));
+        hits
+    }
+
+    /// Batch search over a BitCode of queries.
+    pub fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        (0..queries.n)
+            .map(|i| self.search(queries.code(i), k))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn search_exact_self() {
+        let mut rng = Pcg64::new(91);
+        let bits = 128;
+        let n = 50;
+        let signs = rng.sign_vec(n * bits);
+        let db = BitCode::from_signs(&signs, n, bits);
+        let idx = BinaryIndex::new(db.clone());
+        for i in [0usize, 17, 49] {
+            let hits = idx.search(db.code(i), 1);
+            assert_eq!(hits[0].id, i as u32);
+            assert_eq!(hits[0].dist, 0);
+        }
+    }
+
+    #[test]
+    fn search_matches_brute_force() {
+        let mut rng = Pcg64::new(93);
+        let bits = 96;
+        let n = 200;
+        let signs = rng.sign_vec(n * bits);
+        let db = BitCode::from_signs(&signs, n, bits);
+        let idx = BinaryIndex::new(db.clone());
+        let q = BitCode::from_signs(&rng.sign_vec(bits), 1, bits);
+        let k = 10;
+        let hits = idx.search(q.code(0), k);
+        // brute force
+        let mut all: Vec<(u32, u32)> = (0..n)
+            .map(|i| {
+                (
+                    super::super::hamming::hamming(&q, 0, &db, i),
+                    i as u32,
+                )
+            })
+            .collect();
+        all.sort();
+        for (h, (d, i)) in hits.iter().zip(all.iter().take(k)) {
+            assert_eq!(h.dist, *d);
+            assert_eq!(h.id, *i);
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let db = BitCode::from_signs(&[1.0, -1.0, 1.0, 1.0], 2, 2);
+        let idx = BinaryIndex::new(db.clone());
+        let hits = idx.search(db.code(0), 10);
+        assert_eq!(hits.len(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Binary-code substrate: bit packing, Hamming distance, top-k retrieval.
+//!
+//! Once codes are generated (by any encoder), retrieval happens entirely in
+//! this module: ±1 codes are packed 64-per-u64 and compared with XOR +
+//! popcount — the operational payoff the paper's embedding exists for.
+
+pub mod bitcode;
+pub mod hamming;
+pub mod index;
+
+pub use bitcode::BitCode;
+pub use index::BinaryIndex;

@@ -1,0 +1,141 @@
+//! Dynamic batcher: accumulate encode requests up to the artifact batch
+//! size or a deadline, whichever first — the same size-or-timeout policy
+//! serving systems (vLLM, Triton) use for GPU batch formation.
+
+use super::request::EncodeRequest;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Hard batch size (the compiled artifact's leading dimension).
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before the batch launches.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Accumulates requests; `pop_ready` hands back a full or expired batch.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    pending: Vec<EncodeRequest>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            pending: Vec::new(),
+            oldest: None,
+        }
+    }
+
+    pub fn push(&mut self, req: EncodeRequest) {
+        if self.pending.is_empty() {
+            self.oldest = Some(req.t_enqueue);
+        }
+        self.pending.push(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// True when a batch should launch now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        if self.pending.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.oldest {
+            Some(t) => now.duration_since(t) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Remove and return up to max_batch requests (oldest first) if ready.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<EncodeRequest>> {
+        if !self.ready(now) {
+            return None;
+        }
+        let take = self.pending.len().min(self.cfg.max_batch);
+        let batch: Vec<EncodeRequest> = self.pending.drain(..take).collect();
+        self.oldest = self.pending.first().map(|r| r.t_enqueue);
+        Some(batch)
+    }
+
+    /// Time until the current oldest request expires (for sleep pacing).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t| {
+            let elapsed = now.duration_since(t);
+            self.cfg.max_wait.saturating_sub(elapsed)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(d: usize) -> EncodeRequest {
+        EncodeRequest::new(vec![0.0; d], d).0
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(60),
+        });
+        let now = Instant::now();
+        for _ in 0..3 {
+            b.push(req(8));
+        }
+        assert!(!b.ready(now));
+        b.push(req(8));
+        assert!(b.ready(now));
+        let batch = b.pop_ready(now).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_fires_partial_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(req(8));
+        let later = Instant::now() + Duration::from_millis(5);
+        assert!(b.ready(later));
+        assert_eq!(b.pop_ready(later).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn overflow_keeps_remainder() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+        });
+        for _ in 0..5 {
+            b.push(req(4));
+        }
+        let now = Instant::now();
+        assert_eq!(b.pop_ready(now).unwrap().len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+}

@@ -1,0 +1,89 @@
+//! Service metrics: counters + latency histogram (log-scale buckets).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed log-scale latency histogram (µs buckets) + counters.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn record_request(&self, latency_us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(latency_us);
+    }
+
+    pub fn record_batch(&self, size: usize, capacity: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_slots
+            .fetch_add((capacity - size) as u64, Ordering::Relaxed);
+    }
+
+    pub fn request_count(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn batch_count(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// (p50, p99, max) request latency in microseconds.
+    pub fn latency_percentiles(&self) -> (u64, u64, u64) {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return (0, 0, 0);
+        }
+        v.sort_unstable();
+        let pick = |p: f64| v[((p * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)];
+        (pick(0.50), pick(0.99), *v.last().unwrap())
+    }
+
+    /// Mean occupancy of launched batches (1.0 = always full).
+    pub fn batch_occupancy(&self, capacity: usize) -> f64 {
+        let batches = self.batch_count();
+        if batches == 0 {
+            return 0.0;
+        }
+        let padded = self.padded_slots.load(Ordering::Relaxed) as f64;
+        1.0 - padded / (batches as f64 * capacity as f64)
+    }
+
+    pub fn summary(&self, capacity: usize) -> String {
+        let (p50, p99, max) = self.latency_percentiles();
+        format!(
+            "requests={} batches={} occupancy={:.2} latency_us p50={} p99={} max={}",
+            self.request_count(),
+            self.batch_count(),
+            self.batch_occupancy(capacity),
+            p50,
+            p99,
+            max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_occupancy() {
+        let m = Metrics::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            m.record_request(us);
+        }
+        m.record_batch(3, 4);
+        m.record_batch(4, 4);
+        let (p50, p99, max) = m.latency_percentiles();
+        assert_eq!(p50, 300);
+        assert_eq!(max, 1000);
+        assert!(p99 >= 400);
+        assert!((m.batch_occupancy(4) - 7.0 / 8.0).abs() < 1e-9);
+        assert!(m.summary(4).contains("requests=5"));
+    }
+}

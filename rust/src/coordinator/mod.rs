@@ -1,0 +1,24 @@
+//! L3 coordinator: the serving layer around the compiled artifacts.
+//!
+//! Architecture (vLLM-router-style, scaled to this paper's workload):
+//!
+//! * [`request`] — typed encode/search requests with completion handles.
+//! * [`batcher`] — dynamic batching: requests accumulate until the
+//!   artifact's batch size is full or a deadline expires, then execute as
+//!   one PJRT call (padding the tail).
+//! * [`router`] — picks the artifact for a request's (kind, d).
+//! * [`metrics`] — latency histograms + throughput counters.
+//! * [`service`] — [`EmbeddingService`]: the public facade wiring encoder
+//!   state, batcher, PJRT engine and the binary retrieval index together.
+
+pub mod request;
+pub mod batcher;
+pub mod router;
+pub mod metrics;
+pub mod service;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{EncodeRequest, EncodeResponse};
+pub use router::Router;
+pub use service::{EmbeddingService, ServiceConfig};

@@ -1,0 +1,62 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A request to encode one vector into a k-bit binary code.
+pub struct EncodeRequest {
+    /// Feature vector (len must match a routed model's d).
+    pub features: Vec<f32>,
+    /// Bits to keep (k ≤ d).
+    pub bits: usize,
+    /// Enqueue timestamp (latency accounting).
+    pub t_enqueue: Instant,
+    /// Completion channel.
+    pub reply: mpsc::Sender<EncodeResponse>,
+}
+
+/// The reply: packed sign bits plus timing breakdown.
+#[derive(Clone, Debug)]
+pub struct EncodeResponse {
+    /// ±1 signs, length = bits requested.
+    pub signs: Vec<f32>,
+    /// Milliseconds spent queued before the batch launched.
+    pub queue_ms: f64,
+    /// Milliseconds of PJRT execution (shared across the batch).
+    pub exec_ms: f64,
+}
+
+impl EncodeRequest {
+    /// Build a request + its receiving handle.
+    pub fn new(features: Vec<f32>, bits: usize) -> (EncodeRequest, mpsc::Receiver<EncodeResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            EncodeRequest {
+                features,
+                bits,
+                t_enqueue: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_roundtrip() {
+        let (req, rx) = EncodeRequest::new(vec![1.0, 2.0], 2);
+        req.reply
+            .send(EncodeResponse {
+                signs: vec![1.0, -1.0],
+                queue_ms: 0.1,
+                exec_ms: 0.2,
+            })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.signs, vec![1.0, -1.0]);
+    }
+}

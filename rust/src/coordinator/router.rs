@@ -1,0 +1,86 @@
+//! Router: maps a request's (kind, feature dim) to a compiled artifact.
+
+use crate::runtime::Manifest;
+use anyhow::{anyhow, Result};
+
+/// Routing table built from the artifact manifest.
+pub struct Router {
+    routes: Vec<RouteEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RouteEntry {
+    pub kind: String,
+    pub d: usize,
+    pub batch: usize,
+    pub artifact: String,
+}
+
+impl Router {
+    pub fn from_manifest(m: &Manifest) -> Router {
+        Router {
+            routes: m
+                .artifacts
+                .iter()
+                .map(|a| RouteEntry {
+                    kind: a.kind.clone(),
+                    d: a.d,
+                    batch: a.batch,
+                    artifact: a.name.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Exact route for (kind, d).
+    pub fn route(&self, kind: &str, d: usize) -> Result<&RouteEntry> {
+        self.routes
+            .iter()
+            .find(|r| r.kind == kind && r.d == d)
+            .ok_or_else(|| anyhow!("no artifact for kind={kind} d={d}; available dims: {:?}",
+                self.dims(kind)))
+    }
+
+    /// Dims served for a kind.
+    pub fn dims(&self, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .routes
+            .iter()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.d)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactMeta;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let mk = |kind: &str, d: usize| ArtifactMeta {
+            name: format!("{kind}_d{d}"),
+            kind: kind.into(),
+            d,
+            batch: 8,
+            k: None,
+            inputs: vec![],
+            path: PathBuf::new(),
+        };
+        Manifest {
+            artifacts: vec![mk("cbe_encode", 64), mk("cbe_encode", 128), mk("lsh_encode", 64)],
+        }
+    }
+
+    #[test]
+    fn routes_exact() {
+        let r = Router::from_manifest(&manifest());
+        assert_eq!(r.route("cbe_encode", 128).unwrap().artifact, "cbe_encode_d128");
+        assert!(r.route("cbe_encode", 99).is_err());
+        assert_eq!(r.dims("cbe_encode"), vec![64, 128]);
+    }
+}

@@ -1,0 +1,266 @@
+//! [`EmbeddingService`]: the public serving facade.
+//!
+//! Owns the PJRT engine, the circulant model parameters (r, D), the
+//! dynamic batcher and the retrieval index. A background worker thread
+//! runs the event loop: drain requests → form batch → one PJRT execute →
+//! scatter replies. The request path is pure Rust + compiled XLA.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{EncodeRequest, EncodeResponse};
+use super::router::Router;
+use crate::bits::{BinaryIndex, BitCode};
+use crate::bits::index::Hit;
+use crate::runtime::Engine;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Feature dimension (must match a compiled artifact).
+    pub d: usize,
+    /// Bits returned per code (k ≤ d).
+    pub bits: usize,
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+}
+
+/// The serving facade. Construct with [`EmbeddingService::start`], submit
+/// with [`EmbeddingService::encode`] / [`encode_async`], stop by dropping.
+pub struct EmbeddingService {
+    tx: mpsc::Sender<EncodeRequest>,
+    pub metrics: Arc<Metrics>,
+    cfg: ServiceConfig,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EmbeddingService {
+    /// Start the service: load artifacts, spawn the batching event loop.
+    /// `r` and `signs` are the circulant model parameters (e.g. from
+    /// CBE-opt training or random for CBE-rand).
+    pub fn start(
+        artifacts_dir: &Path,
+        cfg: ServiceConfig,
+        r: Vec<f32>,
+        signs: Vec<f32>,
+    ) -> Result<EmbeddingService> {
+        assert_eq!(r.len(), cfg.d);
+        assert_eq!(signs.len(), cfg.d);
+        assert!(cfg.bits <= cfg.d);
+
+        let (tx, rx) = mpsc::channel::<EncodeRequest>();
+        let metrics = Arc::new(Metrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // The PJRT client is not Send (Rc internals), so the engine is
+        // constructed ON the worker thread; startup errors come back over
+        // a one-shot channel.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let m2 = Arc::clone(&metrics);
+        let stop2 = Arc::clone(&stop);
+        let cfg2 = cfg.clone();
+        let dir = artifacts_dir.to_path_buf();
+        let worker = std::thread::spawn(move || {
+            let setup = (|| -> Result<(Engine, String, usize)> {
+                let mut engine = Engine::new(&dir)?;
+                let router = Router::from_manifest(engine.manifest());
+                let route = router.route("cbe_encode", cfg2.d)?.clone();
+                engine.load(&route.artifact)?;
+                Ok((engine, route.artifact, route.batch))
+            })();
+            match setup {
+                Ok((engine, artifact, batch)) => {
+                    let _ = ready_tx.send(Ok(batch));
+                    event_loop(engine, artifact, batch, cfg2, r, signs, rx, m2, stop2);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            }
+        });
+        // Propagate startup failure.
+        match ready_rx.recv() {
+            Ok(Ok(_batch)) => {}
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(e);
+            }
+            Err(_) => return Err(anyhow!("service worker died during startup")),
+        }
+
+        Ok(EmbeddingService {
+            tx,
+            metrics,
+            cfg,
+            stop,
+            worker: Some(worker),
+        })
+    }
+
+    /// Fire-and-forget submit; returns the response receiver.
+    pub fn encode_async(&self, features: Vec<f32>) -> Result<mpsc::Receiver<EncodeResponse>> {
+        if features.len() != self.cfg.d {
+            return Err(anyhow!(
+                "feature dim {} != service dim {}",
+                features.len(),
+                self.cfg.d
+            ));
+        }
+        let (req, rx) = EncodeRequest::new(features, self.cfg.bits);
+        self.tx.send(req).map_err(|_| anyhow!("service stopped"))?;
+        Ok(rx)
+    }
+
+    /// Blocking encode.
+    pub fn encode(&self, features: Vec<f32>) -> Result<EncodeResponse> {
+        let rx = self.encode_async(features)?;
+        rx.recv().map_err(|_| anyhow!("service dropped reply"))
+    }
+
+    /// Encode a set of rows into a retrieval index (blocking, batched
+    /// through the same pipeline).
+    pub fn build_index(&self, rows: &[Vec<f32>]) -> Result<BinaryIndex> {
+        let mut codes = BitCode::new(rows.len(), self.cfg.bits);
+        let handles: Vec<_> = rows
+            .iter()
+            .map(|r| self.encode_async(r.clone()))
+            .collect::<Result<_>>()?;
+        for (i, h) in handles.into_iter().enumerate() {
+            let resp = h.recv().map_err(|_| anyhow!("reply lost"))?;
+            codes.set_row_from_signs(i, &resp.signs);
+        }
+        Ok(BinaryIndex::new(codes))
+    }
+
+    /// Encode a query and search an index.
+    pub fn search(&self, index: &BinaryIndex, query: Vec<f32>, topk: usize) -> Result<Vec<Hit>> {
+        let resp = self.encode(query)?;
+        let qc = BitCode::from_signs(&resp.signs, 1, self.cfg.bits);
+        Ok(index.search(qc.code(0), topk))
+    }
+}
+
+impl Drop for EmbeddingService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The batching event loop (runs on the worker thread).
+#[allow(clippy::too_many_arguments)]
+fn event_loop(
+    mut engine: Engine,
+    artifact: String,
+    artifact_batch: usize,
+    cfg: ServiceConfig,
+    r: Vec<f32>,
+    signs: Vec<f32>,
+    rx: mpsc::Receiver<EncodeRequest>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let d = cfg.d;
+    let mut batcher = Batcher::new(BatcherConfig {
+        max_batch: artifact_batch,
+        ..cfg.batcher.clone()
+    });
+    loop {
+        // Pull at least one request (with timeout so we can observe stop).
+        let wait = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(20));
+        match rx.recv_timeout(wait) {
+            Ok(req) => {
+                batcher.push(req);
+                // Opportunistically drain whatever else is queued.
+                while batcher.len() < artifact_batch {
+                    match rx.try_recv() {
+                        Ok(req) => batcher.push(req),
+                        Err(_) => break,
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if batcher.is_empty() {
+                    return;
+                }
+            }
+        }
+        if stop.load(Ordering::SeqCst) && batcher.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        // Disconnected-but-pending: force the flush by pretending deadline.
+        let force = stop.load(Ordering::SeqCst);
+        let ready = batcher.ready(now) || (force && !batcher.is_empty());
+        if !ready {
+            continue;
+        }
+        let batch = match batcher.pop_ready(now) {
+            Some(b) => b,
+            None => {
+                // force path: drain all
+                let mut all = Vec::new();
+                while let Some(mut b) = batcher.pop_ready(Instant::now() + Duration::from_secs(3600)) {
+                    all.append(&mut b);
+                }
+                if all.is_empty() {
+                    continue;
+                }
+                all
+            }
+        };
+
+        // Assemble the padded input tensor [artifact_batch, d].
+        let mut x = vec![0f32; artifact_batch * d];
+        for (i, req) in batch.iter().enumerate() {
+            x[i * d..(i + 1) * d].copy_from_slice(&req.features);
+        }
+        metrics.record_batch(batch.len(), artifact_batch);
+
+        let t0 = Instant::now();
+        let result = engine.execute(
+            &artifact,
+            &[
+                (&x, &[artifact_batch, d]),
+                (&r, &[d]),
+                (&signs, &[d]),
+            ],
+        );
+        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        match result {
+            Ok(outs) => {
+                let codes = &outs[0]; // [artifact_batch, d] of ±1
+                for (i, req) in batch.iter().enumerate() {
+                    let queue_ms =
+                        t0.duration_since(req.t_enqueue).as_secs_f64() * 1e3;
+                    let signs_out = codes[i * d..i * d + req.bits].to_vec();
+                    metrics.record_request(
+                        (Instant::now().duration_since(req.t_enqueue).as_secs_f64() * 1e6)
+                            as u64,
+                    );
+                    let _ = req.reply.send(EncodeResponse {
+                        signs: signs_out,
+                        queue_ms,
+                        exec_ms,
+                    });
+                }
+            }
+            Err(e) => {
+                eprintln!("batch execution failed: {e:#}");
+                // Drop replies — senders see a closed channel.
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! AQBC — Angular Quantization-based Binary Codes (Gong et al. 2012).
+//!
+//! For non-negative data, codes quantize the direction of x onto binary
+//! vertices {0,1}^k maximizing cosine similarity; the bit pattern is found
+//! greedily by sorting coordinates (exact for the unconstrained landmark
+//! problem). A learned rotation (Procrustes, ITQ-style) aligns the data
+//! first. General data is shifted to the non-negative orthant by the
+//! training minimum.
+
+use super::BinaryEncoder;
+use crate::linalg::pca::Pca;
+use crate::linalg::svd::procrustes_rotation;
+use crate::linalg::Mat;
+use crate::linalg::qr::random_orthonormal;
+use crate::util::rng::Pcg64;
+
+pub struct Aqbc {
+    pca: Pca,
+    rot: Mat,
+    shift: Vec<f32>,
+    k: usize,
+}
+
+/// Best binary vertex b ∈ {0,1}^k maximizing cos(v, b): take top-m
+/// coordinates for the m maximizing vᵀb/√m (scan m = 1..k).
+fn best_vertex(v: &[f32]) -> Vec<f32> {
+    let k = v.len();
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| v[b].partial_cmp(&v[a]).unwrap());
+    let mut best_m = 1;
+    let mut best_score = f64::NEG_INFINITY;
+    let mut prefix = 0f64;
+    for m in 1..=k {
+        prefix += v[order[m - 1]] as f64;
+        let score = prefix / (m as f64).sqrt();
+        if score > best_score {
+            best_score = score;
+            best_m = m;
+        }
+    }
+    let mut b = vec![-1.0f32; k]; // report as ±1 for the common BitCode path
+    for &i in order.iter().take(best_m) {
+        b[i] = 1.0;
+    }
+    b
+}
+
+impl Aqbc {
+    pub fn train(x: &Mat, k: usize, iters: usize, seed: u64) -> Aqbc {
+        let pca = Pca::fit(x, k.min(x.cols));
+        let v = pca.transform(x);
+        // Shift to non-negative orthant.
+        let mut shift = vec![0f32; v.cols];
+        for i in 0..v.rows {
+            for j in 0..v.cols {
+                shift[j] = shift[j].min(v[(i, j)]);
+            }
+        }
+        let mut vp = v.clone();
+        for i in 0..vp.rows {
+            for j in 0..vp.cols {
+                vp[(i, j)] -= shift[j];
+            }
+        }
+        let mut rng = Pcg64::new(seed);
+        let mut rot = random_orthonormal(v.cols, &mut rng);
+        for _ in 0..iters {
+            let vr = vp.matmul(&rot);
+            // Quantize each row to its best vertex (in 0/1 space).
+            let mut b = Mat::zeros(vr.rows, vr.cols);
+            for i in 0..vr.rows {
+                let verts = best_vertex(vr.row(i));
+                for j in 0..vr.cols {
+                    b[(i, j)] = if verts[j] > 0.0 { 1.0 } else { 0.0 };
+                }
+            }
+            let m = vp.transpose().matmul(&b);
+            rot = procrustes_rotation(&m);
+        }
+        Aqbc {
+            pca,
+            rot,
+            shift,
+            k,
+        }
+    }
+}
+
+impl BinaryEncoder for Aqbc {
+    fn name(&self) -> &'static str {
+        "AQBC"
+    }
+    fn bits(&self) -> usize {
+        self.k
+    }
+    fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
+        let row = Mat::from_vec(1, x.len(), x.to_vec());
+        let v = self.pca.transform(&row);
+        let mut vp = v.clone();
+        for j in 0..vp.cols {
+            vp[(0, j)] -= self.shift[j];
+        }
+        let vr = vp.matmul(&self.rot);
+        let mut out = best_vertex(vr.row(0));
+        out.truncate(self.k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_vertex_maximizes_cosine() {
+        let v = vec![3.0f32, 0.1, 2.0, -1.0];
+        let b = best_vertex(&v);
+        // brute force over all 2^4 - 1 vertices
+        let cos = |mask: usize| -> f64 {
+            let mut dot = 0f64;
+            let mut cnt = 0f64;
+            for j in 0..4 {
+                if mask >> j & 1 == 1 {
+                    dot += v[j] as f64;
+                    cnt += 1.0;
+                }
+            }
+            dot / cnt.sqrt()
+        };
+        let got_mask = (0..4).fold(0usize, |m, j| m | ((b[j] > 0.0) as usize) << j);
+        let got = cos(got_mask);
+        for mask in 1..16 {
+            assert!(cos(mask) <= got + 1e-9, "mask={mask}");
+        }
+    }
+
+    #[test]
+    fn encode_emits_k_bits() {
+        let mut rng = Pcg64::new(61);
+        let x = Mat::randn(80, 20, &mut rng);
+        let enc = Aqbc::train(&x, 10, 4, 3);
+        let c = enc.encode_signs(x.row(5));
+        assert_eq!(c.len(), 10);
+        assert!(c.iter().all(|v| v.abs() == 1.0));
+        assert!(c.iter().any(|v| *v > 0.0), "at least one bit set");
+    }
+}

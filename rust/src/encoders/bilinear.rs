@@ -1,0 +1,196 @@
+//! Bilinear binary codes (Gong et al. 2013a) — randomized and learned.
+//!
+//! The learned variant alternates three closed-form updates (mirroring the
+//! original paper's ITQ-style procedure, adapted to two factors):
+//!   B  = sign(R1ᵀ Z_i R2)                (binary codes)
+//!   R1 = Procrustes(Σ_i Z_i R2 Bᵢᵀ-ish)  (orthogonal factor 1)
+//!   R2 = Procrustes(Σ_i Z_iᵀ R1 Bᵢ)      (orthogonal factor 2)
+//! with B_i the k1×k2 code matrix of sample i.
+
+use super::BinaryEncoder;
+use crate::linalg::Mat;
+use crate::projections::{bilinear::near_square_factors, BilinearProjection};
+use crate::util::rng::Pcg64;
+
+/// Randomized bilinear codes.
+pub struct BilinearRand {
+    pub proj: BilinearProjection,
+}
+
+impl BilinearRand {
+    pub fn new(d: usize, k: usize, seed: u64) -> BilinearRand {
+        let mut rng = Pcg64::new(seed);
+        BilinearRand {
+            proj: BilinearProjection::random(d, k, &mut rng),
+        }
+    }
+}
+
+impl BinaryEncoder for BilinearRand {
+    fn name(&self) -> &'static str {
+        "Bilinear-rand"
+    }
+    fn bits(&self) -> usize {
+        self.proj.bits()
+    }
+    fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
+        self.proj.encode(x)
+    }
+}
+
+/// Learned bilinear codes.
+pub struct BilinearOpt {
+    pub proj: BilinearProjection,
+}
+
+impl BilinearOpt {
+    /// Train on rows of `x` (d = x.cols), producing k = k1·k2 bits.
+    pub fn train(x: &Mat, k: usize, iters: usize, seed: u64) -> BilinearOpt {
+        let d = x.cols;
+        let (d1, d2) = near_square_factors(d);
+        let (k1, k2) = near_square_factors(k);
+        // Each factor needs orthonormal columns (QR/Procrustes), so clamp
+        // k1 ≤ d1 and k2 ≤ d2; actual bits = self.bits().
+        let (k1, k2) = (k1.min(d1), k2.min(d2));
+        let mut rng = Pcg64::new(seed);
+
+        // Random orthonormal-ish init (QR of gaussian, columns only).
+        let mut r1 = crate::linalg::qr::qr(&Mat::randn(d1, k1, &mut rng)).0;
+        let mut r2 = crate::linalg::qr::qr(&Mat::randn(d2, k2, &mut rng)).0;
+
+        let n = x.rows;
+        for _ in 0..iters {
+            // Accumulate Procrustes targets over samples.
+            let mut m1 = Mat::zeros(d1, k1); // Σ Z_i R2 B_iᵀ → for R1
+            let mut m2 = Mat::zeros(d2, k2); // Σ Z_iᵀ R1 B_i → for R2
+            for i in 0..n {
+                let z = Mat::from_vec(d1, d2, x.row(i).to_vec());
+                let zr2 = z.matmul(&r2); // d1×k2
+                let t = r1.transpose().matmul(&zr2); // k1×k2
+                let b = t.sign();
+                // R1 target: Z R2 Bᵀ (d1×k1)
+                let zb = zr2.matmul(&b.transpose());
+                for idx in 0..m1.data.len() {
+                    m1.data[idx] += zb.data[idx];
+                }
+                // R2 target: Zᵀ R1 B (d2×k2)
+                let ztr1 = z.transpose().matmul(&r1); // d2×k1
+                let zb2 = ztr1.matmul(&b);
+                for idx in 0..m2.data.len() {
+                    m2.data[idx] += zb2.data[idx];
+                }
+            }
+            r1 = orthonormal_factor(&m1);
+            r2 = orthonormal_factor(&m2);
+        }
+
+        BilinearOpt {
+            proj: BilinearProjection {
+                d1,
+                d2,
+                k1,
+                k2,
+                r1,
+                r2,
+            },
+        }
+    }
+}
+
+/// Procrustes solution for a (possibly rectangular) target T (d×k, d ≥ k):
+/// the orthonormal-columns W maximizing tr(WᵀT). Computed via the k×k SVD
+/// of TᵀT: W = T·V·diag(1/s)·Vᵀ (polar factor), falling back to QR when T
+/// is rank-deficient.
+fn orthonormal_factor(t: &Mat) -> Mat {
+    let k = t.cols;
+    let tt = t.transpose().matmul(t); // k×k
+    let (u, s, _v) = crate::linalg::svd::svd_square(&tt);
+    // tt = U diag(s) Uᵀ (symmetric psd) → T^{-1/2}-style polar factor.
+    let mut ok = true;
+    for i in 0..k {
+        if s[i] < 1e-6 {
+            ok = false;
+        }
+    }
+    if !ok {
+        return crate::linalg::qr::qr(t).0;
+    }
+    // inv_sqrt = U diag(1/√s) Uᵀ
+    let mut inv_sqrt = Mat::zeros(k, k);
+    for i in 0..k {
+        for j in 0..k {
+            let mut acc = 0f64;
+            for l in 0..k {
+                acc += u[(i, l)] as f64 / (s[l] as f64).sqrt() * u[(j, l)] as f64;
+            }
+            inv_sqrt[(i, j)] = acc as f32;
+        }
+    }
+    t.matmul(&inv_sqrt)
+}
+
+impl BinaryEncoder for BilinearOpt {
+    fn name(&self) -> &'static str {
+        "Bilinear-opt"
+    }
+    fn bits(&self) -> usize {
+        self.proj.bits()
+    }
+    fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
+        self.proj.encode(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormality_error;
+    use crate::util::l2_normalize;
+
+    #[test]
+    fn trained_factors_orthonormal() {
+        let mut rng = Pcg64::new(21);
+        let n = 50;
+        let d = 36;
+        let mut x = Mat::randn(n, d, &mut rng);
+        for i in 0..n {
+            l2_normalize(x.row_mut(i));
+        }
+        let enc = BilinearOpt::train(&x, 16, 3, 5);
+        assert!(orthonormality_error(&enc.proj.r1) < 1e-3);
+        assert!(orthonormality_error(&enc.proj.r2) < 1e-3);
+        assert_eq!(enc.bits(), 16);
+        let code = enc.encode_signs(x.row(0));
+        assert_eq!(code.len(), 16);
+        assert!(code.iter().all(|c| c.abs() == 1.0));
+    }
+
+    #[test]
+    fn quantization_error_decreases_with_training() {
+        let mut rng = Pcg64::new(22);
+        let n = 80;
+        let d = 64;
+        let mut x = Mat::randn(n, d, &mut rng);
+        for i in 0..n {
+            l2_normalize(x.row_mut(i));
+        }
+        let qerr = |enc: &BilinearProjection| -> f64 {
+            let mut e = 0f64;
+            for i in 0..n {
+                let y = enc.project(x.row(i));
+                for v in y {
+                    let s: f32 = if v >= 0.0 { 1.0 } else { -1.0 };
+                    e += ((s - v) as f64).powi(2);
+                }
+            }
+            e
+        };
+        let rand = BilinearRand::new(d, 16, 9);
+        // Scale-free comparison: normalize rand's projection rows? Instead
+        // compare trained iters=1 vs iters=6 (same pipeline, more descent).
+        let e1 = qerr(&BilinearOpt::train(&x, 16, 1, 9).proj);
+        let e6 = qerr(&BilinearOpt::train(&x, 16, 6, 9).proj);
+        assert!(e6 <= e1 * 1.05, "e6={e6} e1={e1}");
+        let _ = rand; // rand used for API smoke only
+    }
+}

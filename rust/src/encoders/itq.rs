@@ -1,0 +1,91 @@
+//! ITQ — Iterative Quantization (Gong et al. 2013b).
+//!
+//! PCA to k dims, then alternate B = sign(VR) and R = Procrustes(BᵀV) to
+//! minimize quantization error. O(d³)-ish due to PCA — the paper's Figure 5
+//! shows it strong at low d but unable to scale.
+
+use super::BinaryEncoder;
+use crate::linalg::pca::Pca;
+use crate::linalg::svd::procrustes_rotation;
+use crate::linalg::Mat;
+use crate::linalg::qr::random_orthonormal;
+use crate::util::rng::Pcg64;
+
+pub struct Itq {
+    pca: Pca,
+    rot: Mat, // k×k rotation
+    k: usize,
+}
+
+impl Itq {
+    pub fn train(x: &Mat, k: usize, iters: usize, seed: u64) -> Itq {
+        assert!(k <= x.cols);
+        let pca = Pca::fit(x, k);
+        let v = pca.transform(x); // n×k
+        let mut rng = Pcg64::new(seed);
+        let mut rot = random_orthonormal(k, &mut rng);
+        for _ in 0..iters {
+            let vr = v.matmul(&rot);
+            let b = vr.sign();
+            // R = argmin ‖B − VR‖ = Procrustes of VᵀB.
+            let m = v.transpose().matmul(&b); // k×k
+            rot = procrustes_rotation(&m);
+        }
+        Itq { pca, rot, k }
+    }
+}
+
+impl BinaryEncoder for Itq {
+    fn name(&self) -> &'static str {
+        "ITQ"
+    }
+    fn bits(&self) -> usize {
+        self.k
+    }
+    fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
+        let row = Mat::from_vec(1, x.len(), x.to_vec());
+        let v = self.pca.transform(&row);
+        let vr = v.matmul(&self.rot);
+        vr.sign().data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::l2_normalize;
+
+    #[test]
+    fn itq_reduces_quantization_error() {
+        let mut rng = Pcg64::new(31);
+        let n = 120;
+        let d = 24;
+        let k = 8;
+        let mut x = Mat::randn(n, d, &mut rng);
+        for i in 0..n {
+            l2_normalize(x.row_mut(i));
+        }
+        let qerr = |enc: &Itq| -> f64 {
+            let v = enc.pca.transform(&x).matmul(&enc.rot);
+            let b = v.sign();
+            v.data
+                .iter()
+                .zip(&b.data)
+                .map(|(a, s)| ((a - s) as f64).powi(2))
+                .sum()
+        };
+        let e0 = qerr(&Itq::train(&x, k, 0, 7));
+        let e10 = qerr(&Itq::train(&x, k, 10, 7));
+        assert!(e10 < e0, "e10={e10} e0={e0}");
+    }
+
+    #[test]
+    fn codes_are_signs() {
+        let mut rng = Pcg64::new(32);
+        let x = Mat::randn(60, 16, &mut rng);
+        let enc = Itq::train(&x, 8, 5, 3);
+        let code = enc.encode_signs(x.row(0));
+        assert_eq!(code.len(), 8);
+        assert!(code.iter().all(|c| c.abs() == 1.0));
+    }
+}

@@ -1,0 +1,53 @@
+//! LSH baseline: sign(Wx) with dense gaussian W (Charikar 2002).
+//! O(kd) time, O(kd) space — the cost column the paper's Table 1 beats.
+
+use super::BinaryEncoder;
+use crate::projections::FullProjection;
+use crate::util::rng::Pcg64;
+
+pub struct Lsh {
+    pub proj: FullProjection,
+}
+
+impl Lsh {
+    pub fn new(d: usize, k: usize, seed: u64) -> Lsh {
+        let mut rng = Pcg64::new(seed);
+        Lsh {
+            proj: FullProjection::random(k, d, &mut rng),
+        }
+    }
+}
+
+impl BinaryEncoder for Lsh {
+    fn name(&self) -> &'static str {
+        "LSH"
+    }
+    fn bits(&self) -> usize {
+        self.proj.k
+    }
+    fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
+        self.proj.encode(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::hamming::normalized_hamming;
+    use crate::util::{angle, l2_normalize};
+
+    #[test]
+    fn lsh_angle_preservation() {
+        let d = 64;
+        let k = 512;
+        let enc = Lsh::new(d, k, 11);
+        let mut rng = Pcg64::new(12);
+        let mut a = rng.normal_vec(d);
+        let mut b: Vec<f32> = a.iter().map(|v| v + 0.5 * rng.normal() as f32).collect();
+        l2_normalize(&mut a);
+        l2_normalize(&mut b);
+        let theta = angle(&a, &b) as f64;
+        let nh = normalized_hamming(&enc.encode_signs(&a), &enc.encode_signs(&b));
+        assert!((nh - theta / std::f64::consts::PI).abs() < 0.08);
+    }
+}

@@ -1,0 +1,27 @@
+//! Every binary-embedding method the paper evaluates, behind one trait.
+//!
+//! * [`CbeRand`] / [`CbeOpt`] — the paper's contribution (§2–4).
+//! * [`Lsh`] — full gaussian projection (Charikar 2002), the classic
+//!   baseline ("LSH" in the paper's figures).
+//! * [`BilinearRand`] / [`BilinearOpt`] — Gong et al. 2013a, the prior
+//!   state of the art for long codes.
+//! * [`Itq`], [`Sh`], [`Sklsh`], [`Aqbc`] — low-dimensional baselines of
+//!   Figure 5.
+
+pub mod traits;
+pub mod cbe;
+pub mod lsh;
+pub mod bilinear;
+pub mod itq;
+pub mod sh;
+pub mod sklsh;
+pub mod aqbc;
+
+pub use aqbc::Aqbc;
+pub use bilinear::{BilinearOpt, BilinearRand};
+pub use cbe::{CbeOpt, CbeRand};
+pub use itq::Itq;
+pub use lsh::Lsh;
+pub use sh::Sh;
+pub use sklsh::Sklsh;
+pub use traits::BinaryEncoder;

@@ -1,0 +1,109 @@
+//! SH — Spectral Hashing (Weiss et al. 2008).
+//!
+//! PCA, then per-direction eigenfunctions of the 1-D Laplacian on the data
+//! range: bits are sign(sin(π/2 + jπ/range · proj)) for the k smallest
+//! analytical eigenvalues across directions/frequencies.
+
+use super::BinaryEncoder;
+use crate::linalg::pca::Pca;
+use crate::linalg::Mat;
+
+pub struct Sh {
+    pca: Pca,
+    /// Per-bit (pca_dir, mode_j, omega) — sin(omega·(v−lo) + π/2·mode parity)
+    modes: Vec<(usize, f64)>, // (direction, omega_j = jπ/range)
+    los: Vec<f32>,
+    k: usize,
+}
+
+impl Sh {
+    pub fn train(x: &Mat, k: usize, seed: u64) -> Sh {
+        let _ = seed; // deterministic given data
+        let npca = k.min(x.cols);
+        let pca = Pca::fit(x, npca);
+        let v = pca.transform(x);
+        // Per-direction ranges.
+        let mut lo = vec![f32::INFINITY; npca];
+        let mut hi = vec![f32::NEG_INFINITY; npca];
+        for i in 0..v.rows {
+            for j in 0..npca {
+                lo[j] = lo[j].min(v[(i, j)]);
+                hi[j] = hi[j].max(v[(i, j)]);
+            }
+        }
+        // Candidate modes: eigenvalue ∝ (j·π/range)², j = 1..k per direction.
+        let mut cands: Vec<(f64, usize, f64)> = Vec::new(); // (eig, dir, omega)
+        for dir in 0..npca {
+            let range = (hi[dir] - lo[dir]).max(1e-6) as f64;
+            for j in 1..=k {
+                let omega = j as f64 * std::f64::consts::PI / range;
+                cands.push((omega * omega, dir, omega));
+            }
+        }
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let modes: Vec<(usize, f64)> = cands.iter().take(k).map(|c| (c.1, c.2)).collect();
+        Sh {
+            pca,
+            modes,
+            los: lo,
+            k,
+        }
+    }
+}
+
+impl BinaryEncoder for Sh {
+    fn name(&self) -> &'static str {
+        "SH"
+    }
+    fn bits(&self) -> usize {
+        self.k
+    }
+    fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
+        let row = Mat::from_vec(1, x.len(), x.to_vec());
+        let v = self.pca.transform(&row);
+        self.modes
+            .iter()
+            .map(|&(dir, omega)| {
+                let t = (v[(0, dir)] - self.los[dir]) as f64;
+                let val = (omega * t + std::f64::consts::FRAC_PI_2).sin();
+                if val >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn produces_k_sign_bits() {
+        let mut rng = Pcg64::new(41);
+        let x = Mat::randn(100, 32, &mut rng);
+        let enc = Sh::train(&x, 12, 0);
+        let code = enc.encode_signs(x.row(3));
+        assert_eq!(code.len(), 12);
+        assert!(code.iter().all(|c| c.abs() == 1.0));
+    }
+
+    #[test]
+    fn low_frequency_modes_first() {
+        let mut rng = Pcg64::new(42);
+        let x = Mat::randn(200, 16, &mut rng);
+        let enc = Sh::train(&x, 8, 0);
+        // First mode should be the slowest oscillation (j=1 on the widest
+        // direction); nearby points then agree on early bits more often.
+        let a = enc.encode_signs(x.row(0));
+        let mut xb = x.row(0).to_vec();
+        for v in xb.iter_mut() {
+            *v += 1e-4;
+        }
+        let b = enc.encode_signs(&xb);
+        assert_eq!(a[0], b[0]);
+    }
+}

@@ -1,0 +1,57 @@
+//! The common interface every embedding method implements.
+
+use crate::bits::BitCode;
+use crate::linalg::Mat;
+
+/// A trained binary encoder: maps f32 vectors to k-bit codes.
+pub trait BinaryEncoder {
+    /// Human-readable method name (matches the paper's figure legends).
+    fn name(&self) -> &'static str;
+
+    /// Number of output bits.
+    fn bits(&self) -> usize;
+
+    /// Encode one vector to ±1 signs (len == bits()).
+    fn encode_signs(&self, x: &[f32]) -> Vec<f32>;
+
+    /// Encode a batch of rows into a packed BitCode.
+    fn encode_batch(&self, x: &Mat) -> BitCode {
+        let k = self.bits();
+        let mut bc = BitCode::new(x.rows, k);
+        for i in 0..x.rows {
+            let signs = self.encode_signs(x.row(i));
+            bc.set_row_from_signs(i, &signs);
+        }
+        bc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Neg;
+    impl BinaryEncoder for Neg {
+        fn name(&self) -> &'static str {
+            "neg"
+        }
+        fn bits(&self) -> usize {
+            2
+        }
+        fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
+            vec![
+                if x[0] >= 0.0 { 1.0 } else { -1.0 },
+                if x[0] >= 0.0 { -1.0 } else { 1.0 },
+            ]
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let e = Neg;
+        let x = Mat::from_vec(2, 1, vec![3.0, -2.0]);
+        let bc = e.encode_batch(&x);
+        assert_eq!(bc.to_signs(0), vec![1.0, -1.0]);
+        assert_eq!(bc.to_signs(1), vec![-1.0, 1.0]);
+    }
+}

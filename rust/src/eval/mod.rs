@@ -1,0 +1,108 @@
+//! Retrieval evaluation: recall@R curves (the paper's Figures 2–5 metric)
+//! and AUC (the §6 semi-supervised metric).
+
+use crate::bits::{BinaryIndex, BitCode};
+
+/// recall@R for R = 1..max_r, averaged over queries: the fraction of the
+/// true k nearest neighbors found in the top-R Hamming candidates.
+pub fn recall_curve(
+    index: &BinaryIndex,
+    query_codes: &BitCode,
+    groundtruth: &[Vec<u32>],
+    max_r: usize,
+) -> Vec<f64> {
+    assert_eq!(query_codes.n, groundtruth.len());
+    let mut curve = vec![0f64; max_r];
+    let mut counted = 0usize;
+    for (qi, gt) in groundtruth.iter().enumerate() {
+        if gt.is_empty() {
+            continue; // query with no relevant items — undefined recall
+        }
+        counted += 1;
+        let hits = index.search(query_codes.code(qi), max_r);
+        let gtset: std::collections::HashSet<u32> = gt.iter().cloned().collect();
+        let mut found = 0usize;
+        for (rank, h) in hits.iter().enumerate() {
+            if gtset.contains(&h.id) {
+                found += 1;
+            }
+            curve[rank] += found as f64 / gt.len() as f64;
+        }
+        // Tiny index (< max_r hits): remaining ranks keep the final recall.
+        let tail = found as f64 / gt.len() as f64;
+        for rank in hits.len()..max_r {
+            curve[rank] += tail;
+        }
+    }
+    for v in curve.iter_mut() {
+        *v /= counted.max(1) as f64;
+    }
+    curve
+}
+
+/// Area under the recall@R curve, normalized to [0, 1] — the scalar used
+/// for the §6 comparison ("averaged AUC").
+pub fn recall_auc(curve: &[f64]) -> f64 {
+    if curve.is_empty() {
+        return 0.0;
+    }
+    curve.iter().sum::<f64>() / curve.len() as f64
+}
+
+/// Mean of per-position recall at specific cut points (for table output).
+pub fn recall_at(curve: &[f64], points: &[usize]) -> Vec<f64> {
+    points
+        .iter()
+        .map(|p| {
+            if *p == 0 || curve.is_empty() {
+                0.0
+            } else {
+                curve[(*p - 1).min(curve.len() - 1)]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn perfect_codes_have_recall_one() {
+        // Database of distinct codes; each query IS a database item and its
+        // own ground truth → recall@1 = 1.
+        let mut rng = Pcg64::new(9);
+        let bits = 64;
+        let n = 30;
+        let signs = rng.sign_vec(n * bits);
+        let db = BitCode::from_signs(&signs, n, bits);
+        let index = BinaryIndex::new(db.clone());
+        let gt: Vec<Vec<u32>> = (0..n).map(|i| vec![i as u32]).collect();
+        let curve = recall_curve(&index, &db, &gt, 10);
+        assert!(curve[0] > 0.95, "recall@1={}", curve[0]);
+        assert!(curve[9] >= curve[0]);
+    }
+
+    #[test]
+    fn curve_monotone_nondecreasing() {
+        let mut rng = Pcg64::new(10);
+        let bits = 32;
+        let n = 40;
+        let db = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+        let queries = BitCode::from_signs(&rng.sign_vec(5 * bits), 5, bits);
+        let gt: Vec<Vec<u32>> = (0..5).map(|i| vec![i as u32, (i + 1) as u32]).collect();
+        let curve = recall_curve(&BinaryIndex::new(db), &queries, &gt, 20);
+        for w in curve.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+        let auc = recall_auc(&curve);
+        assert!((0.0..=1.0).contains(&auc));
+    }
+
+    #[test]
+    fn recall_at_points() {
+        let curve = vec![0.1, 0.2, 0.3, 0.4];
+        assert_eq!(recall_at(&curve, &[1, 4]), vec![0.1, 0.4]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Figure 5: low-dimensional comparison (Flickr-2048 in the paper) against
+//! methods that do not scale to high d: ITQ, SH, SKLSH, AQBC — plus LSH,
+//! bilinear and both CBE variants. Fixed-bits regime only (as the paper).
+
+use crate::bits::BinaryIndex;
+use crate::data::{gather, generate, train_query_split, SynthConfig};
+use crate::encoders::{
+    Aqbc, BilinearOpt, BinaryEncoder, CbeOpt, CbeRand, Itq, Lsh, Sh, Sklsh,
+};
+use crate::eval::{recall_auc, recall_curve};
+use crate::fft::Planner;
+use crate::groundtruth::exact_knn;
+use crate::opt::TimeFreqConfig;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct Fig5Config {
+    pub d: usize,
+    pub n: usize,
+    pub n_train: usize,
+    pub n_queries: usize,
+    pub gt_k: usize,
+    pub bits: Vec<usize>,
+    pub max_r: usize,
+    pub seed: u64,
+}
+
+impl Fig5Config {
+    pub fn quick(d: usize) -> Fig5Config {
+        Fig5Config {
+            d,
+            n: 2500,
+            n_train: 500,
+            n_queries: 50,
+            gt_k: 10,
+            bits: vec![32, 64, 128],
+            max_r: 100,
+            seed: 512,
+        }
+    }
+}
+
+pub struct Fig5Entry {
+    pub method: String,
+    pub bits: usize,
+    pub auc: f64,
+    pub recall_at_100: f64,
+}
+
+pub struct Fig5Result {
+    pub entries: Vec<Fig5Entry>,
+    pub report: String,
+}
+
+pub fn run(cfg: &Fig5Config) -> Fig5Result {
+    let planner = Planner::new();
+    let ds = generate(&SynthConfig::flickr(cfg.n, cfg.d, cfg.seed));
+    let (train_idx, query_idx) = train_query_split(cfg.n, cfg.n_queries, cfg.seed + 1);
+    let db = gather(&ds.x, &train_idx);
+    let queries = gather(&ds.x, &query_idx);
+    let train = gather(&ds.x, &train_idx[..cfg.n_train.min(train_idx.len())]);
+    let gt = exact_knn(&db, &queries, cfg.gt_k);
+
+    let mut entries = Vec::new();
+    for &k in &cfg.bits {
+        let mut tf = TimeFreqConfig::new(k);
+        tf.iters = 5;
+        let cbe_opt = CbeOpt::train(&train, tf, cfg.seed + 2, planner.clone(), None);
+        let cbe_rand = CbeRand::new(cfg.d, k, cfg.seed + 3, planner.clone());
+        let lsh = Lsh::new(cfg.d, k, cfg.seed + 4);
+        let bil_opt = BilinearOpt::train(&train, k, 3, cfg.seed + 5);
+        let itq = Itq::train(&train, k.min(train.cols), 8, cfg.seed + 6);
+        let sh = Sh::train(&train, k, cfg.seed + 7);
+        let sklsh = Sklsh::new(cfg.d, k, 0.7, cfg.seed + 8);
+        let aqbc = Aqbc::train(&train, k.min(train.cols), 5, cfg.seed + 9);
+
+        let methods: Vec<&dyn BinaryEncoder> = vec![
+            &cbe_opt, &cbe_rand, &lsh, &bil_opt, &itq, &sh, &sklsh, &aqbc,
+        ];
+        for m in methods {
+            let db_codes = m.encode_batch(&db);
+            let q_codes = m.encode_batch(&queries);
+            let index = BinaryIndex::new(db_codes);
+            let curve = recall_curve(&index, &q_codes, &gt, cfg.max_r);
+            entries.push(Fig5Entry {
+                method: m.name().to_string(),
+                bits: k,
+                auc: recall_auc(&curve),
+                recall_at_100: curve.last().cloned().unwrap_or(0.0),
+            });
+        }
+    }
+
+    let mut t = Table::new(
+        &format!("Figure 5 analogue — low-dim (d={}) fixed bits", cfg.d),
+        &["method", "bits", "AUC", "recall@100"],
+    );
+    for e in &entries {
+        t.row(vec![
+            e.method.clone(),
+            format!("{}", e.bits),
+            format!("{:.3}", e.auc),
+            format!("{:.3}", e.recall_at_100),
+        ]);
+    }
+    Fig5Result {
+        entries,
+        report: t.render(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_methods_run_and_beat_chance() {
+        let mut cfg = Fig5Config::quick(64);
+        cfg.n = 500;
+        cfg.n_train = 200;
+        cfg.n_queries = 20;
+        cfg.bits = vec![32];
+        cfg.max_r = 50;
+        let r = run(&cfg);
+        assert_eq!(r.entries.len(), 8);
+        for e in &r.entries {
+            assert!(e.auc > 0.01, "{}: auc={}", e.method, e.auc);
+        }
+        // CBE-opt should be competitive: not the worst method.
+        let cbe = r.entries.iter().find(|e| e.method == "CBE-opt").unwrap().auc;
+        let worst = r
+            .entries
+            .iter()
+            .map(|e| e.auc)
+            .fold(f64::INFINITY, f64::min);
+        assert!(cbe > worst || (cbe - worst).abs() < 1e-9);
+    }
+}

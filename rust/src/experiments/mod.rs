@@ -1,0 +1,14 @@
+//! One driver per paper table/figure (see DESIGN.md §5 for the index).
+//!
+//! Every driver prints the same rows/series the paper reports and returns
+//! the rendered report so benches/tests can assert on the *shape* of the
+//! result (who wins, scaling exponents, crossovers) rather than absolute
+//! numbers from the authors' testbed.
+
+pub mod fig1_variance;
+pub mod table2_timing;
+pub mod recall_sweep;
+pub mod fig5_lowdim;
+pub mod table3_classify;
+pub mod semi_supervised;
+pub mod ablations;

@@ -1,0 +1,265 @@
+//! Figures 2–4: recall@R retrieval comparison on the three (synthetic
+//! stand-in) datasets, in both of the paper's regimes:
+//!
+//! * **fixed-bits** — every method uses the same k; CBE-rand should track
+//!   LSH, CBE-opt should lead, bilinear in between (second rows).
+//! * **fixed-time** — every method gets the time budget CBE needs for k
+//!   bits; slower methods must use fewer bits (first rows). Budgets are
+//!   computed from measured per-vector encode times.
+
+use crate::bits::BinaryIndex;
+use crate::data::{gather, generate, train_query_split, Dataset, SynthConfig};
+use crate::encoders::{BilinearOpt, BilinearRand, BinaryEncoder, CbeOpt, CbeRand, Lsh};
+use crate::eval::{recall_auc, recall_curve};
+use crate::fft::Planner;
+use crate::groundtruth::exact_knn;
+use crate::linalg::Mat;
+use crate::opt::TimeFreqConfig;
+use crate::util::table::Table;
+use crate::util::timer::time_ms;
+
+/// Which dataset of the paper a sweep imitates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corpus {
+    Flickr,   // Fig. 2 (Flickr-25600)
+    ImageNet, // Fig. 3 / Fig. 4 (ImageNet-25600 / 51200)
+}
+
+/// Sweep configuration (dims scaled down by default; see DESIGN.md).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub corpus: Corpus,
+    pub d: usize,
+    pub n: usize,
+    pub n_train: usize,
+    pub n_queries: usize,
+    pub gt_k: usize,
+    pub bits: Vec<usize>,
+    pub max_r: usize,
+    pub opt_iters: usize,
+    pub seed: u64,
+}
+
+impl SweepConfig {
+    pub fn quick(corpus: Corpus, d: usize) -> SweepConfig {
+        SweepConfig {
+            corpus,
+            d,
+            n: 3000,
+            n_train: 600,
+            n_queries: 60,
+            gt_k: 10,
+            bits: vec![d / 8, d / 4, d / 2],
+            max_r: 100,
+            opt_iters: 5,
+            seed: 20140601,
+        }
+    }
+}
+
+/// Result: per (method, bits) the recall curve and its AUC, plus encode
+/// timing used for the fixed-time normalization.
+pub struct SweepResult {
+    pub entries: Vec<SweepEntry>,
+    pub report: String,
+}
+
+pub struct SweepEntry {
+    pub method: String,
+    pub regime: &'static str, // "fixed-bits" | "fixed-time"
+    pub bits: usize,
+    pub encode_ms_per_vec: f64,
+    pub curve: Vec<f64>,
+    pub auc: f64,
+}
+
+fn dataset(cfg: &SweepConfig) -> Dataset {
+    match cfg.corpus {
+        Corpus::Flickr => generate(&SynthConfig::flickr(cfg.n, cfg.d, cfg.seed)),
+        Corpus::ImageNet => generate(&SynthConfig::imagenet(cfg.n, cfg.d, cfg.seed)),
+    }
+}
+
+/// Measure per-vector encode time of an encoder (ms).
+fn encode_time_ms(enc: &dyn BinaryEncoder, x: &Mat, samples: usize) -> f64 {
+    let take = samples.min(x.rows);
+    let (_, ms) = time_ms(|| {
+        for i in 0..take {
+            std::hint::black_box(enc.encode_signs(x.row(i)));
+        }
+    });
+    ms / take as f64
+}
+
+/// Evaluate one encoder at one bit budget; returns (curve, auc, ms/vec).
+fn eval_encoder(
+    enc: &dyn BinaryEncoder,
+    db: &Mat,
+    queries: &Mat,
+    gt: &[Vec<u32>],
+    max_r: usize,
+) -> (Vec<f64>, f64, f64) {
+    let db_codes = enc.encode_batch(db);
+    let q_codes = enc.encode_batch(queries);
+    let index = BinaryIndex::new(db_codes);
+    let curve = recall_curve(&index, &q_codes, gt, max_r);
+    let auc = recall_auc(&curve);
+    let ms = encode_time_ms(enc, queries, 16);
+    (curve, auc, ms)
+}
+
+/// Run the full sweep for one figure.
+pub fn run(cfg: &SweepConfig) -> SweepResult {
+    let planner = Planner::new();
+    let ds = dataset(cfg);
+    let (train_idx, query_idx) = train_query_split(cfg.n, cfg.n_queries, cfg.seed + 1);
+    let db = gather(&ds.x, &train_idx);
+    let queries = gather(&ds.x, &query_idx);
+    let train = gather(&ds.x, &train_idx[..cfg.n_train.min(train_idx.len())]);
+    let gt = exact_knn(&db, &queries, cfg.gt_k);
+
+    let mut entries: Vec<SweepEntry> = Vec::new();
+
+    for &k in &cfg.bits {
+        // ---------------- fixed-bits regime ----------------
+        let cbe_rand = CbeRand::new(cfg.d, k, cfg.seed + 2, planner.clone());
+        let mut tf = TimeFreqConfig::new(k);
+        tf.iters = cfg.opt_iters;
+        let cbe_opt = CbeOpt::train(&train, tf, cfg.seed + 3, planner.clone(), None);
+        let lsh = Lsh::new(cfg.d, k, cfg.seed + 4);
+        let bil_rand = BilinearRand::new(cfg.d, k, cfg.seed + 5);
+        let bil_opt = BilinearOpt::train(&train, k, 3, cfg.seed + 6);
+
+        let methods: Vec<&dyn BinaryEncoder> =
+            vec![&cbe_rand, &cbe_opt, &lsh, &bil_rand, &bil_opt];
+        let mut cbe_ms = 0.0;
+        for m in &methods {
+            let (curve, auc, ms) = eval_encoder(*m, &db, &queries, &gt, cfg.max_r);
+            if m.name() == "CBE-rand" {
+                cbe_ms = ms;
+            }
+            entries.push(SweepEntry {
+                method: m.name().to_string(),
+                regime: "fixed-bits",
+                bits: k,
+                encode_ms_per_vec: ms,
+                curve,
+                auc,
+            });
+        }
+
+        // ---------------- fixed-time regime ----------------
+        // Budget = CBE's encode time for k bits. Slower methods get fewer
+        // bits: scale k by (cbe_ms / method_ms), floor 8 bits.
+        for (name, ms) in entries
+            .iter()
+            .filter(|e| e.regime == "fixed-bits" && e.bits == k)
+            .map(|e| (e.method.clone(), e.encode_ms_per_vec))
+            .collect::<Vec<_>>()
+        {
+            if name.starts_with("CBE") {
+                continue; // CBE defines the budget; its fixed-time = fixed-bits
+            }
+            let scale = (cbe_ms / ms).min(1.0);
+            let kk = ((k as f64 * scale) as usize).max(8).min(cfg.d);
+            let (curve, auc, ms2) = match name.as_str() {
+                "LSH" => {
+                    let e = Lsh::new(cfg.d, kk, cfg.seed + 7);
+                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r)
+                }
+                "Bilinear-rand" => {
+                    let e = BilinearRand::new(cfg.d, kk, cfg.seed + 8);
+                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r)
+                }
+                "Bilinear-opt" => {
+                    let e = BilinearOpt::train(&train, kk, 3, cfg.seed + 9);
+                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r)
+                }
+                _ => continue,
+            };
+            entries.push(SweepEntry {
+                method: name,
+                regime: "fixed-time",
+                bits: kk,
+                encode_ms_per_vec: ms2,
+                curve,
+                auc,
+            });
+        }
+    }
+
+    let title = match cfg.corpus {
+        Corpus::Flickr => format!("Figure 2 analogue — recall, synth-Flickr d={}", cfg.d),
+        Corpus::ImageNet => format!("Figures 3/4 analogue — recall, synth-ImageNet d={}", cfg.d),
+    };
+    let mut t = Table::new(
+        &title,
+        &["regime", "method", "bits", "ms/vec", "recall@10", "recall@100", "AUC"],
+    );
+    for e in &entries {
+        t.row(vec![
+            e.regime.to_string(),
+            e.method.clone(),
+            format!("{}", e.bits),
+            format!("{:.3}", e.encode_ms_per_vec),
+            format!("{:.3}", e.curve.get(9).cloned().unwrap_or(0.0)),
+            format!("{:.3}", e.curve.last().cloned().unwrap_or(0.0)),
+            format!("{:.3}", e.auc),
+        ]);
+    }
+    SweepResult {
+        entries,
+        report: t.render(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepConfig {
+        SweepConfig {
+            corpus: Corpus::ImageNet,
+            d: 128,
+            n: 400,
+            n_train: 150,
+            n_queries: 25,
+            gt_k: 5,
+            bits: vec![64],
+            max_r: 50,
+            opt_iters: 4,
+            seed: 99,
+        }
+    }
+
+    #[test]
+    fn cbe_rand_tracks_lsh_fixed_bits() {
+        // The paper's §3/§5 claim: same bits → CBE-rand ≈ LSH.
+        let r = run(&tiny());
+        let auc = |m: &str| {
+            r.entries
+                .iter()
+                .find(|e| e.method == m && e.regime == "fixed-bits")
+                .unwrap()
+                .auc
+        };
+        let cbe = auc("CBE-rand");
+        let lsh = auc("LSH");
+        assert!(
+            (cbe - lsh).abs() < 0.2,
+            "CBE-rand {cbe} vs LSH {lsh} should be close"
+        );
+    }
+
+    #[test]
+    fn all_methods_better_than_chance() {
+        let r = run(&tiny());
+        for e in &r.entries {
+            assert!(e.auc > 0.02, "{} ({}) auc={}", e.method, e.regime, e.auc);
+            // curves monotone
+            for w in e.curve.windows(2) {
+                assert!(w[1] >= w[0] - 1e-12);
+            }
+        }
+    }
+}

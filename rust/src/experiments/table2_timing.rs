@@ -1,0 +1,123 @@
+//! Table 2: projection time (ms) vs dimensionality for full (LSH-style),
+//! bilinear and circulant projections, single core, k = d bits.
+//!
+//! The paper's machine shows ~d² : d√d : 5·d·log d. Absolute numbers differ
+//! on this testbed; the *shape* (who wins, the growing gap, the memory
+//! wall for full projection) is what the harness reproduces. Configs whose
+//! projection matrix would exceed the memory budget are skipped — exactly
+//! like the paper's empty cells ("larger than the machine limit of 24GB").
+
+use crate::bench::Bench;
+use crate::fft::Planner;
+use crate::projections::{BilinearProjection, CirculantProjection, FullProjection};
+use crate::util::rng::Pcg64;
+use crate::util::table::{fmt_ms, Table};
+
+/// One row of Table 2.
+pub struct TimingRow {
+    pub d: usize,
+    pub full_ms: Option<f64>,
+    pub bilinear_ms: f64,
+    pub circulant_ms: f64,
+}
+
+pub struct Table2Result {
+    pub rows: Vec<TimingRow>,
+    pub report: String,
+}
+
+/// Memory budget for the full projection matrix (bytes).
+pub const DEFAULT_MEM_BUDGET: usize = 2 << 30; // 2 GiB — container-scale 24GB analogue
+
+/// Run the timing sweep. `dims` are the d values (k = d bits throughout,
+/// matching the paper's long-code setting).
+pub fn run(dims: &[usize], mem_budget: usize, seed: u64) -> Table2Result {
+    let planner = Planner::new();
+    let mut rng = Pcg64::new(seed);
+    let mut rows = Vec::new();
+    let mut bench = Bench::new(1, 5);
+
+    for &d in dims {
+        let x = rng.normal_vec(d);
+
+        // Circulant: O(d log d)
+        let circ = CirculantProjection::random(d, &mut rng, planner.clone());
+        let circulant_ms = bench.run(&format!("circulant d={d}"), || {
+            std::hint::black_box(circ.project(std::hint::black_box(&x)));
+        });
+
+        // Bilinear: O(d^1.5)
+        let bil = BilinearProjection::random(d, d, &mut rng);
+        let bilinear_ms = bench.run(&format!("bilinear d={d}"), || {
+            std::hint::black_box(bil.project(std::hint::black_box(&x)));
+        });
+
+        // Full: O(d²) — skipped above the memory wall like the paper.
+        let full_bytes = d.checked_mul(d).and_then(|n| n.checked_mul(4));
+        let full_ms = match full_bytes {
+            Some(b) if b <= mem_budget => {
+                let full = FullProjection::random(d, d, &mut rng);
+                Some(bench.run(&format!("full d={d}"), || {
+                    std::hint::black_box(full.project(std::hint::black_box(&x)));
+                }))
+            }
+            _ => None,
+        };
+
+        rows.push(TimingRow {
+            d,
+            full_ms,
+            bilinear_ms,
+            circulant_ms,
+        });
+    }
+
+    let mut t = Table::new(
+        "Table 2 — projection time (ms), k = d bits, single core",
+        &["d", "Full proj.", "Bilinear proj.", "Circulant proj."],
+    );
+    for r in &rows {
+        t.row(vec![
+            format!("2^{:.0} ({})", (r.d as f64).log2(), r.d),
+            r.full_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
+            fmt_ms(r.bilinear_ms),
+            fmt_ms(r.circulant_ms),
+        ]);
+    }
+    Table2Result {
+        rows,
+        report: t.render(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circulant_wins_at_scale() {
+        // Shape check at CI-friendly sizes: by d = 2^13 the circulant
+        // projection must beat full, and the full/circulant ratio must
+        // grow with d (the paper's whole point).
+        let r = run(&[1 << 10, 1 << 13], usize::MAX, 7);
+        let last = &r.rows[1];
+        let full = last.full_ms.unwrap();
+        assert!(
+            last.circulant_ms < full,
+            "circulant {} !< full {}",
+            last.circulant_ms,
+            full
+        );
+        let first = &r.rows[0];
+        let ratio0 = first.full_ms.unwrap() / first.circulant_ms;
+        let ratio1 = full / last.circulant_ms;
+        assert!(ratio1 > ratio0, "gap must grow: {ratio0} -> {ratio1}");
+    }
+
+    #[test]
+    fn memory_wall_skips_full() {
+        let r = run(&[256], 1024, 8); // budget too small for 256²×4 bytes
+        assert!(r.rows[0].full_ms.is_none());
+        assert!(r.report.contains('-'));
+    }
+}

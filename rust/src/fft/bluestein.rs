@@ -1,0 +1,129 @@
+//! Bluestein's chirp-z transform: FFT of arbitrary length n via a
+//! convolution of length m ≥ 2n−1, m a power of two.
+//!
+//! Needed because the paper's feature dimensions (25,600 and 51,200) are not
+//! powers of two; CBE must still run in O(d log d) for them.
+
+use super::{radix2, C64, Dir};
+
+/// Chirp table w_k = exp(-iπ k²/n), k in [0, n).
+pub fn make_chirp(n: usize) -> Vec<C64> {
+    (0..n)
+        .map(|k| {
+            // k² mod 2n avoids catastrophic angle growth for large k.
+            let kk = (k * k) % (2 * n);
+            C64::cis(-std::f64::consts::PI * kk as f64 / n as f64)
+        })
+        .collect()
+}
+
+/// FFT_m of the Bluestein filter b_k = conj(chirp)_|k| (wrapped support).
+pub fn make_bfft(n: usize, m: usize, chirp: &[C64]) -> Vec<C64> {
+    let mut b = vec![C64::ZERO; m];
+    b[0] = chirp[0].conj();
+    for k in 1..n {
+        let c = chirp[k].conj();
+        b[k] = c;
+        b[m - k] = c;
+    }
+    let tw = radix2::make_twiddles(m);
+    radix2::fft_inplace(&mut b, &tw, Dir::Forward);
+    b
+}
+
+/// Full Bluestein transform of `buf` (len n). Forward or inverse (inverse
+/// includes the 1/n scale). Uses the precomputed chirp, FFT(b) and radix-2
+/// twiddle tables (both directions) plus a caller-provided length-m
+/// scratch buffer — no allocation on the hot path (perf pass).
+#[allow(clippy::too_many_arguments)]
+pub fn transform_with_scratch(
+    buf: &mut [C64],
+    n: usize,
+    m: usize,
+    chirp: &[C64],
+    bfft: &[C64],
+    m_twiddles: &[C64],
+    m_twiddles_inv: &[C64],
+    a: &mut [C64],
+    dir: Dir,
+) {
+    debug_assert_eq!(buf.len(), n);
+    debug_assert_eq!(a.len(), m);
+    // Inverse DFT via conj-forward-conj: IDFT(x) = conj(DFT(conj(x)))/n.
+    if dir == Dir::Inverse {
+        for v in buf.iter_mut() {
+            *v = v.conj();
+        }
+    }
+    // a_k = x_k * chirp_k, zero-padded to m.
+    for k in 0..n {
+        a[k] = buf[k] * chirp[k];
+    }
+    for v in a[n..].iter_mut() {
+        *v = C64::ZERO;
+    }
+    radix2::fft_inplace_tw(a, m_twiddles);
+    for (av, bv) in a.iter_mut().zip(bfft) {
+        *av = *av * *bv;
+    }
+    radix2::fft_inplace_tw(a, m_twiddles_inv);
+    let scale = 1.0 / m as f64;
+    for k in 0..n {
+        buf[k] = a[k].scale(scale) * chirp[k];
+    }
+    if dir == Dir::Inverse {
+        let s = 1.0 / n as f64;
+        for v in buf.iter_mut() {
+            *v = v.conj().scale(s);
+        }
+    }
+}
+
+/// Allocating convenience wrapper (tests / one-off callers).
+pub fn transform(
+    buf: &mut [C64],
+    n: usize,
+    m: usize,
+    chirp: &[C64],
+    bfft: &[C64],
+    m_twiddles: &[C64],
+    dir: Dir,
+) {
+    let inv: Vec<C64> = m_twiddles.iter().map(|c| c.conj()).collect();
+    let mut a = vec![C64::ZERO; m];
+    transform_with_scratch(buf, n, m, chirp, bfft, m_twiddles, &inv, &mut a, dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_naive, Plan};
+
+    #[test]
+    fn odd_sizes_match_naive() {
+        for n in [3usize, 5, 9, 17, 33, 101] {
+            let x: Vec<C64> = (0..n)
+                .map(|i| C64::new((i as f64 * 0.3).sin(), (i as f64 * 1.1).cos()))
+                .collect();
+            let want = dft_naive(&x, Dir::Forward);
+            let plan = Plan::new(n);
+            let mut got = x.clone();
+            plan.transform(&mut got, Dir::Forward);
+            let err = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (*a - *b).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-9 * n as f64, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn chirp_symmetry() {
+        let n = 12;
+        let chirp = make_chirp(n);
+        for k in 0..n {
+            assert!((chirp[k].abs() - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! From-scratch FFT substrate.
+//!
+//! The paper's entire speed claim rests on computing circulant projections
+//! via FFT: `Rx = r ⊛ x = IFFT(FFT(r) ∘ FFT(x))` in O(d log d). The offline
+//! vendor set has no FFT crate, so this module implements:
+//!
+//! * [`complex::C64`] — minimal complex arithmetic,
+//! * [`radix2`] — iterative in-place Cooley–Tukey for power-of-two sizes,
+//! * [`bluestein`] — Bluestein's chirp-z algorithm for arbitrary sizes
+//!   (the paper's datasets are d = 25,600 / 51,200 — *not* powers of two),
+//! * [`real`] — real-input forward/inverse wrappers (half-spectrum),
+//! * [`Planner`] — caches twiddles/chirp tables per size.
+
+pub mod complex;
+pub mod radix2;
+pub mod bluestein;
+pub mod real;
+pub mod realpack;
+
+pub use complex::C64;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Direction of a transform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Forward,
+    Inverse,
+}
+
+/// A prepared FFT plan for one size (twiddle tables precomputed; forward
+/// and inverse tables kept separately so the butterfly loop never branches
+/// on direction — perf pass, see EXPERIMENTS.md §Perf).
+pub struct Plan {
+    pub n: usize,
+    kind: PlanKind,
+}
+
+enum PlanKind {
+    Radix2 {
+        twiddles: Vec<C64>,
+        twiddles_inv: Vec<C64>,
+    },
+    Bluestein {
+        m: usize,
+        chirp: Vec<C64>,          // w_k = exp(-i π k² / n)
+        bfft: Vec<C64>,           // FFT_m of the chirp filter b
+        m_twiddles: Vec<C64>,     // radix-2 twiddles for size m
+        m_twiddles_inv: Vec<C64>, // conjugated table
+        scratch: RefCell<Vec<C64>>, // reusable length-m work buffer
+    },
+}
+
+impl Plan {
+    /// Build a plan for length-n transforms (any n ≥ 1).
+    pub fn new(n: usize) -> Plan {
+        assert!(n >= 1);
+        if n.is_power_of_two() {
+            Plan {
+                n,
+                kind: PlanKind::Radix2 {
+                    twiddles: radix2::make_twiddles(n),
+                    twiddles_inv: radix2::make_twiddles_inv(n),
+                },
+            }
+        } else {
+            let m = (2 * n - 1).next_power_of_two();
+            let chirp = bluestein::make_chirp(n);
+            let bfft = bluestein::make_bfft(n, m, &chirp);
+            Plan {
+                n,
+                kind: PlanKind::Bluestein {
+                    m,
+                    chirp,
+                    bfft,
+                    m_twiddles: radix2::make_twiddles(m),
+                    m_twiddles_inv: radix2::make_twiddles_inv(m),
+                    scratch: RefCell::new(vec![C64::ZERO; m]),
+                },
+            }
+        }
+    }
+
+    /// In-place transform of `buf` (len n). `Inverse` includes the 1/n scale,
+    /// matching numpy's `ifft` convention.
+    pub fn transform(&self, buf: &mut [C64], dir: Dir) {
+        assert_eq!(buf.len(), self.n);
+        match &self.kind {
+            PlanKind::Radix2 {
+                twiddles,
+                twiddles_inv,
+            } => match dir {
+                Dir::Forward => radix2::fft_inplace_tw(buf, twiddles),
+                Dir::Inverse => {
+                    radix2::fft_inplace_tw(buf, twiddles_inv);
+                    let s = 1.0 / self.n as f64;
+                    for v in buf.iter_mut() {
+                        *v = v.scale(s);
+                    }
+                }
+            },
+            PlanKind::Bluestein {
+                m,
+                chirp,
+                bfft,
+                m_twiddles,
+                m_twiddles_inv,
+                scratch,
+            } => {
+                let mut work = scratch.borrow_mut();
+                bluestein::transform_with_scratch(
+                    buf,
+                    self.n,
+                    *m,
+                    chirp,
+                    bfft,
+                    m_twiddles,
+                    m_twiddles_inv,
+                    &mut work,
+                    dir,
+                );
+            }
+        }
+    }
+}
+
+/// Size-keyed plan cache. Cloning is cheap (Rc).
+#[derive(Clone, Default)]
+pub struct Planner {
+    plans: Rc<RefCell<HashMap<usize, Rc<Plan>>>>,
+}
+
+impl Planner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn plan(&self, n: usize) -> Rc<Plan> {
+        let mut map = self.plans.borrow_mut();
+        map.entry(n).or_insert_with(|| Rc::new(Plan::new(n))).clone()
+    }
+
+    /// Forward FFT of a complex buffer (in place).
+    pub fn fft(&self, buf: &mut [C64]) {
+        self.plan(buf.len()).transform(buf, Dir::Forward);
+    }
+
+    /// Inverse FFT (with 1/n scale) of a complex buffer (in place).
+    pub fn ifft(&self, buf: &mut [C64]) {
+        self.plan(buf.len()).transform(buf, Dir::Inverse);
+    }
+}
+
+/// Naive O(n²) DFT — the test oracle for every fast path in this module.
+pub fn dft_naive(x: &[C64], dir: Dir) -> Vec<C64> {
+    let n = x.len();
+    let sign = match dir {
+        Dir::Forward => -1.0,
+        Dir::Inverse => 1.0,
+    };
+    let mut out = vec![C64::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = C64::ZERO;
+        for (m, xm) in x.iter().enumerate() {
+            let ang = sign * 2.0 * std::f64::consts::PI * (k * m % n) as f64 / n as f64;
+            acc = acc + *xm * C64::new(ang.cos(), ang.sin());
+        }
+        *o = acc;
+    }
+    if dir == Dir::Inverse {
+        for o in out.iter_mut() {
+            *o = o.scale(1.0 / n as f64);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut r = Pcg64::new(seed);
+        (0..n).map(|_| C64::new(r.normal(), r.normal())).collect()
+    }
+
+    fn max_err(a: &[C64], b: &[C64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (*x - *y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn fft_matches_naive_pow2() {
+        let planner = Planner::new();
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let x = rand_signal(n, n as u64);
+            let want = dft_naive(&x, Dir::Forward);
+            let mut got = x.clone();
+            planner.fft(&mut got);
+            assert!(max_err(&got, &want) < 1e-9 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_arbitrary() {
+        let planner = Planner::new();
+        for n in [3usize, 5, 6, 12, 100, 360, 1000] {
+            let x = rand_signal(n, 100 + n as u64);
+            let want = dft_naive(&x, Dir::Forward);
+            let mut got = x.clone();
+            planner.fft(&mut got);
+            assert!(max_err(&got, &want) < 1e-8 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ifft_inverts_fft() {
+        let planner = Planner::new();
+        for n in [4usize, 7, 25, 64, 100, 25_600 / 100] {
+            let x = rand_signal(n, 7 + n as u64);
+            let mut y = x.clone();
+            planner.fft(&mut y);
+            planner.ifft(&mut y);
+            assert!(max_err(&y, &x) < 1e-9 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let planner = Planner::new();
+        let n = 128;
+        let x = rand_signal(n, 5);
+        let e_time: f64 = x.iter().map(|c| c.abs() * c.abs()).sum();
+        let mut y = x.clone();
+        planner.fft(&mut y);
+        let e_freq: f64 = y.iter().map(|c| c.abs() * c.abs()).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-8 * e_time);
+    }
+
+    #[test]
+    fn paper_sizes() {
+        // d = 25,600 and 51,200 are not powers of two; Bluestein must handle
+        // them (spot-check round-trip at reduced cost via 25600/10).
+        let planner = Planner::new();
+        let n = 2560;
+        let x = rand_signal(n, 9);
+        let mut y = x.clone();
+        planner.fft(&mut y);
+        planner.ifft(&mut y);
+        assert!(max_err(&y, &x) < 1e-8);
+    }
+
+    #[test]
+    fn plan_cache_reuses() {
+        let planner = Planner::new();
+        let p1 = planner.plan(64);
+        let p2 = planner.plan(64);
+        assert!(Rc::ptr_eq(&p1, &p2));
+    }
+}

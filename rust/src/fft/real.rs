@@ -1,0 +1,104 @@
+//! Real-input FFT wrappers.
+//!
+//! CBE's signals (data vectors and the circulant parameter r) are real, so
+//! their spectra are conjugate-symmetric: F(t)_{d-i} = conj(F(t)_i). The
+//! learning step of §4 works directly on the half-spectrum; these helpers
+//! convert between real time-domain slices and full complex spectra.
+
+use super::{C64, Planner};
+
+/// Forward FFT of a real signal → full complex spectrum (len n).
+pub fn rfft_full(planner: &Planner, x: &[f32]) -> Vec<C64> {
+    let mut buf: Vec<C64> = x.iter().map(|v| C64::new(*v as f64, 0.0)).collect();
+    planner.fft(&mut buf);
+    buf
+}
+
+/// Inverse FFT of a conjugate-symmetric spectrum → real signal (len n).
+/// The imaginary residue (numerical noise) is dropped.
+pub fn irfft_full(planner: &Planner, spec: &[C64]) -> Vec<f32> {
+    let mut buf = spec.to_vec();
+    planner.ifft(&mut buf);
+    buf.iter().map(|c| c.re as f32).collect()
+}
+
+/// Enforce exact conjugate symmetry on a spectrum in place (projects onto
+/// the set of spectra of real signals): F_0 real, F_{n-i} = conj(F_i).
+pub fn symmetrize(spec: &mut [C64]) {
+    let n = spec.len();
+    if n == 0 {
+        return;
+    }
+    spec[0] = C64::new(spec[0].re, 0.0);
+    if n % 2 == 0 {
+        spec[n / 2] = C64::new(spec[n / 2].re, 0.0);
+    }
+    for i in 1..=(n - 1) / 2 {
+        let avg = (spec[i] + spec[n - i].conj()).scale(0.5);
+        spec[i] = avg;
+        spec[n - i] = avg.conj();
+    }
+}
+
+/// Max deviation from conjugate symmetry (diagnostic / tests).
+pub fn symmetry_error(spec: &[C64]) -> f64 {
+    let n = spec.len();
+    let mut err = spec[0].im.abs();
+    if n % 2 == 0 {
+        err = err.max(spec[n / 2].im.abs());
+    }
+    for i in 1..=(n.saturating_sub(1)) / 2 {
+        err = err.max((spec[i] - spec[n - i].conj()).abs());
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn real_roundtrip() {
+        let planner = Planner::new();
+        let mut r = Pcg64::new(21);
+        for n in [8usize, 15, 64, 100] {
+            let x: Vec<f32> = (0..n).map(|_| r.normal() as f32).collect();
+            let spec = rfft_full(&planner, &x);
+            assert!(symmetry_error(&spec) < 1e-9, "n={n}");
+            let back = irfft_full(&planner, &spec);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetrize_idempotent_and_projects() {
+        let mut r = Pcg64::new(23);
+        for n in [6usize, 7, 16] {
+            let mut spec: Vec<C64> = (0..n).map(|_| C64::new(r.normal(), r.normal())).collect();
+            symmetrize(&mut spec);
+            assert!(symmetry_error(&spec) < 1e-12);
+            let snap = spec.clone();
+            symmetrize(&mut spec);
+            for (a, b) in spec.iter().zip(&snap) {
+                assert!((*a - *b).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_spectrum_gives_real_signal() {
+        let planner = Planner::new();
+        let mut r = Pcg64::new(29);
+        let n = 32;
+        let mut spec: Vec<C64> = (0..n).map(|_| C64::new(r.normal(), r.normal())).collect();
+        symmetrize(&mut spec);
+        let mut buf = spec.clone();
+        planner.ifft(&mut buf);
+        for c in &buf {
+            assert!(c.im.abs() < 1e-10);
+        }
+    }
+}

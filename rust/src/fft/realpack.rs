@@ -1,0 +1,171 @@
+//! Real-input FFT via half-size complex FFT (the "pack two reals into one
+//! complex" trick, Numerical Recipes `realft` lineage).
+//!
+//! CBE's signals — data vectors, the circulant parameter r, and the
+//! projections — are all real, so every transform in the encode hot path
+//! can run at half size: a d-point real FFT costs one (d/2)-point complex
+//! FFT plus O(d) untangling. Perf pass iteration 3 (EXPERIMENTS.md §Perf):
+//! ~1.8× on the dominant cost.
+//!
+//! Conventions: `rfft_half` returns the half-spectrum X[0..=h] (h = d/2,
+//! inclusive of the Nyquist bin; X[0] and X[h] are real). `irfft_half`
+//! inverts it including the 1/d scale.
+
+use super::{C64, Planner};
+
+/// Precomputed tables for one even length d.
+pub struct RealPackPlan {
+    pub d: usize,
+    h: usize,
+    /// W_d^k = e^{-2πik/d}, k = 0..h.
+    w_fwd: Vec<C64>,
+    /// W_d^{-k}, k = 0..h.
+    w_inv: Vec<C64>,
+    planner: Planner,
+    scratch: std::cell::RefCell<Vec<C64>>,
+}
+
+impl RealPackPlan {
+    /// d must be even (callers fall back to the full-complex path if not).
+    pub fn new(d: usize, planner: Planner) -> RealPackPlan {
+        assert!(d >= 2 && d % 2 == 0, "RealPackPlan requires even d");
+        let h = d / 2;
+        let w_fwd: Vec<C64> = (0..=h)
+            .map(|k| C64::cis(-2.0 * std::f64::consts::PI * k as f64 / d as f64))
+            .collect();
+        let w_inv: Vec<C64> = w_fwd.iter().map(|c| c.conj()).collect();
+        // Prime the half-size plan now (not on the first hot call).
+        planner.plan(h);
+        RealPackPlan {
+            d,
+            h,
+            w_fwd,
+            w_inv,
+            planner,
+            scratch: std::cell::RefCell::new(vec![C64::ZERO; h]),
+        }
+    }
+
+    /// Forward real FFT: x (len d, real) → half spectrum (len h+1).
+    /// `pre_scale` multiplies inputs on the fly (used for the D sign flips).
+    pub fn rfft(&self, x: &[f32], pre_scale: Option<&[f32]>, out: &mut [C64]) {
+        assert_eq!(x.len(), self.d);
+        assert_eq!(out.len(), self.h + 1);
+        let h = self.h;
+        let mut z = self.scratch.borrow_mut();
+        match pre_scale {
+            Some(s) => {
+                for k in 0..h {
+                    z[k] = C64::new(
+                        (x[2 * k] * s[2 * k]) as f64,
+                        (x[2 * k + 1] * s[2 * k + 1]) as f64,
+                    );
+                }
+            }
+            None => {
+                for k in 0..h {
+                    z[k] = C64::new(x[2 * k] as f64, x[2 * k + 1] as f64);
+                }
+            }
+        }
+        self.planner.fft(&mut z);
+        // Untangle: F_even[k] = (Z[k] + Z*[h-k])/2,
+        //           F_odd[k]  = -i (Z[k] - Z*[h-k])/2,
+        //           X[k] = F_even[k] + W_d^k F_odd[k].
+        let zk0 = z[0];
+        out[0] = C64::new(zk0.re + zk0.im, 0.0);
+        out[h] = C64::new(zk0.re - zk0.im, 0.0);
+        for k in 1..h {
+            let a = z[k];
+            let b = z[h - k].conj();
+            let fe = (a + b).scale(0.5);
+            let fo = (a - b).scale(0.5);
+            let fo = C64::new(fo.im, -fo.re); // multiply by -i
+            out[k] = fe + self.w_fwd[k] * fo;
+        }
+    }
+
+    /// Inverse real FFT: half spectrum (len h+1) → real signal (len d),
+    /// including the 1/d normalization. `emit` receives (index, value).
+    pub fn irfft(&self, spec: &[C64], out: &mut [f32]) {
+        assert_eq!(spec.len(), self.h + 1);
+        assert_eq!(out.len(), self.d);
+        let h = self.h;
+        let mut z = self.scratch.borrow_mut();
+        // Retangle: F_even[k] = (X[k] + X*[h-k])/2,
+        //           F_odd[k]  = W_d^{-k} (X[k] - X*[h-k])/2,
+        //           Z[k] = F_even[k] + i F_odd[k].
+        for k in 0..h {
+            let a = spec[k];
+            let b = spec[h - k].conj();
+            let fe = (a + b).scale(0.5);
+            let fo = (self.w_inv[k] * (a - b)).scale(0.5);
+            let ifo = C64::new(-fo.im, fo.re); // multiply by i
+            z[k] = fe + ifo;
+        }
+        self.planner.ifft(&mut z);
+        for k in 0..h {
+            out[2 * k] = z[k].re as f32;
+            out[2 * k + 1] = z[k].im as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::real;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn half_spectrum_matches_full_fft() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(31);
+        for d in [4usize, 16, 30, 64, 100] {
+            let plan = RealPackPlan::new(d, planner.clone());
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mut half = vec![C64::ZERO; d / 2 + 1];
+            plan.rfft(&x, None, &mut half);
+            let full = real::rfft_full(&planner, &x);
+            for k in 0..=d / 2 {
+                let err = (half[k] - full[k]).abs();
+                assert!(err < 1e-6 * (1.0 + full[k].abs()), "d={d} k={k} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_real_signal() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(32);
+        for d in [8usize, 20, 64, 256] {
+            let plan = RealPackPlan::new(d, planner.clone());
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mut half = vec![C64::ZERO; d / 2 + 1];
+            plan.rfft(&x, None, &mut half);
+            let mut back = vec![0f32; d];
+            plan.irfft(&half, &mut back);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-4, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn pre_scale_applies_sign_flips() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(33);
+        let d = 32;
+        let plan = RealPackPlan::new(d, planner.clone());
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let s = rng.sign_vec(d);
+        let flipped: Vec<f32> = x.iter().zip(&s).map(|(a, b)| a * b).collect();
+        let mut h1 = vec![C64::ZERO; d / 2 + 1];
+        let mut h2 = vec![C64::ZERO; d / 2 + 1];
+        plan.rfft(&x, Some(&s), &mut h1);
+        plan.rfft(&flipped, None, &mut h2);
+        for (a, b) in h1.iter().zip(&h2) {
+            assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Exact k-NN ground truth by ℓ2 distance (the paper's protocol: the true
+//! 10 nearest neighbors of each query among the database rows).
+
+use crate::linalg::Mat;
+
+/// For each query row, the indices of its k nearest database rows by ℓ2
+/// distance (equivalently cosine, for unit-norm rows — footnote 5).
+pub fn exact_knn(db: &Mat, queries: &Mat, k: usize) -> Vec<Vec<u32>> {
+    assert_eq!(db.cols, queries.cols);
+    let k = k.min(db.rows);
+    let mut out = Vec::with_capacity(queries.rows);
+    for qi in 0..queries.rows {
+        let q = queries.row(qi);
+        // max-heap of (dist, idx) keeping the k smallest
+        let mut heap: std::collections::BinaryHeap<(ordered, u32)> =
+            std::collections::BinaryHeap::with_capacity(k + 1);
+        for di in 0..db.rows {
+            let row = db.row(di);
+            let mut dist = 0f32;
+            for j in 0..db.cols {
+                let t = q[j] - row[j];
+                dist += t * t;
+            }
+            if heap.len() < k {
+                heap.push((ordered_of(dist), di as u32));
+            } else if let Some(&(top, _)) = heap.peek() {
+                if dist < top.0 {
+                    heap.pop();
+                    heap.push((ordered_of(dist), di as u32));
+                }
+            }
+        }
+        let mut hits: Vec<(f32, u32)> = heap.into_iter().map(|(d, i)| (d.0, i)).collect();
+        hits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        out.push(hits.into_iter().map(|(_, i)| i).collect());
+    }
+    out
+}
+
+/// Total-ordered f32 wrapper for the heap.
+#[allow(non_camel_case_types)]
+#[derive(PartialEq, Copy, Clone)]
+struct ordered(f32);
+impl Eq for ordered {}
+impl PartialOrd for ordered {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for ordered {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&o.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+fn ordered_of(x: f32) -> ordered {
+    ordered(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn knn_matches_bruteforce_sort() {
+        let mut rng = Pcg64::new(5);
+        let db = Mat::randn(50, 8, &mut rng);
+        let q = Mat::randn(3, 8, &mut rng);
+        let got = exact_knn(&db, &q, 5);
+        for qi in 0..3 {
+            let mut all: Vec<(f32, u32)> = (0..50)
+                .map(|di| {
+                    let mut d2 = 0f32;
+                    for j in 0..8 {
+                        let t = q[(qi, j)] - db[(di, j)];
+                        d2 += t * t;
+                    }
+                    (d2, di as u32)
+                })
+                .collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let want: Vec<u32> = all.iter().take(5).map(|(_, i)| *i).collect();
+            assert_eq!(got[qi], want);
+        }
+    }
+
+    #[test]
+    fn self_is_nearest() {
+        let mut rng = Pcg64::new(6);
+        let db = Mat::randn(20, 4, &mut rng);
+        let got = exact_knn(&db, &db, 1);
+        for (i, hits) in got.iter().enumerate() {
+            assert_eq!(hits[0], i as u32);
+        }
+    }
+}

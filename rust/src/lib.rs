@@ -1,0 +1,36 @@
+//! # cbe — Circulant Binary Embedding
+//!
+//! A production-grade reproduction of *Circulant Binary Embedding*
+//! (Yu, Kumar, Gong, Chang — ICML 2014) as a three-layer system:
+//!
+//! * **L1** Pallas kernels (build-time python, `python/compile/kernels/`)
+//! * **L2** JAX compute graphs AOT-lowered to HLO text (`python/compile/`)
+//! * **L3** this Rust crate: the coordinator, runtime, retrieval engine,
+//!   native reference implementations of every encoder, and the full
+//!   experiment harness reproducing every table and figure of the paper.
+//!
+//! The public API entry points are [`encoders::BinaryEncoder`] (train/encode
+//! any of the paper's methods), [`coordinator::EmbeddingService`] (the
+//! serving facade: dynamic batching + PJRT execution + binary retrieval),
+//! and [`experiments`] (one driver per paper table/figure).
+
+pub mod util;
+pub mod proptest_lite;
+pub mod fft;
+pub mod linalg;
+pub mod bits;
+pub mod projections;
+pub mod opt;
+pub mod encoders;
+pub mod data;
+pub mod groundtruth;
+pub mod eval;
+pub mod svm;
+pub mod runtime;
+pub mod pool;
+pub mod coordinator;
+pub mod bench;
+pub mod experiments;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,291 @@
+//! Symmetric eigensolver: Householder tridiagonalization + implicit QL with
+//! Wilkinson shifts. Classic EISPACK `tred2`/`tql2` lineage, f64 throughout.
+//!
+//! Used by PCA (ITQ / SH / SKLSH baselines in Figure 5).
+
+use super::Mat;
+
+/// Eigen-decomposition of a symmetric matrix.
+/// Returns (eigenvalues ascending, eigenvectors as columns of a Mat).
+pub fn symmetric_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "symmetric_eigen needs a square matrix");
+    // z: working matrix (becomes eigenvectors), f64 for stability.
+    let mut z: Vec<f64> = a.data.iter().map(|x| *x as f64).collect();
+    let mut d = vec![0f64; n]; // diagonal
+    let mut e = vec![0f64; n]; // off-diagonal
+
+    tred2(&mut z, n, &mut d, &mut e);
+    tql2(&mut z, n, &mut d, &mut e);
+
+    let mut vecs = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            vecs[(i, j)] = z[i * n + j] as f32;
+        }
+    }
+    (d, vecs)
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+fn tred2(z: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let scale: f64 = (0..=l).map(|k| z[i * n + k].abs()).sum();
+            if scale == 0.0 {
+                e[i] = z[i * n + l];
+            } else {
+                for k in 0..=l {
+                    z[i * n + k] /= scale;
+                    h += z[i * n + k] * z[i * n + k];
+                }
+                let mut f = z[i * n + l];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[i * n + l] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[j * n + i] = z[i * n + j] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[j * n + k] * z[i * n + k];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[k * n + j] * z[i * n + k];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[i * n + j];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[i * n + j];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        z[j * n + k] -= f * e[k] + g * z[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = z[i * n + l];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        let l = i;
+        if d[i] != 0.0 {
+            for j in 0..l {
+                let mut g = 0.0;
+                for k in 0..l {
+                    g += z[i * n + k] * z[k * n + j];
+                }
+                for k in 0..l {
+                    z[k * n + j] -= g * z[k * n + i];
+                }
+            }
+        }
+        d[i] = z[i * n + i];
+        z[i * n + i] = 1.0;
+        for j in 0..l {
+            z[j * n + i] = 0.0;
+            z[i * n + j] = 0.0;
+        }
+    }
+}
+
+/// Implicit QL with shifts on the tridiagonal (d, e), accumulating
+/// transformations into z. Eigenvalues land in d (ascending after sort).
+fn tql2(z: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    if n == 0 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small subdiagonal element.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 50, "tql2 failed to converge");
+            // Form shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                for k in 0..n {
+                    f = z[k * n + i + 1];
+                    z[k * n + i + 1] = s * z[k * n + i] + c * f;
+                    z[k * n + i] = c * z[k * n + i] - s * f;
+                }
+            }
+            if e[l].abs() <= f64::EPSILON * (d[l].abs() + 1.0) && m == l {
+                break;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort eigenvalues (and vectors) ascending.
+    for i in 0..n {
+        let mut k = i;
+        for j in (i + 1)..n {
+            if d[j] < d[k] {
+                k = j;
+            }
+        }
+        if k != i {
+            d.swap(i, k);
+            for row in 0..n {
+                z.swap(row * n + i, row * n + k);
+            }
+        }
+    }
+}
+
+/// Top-k principal directions of X (rows = samples): returns (k eigenvalues
+/// descending, d×k matrix of eigenvectors as columns). Mean-centered.
+pub fn top_k_pca(x: &Mat, k: usize) -> (Vec<f64>, Mat) {
+    let d = x.cols;
+    assert!(k <= d);
+    let means = x.col_means();
+    // Covariance (d×d, f64 accumulation via f32 matmul on centered data).
+    let mut centered = x.clone();
+    for i in 0..x.rows {
+        for (j, v) in centered.row_mut(i).iter_mut().enumerate() {
+            *v -= means[j];
+        }
+    }
+    let cov = {
+        let ct = centered.transpose();
+        let mut c = ct.matmul_t(&ct); // (d×n)·(d×n)ᵀ = d×d
+        let s = 1.0 / (x.rows.max(2) - 1) as f32;
+        for v in c.data.iter_mut() {
+            *v *= s;
+        }
+        c
+    };
+    let (vals, vecs) = symmetric_eigen(&cov);
+    // take top-k (eigen returns ascending)
+    let dcols = vecs.cols;
+    let mut top_vals = Vec::with_capacity(k);
+    let mut top = Mat::zeros(d, k);
+    for j in 0..k {
+        let src = dcols - 1 - j;
+        top_vals.push(vals[src]);
+        for i in 0..d {
+            top[(i, j)] = vecs[(i, src)];
+        }
+    }
+    (top_vals, top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormality_error;
+    use crate::util::rng::Pcg64;
+
+    fn random_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let g = Mat::randn(n, n, &mut rng);
+        let mut s = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                s[(i, j)] = 0.5 * (g[(i, j)] + g[(j, i)]);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn eigen_reconstructs() {
+        for n in [2usize, 5, 16, 33] {
+            let a = random_symmetric(n, n as u64);
+            let (vals, vecs) = symmetric_eigen(&a);
+            // A v_j = λ_j v_j
+            for j in 0..n {
+                for i in 0..n {
+                    let mut av = 0f64;
+                    for k in 0..n {
+                        av += a[(i, k)] as f64 * vecs[(k, j)] as f64;
+                    }
+                    let want = vals[j] * vecs[(i, j)] as f64;
+                    assert!((av - want).abs() < 1e-3, "n={n} i={i} j={j}");
+                }
+            }
+            assert!(orthonormality_error(&vecs) < 1e-4);
+            // ascending
+            for j in 1..n {
+                assert!(vals[j] >= vals[j - 1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn eigen_known_2x2() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (vals, _) = symmetric_eigen(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-6);
+        assert!((vals[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        let mut rng = Pcg64::new(77);
+        // Data stretched along (1,1)/√2.
+        let n = 500;
+        let mut x = Mat::zeros(n, 2);
+        for i in 0..n {
+            let t = rng.normal() as f32 * 3.0;
+            let s = rng.normal() as f32 * 0.1;
+            x[(i, 0)] = t + s;
+            x[(i, 1)] = t - s;
+        }
+        let (vals, vecs) = top_k_pca(&x, 1);
+        assert!(vals[0] > 10.0);
+        let v = (vecs[(0, 0)], vecs[(1, 0)]);
+        let align = (v.0 * std::f32::consts::FRAC_1_SQRT_2 + v.1 * std::f32::consts::FRAC_1_SQRT_2)
+            .abs();
+        assert!(align > 0.99, "align={align}");
+    }
+}

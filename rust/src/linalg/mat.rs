@@ -1,0 +1,193 @@
+//! Row-major f32 matrix with blocked matmul.
+
+use crate::util::rng::Pcg64;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix with i.i.d. N(0,1) entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Mat {
+        Mat::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// C = A · B, cache-blocked (i-k-j loop order keeps B rows streaming).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        let n = b.cols;
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A · Bᵀ (dot-product form — good when B is given row-major).
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..b.rows {
+                let brow = b.row(j);
+                let mut acc = 0f32;
+                for k in 0..self.cols {
+                    acc += arow[k] * brow[k];
+                }
+                c[(i, j)] = acc;
+            }
+        }
+        c
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|x| *x as f64 * *x as f64)
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Element-wise sign (0 maps to +1 — a bit must be one of ±1).
+    pub fn sign(&self) -> Mat {
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data
+                .iter()
+                .map(|x| if *x >= 0.0 { 1.0 } else { -1.0 })
+                .collect(),
+        )
+    }
+
+    /// Column means.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut m = vec![0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, v) in self.row(i).iter().enumerate() {
+                m[j] += *v as f64;
+            }
+        }
+        m.iter().map(|v| (*v / self.rows as f64) as f32).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::randn(5, 7, &mut rng);
+        let i7 = Mat::eye(7);
+        let c = a.matmul(&i7);
+        for (x, y) in c.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_t_consistent() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::randn(4, 6, &mut rng);
+        let b = Mat::randn(3, 6, &mut rng);
+        let c1 = a.matmul_t(&b);
+        let c2 = a.matmul(&b.transpose());
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(3);
+        let a = Mat::randn(3, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn sign_no_zeros() {
+        let a = Mat::from_vec(1, 3, vec![-0.5, 0.0, 2.0]);
+        assert_eq!(a.sign().data, vec![-1.0, 1.0, 1.0]);
+    }
+}

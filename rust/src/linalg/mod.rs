@@ -1,0 +1,14 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK in the vendor set).
+//!
+//! Provides what the baselines need: blocked matmul (LSH / bilinear
+//! projections), Householder QR (random rotations, orthogonalization),
+//! a symmetric eigensolver (PCA for ITQ / SH / SKLSH), and a one-sided
+//! Jacobi SVD (ITQ's orthogonal Procrustes step).
+
+pub mod mat;
+pub mod qr;
+pub mod eigen;
+pub mod svd;
+pub mod pca;
+
+pub use mat::Mat;

@@ -1,0 +1,71 @@
+//! PCA projection helper shared by the ITQ / SH / SKLSH baselines.
+
+use super::eigen::top_k_pca;
+use super::Mat;
+
+/// A fitted PCA transform: subtract mean, project onto top-k components.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    pub mean: Vec<f32>,
+    /// d×k projection (columns = principal directions).
+    pub components: Mat,
+    /// Eigenvalues (variances) of the kept components, descending.
+    pub variances: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit on data rows; keep k components.
+    pub fn fit(x: &Mat, k: usize) -> Pca {
+        let (variances, components) = top_k_pca(x, k);
+        Pca {
+            mean: x.col_means(),
+            components,
+            variances,
+        }
+    }
+
+    /// Project rows of x into the k-dim PCA space.
+    pub fn transform(&self, x: &Mat) -> Mat {
+        let k = self.components.cols;
+        let mut out = Mat::zeros(x.rows, k);
+        for i in 0..x.rows {
+            let row = x.row(i);
+            for j in 0..k {
+                let mut acc = 0f64;
+                for (dd, &xv) in row.iter().enumerate() {
+                    acc += (xv - self.mean[dd]) as f64 * self.components[(dd, j)] as f64;
+                }
+                out[(i, j)] = acc as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn transform_centers_and_orders_variance() {
+        let mut rng = Pcg64::new(61);
+        let n = 400;
+        let mut x = Mat::zeros(n, 3);
+        for i in 0..n {
+            x[(i, 0)] = rng.normal() as f32 * 5.0 + 10.0;
+            x[(i, 1)] = rng.normal() as f32 * 1.0 - 3.0;
+            x[(i, 2)] = rng.normal() as f32 * 0.1;
+        }
+        let pca = Pca::fit(&x, 2);
+        let y = pca.transform(&x);
+        let means = y.col_means();
+        assert!(means.iter().all(|m| m.abs() < 0.5));
+        // first component variance > second
+        let var = |j: usize| -> f64 {
+            (0..n).map(|i| (y[(i, j)] as f64).powi(2)).sum::<f64>() / n as f64
+        };
+        assert!(var(0) > var(1));
+        assert!(pca.variances[0] >= pca.variances[1]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Householder QR decomposition and random orthonormal matrices.
+//!
+//! Used for: generating random rotations (the Gram–Schmidt construction the
+//! paper's Figure-1 simulation uses to place two points at an exact angle in
+//! d dimensions), orthogonal initialization of ITQ, and SH's PCA rotations.
+
+use super::Mat;
+use crate::util::rng::Pcg64;
+
+/// Compact QR: returns (Q, R) with Q: m×n orthonormal columns (m ≥ n),
+/// R: n×n upper triangular, A = Q·R.
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr requires rows >= cols");
+    // Work on column-major copies for cache-friendly column ops.
+    let mut w = a.clone(); // will become R in its upper triangle
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n); // householder vectors
+
+    for k in 0..n {
+        // Build the householder vector from column k, rows k..m.
+        let mut v: Vec<f32> = (k..m).map(|i| w[(i, k)]).collect();
+        let alpha = {
+            let norm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt() as f32;
+            if v[0] >= 0.0 {
+                -norm
+            } else {
+                norm
+            }
+        };
+        if alpha.abs() > 0.0 {
+            v[0] -= alpha;
+            let vnorm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt() as f32;
+            if vnorm > 1e-20 {
+                for x in v.iter_mut() {
+                    *x /= vnorm;
+                }
+                // Apply H = I - 2vvᵀ to the trailing submatrix.
+                for j in k..n {
+                    let mut dot = 0f64;
+                    for (idx, i) in (k..m).enumerate() {
+                        dot += v[idx] as f64 * w[(i, j)] as f64;
+                    }
+                    let dot2 = 2.0 * dot as f32;
+                    for (idx, i) in (k..m).enumerate() {
+                        w[(i, j)] -= dot2 * v[idx];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = w[(i, j)];
+        }
+    }
+
+    // Q = H_0 H_1 ... H_{n-1} · [I_n; 0]
+    let mut q = Mat::zeros(m, n);
+    for i in 0..n {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        for j in 0..n {
+            let mut dot = 0f64;
+            for (idx, i) in (k..m).enumerate() {
+                dot += v[idx] as f64 * q[(i, j)] as f64;
+            }
+            let dot2 = 2.0 * dot as f32;
+            for (idx, i) in (k..m).enumerate() {
+                q[(i, j)] -= dot2 * v[idx];
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Random n×n orthonormal matrix (QR of a gaussian matrix, signs fixed so
+/// the distribution is Haar).
+pub fn random_orthonormal(n: usize, rng: &mut Pcg64) -> Mat {
+    let g = Mat::randn(n, n, rng);
+    let (mut q, r) = qr(&g);
+    // Fix sign ambiguity: make diag(R) positive.
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for i in 0..n {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+/// Orthonormality residual ‖QᵀQ − I‖_∞ (diagnostic / tests).
+pub fn orthonormality_error(q: &Mat) -> f64 {
+    let qtq = q.transpose().matmul(q);
+    let n = qtq.rows;
+    let mut err = 0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            err = err.max((qtq[(i, j)] as f64 - want).abs());
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::new(31);
+        for (m, n) in [(6, 6), (10, 4), (5, 5)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let (q, r) = qr(&a);
+            let qr_ = q.matmul(&r);
+            for (x, y) in qr_.data.iter().zip(&a.data) {
+                assert!((x - y).abs() < 1e-4, "m={m} n={n}");
+            }
+            assert!(orthonormality_error(&q) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = Pcg64::new(37);
+        let a = Mat::randn(8, 8, &mut rng);
+        let (_, r) = qr(&a);
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn random_rotation_orthonormal() {
+        let mut rng = Pcg64::new(41);
+        let q = random_orthonormal(16, &mut rng);
+        assert!(orthonormality_error(&q) < 1e-5);
+        // determinant-free sanity: norms of rows are 1
+        for i in 0..16 {
+            let n: f32 = q.row(i).iter().map(|x| x * x).sum();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! One-sided Jacobi SVD for small square matrices.
+//!
+//! ITQ's alternating step solves an orthogonal Procrustes problem
+//! `R = argmin ‖B − V R‖` whose solution is `R = U Vᵀ` from the SVD of
+//! `BᵀV` — a k×k matrix (k = code bits), so a simple Jacobi sweep is plenty.
+
+use super::Mat;
+
+/// SVD of a square matrix A = U · diag(s) · Vᵀ. Returns (U, s, V).
+pub fn svd_square(a: &Mat) -> (Mat, Vec<f32>, Mat) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "svd_square needs square input");
+    // One-sided Jacobi on columns of W = A·V_accum.
+    let mut w: Vec<f64> = a.data.iter().map(|x| *x as f64).collect();
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute [app apq; apq aqq] of WᵀW for columns p,q.
+                let (mut app, mut aqq, mut apq) = (0f64, 0f64, 0f64);
+                for i in 0..n {
+                    let wp = w[i * n + p];
+                    let wq = w[i * n + q];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                off = off.max(apq.abs() / (app.sqrt() * aqq.sqrt() + 1e-300));
+                if apq.abs() < 1e-15 * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                // Jacobi rotation zeroing apq.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..n {
+                    let wp = w[i * n + p];
+                    let wq = w[i * n + q];
+                    w[i * n + p] = c * wp - s * wq;
+                    w[i * n + q] = s * wp + c * wq;
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+
+    // Singular values = column norms of W; U = W normalized.
+    let mut s = vec![0f32; n];
+    let mut u = Mat::zeros(n, n);
+    for j in 0..n {
+        let norm = (0..n).map(|i| w[i * n + j] * w[i * n + j]).sum::<f64>().sqrt();
+        s[j] = norm as f32;
+        if norm > 1e-300 {
+            for i in 0..n {
+                u[(i, j)] = (w[i * n + j] / norm) as f32;
+            }
+        } else {
+            u[(j, j)] = 1.0;
+        }
+    }
+    let mut vm = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            vm[(i, j)] = v[i * n + j] as f32;
+        }
+    }
+
+    // Sort singular values descending (swap columns of U and V).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+    let mut s2 = vec![0f32; n];
+    let mut u2 = Mat::zeros(n, n);
+    let mut v2 = Mat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        s2[newj] = s[oldj];
+        for i in 0..n {
+            u2[(i, newj)] = u[(i, oldj)];
+            v2[(i, newj)] = vm[(i, oldj)];
+        }
+    }
+    (u2, s2, v2)
+}
+
+/// Orthogonal Procrustes: the orthogonal R minimizing ‖A − B·R‖_F,
+/// i.e. R = U·Vᵀ where BᵀA = U·diag(s)·Vᵀ ... solved here as
+/// `procrustes(M) = U·Vᵀ` for M = BᵀA.
+pub fn procrustes_rotation(m: &Mat) -> Mat {
+    let (u, _s, v) = svd_square(m);
+    u.matmul(&v.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::{orthonormality_error, random_orthonormal};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn svd_reconstructs() {
+        let mut rng = Pcg64::new(51);
+        for n in [2usize, 4, 8, 16] {
+            let a = Mat::randn(n, n, &mut rng);
+            let (u, s, v) = svd_square(&a);
+            // A ?= U diag(s) Vᵀ
+            let mut usv = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for k in 0..n {
+                        acc += u[(i, k)] as f64 * s[k] as f64 * v[(j, k)] as f64;
+                    }
+                    usv[(i, j)] = acc as f32;
+                }
+            }
+            for (x, y) in usv.data.iter().zip(&a.data) {
+                assert!((x - y).abs() < 1e-3, "n={n}");
+            }
+            assert!(orthonormality_error(&u) < 1e-4);
+            assert!(orthonormality_error(&v) < 1e-4);
+            for k in 1..n {
+                assert!(s[k] <= s[k - 1] + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn procrustes_recovers_rotation() {
+        let mut rng = Pcg64::new(53);
+        let n = 8;
+        let r_true = random_orthonormal(n, &mut rng);
+        let b = Mat::randn(50, n, &mut rng);
+        let a = b.matmul(&r_true); // A = B R
+        let m = b.transpose().matmul(&a); // BᵀA
+        let r_hat = procrustes_rotation(&m);
+        for (x, y) in r_hat.data.iter().zip(&r_true.data) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! `cbe` — the coordinator binary.
+//!
+//! Subcommands:
+//!   serve       run the embedding service demo (PJRT request path)
+//!   train       train CBE-opt on synthetic data, report objective trace
+//!   encode      encode random vectors through the PJRT pipeline
+//!   exp <id>    reproduce a paper table/figure: fig1 table2 fig2 fig3
+//!               fig4 fig5 table3 sec6 | all
+//!   artifacts   list compiled artifacts
+
+use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::data::{generate, SynthConfig};
+use cbe::encoders::CbeOpt;
+use cbe::experiments as exp;
+use cbe::fft::Planner;
+use cbe::opt::TimeFreqConfig;
+use cbe::runtime::Manifest;
+use cbe::util::cli::Args;
+use cbe::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "train" => cmd_train(&args),
+        "encode" => cmd_encode(&args),
+        "exp" => cmd_exp(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "cbe — Circulant Binary Embedding (ICML 2014) coordinator\n\
+         \n\
+         usage: cbe <command> [flags]\n\
+         \n\
+         commands:\n\
+         \x20 serve      run the embedding service demo over PJRT artifacts\n\
+         \x20 train      train CBE-opt on synthetic data (native optimizer)\n\
+         \x20 encode     batch-encode random vectors through PJRT\n\
+         \x20 exp <id>   reproduce a paper artifact: fig1 table2 fig2 fig3\n\
+         \x20            fig4 fig5 table3 sec6 all\n\
+         \x20 artifacts  list compiled artifacts\n\
+         \n\
+         common flags: --artifacts DIR --d N --bits K --seed S\n\
+         scale flags:  --full (paper-scale dims; slow), default is CI scale"
+    );
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(&artifacts_dir(args))?;
+    println!("{} artifacts:", m.artifacts.len());
+    for a in &m.artifacts {
+        println!(
+            "  {:<32} kind={:<16} d={:<6} batch={} inputs={:?}",
+            a.name, a.kind, a.d, a.batch, a.inputs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let d = args.usize("d", 512);
+    let k = args.usize("bits", d);
+    let n = args.usize("n", 1000);
+    let iters = args.usize("iters", 8);
+    let seed = args.u64("seed", 1);
+    println!("training CBE-opt: d={d} k={k} n={n} iters={iters}");
+    let ds = generate(&SynthConfig::imagenet(n, d, seed));
+    let mut tf = TimeFreqConfig::new(k);
+    tf.iters = iters;
+    tf.lambda = args.f32("lambda", 1.0) as f64;
+    let (enc, ms) = cbe::util::timer::time_ms(|| {
+        CbeOpt::train(&ds.x, tf, seed + 1, Planner::new(), None)
+    });
+    println!("trained in {ms:.1} ms; objective trace:");
+    for (i, o) in enc.objective_trace.iter().enumerate() {
+        println!("  iter {i}: {o:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_encode(args: &Args) -> anyhow::Result<()> {
+    let d = args.usize("d", 512);
+    let count = args.usize("count", 256);
+    let bits = args.usize("bits", d.min(256));
+    let seed = args.u64("seed", 3);
+    let mut rng = Pcg64::new(seed);
+    let service = EmbeddingService::start(
+        &artifacts_dir(args),
+        ServiceConfig {
+            d,
+            bits,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+            },
+        },
+        rng.normal_vec(d),
+        rng.sign_vec(d),
+    )?;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..count)
+        .map(|_| service.encode_async(rng.normal_vec(d)).unwrap())
+        .collect();
+    let mut ones = 0usize;
+    for h in handles {
+        let resp = h.recv()?;
+        ones += resp.signs.iter().filter(|s| **s > 0.0).count();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "encoded {count}×{d}→{bits} bits in {:.1} ms ({:.0} vec/s); bit balance {:.3}",
+        dt * 1e3,
+        count as f64 / dt,
+        ones as f64 / (count * bits) as f64
+    );
+    println!("metrics: {}", service.metrics.summary(32));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let d = args.usize("d", 512);
+    let bits = args.usize("bits", d.min(256));
+    let n_db = args.usize("db", 2000);
+    let topk = args.usize("topk", 10);
+    let seed = args.u64("seed", 5);
+    println!("embedding server demo: d={d} bits={bits} db={n_db}");
+
+    // Train CBE-opt natively, then serve through the PJRT artifact.
+    let ds = generate(&SynthConfig::flickr(n_db + 100, d, seed));
+    let mut tf = TimeFreqConfig::new(bits);
+    tf.iters = 5;
+    let train = cbe::data::gather(&ds.x, &(0..500.min(n_db)).collect::<Vec<_>>());
+    let enc = CbeOpt::train(&train, tf, seed, Planner::new(), None);
+
+    let service = EmbeddingService::start(
+        &artifacts_dir(args),
+        ServiceConfig {
+            d,
+            bits,
+            batcher: BatcherConfig::default(),
+        },
+        enc.proj.r.clone(),
+        enc.proj.signs.clone(),
+    )?;
+
+    let rows: Vec<Vec<f32>> = (0..n_db).map(|i| ds.x.row(i).to_vec()).collect();
+    let (index, ms) = cbe::util::timer::time_ms(|| service.build_index(&rows).unwrap());
+    println!("indexed {n_db} vectors in {ms:.1} ms");
+
+    let mut hits_self = 0usize;
+    let queries = 50usize;
+    let (_, qms) = cbe::util::timer::time_ms(|| {
+        for qi in 0..queries {
+            let hits = service
+                .search(&index, ds.x.row(qi).to_vec(), topk)
+                .unwrap();
+            if hits.iter().any(|h| h.id == qi as u32) {
+                hits_self += 1;
+            }
+        }
+    });
+    println!(
+        "served {queries} queries in {qms:.1} ms ({:.2} ms/query); self-recall@{topk}: {:.2}",
+        qms / queries as f64,
+        hits_self as f64 / queries as f64
+    );
+    println!("metrics: {}", service.metrics.summary(32));
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let full = args.bool("full", false);
+    let run_one = |id: &str| -> anyhow::Result<()> {
+        println!("{}", run_experiment(id, full, args)?);
+        Ok(())
+    };
+    if which == "all" {
+        for id in ["fig1", "table2", "fig2", "fig3", "fig4", "fig5", "table3", "sec6"] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(&which)
+    }
+}
+
+fn run_experiment(id: &str, full: bool, args: &Args) -> anyhow::Result<String> {
+    use exp::recall_sweep::{Corpus, SweepConfig};
+    Ok(match id {
+        "fig1" => {
+            let d = args.usize("d", if full { 256 } else { 128 });
+            let pairs = args.usize("pairs", if full { 40 } else { 10 });
+            let reps = args.usize("reps", if full { 200 } else { 60 });
+            exp::fig1_variance::run(
+                d,
+                &args.usize_list("bits", &[8, 16, 32, 64, d.min(128)]),
+                &[0.2, 0.5, 0.9, 1.2, std::f64::consts::FRAC_PI_2],
+                pairs,
+                reps,
+                args.u64("seed", 42),
+            )
+            .report
+        }
+        "table2" => {
+            let dims: Vec<usize> = if full {
+                vec![1 << 13, 1 << 15, 1 << 17, 1 << 20]
+            } else {
+                vec![1 << 10, 1 << 12, 1 << 14, 1 << 16]
+            };
+            let dims = args.usize_list("dims", &dims);
+            exp::table2_timing::run(
+                &dims,
+                exp::table2_timing::DEFAULT_MEM_BUDGET,
+                args.u64("seed", 7),
+            )
+            .report
+        }
+        "fig2" | "fig3" | "fig4" => {
+            let (corpus, d_default) = match id {
+                "fig2" => (Corpus::Flickr, if full { 25600 } else { 2560 }),
+                "fig3" => (Corpus::ImageNet, if full { 25600 } else { 2560 }),
+                _ => (Corpus::ImageNet, if full { 51200 } else { 5120 }),
+            };
+            let d = args.usize("d", d_default);
+            let mut cfg = SweepConfig::quick(corpus, d);
+            if full {
+                cfg.n = 20_000;
+                cfg.n_train = 2_000;
+                cfg.n_queries = 500;
+            }
+            if args.has("bits") {
+                cfg.bits = args.usize_list("bits", &cfg.bits);
+            }
+            exp::recall_sweep::run(&cfg).report
+        }
+        "fig5" => {
+            let d = args.usize("d", if full { 2048 } else { 512 });
+            let mut cfg = exp::fig5_lowdim::Fig5Config::quick(d);
+            if full {
+                cfg.n = 10_000;
+                cfg.n_train = 1_000;
+                cfg.n_queries = 200;
+                cfg.bits = vec![64, 128, 256, 512];
+            }
+            exp::fig5_lowdim::run(&cfg).report
+        }
+        "table3" => {
+            let d = args.usize("d", if full { 2560 } else { 256 });
+            let mut cfg = exp::table3_classify::Table3Config::quick(d);
+            if full {
+                cfg.classes = 50;
+                cfg.per_class_train = 100;
+                cfg.per_class_test = 50;
+            }
+            exp::table3_classify::run(&cfg).report
+        }
+        "ablate" => {
+            let d = args.usize("d", if full { 2048 } else { 256 });
+            exp::ablations::run(d, args.u64("seed", 5)).report
+        }
+        "sec6" => {
+            let d = args.usize("d", if full { 2560 } else { 256 });
+            let mut cfg = exp::semi_supervised::Sec6Config::quick(d);
+            if full {
+                cfg.n = 10_000;
+                cfg.n_train = 1_000;
+                cfg.n_pairs = 2_000;
+            }
+            cfg.mu = args.f32("mu", cfg.mu as f32) as f64;
+            cfg.n_pairs = args.usize("pairs", cfg.n_pairs);
+            cfg.k = args.usize("bits", cfg.k);
+            exp::semi_supervised::run(&cfg).report
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    })
+}

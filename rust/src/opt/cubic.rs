@@ -1,0 +1,103 @@
+//! Real-root cubic solver + 1-D quartic minimizer.
+//!
+//! The per-frequency subproblems of the time–frequency optimization (§4.1,
+//! eqs. 21–22) are 4th-order polynomials whose stationary points are roots
+//! of a cubic. We solve the depressed cubic t³ + pt + q = 0 in closed form
+//! (trigonometric method for three real roots, Cardano otherwise) and pick
+//! the root with the lowest quartic value — an exact minimizer, strictly
+//! stronger than the paper's "gradient descent for the 2-variable case"
+//! (the 2-variable problem reduces to 1-D by rotational symmetry; see
+//! [`timefreq`](super::timefreq)).
+
+/// Real roots of t³ + p·t + q = 0 (1 to 3 roots, unsorted).
+pub fn depressed_cubic_roots(p: f64, q: f64) -> Vec<f64> {
+    if p == 0.0 && q == 0.0 {
+        return vec![0.0];
+    }
+    let disc = -(4.0 * p * p * p + 27.0 * q * q);
+    if disc > 0.0 {
+        // Three distinct real roots — trigonometric method (p < 0 here).
+        let m = 2.0 * (-p / 3.0).sqrt();
+        let arg = (3.0 * q / (p * m)).clamp(-1.0, 1.0);
+        let theta = arg.acos() / 3.0;
+        (0..3)
+            .map(|k| m * (theta - 2.0 * std::f64::consts::PI * k as f64 / 3.0).cos())
+            .collect()
+    } else {
+        // One real root — Cardano.
+        let half_q = q / 2.0;
+        let delta = (half_q * half_q + p * p * p / 27.0).sqrt();
+        let u = (-half_q + delta).cbrt();
+        let v = (-half_q - delta).cbrt();
+        vec![u + v]
+    }
+}
+
+/// Minimize f(t) = a₄t⁴ + a₂t² + a₁t + a₀ over t ∈ R (a₄ > 0).
+/// Returns (argmin, min value).
+pub fn minimize_quartic(a4: f64, a2: f64, a1: f64, a0: f64) -> (f64, f64) {
+    assert!(a4 > 0.0, "quartic must open upward");
+    // f'(t) = 4a₄t³ + 2a₂t + a₁ = 0  →  t³ + (a₂/2a₄)t + a₁/4a₄ = 0
+    let p = a2 / (2.0 * a4);
+    let q = a1 / (4.0 * a4);
+    let f = |t: f64| a4 * t * t * t * t + a2 * t * t + a1 * t + a0;
+    let mut best = (0.0, f(0.0));
+    for t in depressed_cubic_roots(p, q) {
+        let v = f(t);
+        if v < best.1 {
+            best = (t, v);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::forall;
+
+    fn assert_root(p: f64, q: f64, t: f64) {
+        let val = t * t * t + p * t + q;
+        let scale = 1.0 + t.abs().powi(3) + p.abs() * t.abs() + q.abs();
+        assert!(val.abs() / scale < 1e-9, "p={p} q={q} t={t} val={val}");
+    }
+
+    #[test]
+    fn roots_are_roots() {
+        forall("cubic roots satisfy equation", 300, |g| {
+            let p = (g.f32_in(-10.0, 10.0)) as f64;
+            let q = (g.f32_in(-10.0, 10.0)) as f64;
+            let roots = depressed_cubic_roots(p, q);
+            assert!(!roots.is_empty());
+            for t in roots {
+                assert_root(p, q, t);
+            }
+        });
+    }
+
+    #[test]
+    fn known_roots() {
+        // t³ - 7t + 6 = (t-1)(t-2)(t+3)
+        let mut roots = depressed_cubic_roots(-7.0, 6.0);
+        roots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((roots[0] + 3.0).abs() < 1e-9);
+        assert!((roots[1] - 1.0).abs() < 1e-9);
+        assert!((roots[2] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quartic_min_beats_grid() {
+        forall("closed-form quartic min <= grid search", 200, |g| {
+            let a4 = g.f32_in(0.1, 5.0) as f64;
+            let a2 = g.f32_in(-10.0, 10.0) as f64;
+            let a1 = g.f32_in(-10.0, 10.0) as f64;
+            let (t_star, v_star) = minimize_quartic(a4, a2, a1, 0.0);
+            let f = |t: f64| a4 * t.powi(4) + a2 * t * t + a1 * t;
+            assert!((f(t_star) - v_star).abs() < 1e-9);
+            for i in -400..=400 {
+                let t = i as f64 * 0.01;
+                assert!(f(t) >= v_star - 1e-7, "t={t} f={} v*={v_star}", f(t));
+            }
+        });
+    }
+}

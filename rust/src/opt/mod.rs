@@ -1,0 +1,6 @@
+//! Learning machinery for data-dependent CBE.
+
+pub mod cubic;
+pub mod timefreq;
+
+pub use timefreq::{PairSet, TimeFreqConfig, TimeFreqOptimizer};

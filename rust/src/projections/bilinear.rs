@@ -1,0 +1,110 @@
+//! Bilinear projection (Gong et al. 2013a) — the strongest prior baseline.
+//!
+//! x ∈ R^d is reshaped to Z ∈ R^{d1×d2} (d = d1·d2) and coded as
+//! sign(R1ᵀ Z R2) with R1 ∈ R^{d1×k1}, R2 ∈ R^{d2×k2}. With near-square
+//! shapes the cost is O(d^1.5) time and O(d) space.
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+/// Bilinear projection with factor matrices R1 (d1×k1) and R2 (d2×k2).
+pub struct BilinearProjection {
+    pub d1: usize,
+    pub d2: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub r1: Mat,
+    pub r2: Mat,
+}
+
+/// Pick a near-square factorization d = d1·d2 (d1 ≤ d2, d1 maximal).
+pub fn near_square_factors(d: usize) -> (usize, usize) {
+    let mut best = (1, d);
+    let mut f = 1usize;
+    while f * f <= d {
+        if d % f == 0 {
+            best = (f, d / f);
+        }
+        f += 1;
+    }
+    best
+}
+
+impl BilinearProjection {
+    /// Random gaussian factors producing k = k1·k2 bits.
+    pub fn random(d: usize, k: usize, rng: &mut Pcg64) -> BilinearProjection {
+        let (d1, d2) = near_square_factors(d);
+        let (k1, k2) = near_square_factors(k);
+        // Assign the larger k factor to the larger d factor.
+        BilinearProjection {
+            d1,
+            d2,
+            k1,
+            k2,
+            r1: Mat::randn(d1, k1, rng),
+            r2: Mat::randn(d2, k2, rng),
+        }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.k1 * self.k2
+    }
+
+    /// Project: vec(R1ᵀ · reshape(x, d1×d2) · R2), length k1·k2.
+    pub fn project(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d1 * self.d2);
+        // Z is d1×d2 row-major view of x.
+        let z = Mat::from_vec(self.d1, self.d2, x.to_vec());
+        // T = R1ᵀ Z → k1×d2
+        let t = self.r1.transpose().matmul(&z);
+        // Y = T R2 → k1×k2
+        let y = t.matmul(&self.r2);
+        y.data
+    }
+
+    /// sign(project(x)).
+    pub fn encode(&self, x: &[f32]) -> Vec<f32> {
+        self.project(x)
+            .iter()
+            .map(|v| if *v >= 0.0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factors_near_square() {
+        assert_eq!(near_square_factors(16), (4, 4));
+        assert_eq!(near_square_factors(12), (3, 4));
+        assert_eq!(near_square_factors(25600), (160, 160));
+        assert_eq!(near_square_factors(51200), (200, 256));
+        assert_eq!(near_square_factors(7), (1, 7));
+    }
+
+    #[test]
+    fn matches_explicit_kron() {
+        // Bilinear code = sign((R1 ⊗ R2)ᵀ-ish projection); verify against the
+        // direct double loop definition y_{ab} = Σ_{ij} R1[i,a] Z[i,j] R2[j,b].
+        let mut rng = Pcg64::new(111);
+        let p = BilinearProjection::random(12, 6, &mut rng);
+        let x = rng.normal_vec(12);
+        let y = p.project(&x);
+        for a in 0..p.k1 {
+            for b in 0..p.k2 {
+                let mut acc = 0f64;
+                for i in 0..p.d1 {
+                    for j in 0..p.d2 {
+                        acc += p.r1[(i, a)] as f64
+                            * x[i * p.d2 + j] as f64
+                            * p.r2[(j, b)] as f64;
+                    }
+                }
+                let got = y[a * p.k2 + b] as f64;
+                assert!((acc - got).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Full (unstructured) projection — the LSH baseline. O(kd) time, O(kd)
+//! space: exactly what the paper is beating.
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+/// Dense k×d gaussian projection.
+pub struct FullProjection {
+    pub k: usize,
+    pub d: usize,
+    /// Row-major k×d matrix.
+    pub w: Mat,
+}
+
+impl FullProjection {
+    pub fn random(k: usize, d: usize, rng: &mut Pcg64) -> FullProjection {
+        FullProjection {
+            k,
+            d,
+            w: Mat::randn(k, d, rng),
+        }
+    }
+
+    pub fn from_mat(w: Mat) -> FullProjection {
+        FullProjection {
+            k: w.rows,
+            d: w.cols,
+            w,
+        }
+    }
+
+    /// y = W·x (k outputs).
+    pub fn project(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d);
+        let mut y = vec![0f32; self.k];
+        for i in 0..self.k {
+            let row = self.w.row(i);
+            let mut acc = 0f32;
+            for j in 0..self.d {
+                acc += row[j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// sign(W·x).
+    pub fn encode(&self, x: &[f32]) -> Vec<f32> {
+        self.project(x)
+            .iter()
+            .map(|v| if *v >= 0.0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projection_linear() {
+        let mut rng = Pcg64::new(101);
+        let p = FullProjection::random(8, 16, &mut rng);
+        let x = rng.normal_vec(16);
+        let y2: Vec<f32> = x.iter().map(|v| v * 2.0).collect();
+        let px = p.project(&x);
+        let px2 = p.project(&y2);
+        for (a, b) in px.iter().zip(&px2) {
+            assert!((b - 2.0 * a).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn encode_signs() {
+        let w = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, -1.0]);
+        let p = FullProjection::from_mat(w);
+        assert_eq!(p.encode(&[3.0, 5.0]), vec![1.0, -1.0]);
+    }
+}

@@ -1,0 +1,10 @@
+//! The three projection families compared throughout the paper (Table 1/2):
+//! full (dense, O(d²)), bilinear (O(d^1.5)), circulant (O(d log d)).
+
+pub mod circulant;
+pub mod full;
+pub mod bilinear;
+
+pub use circulant::CirculantProjection;
+pub use full::FullProjection;
+pub use bilinear::BilinearProjection;

@@ -1,0 +1,98 @@
+//! Tiny property-testing harness (the offline vendor set has no `proptest`;
+//! the python side uses hypothesis, this is the rust counterpart).
+//!
+//! Seeded, deterministic, with minimal shrinking (halving numeric inputs).
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use cbe::proptest_lite::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// A source of random test inputs for one property case.
+pub struct Gen {
+    rng: Pcg64,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+    pub fn sign_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.sign_vec(n)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    /// Power of two in [lo, hi].
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        let lo_exp = lo.next_power_of_two().trailing_zeros();
+        let hi_exp = hi.next_power_of_two().trailing_zeros();
+        1usize << self.usize_in(lo_exp as usize, hi_exp as usize)
+    }
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of the property; panics (with the failing case
+/// number and seed) on the first failure so `cargo test` reports it.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let base_seed = 0xcbe0_0000u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Pcg64::new(seed),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("trivial", 50, |g| {
+            let n = g.usize_in(1, 100);
+            assert!(n >= 1 && n <= 100);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_reports_failure() {
+        forall("always fails eventually", 50, |g| {
+            let n = g.usize_in(0, 10);
+            assert!(n < 10, "hit the boundary");
+        });
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        forall("pow2", 100, |g| {
+            let p = g.pow2_in(4, 256);
+            assert!(p.is_power_of_two());
+            assert!(p >= 4 && p <= 256);
+        });
+    }
+}

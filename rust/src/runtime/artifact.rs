@@ -1,0 +1,135 @@
+//! Artifact manifest: what `aot.py` compiled, with shapes and roles.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata of one compiled HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Graph kind: cbe_encode | cbe_project | lsh_encode | bilinear_encode
+    /// | opt_encode_b | opt_hg.
+    pub kind: String,
+    pub d: usize,
+    pub batch: usize,
+    pub k: Option<usize>,
+    /// Input shapes, in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// HLO text file (absolute).
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.json.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a
+                    .get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("artifact missing 'inputs'"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect()
+                })
+                .collect();
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                kind: get_str("kind")?,
+                d: get_usize("d")?,
+                batch: get_usize("batch")?,
+                k: a.get("k").and_then(|v| v.as_usize()),
+                inputs,
+                path: dir.join(get_str("path")?),
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Find the artifact for a (kind, d) pair.
+    pub fn find(&self, kind: &str, d: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.kind == kind && a.d == d)
+    }
+
+    /// All feature dimensions available for a given kind.
+    pub fn dims(&self, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.d)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("cbe_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "cbe_encode_d8_b4", "kind": "cbe_encode",
+                 "d": 8, "batch": 4, "path": "x.hlo.txt",
+                 "inputs": [[4, 8], [8], [8]]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("cbe_encode", 8).unwrap();
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.inputs, vec![vec![4, 8], vec![8], vec![8]]);
+        assert_eq!(m.dims("cbe_encode"), vec![8]);
+        assert!(m.find("cbe_encode", 9).is_none());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Exercised against the checked-out artifacts when they exist.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(a.path.exists(), "missing {}", a.path.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute many.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Wraps the PJRT CPU client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) the executable for an artifact name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = meta
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Find an artifact by (kind, d); returns its metadata.
+    pub fn find(&self, kind: &str, d: usize) -> Option<ArtifactMeta> {
+        self.manifest.find(kind, d).cloned()
+    }
+
+    /// Execute an artifact with f32 inputs (shapes per the manifest entry).
+    /// Returns the flattened f32 outputs, one Vec per result tuple element.
+    pub fn execute(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let exe = self.compiled.get(name).unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let mut result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let elems = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().map_err(|e2| anyhow!("to_vec: {e2:?}"))?);
+        }
+        Ok(out)
+    }
+
+    /// Number of distinct compiled executables currently cached.
+    pub fn loaded_count(&self) -> usize {
+        self.compiled.len()
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs at request time — the rust binary is self-contained
+//! once `make artifacts` has been run.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use engine::Engine;

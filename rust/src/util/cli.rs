@@ -1,0 +1,143 @@
+//! Declarative command-line flag parser (no `clap` in the offline vendor
+//! set). `--flag value`, `--flag=value` and boolean `--flag` forms, with
+//! typed accessors, defaults and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals + flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    spec: Vec<(String, String, String)>, // name, default, help
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name / subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.flags.insert(rest.to_string(), v);
+                } else {
+                    a.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    /// Register a flag for usage text; returns self for chaining.
+    pub fn describe(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.spec
+            .push((name.to_string(), default.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+    pub fn f32(&self, name: &str, default: f32) -> f32 {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+    pub fn bool(&self, name: &str, default: bool) -> bool {
+        match self.flags.get(name).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+    /// Comma-separated usize list.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    /// Render usage text from `describe` entries.
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut s = format!("usage: cbe {cmd} [flags]\n");
+        for (name, default, help) in &self.spec {
+            s.push_str(&format!("  --{name:<18} {help} (default: {default})\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn flag_forms() {
+        // NOTE: a bare `--flag` consumes the following token as its value
+        // unless it is another flag, so positionals go first (or use `=`).
+        let a = parse(&["pos1", "--dim", "512", "--bits=256", "--verbose"]);
+        assert_eq!(a.usize("dim", 0), 512);
+        assert_eq!(a.usize("bits", 0), 256);
+        assert!(a.bool("verbose", false));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("dim", 64), 64);
+        assert_eq!(a.str("name", "x"), "x");
+        assert!(!a.bool("verbose", false));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--bits", "64,128,256"]);
+        assert_eq!(a.usize_list("bits", &[]), vec![64, 128, 256]);
+        assert_eq!(a.usize_list("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["--lr", "-0.5"]);
+        assert_eq!(a.f32("lr", 0.0), -0.5);
+    }
+}

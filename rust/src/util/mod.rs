@@ -1,0 +1,72 @@
+//! Foundational utilities built from scratch (the offline vendor set has no
+//! `rand`/`serde`/`clap`, so these are first-class substrates of the repo).
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod table;
+pub mod timer;
+
+/// ℓ2-normalize a vector in place; returns the original norm.
+pub fn l2_normalize(v: &mut [f32]) -> f32 {
+    let n = (v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()).sqrt() as f32;
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+    }
+    n
+}
+
+/// Dot product of two f32 slices (f64 accumulator for stability).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc as f32
+}
+
+/// Angle between two vectors, in radians.
+pub fn angle(a: &[f32], b: &[f32]) -> f32 {
+    let na = dot(a, a).sqrt();
+    let nb = dot(b, b).sqrt();
+    let c = (dot(a, b) / (na * nb)).clamp(-1.0, 1.0);
+    c.acos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_normalize_unit_norm() {
+        let mut v = vec![3.0, 4.0];
+        let n = l2_normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((dot(&v, &v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_normalize_zero_vector_is_noop() {
+        let mut v = vec![0.0; 8];
+        let n = l2_normalize(&mut v);
+        assert_eq!(n, 0.0);
+        assert!(v.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn angle_orthogonal() {
+        let a = vec![1.0, 0.0];
+        let b = vec![0.0, 2.0];
+        assert!((angle(&a, &b) - std::f32::consts::FRAC_PI_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn angle_parallel() {
+        let a = vec![1.0, 1.0, 0.5];
+        assert!(angle(&a, &a).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,169 @@
+//! Integration: the EmbeddingService end to end — dynamic batching over the
+//! PJRT request path, retrieval, metrics — plus property tests on the
+//! coordinator invariants (batching, routing) via proptest_lite.
+
+use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::fft::Planner;
+use cbe::projections::CirculantProjection;
+use cbe::proptest_lite::forall;
+use cbe::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn service(d: usize, bits: usize, seed: u64) -> Option<(EmbeddingService, Vec<f32>, Vec<f32>)> {
+    let dir = artifacts()?;
+    let mut rng = Pcg64::new(seed);
+    let r = rng.normal_vec(d);
+    let signs = rng.sign_vec(d);
+    let svc = EmbeddingService::start(
+        &dir,
+        ServiceConfig {
+            d,
+            bits,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(1),
+            },
+        },
+        r.clone(),
+        signs.clone(),
+    )
+    .unwrap();
+    Some((svc, r, signs))
+}
+
+#[test]
+fn served_codes_match_native_encoder() {
+    let Some((svc, r, signs)) = service(512, 128, 11) else { return };
+    let proj = CirculantProjection::new(r, signs, Planner::new());
+    let mut rng = Pcg64::new(12);
+    for _ in 0..5 {
+        let x = rng.normal_vec(512);
+        let resp = svc.encode(x.clone()).unwrap();
+        assert_eq!(resp.signs.len(), 128);
+        let y = proj.project(&x);
+        let native = proj.encode(&x, 128);
+        for j in 0..128 {
+            if y[j].abs() > 1e-3 {
+                assert_eq!(resp.signs[j], native[j], "bit {j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_requests_batch_together() {
+    let Some((svc, _, _)) = service(512, 64, 13) else { return };
+    let mut rng = Pcg64::new(14);
+    let handles: Vec<_> = (0..96)
+        .map(|_| svc.encode_async(rng.normal_vec(512)).unwrap())
+        .collect();
+    for h in handles {
+        let resp = h.recv().unwrap();
+        assert_eq!(resp.signs.len(), 64);
+        assert!(resp.signs.iter().all(|s| s.abs() == 1.0));
+    }
+    assert_eq!(svc.metrics.request_count(), 96);
+    // 96 requests at max_batch=32 must have used ≥ 3 batches but far
+    // fewer than 96 (i.e. batching actually happened).
+    let batches = svc.metrics.batch_count();
+    assert!(batches >= 3, "batches={batches}");
+    assert!(batches < 96, "no batching happened: {batches}");
+}
+
+#[test]
+fn wrong_dim_rejected() {
+    let Some((svc, _, _)) = service(512, 64, 15) else { return };
+    assert!(svc.encode_async(vec![0.0; 100]).is_err());
+}
+
+#[test]
+fn index_and_search_roundtrip() {
+    let Some((svc, _, _)) = service(512, 256, 16) else { return };
+    let mut rng = Pcg64::new(17);
+    let rows: Vec<Vec<f32>> = (0..64)
+        .map(|_| {
+            let mut v = rng.normal_vec(512);
+            cbe::util::l2_normalize(&mut v);
+            v
+        })
+        .collect();
+    let index = svc.build_index(&rows).unwrap();
+    assert_eq!(index.len(), 64);
+    // Searching with a database row must return itself first (distance 0).
+    for qi in [0usize, 10, 63] {
+        let hits = svc.search(&index, rows[qi].clone(), 3).unwrap();
+        assert_eq!(hits[0].id, qi as u32);
+        assert_eq!(hits[0].dist, 0);
+    }
+}
+
+// ---------------------------------------------------------- properties
+
+#[test]
+fn prop_batcher_never_exceeds_capacity_and_preserves_order() {
+    use cbe::coordinator::request::EncodeRequest;
+    use cbe::coordinator::Batcher;
+    use std::time::Instant;
+
+    forall("batcher capacity + FIFO", 200, |g| {
+        let cap = g.usize_in(1, 16);
+        let n = g.usize_in(0, 50);
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: cap,
+            max_wait: Duration::from_secs(3600),
+        });
+        for _ in 0..n {
+            b.push(EncodeRequest::new(vec![0.0], 1).0);
+        }
+        let mut drained = 0usize;
+        let far_future = Instant::now() + Duration::from_secs(7200);
+        while let Some(batch) = b.pop_ready(far_future) {
+            assert!(batch.len() <= cap);
+            assert!(!batch.is_empty());
+            drained += batch.len();
+        }
+        assert_eq!(drained, n);
+        assert!(b.is_empty());
+    });
+}
+
+#[test]
+fn prop_router_total_on_manifest_dims() {
+    use cbe::coordinator::Router;
+    use cbe::runtime::{ArtifactMeta, Manifest};
+
+    forall("router finds every advertised dim", 100, |g| {
+        let n = g.usize_in(1, 8);
+        let mut arts = Vec::new();
+        for i in 0..n {
+            let d = g.pow2_in(8, 4096) + i; // distinct-ish dims
+            arts.push(ArtifactMeta {
+                name: format!("cbe_encode_d{d}"),
+                kind: "cbe_encode".into(),
+                d,
+                batch: g.usize_in(1, 64),
+                k: None,
+                inputs: vec![],
+                path: PathBuf::new(),
+            });
+        }
+        let m = Manifest { artifacts: arts };
+        let router = Router::from_manifest(&m);
+        for d in router.dims("cbe_encode") {
+            let e = router.route("cbe_encode", d).unwrap();
+            assert_eq!(e.d, d);
+        }
+        assert!(router.route("cbe_encode", 5).is_err());
+    });
+}

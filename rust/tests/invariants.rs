@@ -1,0 +1,127 @@
+//! Cross-module property tests: the paper's structural invariants, driven
+//! by proptest_lite across random shapes and seeds.
+
+use cbe::bits::hamming::normalized_hamming;
+use cbe::bits::BitCode;
+use cbe::fft::{real, Planner};
+use cbe::projections::CirculantProjection;
+use cbe::proptest_lite::forall;
+use cbe::util::l2_normalize;
+
+#[test]
+fn prop_circulant_commutes_with_shift() {
+    // The defining property of circ(r): shifting the input circularly
+    // shifts the projection circularly (R is shift-equivariant).
+    forall("circulant shift equivariance", 40, |g| {
+        let d = g.usize_in(4, 64);
+        let planner = Planner::new();
+        let r = g.normal_vec(d);
+        let proj = CirculantProjection::new(r, vec![1.0; d], planner);
+        let x = g.normal_vec(d);
+        let y = proj.project(&x);
+        // shift x by s
+        let s = g.usize_in(1, d - 1);
+        let xs: Vec<f32> = (0..d).map(|i| x[(i + d - s) % d]).collect();
+        let ys = proj.project(&xs);
+        for i in 0..d {
+            let want = y[(i + d - s) % d];
+            assert!(
+                (ys[i] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "d={d} s={s} i={i}: {} vs {want}",
+                ys[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_projection_linear() {
+    forall("circulant projection is linear", 40, |g| {
+        let d = g.usize_in(2, 96);
+        let planner = Planner::new();
+        let proj = CirculantProjection::random(d, g.rng(), planner);
+        let x = g.normal_vec(d);
+        let yv = proj.project(&x);
+        let alpha = g.f32_in(-3.0, 3.0);
+        let xs: Vec<f32> = x.iter().map(|v| v * alpha).collect();
+        let ys = proj.project(&xs);
+        for i in 0..d {
+            assert!(
+                (ys[i] - alpha * yv[i]).abs() < 1e-2 * (1.0 + yv[i].abs()),
+                "i={i}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_spectrum_energy_preserved() {
+    // Parseval through the whole real-FFT stack (incl. Bluestein sizes).
+    forall("parseval on rfft_full", 60, |g| {
+        let d = g.usize_in(2, 200);
+        let planner = Planner::new();
+        let x = g.normal_vec(d);
+        let spec = real::rfft_full(&planner, &x);
+        let e_time: f64 = x.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+        let e_freq: f64 = spec.iter().map(|c| c.norm_sqr()).sum::<f64>() / d as f64;
+        assert!(
+            (e_time - e_freq).abs() < 1e-6 * (1.0 + e_time),
+            "d={d}: {e_time} vs {e_freq}"
+        );
+    });
+}
+
+#[test]
+fn prop_hamming_metric_axioms() {
+    forall("normalized hamming is a metric on sign vectors", 100, |g| {
+        let bits = g.usize_in(1, 300);
+        let a = g.sign_vec(bits);
+        let b = g.sign_vec(bits);
+        let c = g.sign_vec(bits);
+        let dab = normalized_hamming(&a, &b);
+        let dba = normalized_hamming(&b, &a);
+        assert_eq!(dab, dba);
+        assert_eq!(normalized_hamming(&a, &a), 0.0);
+        let dac = normalized_hamming(&a, &c);
+        let dcb = normalized_hamming(&c, &b);
+        assert!(dab <= dac + dcb + 1e-12, "triangle inequality");
+        assert!((0.0..=1.0).contains(&dab));
+    });
+}
+
+#[test]
+fn prop_bitcode_pack_preserves_hamming() {
+    forall("packed hamming == unpacked hamming", 80, |g| {
+        let bits = g.usize_in(1, 260);
+        let a = g.sign_vec(bits);
+        let b = g.sign_vec(bits);
+        let ca = BitCode::from_signs(&a, 1, bits);
+        let cb = BitCode::from_signs(&b, 1, bits);
+        let packed =
+            cbe::bits::hamming::hamming(&ca, 0, &cb, 0) as f64 / bits as f64;
+        assert!((packed - normalized_hamming(&a, &b)).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_encode_invariant_to_positive_scaling() {
+    // sign(R·D·(αx)) = sign(R·D·x) for α > 0 — codes depend on direction
+    // only, the basis of the paper's angle-preservation claims.
+    forall("codes scale-invariant", 40, |g| {
+        let d = g.usize_in(4, 80);
+        let planner = Planner::new();
+        let proj = CirculantProjection::random(d, g.rng(), planner);
+        let mut x = g.normal_vec(d);
+        l2_normalize(&mut x);
+        let y = proj.project(&x);
+        let alpha = g.f32_in(0.1, 10.0);
+        let xs: Vec<f32> = x.iter().map(|v| v * alpha).collect();
+        let c1 = proj.encode(&x, d);
+        let c2 = proj.encode(&xs, d);
+        for j in 0..d {
+            if y[j].abs() > 1e-3 {
+                assert_eq!(c1[j], c2[j], "bit {j}");
+            }
+        }
+    });
+}

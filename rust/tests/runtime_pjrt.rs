@@ -1,0 +1,164 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and agrees
+//! with the native Rust implementations — the cross-layer correctness
+//! contract of the whole three-layer architecture.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use cbe::fft::Planner;
+use cbe::projections::CirculantProjection;
+use cbe::runtime::Engine;
+use cbe::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn cbe_encode_pjrt_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let meta = engine.find("cbe_encode", 512).expect("d=512 artifact");
+    let (b, d) = (meta.batch, meta.d);
+
+    let mut rng = Pcg64::new(7);
+    let x: Vec<f32> = rng.normal_vec(b * d);
+    let r = rng.normal_vec(d);
+    let signs = rng.sign_vec(d);
+
+    let outs = engine
+        .execute(
+            &meta.name,
+            &[(&x, &[b, d]), (&r, &[d]), (&signs, &[d])],
+        )
+        .unwrap();
+    let codes = &outs[0];
+    assert_eq!(codes.len(), b * d);
+
+    // Native path must agree bit-for-bit except at near-zero projections.
+    let proj = CirculantProjection::new(r, signs, Planner::new());
+    let mut mismatches = 0usize;
+    let mut checked = 0usize;
+    for i in 0..b {
+        let row = &x[i * d..(i + 1) * d];
+        let y = proj.project(row);
+        let native = proj.encode(row, d);
+        for j in 0..d {
+            if y[j].abs() > 1e-3 {
+                checked += 1;
+                if native[j] != codes[i * d + j] {
+                    mismatches += 1;
+                }
+            }
+        }
+    }
+    assert!(checked > b * d / 2);
+    assert_eq!(
+        mismatches, 0,
+        "PJRT and native disagree on {mismatches}/{checked} stable bits"
+    );
+}
+
+#[test]
+fn cbe_project_pjrt_matches_native_values() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let meta = engine.find("cbe_project", 512).expect("artifact");
+    let (b, d) = (meta.batch, meta.d);
+    let mut rng = Pcg64::new(8);
+    let x: Vec<f32> = rng.normal_vec(b * d);
+    let r = rng.normal_vec(d);
+    let signs = rng.sign_vec(d);
+    let outs = engine
+        .execute(&meta.name, &[(&x, &[b, d]), (&r, &[d]), (&signs, &[d])])
+        .unwrap();
+    let proj = CirculantProjection::new(r, signs, Planner::new());
+    let mut max_err = 0f32;
+    for i in 0..b {
+        let y = proj.project(&x[i * d..(i + 1) * d]);
+        for j in 0..d {
+            max_err = max_err.max((y[j] - outs[0][i * d + j]).abs());
+        }
+    }
+    assert!(max_err < 2e-2, "max |native - pjrt| = {max_err}");
+}
+
+#[test]
+fn opt_hg_pjrt_matches_native_accumulators() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let meta = engine.find("opt_hg", 512).expect("artifact");
+    let (b, d) = (meta.batch, meta.d);
+    let mut rng = Pcg64::new(9);
+    let x: Vec<f32> = rng.normal_vec(b * d);
+    let codes: Vec<f32> = rng.sign_vec(b * d);
+    let outs = engine
+        .execute(&meta.name, &[(&x, &[b, d]), (&codes, &[b, d])])
+        .unwrap();
+    assert_eq!(outs.len(), 3, "m, h, g");
+    // Native reference via the fft substrate.
+    let planner = Planner::new();
+    let mut m = vec![0f64; d];
+    let mut h = vec![0f64; d];
+    let mut g = vec![0f64; d];
+    for i in 0..b {
+        let xf = cbe::fft::real::rfft_full(&planner, &x[i * d..(i + 1) * d]);
+        let bf = cbe::fft::real::rfft_full(&planner, &codes[i * d..(i + 1) * d]);
+        for l in 0..d {
+            m[l] += xf[l].norm_sqr();
+            h[l] -= 2.0 * (xf[l].re * bf[l].re + xf[l].im * bf[l].im);
+            g[l] += 2.0 * (xf[l].im * bf[l].re - xf[l].re * bf[l].im);
+        }
+    }
+    for l in 0..d {
+        let scale = 1.0 + m[l].abs();
+        assert!((outs[0][l] as f64 - m[l]).abs() / scale < 1e-3, "m[{l}]");
+        let scale = 1.0 + h[l].abs();
+        assert!((outs[1][l] as f64 - h[l]).abs() / scale < 1e-2, "h[{l}]");
+        let scale = 1.0 + g[l].abs();
+        assert!((outs[2][l] as f64 - g[l]).abs() / scale < 1e-2, "g[{l}]");
+    }
+}
+
+#[test]
+fn engine_caches_compiled_executables() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let meta = engine.find("cbe_encode", 512).unwrap();
+    engine.load(&meta.name).unwrap();
+    engine.load(&meta.name).unwrap();
+    assert_eq!(engine.loaded_count(), 1);
+}
+
+#[test]
+fn lsh_encode_pjrt_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let meta = engine.find("lsh_encode", 512).expect("artifact");
+    let (b, d) = (meta.batch, meta.d);
+    let k = meta.k.unwrap();
+    let mut rng = Pcg64::new(10);
+    let x: Vec<f32> = rng.normal_vec(b * d);
+    let w: Vec<f32> = rng.normal_vec(k * d);
+    let outs = engine
+        .execute(&meta.name, &[(&x, &[b, d]), (&w, &[k, d])])
+        .unwrap();
+    let codes = &outs[0];
+    let wmat = cbe::linalg::Mat::from_vec(k, d, w);
+    let proj = cbe::projections::FullProjection::from_mat(wmat);
+    for i in 0..b {
+        let y = proj.project(&x[i * d..(i + 1) * d]);
+        let native = proj.encode(&x[i * d..(i + 1) * d]);
+        for j in 0..k {
+            if y[j].abs() > 1e-3 {
+                assert_eq!(native[j], codes[i * k + j], "row {i} bit {j}");
+            }
+        }
+    }
+}
