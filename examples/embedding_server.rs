@@ -13,6 +13,7 @@ use cbe::encoders::CbeOpt;
 use cbe::eval::{recall_auc, recall_curve};
 use cbe::fft::Planner;
 use cbe::groundtruth::exact_knn;
+use cbe::index::IndexBackend;
 use cbe::opt::TimeFreqConfig;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -26,8 +27,17 @@ fn main() -> anyhow::Result<()> {
     if !artifacts.join("manifest.json").exists() {
         anyhow::bail!("run `make artifacts` first");
     }
+    // Retrieval backend is config: CBE_INDEX=linear|mih[:m]|sharded:<s>[:m]
+    // (default auto → routed by corpus size).
+    let backend = IndexBackend::from_spec(
+        &std::env::var("CBE_INDEX").unwrap_or_else(|_| "auto".to_string()),
+    )
+    .map_err(|e| anyhow::anyhow!("CBE_INDEX: {e}"))?;
 
-    println!("== embedding server e2e: d={d} bits={bits} db={n_db} ==");
+    println!(
+        "== embedding server e2e: d={d} bits={bits} db={n_db} index={} ==",
+        backend.spec()
+    );
 
     // Data + training (build phase; python is NOT involved at runtime).
     let ds = generate(&SynthConfig::imagenet(n_db + n_queries, d, 11));
@@ -52,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 32,
                 max_wait: Duration::from_millis(2),
             },
+            index: backend,
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),
@@ -63,10 +74,11 @@ fn main() -> anyhow::Result<()> {
     let index = svc.build_index(&rows)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "indexed {} vectors in {:.2}s ({:.0} vec/s through PJRT path)",
+        "indexed {} vectors in {:.2}s ({:.0} vec/s through PJRT path, backend {})",
         index.len(),
         dt,
-        index.len() as f64 / dt
+        index.len() as f64 / dt,
+        index.backend_name()
     );
 
     // Serve query traffic: concurrent async submits (exercises batching).

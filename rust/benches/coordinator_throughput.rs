@@ -1,15 +1,157 @@
-//! Bench: serving-path throughput/latency of the coordinator (batched PJRT
-//! encode). Not a paper table — the L3 perf target of DESIGN.md §Perf.
+//! Bench: serving-path throughput of the coordinator, in two parts.
+//!
+//! 1. Batched PJRT encode latency/QPS (needs `make artifacts`; skipped
+//!    otherwise) — the L3 perf target of DESIGN.md §Perf.
+//! 2. Retrieval QPS: linear scan vs MIH vs sharded MIH over packed codes
+//!    at n ∈ {10⁴, 10⁵, 10⁶}, 256-bit — written to `BENCH_index.json`.
+//!    Cap the sweep with `CBE_BENCH_MAX_N=100000` on small machines.
+//!
+//! The retrieval corpus is *clustered* (cluster centers + per-bit flip
+//! noise), because that is the regime real embedding codes live in;
+//! uniform random codes are the degenerate case where every point is
+//! equidistant and no Hamming index — ours or anyone's — can help.
 
+use cbe::bits::BitCode;
 use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::index::{build_index, IndexAny, IndexBackend};
+use cbe::util::json::Json;
 use cbe::util::rng::Pcg64;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-fn main() {
+/// Flip each of `bits` bits with probability `p` (geometric skip-sampling,
+/// so cost scales with the number of flips, not the number of bits).
+fn flip_bits(rng: &mut Pcg64, words: &mut [u64], bits: usize, p: f64) {
+    let mut i = 0usize;
+    loop {
+        let u = rng.next_f64();
+        let skip = (u.max(1e-300).ln() / (1.0 - p).ln()).floor() as usize;
+        i = i.saturating_add(skip);
+        if i >= bits {
+            return;
+        }
+        words[i / 64] ^= 1u64 << (i % 64);
+        i += 1;
+    }
+}
+
+/// Clustered corpus: `centers` random codes, each row a center with
+/// per-bit flip noise `p` — neighbor structure like real embeddings.
+fn clustered_codes(rng: &mut Pcg64, n: usize, bits: usize, centers: usize, p: f64) -> BitCode {
+    let wpc = bits.div_ceil(64);
+    let pad = wpc * 64 - bits;
+    let mask = if pad == 0 { u64::MAX } else { u64::MAX >> pad };
+    let center_words: Vec<u64> = (0..centers * wpc)
+        .map(|j| {
+            let w = rng.next_u64();
+            if (j + 1) % wpc == 0 {
+                w & mask
+            } else {
+                w
+            }
+        })
+        .collect();
+    let mut codes = BitCode::new(n, bits);
+    for row in 0..n {
+        let c = rng.below(centers as u64) as usize;
+        let words = &mut codes.data[row * wpc..(row + 1) * wpc];
+        words.copy_from_slice(&center_words[c * wpc..(c + 1) * wpc]);
+        flip_bits(rng, words, bits, p);
+    }
+    codes
+}
+
+/// Queries = perturbed database rows, so every query has true neighbors.
+fn perturbed_queries(rng: &mut Pcg64, db: &BitCode, nq: usize, p: f64) -> BitCode {
+    let wpc = db.words_per_code;
+    let mut queries = BitCode::new(nq, db.bits);
+    for qi in 0..nq {
+        let src = rng.below(db.n as u64) as usize;
+        let words = &mut queries.data[qi * wpc..(qi + 1) * wpc];
+        words.copy_from_slice(db.code(src));
+        flip_bits(rng, words, db.bits, p);
+    }
+    queries
+}
+
+fn bench_index_backends() {
+    let bits = 256;
+    let k = 10;
+    let nq = 200;
+    let flip = 0.05;
+    let max_n: usize = std::env::var("CBE_BENCH_MAX_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let shards = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .max(2);
+
+    println!("== retrieval backends: bits={bits} k={k} queries={nq} shards={shards} ==");
+    let mut results: Vec<Json> = Vec::new();
+    for n in [10_000usize, 100_000, 1_000_000] {
+        if n > max_n {
+            println!("n={n}: skipped (CBE_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let mut rng = Pcg64::new(0xbeec + n as u64);
+        let db = clustered_codes(&mut rng, n, bits, (n / 1000).max(16), flip);
+        let queries = perturbed_queries(&mut rng, &db, nq, flip);
+
+        let backends = [
+            IndexBackend::Linear,
+            IndexBackend::Mih { m: None },
+            IndexBackend::ShardedMih { shards, m: None },
+        ];
+        let mut reference: Option<Vec<Vec<cbe::bits::index::Hit>>> = None;
+        for backend in backends {
+            let t0 = Instant::now();
+            let index: IndexAny = build_index(db.clone(), &backend);
+            let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            // Warm caches/allocators, then time the full batch.
+            std::hint::black_box(index.search_batch(&queries, k));
+            let t0 = Instant::now();
+            let hits = index.search_batch(&queries, k);
+            let dt = t0.elapsed().as_secs_f64();
+            let qps = nq as f64 / dt;
+
+            // Every backend is exact: identical hits or the bench is void.
+            match &reference {
+                None => reference = Some(hits),
+                Some(r) => assert_eq!(&hits, r, "backend {} diverged", backend.spec()),
+            }
+
+            println!(
+                "n={n:<8} backend={:<12} build={build_ms:>9.1} ms  qps={qps:>9.0}",
+                backend.spec()
+            );
+            results.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("backend", Json::str(&backend.spec())),
+                ("build_ms", Json::num(build_ms)),
+                ("batch_s", Json::num(dt)),
+                ("qps", Json::num(qps)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bits", Json::num(bits as f64)),
+        ("k", Json::num(k as f64)),
+        ("queries", Json::num(nq as f64)),
+        ("flip_prob", Json::num(flip)),
+        ("shards", Json::num(shards as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_index.json", format!("{doc}\n")).expect("write BENCH_index.json");
+    println!("wrote BENCH_index.json");
+}
+
+fn bench_pjrt_encode() {
     let dir = PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {
-        println!("skipping coordinator bench: run `make artifacts` first");
+        println!("skipping coordinator encode bench: run `make artifacts` first");
         return;
     }
     let d = 512;
@@ -24,6 +166,7 @@ fn main() {
                     max_batch,
                     max_wait: Duration::from_millis(1),
                 },
+                index: IndexBackend::Auto,
             },
             rng.normal_vec(d),
             rng.sign_vec(d),
@@ -45,4 +188,9 @@ fn main() {
             svc.metrics.summary(max_batch)
         );
     }
+}
+
+fn main() {
+    bench_index_backends();
+    bench_pjrt_encode();
 }

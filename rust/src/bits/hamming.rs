@@ -38,6 +38,33 @@ pub fn hamming_to_all(q: &[u64], db: &BitCode, out: &mut [u32]) {
                 *o = (q0 ^ db.data[base]).count_ones() + (q1 ^ db.data[base + 1]).count_ones();
             }
         }
+        // 256- and 512-bit codes are the serving sweet spots (and what MIH
+        // re-ranking hammers); fully unrolled so the popcounts pipeline
+        // without the generic loop's per-word bookkeeping.
+        4 => {
+            let qw: [u64; 4] = [q[0], q[1], q[2], q[3]];
+            for (i, o) in out.iter_mut().enumerate() {
+                let c = &db.data[i * 4..i * 4 + 4];
+                *o = (qw[0] ^ c[0]).count_ones()
+                    + (qw[1] ^ c[1]).count_ones()
+                    + (qw[2] ^ c[2]).count_ones()
+                    + (qw[3] ^ c[3]).count_ones();
+            }
+        }
+        8 => {
+            let qw: [u64; 8] = [q[0], q[1], q[2], q[3], q[4], q[5], q[6], q[7]];
+            for (i, o) in out.iter_mut().enumerate() {
+                let c = &db.data[i * 8..i * 8 + 8];
+                *o = (qw[0] ^ c[0]).count_ones()
+                    + (qw[1] ^ c[1]).count_ones()
+                    + (qw[2] ^ c[2]).count_ones()
+                    + (qw[3] ^ c[3]).count_ones()
+                    + (qw[4] ^ c[4]).count_ones()
+                    + (qw[5] ^ c[5]).count_ones()
+                    + (qw[6] ^ c[6]).count_ones()
+                    + (qw[7] ^ c[7]).count_ones();
+            }
+        }
         _ => {
             for (i, o) in out.iter_mut().enumerate() {
                 *o = hamming_words(q, db.code(i));
@@ -86,7 +113,9 @@ mod tests {
     #[test]
     fn hamming_to_all_consistent() {
         let mut rng = Pcg64::new(83);
-        for bits in [64usize, 128, 320] {
+        // 256 and 512 exercise the unrolled 4- and 8-word kernels; 200 and
+        // 450 exercise them with padding bits in the last word.
+        for bits in [64usize, 128, 200, 256, 320, 450, 512] {
             let n = 20;
             let signs: Vec<f32> = rng.sign_vec(n * bits);
             let db = BitCode::from_signs(&signs, n, bits);

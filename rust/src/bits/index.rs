@@ -40,8 +40,10 @@ impl BinaryIndex {
         self.codes.n == 0
     }
 
-    /// Top-k nearest codes by Hamming distance. Ties broken by insertion
-    /// order (stable for reproducibility). Returns hits sorted by distance.
+    /// Top-k nearest codes by Hamming distance: the k lexicographically
+    /// smallest `(dist, id)` pairs, sorted. Ties break by ascending id —
+    /// the shared contract of every backend in `crate::index`, so exact
+    /// backends agree hit-for-hit even with custom external ids.
     pub fn search(&self, query: &[u64], k: usize) -> Vec<Hit> {
         let n = self.len();
         let k = k.min(n);
@@ -50,35 +52,67 @@ impl BinaryIndex {
         }
         let mut dists = vec![0u32; n];
         hamming_to_all(query, &self.codes, &mut dists);
-        // Bounded max-heap of (dist, insertion idx).
+        // Bounded max-heap of (dist, id).
         let mut heap: BinaryHeap<(u32, u32)> = BinaryHeap::with_capacity(k + 1);
         for (i, &d) in dists.iter().enumerate() {
+            let cand = (d, self.ids[i]);
             if heap.len() < k {
-                heap.push((d, i as u32));
-            } else if let Some(&(top, _)) = heap.peek() {
-                if d < top {
+                heap.push(cand);
+            } else if let Some(&top) = heap.peek() {
+                if cand < top {
                     heap.pop();
-                    heap.push((d, i as u32));
+                    heap.push(cand);
                 }
             }
         }
         let mut hits: Vec<Hit> = heap
             .into_iter()
-            .map(|(d, i)| Hit {
-                id: self.ids[i as usize],
-                dist: d,
-            })
+            .map(|(dist, id)| Hit { id, dist })
             .collect();
         hits.sort_by_key(|h| (h.dist, h.id));
         hits
     }
 
-    /// Batch search over a BitCode of queries.
+    /// Batch search over a BitCode of queries, fanned out across cores.
+    ///
+    /// Queries are chunked over `available_parallelism` scoped threads, so
+    /// the linear-scan baseline saturates the machine the same way the
+    /// sharded MIH backend does — `cargo bench coordinator_throughput`
+    /// compares like with like. Results are in query order, identical to a
+    /// sequential map over [`BinaryIndex::search`].
     pub fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
-        (0..queries.n)
-            .map(|i| self.search(queries.code(i), k))
-            .collect()
+        par_map_queries(queries.n, |i| self.search(queries.code(i), k))
     }
+}
+
+/// Run `f(query_index)` for `0..nq`, chunked across scoped threads (at most
+/// `available_parallelism`, sequential for tiny batches). Shared by every
+/// backend's batch path so chunking policy lives in one place.
+pub(crate) fn par_map_queries<F>(nq: usize, f: F) -> Vec<Vec<Hit>>
+where
+    F: Fn(usize) -> Vec<Hit> + Sync,
+{
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(nq);
+    if threads <= 1 || nq < 8 {
+        return (0..nq).map(f).collect();
+    }
+    let mut out: Vec<Vec<Hit>> = vec![Vec::new(); nq];
+    let chunk = nq.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (t, slots) in out.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            scope.spawn(move || {
+                for (j, slot) in slots.iter_mut().enumerate() {
+                    *slot = f(start + j);
+                }
+            });
+        }
+    });
+    out
 }
 
 #[cfg(test)]
@@ -125,6 +159,21 @@ mod tests {
         for (h, (d, i)) in hits.iter().zip(all.iter().take(k)) {
             assert_eq!(h.dist, *d);
             assert_eq!(h.id, *i);
+        }
+    }
+
+    #[test]
+    fn search_batch_matches_sequential() {
+        let mut rng = Pcg64::new(97);
+        let bits = 256;
+        let n = 300;
+        let db = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+        let idx = BinaryIndex::new(db);
+        let queries = BitCode::from_signs(&rng.sign_vec(40 * bits), 40, bits);
+        let batch = idx.search_batch(&queries, 7);
+        assert_eq!(batch.len(), 40);
+        for (i, hits) in batch.iter().enumerate() {
+            assert_eq!(*hits, idx.search(queries.code(i), 7));
         }
     }
 

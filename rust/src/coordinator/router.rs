@@ -1,5 +1,7 @@
-//! Router: maps a request's (kind, feature dim) to a compiled artifact.
+//! Router: maps a request's (kind, feature dim) to a compiled artifact,
+//! and routes retrieval to the right index backend for a corpus size.
 
+use crate::index::IndexBackend;
 use crate::runtime::Manifest;
 use anyhow::{anyhow, Result};
 
@@ -39,6 +41,14 @@ impl Router {
             .find(|r| r.kind == kind && r.d == d)
             .ok_or_else(|| anyhow!("no artifact for kind={kind} d={d}; available dims: {:?}",
                 self.dims(kind)))
+    }
+
+    /// Retrieval-side routing: pick the index backend for a corpus of `n`
+    /// codes of `bits` bits. This is what `ServiceConfig::index = Auto`
+    /// resolves through, so the serving path and the experiments agree on
+    /// when a linear scan stops being the right answer.
+    pub fn pick_index(n: usize, bits: usize) -> IndexBackend {
+        IndexBackend::auto_for(n, bits)
     }
 
     /// Dims served for a kind.
@@ -82,5 +92,18 @@ mod tests {
         assert_eq!(r.route("cbe_encode", 128).unwrap().artifact, "cbe_encode_d128");
         assert!(r.route("cbe_encode", 99).is_err());
         assert_eq!(r.dims("cbe_encode"), vec![64, 128]);
+    }
+
+    #[test]
+    fn index_routing_scales_with_corpus() {
+        assert_eq!(Router::pick_index(1_000, 256), IndexBackend::Linear);
+        assert_eq!(
+            Router::pick_index(50_000, 256),
+            IndexBackend::Mih { m: None }
+        );
+        assert!(matches!(
+            Router::pick_index(2_000_000, 256),
+            IndexBackend::ShardedMih { .. }
+        ));
     }
 }

@@ -9,8 +9,9 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{EncodeRequest, EncodeResponse};
 use super::router::Router;
-use crate::bits::{BinaryIndex, BitCode};
 use crate::bits::index::Hit;
+use crate::bits::BitCode;
+use crate::index::{build_index, AnyIndex, IndexAny, IndexBackend};
 use crate::runtime::Engine;
 use anyhow::{anyhow, Result};
 use std::path::Path;
@@ -28,6 +29,9 @@ pub struct ServiceConfig {
     pub bits: usize,
     /// Batching policy.
     pub batcher: BatcherConfig,
+    /// Retrieval backend built by [`EmbeddingService::build_index`].
+    /// `Auto` defers to [`Router::pick_index`] at corpus-build time.
+    pub index: IndexBackend,
 }
 
 /// The serving facade. Construct with [`EmbeddingService::start`], submit
@@ -124,8 +128,9 @@ impl EmbeddingService {
     }
 
     /// Encode a set of rows into a retrieval index (blocking, batched
-    /// through the same pipeline).
-    pub fn build_index(&self, rows: &[Vec<f32>]) -> Result<BinaryIndex> {
+    /// through the same pipeline). The backend comes from
+    /// `ServiceConfig::index`; `Auto` routes by corpus size.
+    pub fn build_index(&self, rows: &[Vec<f32>]) -> Result<IndexAny> {
         let mut codes = BitCode::new(rows.len(), self.cfg.bits);
         let handles: Vec<_> = rows
             .iter()
@@ -135,11 +140,17 @@ impl EmbeddingService {
             let resp = h.recv().map_err(|_| anyhow!("reply lost"))?;
             codes.set_row_from_signs(i, &resp.signs);
         }
-        Ok(BinaryIndex::new(codes))
+        let backend = match &self.cfg.index {
+            IndexBackend::Auto => Router::pick_index(rows.len(), self.cfg.bits),
+            explicit => explicit.clone(),
+        };
+        Ok(build_index(codes, &backend))
     }
 
-    /// Encode a query and search an index.
-    pub fn search(&self, index: &BinaryIndex, query: Vec<f32>, topk: usize) -> Result<Vec<Hit>> {
+    /// Encode a query and search an index — any backend that speaks
+    /// [`AnyIndex`] (an [`IndexAny`] from [`EmbeddingService::build_index`],
+    /// a bare `BinaryIndex`, `MihIndex`, `ShardedIndex`, …).
+    pub fn search(&self, index: &dyn AnyIndex, query: Vec<f32>, topk: usize) -> Result<Vec<Hit>> {
         let resp = self.encode(query)?;
         let qc = BitCode::from_signs(&resp.signs, 1, self.cfg.bits);
         Ok(index.search(qc.code(0), topk))

@@ -1,12 +1,15 @@
 //! Retrieval evaluation: recall@R curves (the paper's Figures 2–5 metric)
 //! and AUC (the §6 semi-supervised metric).
 
-use crate::bits::{BinaryIndex, BitCode};
+use crate::bits::BitCode;
+use crate::index::AnyIndex;
 
 /// recall@R for R = 1..max_r, averaged over queries: the fraction of the
-/// true k nearest neighbors found in the top-R Hamming candidates.
+/// true k nearest neighbors found in the top-R Hamming candidates. Works
+/// against any retrieval backend (all are exact, so recall is invariant
+/// to the backend choice).
 pub fn recall_curve(
-    index: &BinaryIndex,
+    index: &dyn AnyIndex,
     query_codes: &BitCode,
     groundtruth: &[Vec<u32>],
     max_r: usize,
@@ -66,6 +69,7 @@ pub fn recall_at(curve: &[f64], points: &[usize]) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bits::BinaryIndex;
     use crate::util::rng::Pcg64;
 
     #[test]

@@ -7,12 +7,12 @@
 //!   bits; slower methods must use fewer bits (first rows). Budgets are
 //!   computed from measured per-vector encode times.
 
-use crate::bits::BinaryIndex;
 use crate::data::{gather, generate, train_query_split, Dataset, SynthConfig};
 use crate::encoders::{BilinearOpt, BilinearRand, BinaryEncoder, CbeOpt, CbeRand, Lsh};
 use crate::eval::{recall_auc, recall_curve};
 use crate::fft::Planner;
 use crate::groundtruth::exact_knn;
+use crate::index::{build_index, IndexBackend};
 use crate::linalg::Mat;
 use crate::opt::TimeFreqConfig;
 use crate::util::table::Table;
@@ -38,6 +38,10 @@ pub struct SweepConfig {
     pub max_r: usize,
     pub opt_iters: usize,
     pub seed: u64,
+    /// Retrieval backend for the recall evaluation. Every backend is
+    /// exact, so curves are identical across backends; this exists so the
+    /// sweep doubles as an end-to-end exerciser of the index subsystem.
+    pub index: IndexBackend,
 }
 
 impl SweepConfig {
@@ -53,6 +57,7 @@ impl SweepConfig {
             max_r: 100,
             opt_iters: 5,
             seed: 20140601,
+            index: IndexBackend::Auto,
         }
     }
 }
@@ -98,10 +103,11 @@ fn eval_encoder(
     queries: &Mat,
     gt: &[Vec<u32>],
     max_r: usize,
+    backend: &IndexBackend,
 ) -> (Vec<f64>, f64, f64) {
     let db_codes = enc.encode_batch(db);
     let q_codes = enc.encode_batch(queries);
-    let index = BinaryIndex::new(db_codes);
+    let index = build_index(db_codes, backend);
     let curve = recall_curve(&index, &q_codes, gt, max_r);
     let auc = recall_auc(&curve);
     let ms = encode_time_ms(enc, queries, 16);
@@ -134,7 +140,7 @@ pub fn run(cfg: &SweepConfig) -> SweepResult {
             vec![&cbe_rand, &cbe_opt, &lsh, &bil_rand, &bil_opt];
         let mut cbe_ms = 0.0;
         for m in &methods {
-            let (curve, auc, ms) = eval_encoder(*m, &db, &queries, &gt, cfg.max_r);
+            let (curve, auc, ms) = eval_encoder(*m, &db, &queries, &gt, cfg.max_r, &cfg.index);
             if m.name() == "CBE-rand" {
                 cbe_ms = ms;
             }
@@ -165,15 +171,15 @@ pub fn run(cfg: &SweepConfig) -> SweepResult {
             let (curve, auc, ms2) = match name.as_str() {
                 "LSH" => {
                     let e = Lsh::new(cfg.d, kk, cfg.seed + 7);
-                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r)
+                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r, &cfg.index)
                 }
                 "Bilinear-rand" => {
                     let e = BilinearRand::new(cfg.d, kk, cfg.seed + 8);
-                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r)
+                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r, &cfg.index)
                 }
                 "Bilinear-opt" => {
                     let e = BilinearOpt::train(&train, kk, 3, cfg.seed + 9);
-                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r)
+                    eval_encoder(&e, &db, &queries, &gt, cfg.max_r, &cfg.index)
                 }
                 _ => continue,
             };
@@ -229,7 +235,38 @@ mod tests {
             max_r: 50,
             opt_iters: 4,
             seed: 99,
+            index: IndexBackend::Auto,
         }
+    }
+
+    #[test]
+    fn recall_invariant_to_index_backend() {
+        // All backends are exact, so the sweep must produce identical
+        // curves whichever one serves it.
+        let mut base = tiny();
+        base.n = 250;
+        base.n_train = 100;
+        base.n_queries = 12;
+        let mut curves: Vec<Vec<f64>> = Vec::new();
+        for backend in [
+            IndexBackend::Linear,
+            IndexBackend::Mih { m: Some(8) },
+            IndexBackend::ShardedMih { shards: 3, m: None },
+        ] {
+            let mut cfg = base.clone();
+            cfg.index = backend;
+            let r = run(&cfg);
+            let cbe: Vec<f64> = r
+                .entries
+                .iter()
+                .find(|e| e.method == "CBE-rand" && e.regime == "fixed-bits")
+                .unwrap()
+                .curve
+                .clone();
+            curves.push(cbe);
+        }
+        assert_eq!(curves[0], curves[1]);
+        assert_eq!(curves[0], curves[2]);
     }
 
     #[test]

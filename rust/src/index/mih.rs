@@ -1,0 +1,408 @@
+//! [`MihIndex`]: exact k-NN in Hamming space via multi-index hashing.
+//!
+//! Split every b-bit code into m substrings and bucket each substring in
+//! its own [`SubstringTable`]. A query probes buckets in increasing
+//! substring-radius order and re-ranks candidates with exact full-code
+//! Hamming distance, so results are identical to a linear scan — but only
+//! a vanishing fraction of the corpus is ever touched when codes carry
+//! neighbor structure. See the `crate::index` module docs for the probe
+//! schedule and its termination bound.
+
+use super::substring::{for_each_key_at_radius, substring_spans, BuildFastHash, SubstringTable};
+use crate::bits::bitcode::BitCode;
+use crate::bits::hamming::hamming_words;
+use crate::bits::index::Hit;
+use std::collections::{BinaryHeap, HashMap};
+
+/// C(n, k), saturating in f64 — used only for probe-vs-sweep cost
+/// estimates, never for exact counting.
+fn binomial_approx(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+        if acc > 1e18 {
+            return 1e18;
+        }
+    }
+    acc
+}
+
+/// The m that minimizes probe work for a uniform corpus: one substring per
+/// log2(n) bits (Norouzi et al., "Multi-Index Hashing"), clamped so every
+/// substring key fits a u64 and every substring has at least one bit.
+pub fn auto_m(bits: usize, n: usize) -> usize {
+    let min_m = bits.div_ceil(64).max(1);
+    let target = (bits as f64 / (n.max(2) as f64).log2()).round() as usize;
+    target.clamp(min_m, bits.max(min_m))
+}
+
+/// Multi-index hashing over packed CBE codes. Exact (same contract as
+/// [`crate::bits::BinaryIndex`]), with incremental `insert` / `remove` for
+/// live corpora. Removed rows are tombstoned in code storage but dropped
+/// from every bucket, so probe cost never pays for dead entries.
+pub struct MihIndex {
+    codes: BitCode,
+    ids: Vec<u32>,
+    alive: Vec<bool>,
+    live: usize,
+    slot_of: HashMap<u32, u32, BuildFastHash>,
+    tables: Vec<SubstringTable>,
+}
+
+impl MihIndex {
+    /// Build over a packed corpus with ids `0..n`. `m` = substring count
+    /// (None → [`auto_m`]).
+    pub fn build(codes: BitCode, m: Option<usize>) -> MihIndex {
+        let ids = (0..codes.n as u32).collect();
+        MihIndex::build_with_ids(codes, ids, m)
+    }
+
+    /// Build with explicit external ids (must be unique).
+    pub fn build_with_ids(codes: BitCode, ids: Vec<u32>, m: Option<usize>) -> MihIndex {
+        assert_eq!(codes.n, ids.len());
+        assert!(codes.bits >= 1, "zero-width codes cannot be indexed");
+        let min_m = codes.bits.div_ceil(64).max(1);
+        let m = m
+            .unwrap_or_else(|| auto_m(codes.bits, codes.n))
+            .clamp(min_m, codes.bits);
+        let spans = substring_spans(codes.bits, m);
+        let mut tables: Vec<SubstringTable> = spans
+            .iter()
+            .map(|&(start, len)| SubstringTable::new(start, len))
+            .collect();
+        let mut slot_of =
+            HashMap::with_capacity_and_hasher(codes.n, BuildFastHash::default());
+        for slot in 0..codes.n {
+            let code = codes.code(slot);
+            for t in tables.iter_mut() {
+                t.insert(t.key_of(code), slot as u32);
+            }
+            let prev = slot_of.insert(ids[slot], slot as u32);
+            assert!(prev.is_none(), "duplicate id {}", ids[slot]);
+        }
+        let live = codes.n;
+        let alive = vec![true; codes.n];
+        MihIndex {
+            codes,
+            ids,
+            alive,
+            live,
+            slot_of,
+            tables,
+        }
+    }
+
+    /// Live (non-removed) code count.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+    /// Code length in bits.
+    pub fn bits(&self) -> usize {
+        self.codes.bits
+    }
+    /// Substring count m.
+    pub fn m(&self) -> usize {
+        self.tables.len()
+    }
+    /// Whether an external id is currently indexed.
+    pub fn contains(&self, id: u32) -> bool {
+        self.slot_of.contains_key(&id)
+    }
+
+    /// Add one packed code under a fresh external id. O(m) bucket appends.
+    pub fn insert(&mut self, id: u32, code: &[u64]) {
+        assert_eq!(
+            code.len(),
+            self.codes.words_per_code,
+            "code word count mismatch"
+        );
+        let pad = self.codes.words_per_code * 64 - self.codes.bits;
+        if pad > 0 {
+            assert_eq!(
+                code[code.len() - 1] >> (64 - pad),
+                0,
+                "padding bits beyond `bits` must be zero"
+            );
+        }
+        assert!(!self.slot_of.contains_key(&id), "duplicate id {id}");
+        let slot = self.codes.n as u32;
+        self.codes.data.extend_from_slice(code);
+        self.codes.n += 1;
+        self.ids.push(id);
+        self.alive.push(true);
+        self.live += 1;
+        self.slot_of.insert(id, slot);
+        for t in self.tables.iter_mut() {
+            t.insert(t.key_of(code), slot);
+        }
+    }
+
+    /// Add one ±1 sign row (len == bits) under a fresh external id.
+    pub fn insert_signs(&mut self, id: u32, signs: &[f32]) {
+        let packed = BitCode::from_signs(signs, 1, self.codes.bits);
+        self.insert(id, packed.code(0));
+    }
+
+    /// Remove by external id; false if absent. O(m · bucket length),
+    /// amortized: when tombstones outnumber live rows the storage is
+    /// compacted, so churn cannot grow memory (or per-query sweep/bitmap
+    /// cost) without bound.
+    pub fn remove(&mut self, id: u32) -> bool {
+        let Some(slot) = self.slot_of.remove(&id) else {
+            return false;
+        };
+        let code: Vec<u64> = self.codes.code(slot as usize).to_vec();
+        for t in self.tables.iter_mut() {
+            let removed = t.remove(t.key_of(&code), slot);
+            debug_assert!(removed, "bucket entry missing for live slot");
+        }
+        self.alive[slot as usize] = false;
+        self.live -= 1;
+        if self.codes.n > 64 && self.live * 2 < self.codes.n {
+            self.compact();
+        }
+        true
+    }
+
+    /// Physical storage slots, tombstones included (diagnostics/tests).
+    pub fn storage_slots(&self) -> usize {
+        self.codes.n
+    }
+
+    /// Rebuild storage and tables over the live rows only.
+    fn compact(&mut self) {
+        let wpc = self.codes.words_per_code;
+        let mut codes = BitCode::new(0, self.codes.bits);
+        codes.data.reserve(self.live * wpc);
+        let mut ids = Vec::with_capacity(self.live);
+        for slot in 0..self.codes.n {
+            if self.alive[slot] {
+                codes.data.extend_from_slice(self.codes.code(slot));
+                codes.n += 1;
+                ids.push(self.ids[slot]);
+            }
+        }
+        *self = MihIndex::build_with_ids(codes, ids, Some(self.tables.len()));
+    }
+
+    /// Exact top-k by Hamming distance; ties broken by ascending id, hits
+    /// sorted by `(dist, id)` — the same contract as
+    /// [`crate::bits::BinaryIndex::search`].
+    ///
+    /// Probes buckets in rounds of increasing substring radius and stops
+    /// at the pigeonhole bound (see the `crate::index` module docs). When
+    /// a round's key enumeration would cost more than finishing with a
+    /// direct sweep of the not-yet-seen slots — tiny corpora, adversarial
+    /// `m`, or neighbor-free uniform codes — it sweeps instead, so the
+    /// worst case is bounded by the linear scan it replaces.
+    pub fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
+        assert_eq!(q.len(), self.codes.words_per_code, "query word count");
+        let k = k.min(self.live);
+        if k == 0 {
+            return Vec::new();
+        }
+        let m = self.tables.len() as u32;
+        let mut visited = vec![0u64; self.codes.n.div_ceil(64)];
+        // Bounded max-heap of (dist, id): holds the k lexicographically
+        // smallest pairs seen so far.
+        let mut heap: BinaryHeap<(u32, u32)> = BinaryHeap::with_capacity(k + 1);
+        let push = |heap: &mut BinaryHeap<(u32, u32)>, cand: (u32, u32)| {
+            if heap.len() < k {
+                heap.push(cand);
+            } else if let Some(&top) = heap.peek() {
+                if cand < top {
+                    heap.pop();
+                    heap.push(cand);
+                }
+            }
+        };
+        // Live slots not yet re-ranked; the sweep-cutover budget.
+        let mut unseen = self.live;
+        let max_radius = self.tables.iter().map(|t| t.len).max().unwrap_or(0);
+        for s in 0..=max_radius {
+            let round_keys: f64 = self
+                .tables
+                .iter()
+                .map(|t| binomial_approx(t.len, s))
+                .sum();
+            if round_keys > unseen as f64 {
+                // Cheaper to finish exhaustively than to enumerate keys.
+                for si in 0..self.codes.n {
+                    let (w, b) = (si / 64, si % 64);
+                    if visited[w] >> b & 1 == 1 || !self.alive[si] {
+                        continue;
+                    }
+                    push(
+                        &mut heap,
+                        (hamming_words(q, self.codes.code(si)), self.ids[si]),
+                    );
+                }
+                break;
+            }
+            for t in &self.tables {
+                let qkey = t.key_of(q);
+                for_each_key_at_radius(qkey, t.len, s, &mut |key| {
+                    let Some(bucket) = t.bucket(key) else { return };
+                    for &slot in bucket {
+                        let (w, b) = ((slot / 64) as usize, slot % 64);
+                        if visited[w] >> b & 1 == 1 {
+                            continue;
+                        }
+                        visited[w] |= 1u64 << b;
+                        let si = slot as usize;
+                        if !self.alive[si] {
+                            continue;
+                        }
+                        unseen -= 1;
+                        push(
+                            &mut heap,
+                            (hamming_words(q, self.codes.code(si)), self.ids[si]),
+                        );
+                    }
+                });
+            }
+            // Pigeonhole bound: after probing every table at all substring
+            // radii ≤ s, any unseen code differs by ≥ m·(s+1) overall. Once
+            // the current k-th best is strictly inside that bound no unseen
+            // code can displace it (ids only break ties at equal distance).
+            if heap.len() == k {
+                if let Some(&(worst, _)) = heap.peek() {
+                    if worst < m * (s as u32 + 1) {
+                        break;
+                    }
+                }
+            }
+        }
+        let mut hits: Vec<Hit> = heap
+            .into_iter()
+            .map(|(dist, id)| Hit { id, dist })
+            .collect();
+        hits.sort_by_key(|h| (h.dist, h.id));
+        hits
+    }
+
+    /// Batch search, query order preserved.
+    pub fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        (0..queries.n)
+            .map(|i| self.search(queries.code(i), k))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::BinaryIndex;
+    use crate::util::rng::Pcg64;
+
+    fn random_codes(rng: &mut Pcg64, n: usize, bits: usize) -> BitCode {
+        BitCode::from_signs(&rng.sign_vec(n * bits), n, bits)
+    }
+
+    #[test]
+    fn matches_linear_scan_small() {
+        let mut rng = Pcg64::new(201);
+        for (n, bits, m) in [(60, 32, Some(4)), (120, 96, None), (40, 256, Some(8))] {
+            let db = random_codes(&mut rng, n, bits);
+            let mih = MihIndex::build(db.clone(), m);
+            let linear = BinaryIndex::new(db);
+            let queries = random_codes(&mut rng, 6, bits);
+            for qi in 0..queries.n {
+                let a = mih.search(queries.code(qi), 9);
+                let b = linear.search(queries.code(qi), 9);
+                assert_eq!(a, b, "n={n} bits={bits} m={m:?} qi={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn self_query_returns_self() {
+        let mut rng = Pcg64::new(202);
+        let db = random_codes(&mut rng, 50, 128);
+        let mih = MihIndex::build(db.clone(), Some(4));
+        for i in [0usize, 21, 49] {
+            let hits = mih.search(db.code(i), 1);
+            assert_eq!(hits[0].dist, 0);
+        }
+    }
+
+    #[test]
+    fn k_exceeding_live_truncates() {
+        let mut rng = Pcg64::new(203);
+        let db = random_codes(&mut rng, 5, 64);
+        let mih = MihIndex::build(db, None);
+        assert_eq!(mih.search(&[0u64], 100).len(), 5);
+        assert!(mih.search(&[0u64], 0).is_empty());
+    }
+
+    #[test]
+    fn insert_then_remove_roundtrip() {
+        let mut rng = Pcg64::new(204);
+        let db = random_codes(&mut rng, 30, 96);
+        let mut mih = MihIndex::build(db.clone(), Some(6));
+        let extra = random_codes(&mut rng, 1, 96);
+        mih.insert(1000, extra.code(0));
+        assert_eq!(mih.len(), 31);
+        assert!(mih.contains(1000));
+        let hits = mih.search(extra.code(0), 1);
+        assert_eq!(hits[0].dist, 0);
+        assert_eq!(hits[0].id, 1000);
+
+        assert!(mih.remove(1000));
+        assert!(!mih.remove(1000));
+        assert_eq!(mih.len(), 30);
+        let hits = mih.search(extra.code(0), 30);
+        assert!(hits.iter().all(|h| h.id != 1000), "removed id must not surface");
+    }
+
+    #[test]
+    fn churn_compacts_tombstones_and_stays_exact() {
+        let mut rng = Pcg64::new(205);
+        let bits = 64;
+        let db = random_codes(&mut rng, 100, bits);
+        let mut mih = MihIndex::build(db.clone(), Some(4));
+        for id in 0..80u32 {
+            assert!(mih.remove(id));
+        }
+        assert_eq!(mih.len(), 20);
+        assert!(
+            mih.storage_slots() < 100,
+            "tombstones must be compacted; slots={}",
+            mih.storage_slots()
+        );
+        // Survivors are rows 80..100 with their original ids; the index
+        // must still agree with a fresh linear scan over exactly those.
+        let mut survivors = BitCode::new(20, bits);
+        for (i, slot) in (80..100).enumerate() {
+            let wpc = survivors.words_per_code;
+            survivors.data[i * wpc..(i + 1) * wpc].copy_from_slice(db.code(slot));
+        }
+        let linear = BinaryIndex::with_ids(survivors, (80u32..100).collect());
+        let q = random_codes(&mut rng, 1, bits);
+        assert_eq!(mih.search(q.code(0), 7), linear.search(q.code(0), 7));
+    }
+
+    #[test]
+    fn empty_index_returns_nothing() {
+        let mih = MihIndex::build(BitCode::new(0, 64), None);
+        assert!(mih.is_empty());
+        assert!(mih.search(&[0u64], 5).is_empty());
+    }
+
+    #[test]
+    fn auto_m_sane() {
+        assert_eq!(auto_m(256, 1_000_000), 13); // 256 / ~19.9 rounds to 13
+        assert!(auto_m(64, 1 << 16) >= 1);
+        // long codes: never below the u64-key floor
+        assert!(auto_m(1 << 17, 1000) >= (1 << 17) / 64);
+        // tiny corpora: never above bits
+        assert!(auto_m(4, 2) <= 4);
+    }
+}

@@ -1,0 +1,449 @@
+//! Sub-linear Hamming ANN: sharded multi-index hashing over packed codes.
+//!
+//! CBE makes *encoding* cheap — O(d log d) against O(d²) for a dense
+//! projection — but the seed retrieval path was still an O(n·d) linear
+//! scan per query ([`crate::bits::BinaryIndex`]). This module adds the
+//! serving-side counterpart: **multi-index hashing** (MIH, Norouzi,
+//! Punjani & Fleet), which answers exact k-NN-by-Hamming queries while
+//! touching only a vanishing fraction of the corpus.
+//!
+//! # How the probe schedule works
+//!
+//! Split every b-bit code into m contiguous substrings (as even as
+//! possible; see [`substring::substring_spans`]) and bucket each substring
+//! value in its own [`substring::SubstringTable`]. The pigeonhole argument:
+//! if two codes differ by at most r bits overall, some substring pair
+//! differs by at most ⌊r/m⌋ bits — a far smaller radius in a far smaller
+//! keyspace.
+//!
+//! A query therefore proceeds in rounds of increasing substring radius
+//! s = 0, 1, 2, …: in round s, every table enumerates the C(len, s) keys
+//! at distance exactly s from the query's substring and pulls the matching
+//! buckets. Every candidate is deduplicated (visited bitmap), re-ranked
+//! with the exact full-code Hamming kernel ([`crate::bits::hamming`]), and
+//! pushed into a bounded max-heap of the k smallest `(dist, id)` pairs.
+//! After finishing round s, any code *not yet seen* has all m substring
+//! distances ≥ s+1, hence full distance ≥ m·(s+1); the loop stops as soon
+//! as the current k-th best distance is strictly below that bound. This
+//! makes [`MihIndex`] **exact**: equal hit-for-hit (including ties, which
+//! break by ascending id) with a full linear scan.
+//!
+//! The schedule also self-bounds: before each round it compares the
+//! round's key-enumeration cost (Σ C(lenᵢ, s)) against the number of
+//! still-unseen live codes, and when enumeration is the more expensive
+//! side it finishes with a direct sweep of the stragglers. Worst-case
+//! work is therefore never more than a constant factor over the linear
+//! scan, while structured (real-embedding) corpora terminate after a few
+//! tiny rounds.
+//!
+//! [`ShardedIndex`] layers horizontal scale on top: the corpus is
+//! partitioned round-robin across independent MIH shards, single queries
+//! fan out across shards on scoped threads, batches parallelize across
+//! queries, and `insert`/`remove` keep shards balanced for live corpora —
+//! query throughput scales with cores instead of corpus size.
+//!
+//! Backend choice is config, not code: [`IndexBackend`] (parsed from specs
+//! like `"mih:8"` or `"sharded:16"`) + [`build_index`] produce an
+//! [`IndexAny`], and everything downstream — `EmbeddingService::search`,
+//! the recall experiments, the benches — talks [`AnyIndex`].
+
+pub mod mih;
+pub mod sharded;
+pub mod substring;
+
+pub use mih::MihIndex;
+pub use sharded::ShardedIndex;
+
+use crate::bits::bitcode::BitCode;
+use crate::bits::index::Hit;
+use crate::bits::BinaryIndex;
+
+/// Object-safe facade over every retrieval backend. All implementations
+/// are exact: same hits, same `(dist, id)` ordering, same tie-breaks.
+pub trait AnyIndex: Send + Sync {
+    /// Live code count.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Code length in bits.
+    fn bits(&self) -> usize;
+    /// Exact top-k by Hamming distance, sorted by `(dist, id)`.
+    fn search(&self, q: &[u64], k: usize) -> Vec<Hit>;
+    /// Batch search, query order preserved.
+    fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        (0..queries.n)
+            .map(|i| self.search(queries.code(i), k))
+            .collect()
+    }
+    /// Short backend tag for logs/metrics.
+    fn backend_name(&self) -> &'static str;
+}
+
+impl AnyIndex for BinaryIndex {
+    fn len(&self) -> usize {
+        BinaryIndex::len(self)
+    }
+    fn bits(&self) -> usize {
+        self.codes.bits
+    }
+    fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
+        BinaryIndex::search(self, q, k)
+    }
+    fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        BinaryIndex::search_batch(self, queries, k)
+    }
+    fn backend_name(&self) -> &'static str {
+        "linear"
+    }
+}
+
+impl AnyIndex for MihIndex {
+    fn len(&self) -> usize {
+        MihIndex::len(self)
+    }
+    fn bits(&self) -> usize {
+        MihIndex::bits(self)
+    }
+    fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
+        MihIndex::search(self, q, k)
+    }
+    fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        MihIndex::search_batch(self, queries, k)
+    }
+    fn backend_name(&self) -> &'static str {
+        "mih"
+    }
+}
+
+impl AnyIndex for ShardedIndex {
+    fn len(&self) -> usize {
+        ShardedIndex::len(self)
+    }
+    fn bits(&self) -> usize {
+        ShardedIndex::bits(self)
+    }
+    fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
+        ShardedIndex::search(self, q, k)
+    }
+    fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        ShardedIndex::search_batch(self, queries, k)
+    }
+    fn backend_name(&self) -> &'static str {
+        "sharded-mih"
+    }
+}
+
+/// Which retrieval backend to build — selected by config (service config,
+/// CLI flag, `CBE_INDEX` env var), not by code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IndexBackend {
+    /// Pick by corpus size: linear below ~8k codes, MIH to ~256k, one MIH
+    /// shard per core beyond that.
+    Auto,
+    /// Exact linear scan ([`BinaryIndex`]) — the O(n·d) baseline.
+    Linear,
+    /// Single multi-index hash table set; `m` = substring count
+    /// (None → [`mih::auto_m`]; explicit values are clamped at build time
+    /// to `[ceil(bits/64), bits]` so substring keys fit a u64).
+    Mih { m: Option<usize> },
+    /// Corpus-partitioned MIH with parallel shard fan-out.
+    ShardedMih { shards: usize, m: Option<usize> },
+}
+
+impl IndexBackend {
+    /// Parse a backend spec: `auto` | `linear` | `mih[:m]` |
+    /// `sharded:<shards>[:m]`.
+    pub fn from_spec(spec: &str) -> Result<IndexBackend, String> {
+        let parts: Vec<&str> = spec.trim().split(':').collect();
+        let num = |s: &str| {
+            s.parse::<usize>()
+                .map_err(|_| format!("bad number '{s}' in index spec '{spec}'"))
+        };
+        let arity = |want: std::ops::RangeInclusive<usize>| {
+            if want.contains(&parts.len()) {
+                Ok(())
+            } else {
+                Err(format!("wrong arity in index spec '{spec}'"))
+            }
+        };
+        match parts[0] {
+            "auto" => {
+                arity(1..=1)?;
+                Ok(IndexBackend::Auto)
+            }
+            "linear" | "scan" => {
+                arity(1..=1)?;
+                Ok(IndexBackend::Linear)
+            }
+            "mih" => {
+                arity(1..=2)?;
+                let m = if parts.len() == 2 {
+                    let m = num(parts[1])?;
+                    if m == 0 {
+                        return Err(format!("substring count must be >= 1 in '{spec}'"));
+                    }
+                    Some(m)
+                } else {
+                    None
+                };
+                Ok(IndexBackend::Mih { m })
+            }
+            "sharded" | "sharded-mih" => {
+                arity(2..=3)?;
+                let shards = num(parts[1])?;
+                if shards == 0 {
+                    return Err(format!("shard count must be >= 1 in '{spec}'"));
+                }
+                let m = if parts.len() == 3 {
+                    Some(num(parts[2])?)
+                } else {
+                    None
+                };
+                Ok(IndexBackend::ShardedMih { shards, m })
+            }
+            other => Err(format!(
+                "unknown index backend '{other}' (want auto | linear | mih[:m] | sharded:<shards>[:m])"
+            )),
+        }
+    }
+
+    /// Canonical spec string (round-trips through [`IndexBackend::from_spec`]).
+    pub fn spec(&self) -> String {
+        match self {
+            IndexBackend::Auto => "auto".to_string(),
+            IndexBackend::Linear => "linear".to_string(),
+            IndexBackend::Mih { m: None } => "mih".to_string(),
+            IndexBackend::Mih { m: Some(m) } => format!("mih:{m}"),
+            IndexBackend::ShardedMih { shards, m: None } => format!("sharded:{shards}"),
+            IndexBackend::ShardedMih { shards, m: Some(m) } => format!("sharded:{shards}:{m}"),
+        }
+    }
+
+    /// The serving heuristic behind [`IndexBackend::Auto`]: linear scan
+    /// while the scan is cheap, one MIH beyond that, and a shard per core
+    /// once the corpus dwarfs the probe cost.
+    pub fn auto_for(n: usize, _bits: usize) -> IndexBackend {
+        if n < 8_192 {
+            IndexBackend::Linear
+        } else if n < 262_144 {
+            IndexBackend::Mih { m: None }
+        } else {
+            let shards = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+                .max(2);
+            IndexBackend::ShardedMih { shards, m: None }
+        }
+    }
+}
+
+/// A concrete backend instance. Inherent methods mirror [`AnyIndex`] so
+/// callers can use an `IndexAny` without importing the trait.
+pub enum IndexAny {
+    Linear(BinaryIndex),
+    Mih(MihIndex),
+    Sharded(ShardedIndex),
+}
+
+impl IndexAny {
+    pub fn len(&self) -> usize {
+        match self {
+            IndexAny::Linear(i) => i.len(),
+            IndexAny::Mih(i) => i.len(),
+            IndexAny::Sharded(i) => i.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn bits(&self) -> usize {
+        match self {
+            IndexAny::Linear(i) => i.codes.bits,
+            IndexAny::Mih(i) => i.bits(),
+            IndexAny::Sharded(i) => i.bits(),
+        }
+    }
+    pub fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
+        match self {
+            IndexAny::Linear(i) => i.search(q, k),
+            IndexAny::Mih(i) => i.search(q, k),
+            IndexAny::Sharded(i) => i.search(q, k),
+        }
+    }
+    pub fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        match self {
+            IndexAny::Linear(i) => i.search_batch(queries, k),
+            IndexAny::Mih(i) => i.search_batch(queries, k),
+            IndexAny::Sharded(i) => i.search_batch(queries, k),
+        }
+    }
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            IndexAny::Linear(_) => "linear",
+            IndexAny::Mih(_) => "mih",
+            IndexAny::Sharded(_) => "sharded-mih",
+        }
+    }
+
+    /// Incremental insert; `Err` on the immutable linear backend.
+    pub fn insert(&mut self, id: u32, code: &[u64]) -> Result<(), String> {
+        match self {
+            IndexAny::Linear(_) => {
+                Err("linear index is immutable; use mih or sharded for live corpora".to_string())
+            }
+            IndexAny::Mih(i) => {
+                i.insert(id, code);
+                Ok(())
+            }
+            IndexAny::Sharded(i) => {
+                i.insert(id, code);
+                Ok(())
+            }
+        }
+    }
+
+    /// Incremental remove; `Ok(false)` when the id is absent, `Err` on the
+    /// immutable linear backend.
+    pub fn remove(&mut self, id: u32) -> Result<bool, String> {
+        match self {
+            IndexAny::Linear(_) => {
+                Err("linear index is immutable; use mih or sharded for live corpora".to_string())
+            }
+            IndexAny::Mih(i) => Ok(i.remove(id)),
+            IndexAny::Sharded(i) => Ok(i.remove(id)),
+        }
+    }
+}
+
+impl AnyIndex for IndexAny {
+    fn len(&self) -> usize {
+        IndexAny::len(self)
+    }
+    fn bits(&self) -> usize {
+        IndexAny::bits(self)
+    }
+    fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
+        IndexAny::search(self, q, k)
+    }
+    fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        IndexAny::search_batch(self, queries, k)
+    }
+    fn backend_name(&self) -> &'static str {
+        IndexAny::backend_name(self)
+    }
+}
+
+/// Build the configured backend over a packed corpus with ids `0..n`.
+/// `Auto` resolves via [`IndexBackend::auto_for`].
+pub fn build_index(codes: BitCode, backend: &IndexBackend) -> IndexAny {
+    let ids = (0..codes.n as u32).collect();
+    build_index_with_ids(codes, ids, backend)
+}
+
+/// Build the configured backend with explicit external ids. Ids must be
+/// unique — the MIH backends assert this; the linear backend does not
+/// check (duplicates would surface as repeated hits there).
+pub fn build_index_with_ids(codes: BitCode, ids: Vec<u32>, backend: &IndexBackend) -> IndexAny {
+    let backend = match backend {
+        IndexBackend::Auto => IndexBackend::auto_for(codes.n, codes.bits),
+        b => b.clone(),
+    };
+    match backend {
+        IndexBackend::Auto => unreachable!("auto resolved above"),
+        IndexBackend::Linear => IndexAny::Linear(BinaryIndex::with_ids(codes, ids)),
+        IndexBackend::Mih { m } => IndexAny::Mih(MihIndex::build_with_ids(codes, ids, m)),
+        IndexBackend::ShardedMih { shards, m } => {
+            IndexAny::Sharded(ShardedIndex::build_with_ids(codes, ids, shards, m))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn spec_roundtrip() {
+        for spec in ["auto", "linear", "mih", "mih:8", "sharded:4", "sharded:4:8"] {
+            let b = IndexBackend::from_spec(spec).unwrap();
+            assert_eq!(b.spec(), spec);
+            assert_eq!(IndexBackend::from_spec(&b.spec()).unwrap(), b);
+        }
+        assert_eq!(
+            IndexBackend::from_spec("scan").unwrap(),
+            IndexBackend::Linear
+        );
+        for bad in ["", "mih:x", "mih:0", "sharded", "sharded:0", "hnsw", "auto:2", "mih:1:2:3"] {
+            assert!(IndexBackend::from_spec(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn auto_scales_with_n() {
+        assert_eq!(IndexBackend::auto_for(100, 64), IndexBackend::Linear);
+        assert_eq!(
+            IndexBackend::auto_for(100_000, 256),
+            IndexBackend::Mih { m: None }
+        );
+        match IndexBackend::auto_for(1_000_000, 256) {
+            IndexBackend::ShardedMih { shards, m: None } => assert!(shards >= 2),
+            other => panic!("expected sharded backend, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn build_index_dispatches_every_backend() {
+        let mut rng = Pcg64::new(401);
+        let bits = 64;
+        let n = 30;
+        let db = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+        let q = db.code(4).to_vec();
+        let mut expected: Option<Vec<Hit>> = None;
+        for backend in [
+            IndexBackend::Auto,
+            IndexBackend::Linear,
+            IndexBackend::Mih { m: Some(4) },
+            IndexBackend::ShardedMih {
+                shards: 3,
+                m: None,
+            },
+        ] {
+            let idx = build_index(db.clone(), &backend);
+            assert_eq!(idx.len(), n);
+            assert_eq!(idx.bits(), bits);
+            let hits = idx.search(&q, 7);
+            assert_eq!(hits[0].id, 4);
+            assert_eq!(hits[0].dist, 0);
+            match &expected {
+                None => expected = Some(hits),
+                Some(e) => assert_eq!(&hits, e, "backend {backend:?} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn index_any_mutation_gating() {
+        let mut rng = Pcg64::new(402);
+        let bits = 32;
+        let db = BitCode::from_signs(&rng.sign_vec(10 * bits), 10, bits);
+        let extra = BitCode::from_signs(&rng.sign_vec(bits), 1, bits);
+
+        let mut linear = build_index(db.clone(), &IndexBackend::Linear);
+        assert!(linear.insert(99, extra.code(0)).is_err());
+        assert!(linear.remove(0).is_err());
+
+        for backend in [
+            IndexBackend::Mih { m: None },
+            IndexBackend::ShardedMih { shards: 2, m: None },
+        ] {
+            let mut idx = build_index(db.clone(), &backend);
+            idx.insert(99, extra.code(0)).unwrap();
+            assert_eq!(idx.len(), 11);
+            assert_eq!(idx.remove(99), Ok(true));
+            assert_eq!(idx.remove(99), Ok(false));
+            assert_eq!(idx.len(), 10);
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! [`ShardedIndex`]: corpus-partitioned multi-index hashing.
+//!
+//! The corpus is split round-robin across worker shards, each an
+//! independent [`MihIndex`]. A single query fans out across shards on
+//! scoped threads and merges the per-shard top-k; batch queries instead
+//! parallelize across queries (better cache behavior, same exactness).
+//! Because every shard is exact and the merge keeps the k smallest
+//! `(dist, id)` pairs, the result is identical to one big linear scan.
+
+use super::mih::MihIndex;
+use super::substring::BuildFastHash;
+use crate::bits::bitcode::BitCode;
+use crate::bits::index::{par_map_queries, Hit};
+use std::collections::HashSet;
+
+/// Below this corpus size the thread fan-out costs more than it saves and
+/// single-query search degrades to a sequential shard sweep.
+const PARALLEL_CUTOVER: usize = 16_384;
+
+/// Keep the k lexicographically smallest `(dist, id)` hits of several
+/// already-sorted per-shard result lists.
+fn merge_topk(per_shard: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
+    let mut all: Vec<Hit> = per_shard.into_iter().flatten().collect();
+    all.sort_by_key(|h| (h.dist, h.id));
+    all.truncate(k);
+    all
+}
+
+/// Sharded exact Hamming k-NN with incremental updates. Same `Hit`
+/// contract as [`crate::bits::BinaryIndex`].
+pub struct ShardedIndex {
+    shards: Vec<MihIndex>,
+    bits: usize,
+    words_per_code: usize,
+}
+
+impl ShardedIndex {
+    /// Partition a packed corpus (ids `0..n`) round-robin across `shards`
+    /// MIH shards. `m` is the per-shard substring count (None → auto).
+    pub fn build(codes: BitCode, shards: usize, m: Option<usize>) -> ShardedIndex {
+        let ids = (0..codes.n as u32).collect();
+        ShardedIndex::build_with_ids(codes, ids, shards, m)
+    }
+
+    /// Partition with explicit external ids (must be unique).
+    pub fn build_with_ids(
+        codes: BitCode,
+        ids: Vec<u32>,
+        shards: usize,
+        m: Option<usize>,
+    ) -> ShardedIndex {
+        assert_eq!(codes.n, ids.len());
+        // Per-shard MihIndex builds only catch duplicates landing in the
+        // same shard; check globally up front.
+        let mut seen: HashSet<u32, BuildFastHash> =
+            HashSet::with_capacity_and_hasher(ids.len(), BuildFastHash::default());
+        for &id in &ids {
+            assert!(seen.insert(id), "duplicate id {id}");
+        }
+        let s_count = shards.max(1);
+        let bits = codes.bits;
+        let wpc = codes.words_per_code;
+        let mut parts: Vec<(BitCode, Vec<u32>)> = (0..s_count)
+            .map(|_| (BitCode::new(0, bits), Vec::new()))
+            .collect();
+        for slot in 0..codes.n {
+            let (part_codes, part_ids) = &mut parts[slot % s_count];
+            part_codes.data.extend_from_slice(codes.code(slot));
+            part_codes.n += 1;
+            part_ids.push(ids[slot]);
+        }
+        ShardedIndex {
+            shards: parts
+                .into_iter()
+                .map(|(part_codes, part_ids)| MihIndex::build_with_ids(part_codes, part_ids, m))
+                .collect(),
+            bits,
+            words_per_code: wpc,
+        }
+    }
+
+    /// Total live codes across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+    /// Live size of every shard (for balance inspection).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
+    }
+    pub fn contains(&self, id: u32) -> bool {
+        self.shards.iter().any(|s| s.contains(id))
+    }
+
+    /// Insert into the currently smallest shard (keeps shards balanced
+    /// under arbitrary insert/remove interleavings).
+    pub fn insert(&mut self, id: u32, code: &[u64]) {
+        assert_eq!(code.len(), self.words_per_code, "code word count mismatch");
+        assert!(!self.contains(id), "duplicate id {id}");
+        let target = self
+            .shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, s)| (s.len(), *i))
+            .map(|(i, _)| i)
+            .expect("at least one shard");
+        self.shards[target].insert(id, code);
+    }
+
+    /// Insert one ±1 sign row (len == bits).
+    pub fn insert_signs(&mut self, id: u32, signs: &[f32]) {
+        let packed = BitCode::from_signs(signs, 1, self.bits);
+        self.insert(id, packed.code(0));
+    }
+
+    /// Remove by external id from whichever shard holds it.
+    pub fn remove(&mut self, id: u32) -> bool {
+        self.shards.iter_mut().any(|s| s.remove(id))
+    }
+
+    /// Exact top-k: parallel fan-out across shards (capped at core count;
+    /// each thread sweeps a group of shards), merged by `(dist, id)`.
+    pub fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let busy: Vec<&MihIndex> = self.shards.iter().filter(|s| !s.is_empty()).collect();
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(busy.len());
+        if threads <= 1 || self.len() < PARALLEL_CUTOVER {
+            return merge_topk(busy.iter().map(|s| s.search(q, k)).collect(), k);
+        }
+        let chunk = busy.len().div_ceil(threads);
+        let mut per_group: Vec<Vec<Hit>> = Vec::with_capacity(threads);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = busy
+                .chunks(chunk)
+                .map(|group| {
+                    scope.spawn(move || {
+                        merge_topk(group.iter().map(|s| s.search(q, k)).collect(), k)
+                    })
+                })
+                .collect();
+            for h in handles {
+                per_group.push(h.join().expect("shard search panicked"));
+            }
+        });
+        merge_topk(per_group, k)
+    }
+
+    /// One query, all shards swept on the calling thread (the batch path
+    /// gets its parallelism from query-level fan-out instead).
+    fn search_sequential(&self, q: &[u64], k: usize) -> Vec<Hit> {
+        if k == 0 {
+            return Vec::new();
+        }
+        merge_topk(
+            self.shards
+                .iter()
+                .filter(|s| !s.is_empty())
+                .map(|s| s.search(q, k))
+                .collect(),
+            k,
+        )
+    }
+
+    /// Batch search parallelized across queries; order preserved.
+    pub fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
+        par_map_queries(queries.n, |i| self.search_sequential(queries.code(i), k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::BinaryIndex;
+    use crate::util::rng::Pcg64;
+
+    fn random_codes(rng: &mut Pcg64, n: usize, bits: usize) -> BitCode {
+        BitCode::from_signs(&rng.sign_vec(n * bits), n, bits)
+    }
+
+    #[test]
+    fn matches_linear_scan() {
+        let mut rng = Pcg64::new(301);
+        for shards in [1usize, 2, 3, 7] {
+            let db = random_codes(&mut rng, 150, 128);
+            let sharded = ShardedIndex::build(db.clone(), shards, Some(4));
+            let linear = BinaryIndex::new(db);
+            let queries = random_codes(&mut rng, 5, 128);
+            for qi in 0..queries.n {
+                assert_eq!(
+                    sharded.search(queries.code(qi), 11),
+                    linear.search(queries.code(qi), 11),
+                    "shards={shards} qi={qi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Pcg64::new(302);
+        let db = random_codes(&mut rng, 200, 64);
+        let sharded = ShardedIndex::build(db, 4, None);
+        let queries = random_codes(&mut rng, 20, 64);
+        let batch = sharded.search_batch(&queries, 5);
+        for qi in 0..queries.n {
+            assert_eq!(batch[qi], sharded.search(queries.code(qi), 5));
+        }
+    }
+
+    #[test]
+    fn insert_balances_and_remove_finds_shard() {
+        let mut rng = Pcg64::new(303);
+        let db = random_codes(&mut rng, 20, 64);
+        let mut sharded = ShardedIndex::build(db, 4, None);
+        let extra = random_codes(&mut rng, 40, 64);
+        for i in 0..extra.n {
+            sharded.insert(1000 + i as u32, extra.code(i));
+        }
+        assert_eq!(sharded.len(), 60);
+        let sizes = sharded.shard_sizes();
+        let (lo, hi) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(hi - lo <= 1, "shards must stay balanced: {sizes:?}");
+        for i in 0..extra.n {
+            assert!(sharded.remove(1000 + i as u32));
+        }
+        assert_eq!(sharded.len(), 20);
+        assert!(!sharded.remove(9999));
+    }
+
+    #[test]
+    fn more_shards_than_codes() {
+        let mut rng = Pcg64::new(304);
+        let db = random_codes(&mut rng, 3, 32);
+        let sharded = ShardedIndex::build(db.clone(), 8, None);
+        let linear = BinaryIndex::new(db.clone());
+        assert_eq!(
+            sharded.search(db.code(0), 10),
+            linear.search(db.code(0), 10)
+        );
+    }
+}

@@ -1,0 +1,265 @@
+//! Substring bucket store: the per-table layer of multi-index hashing.
+//!
+//! A b-bit code is partitioned into m contiguous substrings; each
+//! [`SubstringTable`] owns one span and maps the span's (≤ 64-bit) value to
+//! the list of storage slots whose code carries that value. Probing a table
+//! at substring radius r means enumerating the C(len, r) keys at Hamming
+//! distance exactly r from the query's key — [`for_each_key_at_radius`].
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Avalanche hasher for the u64 bucket keys (and u32 id keys). std's
+/// SipHash is DoS-hardened, which is wasted work on keys we control; this
+/// is a splitmix64 finalizer for integer writes with an FNV-1a fallback
+/// for byte streams.
+#[derive(Default)]
+pub struct FastHash(u64);
+
+impl Hasher for FastHash {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        let mut z = self.0 ^ x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        self.0 = z ^ (z >> 31);
+    }
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// `HashMap` hasher state for all index-internal tables.
+pub type BuildFastHash = BuildHasherDefault<FastHash>;
+
+/// Partition `bits` into `m` contiguous spans `(start, len)`, as even as
+/// possible: the first `bits % m` spans get one extra bit. Every span must
+/// fit a u64 key, so callers need `m ≥ ceil(bits / 64)`.
+pub fn substring_spans(bits: usize, m: usize) -> Vec<(usize, usize)> {
+    assert!(
+        (1..=bits).contains(&m),
+        "need 1 <= m <= bits (m={m}, bits={bits})"
+    );
+    let base = bits / m;
+    let extra = bits % m;
+    let mut spans = Vec::with_capacity(m);
+    let mut start = 0;
+    for i in 0..m {
+        let len = base + usize::from(i < extra);
+        assert!(
+            len <= 64,
+            "substring of {len} bits exceeds a u64 key; use m >= ceil(bits/64)"
+        );
+        spans.push((start, len));
+        start += len;
+    }
+    debug_assert_eq!(start, bits);
+    spans
+}
+
+/// Extract `len` (1..=64) bits starting at absolute bit `start` from a
+/// packed little-endian-bit code row.
+#[inline]
+pub fn extract_bits(code: &[u64], start: usize, len: usize) -> u64 {
+    debug_assert!((1..=64).contains(&len));
+    let w = start / 64;
+    let off = start % 64;
+    let mut v = code[w] >> off;
+    if off + len > 64 {
+        v |= code[w + 1] << (64 - off);
+    }
+    if len < 64 {
+        v &= (1u64 << len) - 1;
+    }
+    v
+}
+
+/// Visit every key at Hamming distance exactly `r` from `key` within a
+/// `len`-bit keyspace — C(len, r) keys, in deterministic (lexicographic
+/// flip-set) order. No-op when `r > len`.
+pub fn for_each_key_at_radius(key: u64, len: usize, r: usize, visit: &mut impl FnMut(u64)) {
+    if r == 0 {
+        visit(key);
+        return;
+    }
+    if r > len {
+        return;
+    }
+    // `flip` walks the r-combinations of bit positions {0, .., len-1}.
+    let mut flip: Vec<usize> = (0..r).collect();
+    loop {
+        let mut k = key;
+        for &b in &flip {
+            k ^= 1u64 << b;
+        }
+        visit(k);
+        let mut j = r;
+        while j > 0 && flip[j - 1] == len - r + (j - 1) {
+            j -= 1;
+        }
+        if j == 0 {
+            return;
+        }
+        flip[j - 1] += 1;
+        for l in j..r {
+            flip[l] = flip[l - 1] + 1;
+        }
+    }
+}
+
+/// One hash table of the multi-index: bucket store for a single substring
+/// span. Values are *storage slots* (row indices of the owning index's
+/// `BitCode`), not external ids — the owner translates after re-ranking.
+pub struct SubstringTable {
+    /// Absolute start bit of this table's span.
+    pub start: usize,
+    /// Span length in bits (1..=64).
+    pub len: usize,
+    buckets: HashMap<u64, Vec<u32>, BuildFastHash>,
+}
+
+impl SubstringTable {
+    pub fn new(start: usize, len: usize) -> SubstringTable {
+        assert!((1..=64).contains(&len));
+        SubstringTable {
+            start,
+            len,
+            buckets: HashMap::default(),
+        }
+    }
+
+    /// This table's key for a full packed code row.
+    #[inline]
+    pub fn key_of(&self, code: &[u64]) -> u64 {
+        extract_bits(code, self.start, self.len)
+    }
+
+    /// Append a slot to a bucket.
+    pub fn insert(&mut self, key: u64, slot: u32) {
+        self.buckets.entry(key).or_default().push(slot);
+    }
+
+    /// Remove a slot from a bucket; true if it was present.
+    pub fn remove(&mut self, key: u64, slot: u32) -> bool {
+        if let Some(bucket) = self.buckets.get_mut(&key) {
+            if let Some(pos) = bucket.iter().position(|s| *s == slot) {
+                bucket.swap_remove(pos);
+                if bucket.is_empty() {
+                    self.buckets.remove(&key);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The slots bucketed under `key`, if any.
+    #[inline]
+    pub fn bucket(&self, key: u64) -> Option<&[u32]> {
+        self.buckets.get(&key).map(|v| v.as_slice())
+    }
+
+    /// Number of non-empty buckets.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_partition_exactly() {
+        for (bits, m) in [(256, 8), (256, 13), (100, 7), (64, 1), (5, 5), (65, 2)] {
+            let spans = substring_spans(bits, m);
+            assert_eq!(spans.len(), m);
+            let mut next = 0;
+            for &(start, len) in &spans {
+                assert_eq!(start, next);
+                assert!(len >= 1 && len <= 64);
+                next += len;
+            }
+            assert_eq!(next, bits);
+            // even-as-possible: lens differ by at most one
+            let lens: Vec<usize> = spans.iter().map(|s| s.1).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1);
+        }
+    }
+
+    #[test]
+    fn extract_matches_naive() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(41);
+        let words: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+        let bit = |i: usize| words[i / 64] >> (i % 64) & 1;
+        for start in [0usize, 1, 31, 63, 64, 100, 127, 190] {
+            for len in [1usize, 2, 17, 33, 64] {
+                if start + len > 256 {
+                    continue;
+                }
+                let v = extract_bits(&words, start, len);
+                for j in 0..len {
+                    assert_eq!(v >> j & 1, bit(start + j), "start={start} len={len} j={j}");
+                }
+                if len < 64 {
+                    assert_eq!(v >> len, 0, "high bits must be masked");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radius_enumeration_exact() {
+        let binom = |n: u64, k: u64| -> u64 {
+            (0..k).fold(1u64, |acc, i| acc * (n - i) / (i + 1))
+        };
+        for len in [1usize, 3, 8, 12] {
+            for r in 0..=len.min(4) {
+                let key = 0b1010_1010 & ((1u64 << len) - 1).max(1);
+                let mut seen = Vec::new();
+                for_each_key_at_radius(key, len, r, &mut |k| seen.push(k));
+                assert_eq!(seen.len() as u64, binom(len as u64, r as u64), "len={len} r={r}");
+                for k in &seen {
+                    assert_eq!((k ^ key).count_ones() as usize, r);
+                    assert_eq!(k >> len, 0, "keys stay inside the keyspace");
+                }
+                let mut dedup = seen.clone();
+                dedup.sort_unstable();
+                dedup.dedup();
+                assert_eq!(dedup.len(), seen.len(), "no key visited twice");
+            }
+        }
+    }
+
+    #[test]
+    fn radius_beyond_len_is_empty() {
+        let mut count = 0;
+        for_each_key_at_radius(0, 3, 4, &mut |_| count += 1);
+        assert_eq!(count, 0);
+    }
+
+    #[test]
+    fn table_insert_remove_roundtrip() {
+        let mut t = SubstringTable::new(0, 16);
+        t.insert(7, 0);
+        t.insert(7, 1);
+        t.insert(9, 2);
+        assert_eq!(t.bucket(7), Some(&[0u32, 1][..]));
+        assert_eq!(t.bucket_count(), 2);
+        assert!(t.remove(7, 0));
+        assert!(!t.remove(7, 0), "double remove is a no-op");
+        assert_eq!(t.bucket(7), Some(&[1u32][..]));
+        assert!(t.remove(7, 1));
+        assert!(t.bucket(7).is_none(), "empty buckets are dropped");
+        assert_eq!(t.bucket_count(), 1);
+    }
+}

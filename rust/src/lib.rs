@@ -12,13 +12,16 @@
 //! The public API entry points are [`encoders::BinaryEncoder`] (train/encode
 //! any of the paper's methods), [`coordinator::EmbeddingService`] (the
 //! serving facade: dynamic batching + PJRT execution + binary retrieval),
-//! and [`experiments`] (one driver per paper table/figure).
+//! [`index`] (sub-linear exact Hamming ANN: multi-index hashing, sharded
+//! fan-out, backend selection via [`index::IndexBackend`]), and
+//! [`experiments`] (one driver per paper table/figure).
 
 pub mod util;
 pub mod proptest_lite;
 pub mod fft;
 pub mod linalg;
 pub mod bits;
+pub mod index;
 pub mod projections;
 pub mod opt;
 pub mod encoders;

@@ -12,6 +12,7 @@ use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
 use cbe::data::{generate, SynthConfig};
 use cbe::encoders::CbeOpt;
 use cbe::experiments as exp;
+use cbe::index::IndexBackend;
 use cbe::fft::Planner;
 use cbe::opt::TimeFreqConfig;
 use cbe::runtime::Manifest;
@@ -65,6 +66,7 @@ fn print_usage() {
          \x20 artifacts  list compiled artifacts\n\
          \n\
          common flags: --artifacts DIR --d N --bits K --seed S\n\
+         \x20             --index SPEC (auto | linear | mih[:m] | sharded:<shards>[:m])\n\
          scale flags:  --full (paper-scale dims; slow), default is CI scale"
     );
 }
@@ -117,6 +119,7 @@ fn cmd_encode(args: &Args) -> anyhow::Result<()> {
                 max_batch: 32,
                 max_wait: Duration::from_millis(2),
             },
+            index: IndexBackend::Auto,
         },
         rng.normal_vec(d),
         rng.sign_vec(d),
@@ -147,7 +150,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let n_db = args.usize("db", 2000);
     let topk = args.usize("topk", 10);
     let seed = args.u64("seed", 5);
-    println!("embedding server demo: d={d} bits={bits} db={n_db}");
+    let backend = IndexBackend::from_spec(&args.str("index", "auto"))
+        .map_err(|e| anyhow::anyhow!("--index: {e}"))?;
+    println!(
+        "embedding server demo: d={d} bits={bits} db={n_db} index={}",
+        backend.spec()
+    );
 
     // Train CBE-opt natively, then serve through the PJRT artifact.
     let ds = generate(&SynthConfig::flickr(n_db + 100, d, seed));
@@ -162,6 +170,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             d,
             bits,
             batcher: BatcherConfig::default(),
+            index: backend,
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),
@@ -169,7 +178,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let rows: Vec<Vec<f32>> = (0..n_db).map(|i| ds.x.row(i).to_vec()).collect();
     let (index, ms) = cbe::util::timer::time_ms(|| service.build_index(&rows).unwrap());
-    println!("indexed {n_db} vectors in {ms:.1} ms");
+    println!(
+        "indexed {n_db} vectors in {ms:.1} ms (backend: {})",
+        index.backend_name()
+    );
 
     let mut hits_self = 0usize;
     let queries = 50usize;
@@ -260,6 +272,8 @@ fn run_experiment(id: &str, full: bool, args: &Args) -> anyhow::Result<String> {
             if args.has("bits") {
                 cfg.bits = args.usize_list("bits", &cfg.bits);
             }
+            cfg.index = IndexBackend::from_spec(&args.str("index", "auto"))
+                .map_err(|e| anyhow::anyhow!("--index: {e}"))?;
             exp::recall_sweep::run(&cfg).report
         }
         "fig5" => {

@@ -4,6 +4,7 @@
 
 use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
 use cbe::fft::Planner;
+use cbe::index::IndexBackend;
 use cbe::projections::CirculantProjection;
 use cbe::proptest_lite::forall;
 use cbe::util::rng::Pcg64;
@@ -34,6 +35,7 @@ fn service(d: usize, bits: usize, seed: u64) -> Option<(EmbeddingService, Vec<f3
                 max_batch: 32,
                 max_wait: Duration::from_millis(1),
             },
+            index: IndexBackend::Auto,
         },
         r.clone(),
         signs.clone(),

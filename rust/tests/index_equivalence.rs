@@ -1,0 +1,182 @@
+//! Property tests: the MIH subsystem is *exact* — [`MihIndex`] and
+//! [`ShardedIndex`] return hit-for-hit the same results as the linear-scan
+//! [`BinaryIndex`] on random corpora, including distance ties, k > n,
+//! empty corpora, and after interleaved insert/remove churn.
+
+use cbe::bits::{BinaryIndex, BitCode};
+use cbe::index::{MihIndex, ShardedIndex};
+use cbe::proptest_lite::{forall, Gen};
+
+fn random_codes(g: &mut Gen, n: usize, bits: usize) -> BitCode {
+    BitCode::from_signs(&g.sign_vec(n * bits), n, bits)
+}
+
+#[test]
+fn prop_mih_matches_linear_scan() {
+    forall("MihIndex == BinaryIndex on random corpora", 60, |g| {
+        let bits = g.usize_in(2, 200);
+        let n = g.usize_in(0, 250);
+        let db = random_codes(g, n, bits);
+        let m = if g.bool() {
+            None
+        } else {
+            Some(g.usize_in(1, bits.min(8)))
+        };
+        let mih = MihIndex::build(db.clone(), m);
+        let linear = BinaryIndex::new(db);
+        // k sweeps through 0, sensible, and > n.
+        let k = g.usize_in(0, n + 5);
+        let q = random_codes(g, 1, bits);
+        assert_eq!(
+            mih.search(q.code(0), k),
+            linear.search(q.code(0), k),
+            "bits={bits} n={n} m={m:?} k={k}"
+        );
+    });
+}
+
+#[test]
+fn prop_mih_matches_linear_under_heavy_ties() {
+    // Tiny codes over larger corpora force many duplicate codes and
+    // distance ties; selection must break ties identically (by id).
+    forall("MihIndex tie-breaking matches linear scan", 60, |g| {
+        let bits = g.usize_in(2, 10);
+        let n = g.usize_in(20, 300);
+        let db = random_codes(g, n, bits);
+        let mih = MihIndex::build(db.clone(), Some(g.usize_in(1, bits.min(3))));
+        let linear = BinaryIndex::new(db);
+        let k = g.usize_in(1, 25);
+        let q = random_codes(g, 1, bits);
+        assert_eq!(mih.search(q.code(0), k), linear.search(q.code(0), k));
+    });
+}
+
+#[test]
+fn prop_sharded_matches_linear_scan() {
+    forall("ShardedIndex == BinaryIndex on random corpora", 50, |g| {
+        let bits = g.usize_in(2, 160);
+        let n = g.usize_in(0, 250);
+        let shards = g.usize_in(1, 6);
+        let db = random_codes(g, n, bits);
+        let sharded = ShardedIndex::build(db.clone(), shards, None);
+        let linear = BinaryIndex::new(db);
+        let k = g.usize_in(0, n + 5);
+        let q = random_codes(g, 1, bits);
+        assert_eq!(
+            sharded.search(q.code(0), k),
+            linear.search(q.code(0), k),
+            "bits={bits} n={n} shards={shards} k={k}"
+        );
+        // Batch path (query-parallel) must agree with single-query path.
+        let queries = random_codes(g, 10, bits);
+        let batch = sharded.search_batch(&queries, k);
+        for qi in 0..queries.n {
+            assert_eq!(batch[qi], linear.search(queries.code(qi), k));
+        }
+    });
+}
+
+/// Mirror model: a plain (id, code) list. After any interleaving of
+/// inserts and removes, a fresh BinaryIndex over the mirror is the ground
+/// truth the incremental indexes must match. Ids are assigned in
+/// ascending order so linear-scan tie-breaking (insertion order) equals
+/// id order, the documented contract of the MIH backends.
+struct Mirror {
+    bits: usize,
+    rows: Vec<(u32, Vec<u64>)>,
+}
+
+impl Mirror {
+    fn to_linear(&self) -> BinaryIndex {
+        let mut codes = BitCode::new(self.rows.len(), self.bits);
+        let wpc = codes.words_per_code;
+        let mut ids = Vec::with_capacity(self.rows.len());
+        for (i, (id, words)) in self.rows.iter().enumerate() {
+            codes.data[i * wpc..(i + 1) * wpc].copy_from_slice(words);
+            ids.push(*id);
+        }
+        BinaryIndex::with_ids(codes, ids)
+    }
+}
+
+#[test]
+fn prop_incremental_churn_stays_exact() {
+    forall("insert/remove churn keeps MIH backends exact", 40, |g| {
+        let bits = g.usize_in(2, 120);
+        let n0 = g.usize_in(0, 80);
+        let db = random_codes(g, n0, bits);
+        let shards = g.usize_in(1, 4);
+
+        let mut mih = MihIndex::build(db.clone(), None);
+        let mut sharded = ShardedIndex::build(db.clone(), shards, None);
+        let mut mirror = Mirror {
+            bits,
+            rows: (0..n0)
+                .map(|i| (i as u32, db.code(i).to_vec()))
+                .collect(),
+        };
+
+        let mut next_id = n0 as u32;
+        let ops = g.usize_in(1, 60);
+        for _ in 0..ops {
+            let remove = g.bool() && !mirror.rows.is_empty();
+            if remove {
+                let victim = g.usize_in(0, mirror.rows.len() - 1);
+                let id = mirror.rows[victim].0;
+                mirror.rows.remove(victim);
+                assert!(mih.remove(id));
+                assert!(sharded.remove(id));
+                assert!(!mih.remove(id), "double remove must report absence");
+            } else {
+                let code = random_codes(g, 1, bits);
+                mih.insert(next_id, code.code(0));
+                sharded.insert(next_id, code.code(0));
+                mirror.rows.push((next_id, code.code(0).to_vec()));
+                next_id += 1;
+            }
+        }
+
+        let linear = mirror.to_linear();
+        assert_eq!(mih.len(), linear.len());
+        assert_eq!(sharded.len(), linear.len());
+        let k = g.usize_in(0, mirror.rows.len() + 3);
+        let q = random_codes(g, 1, bits);
+        let want = linear.search(q.code(0), k);
+        assert_eq!(mih.search(q.code(0), k), want, "MihIndex after churn");
+        assert_eq!(
+            sharded.search(q.code(0), k),
+            want,
+            "ShardedIndex after churn"
+        );
+    });
+}
+
+#[test]
+fn prop_removed_then_reinserted_ids_resolve_to_new_code() {
+    // Remove an id and insert a different code under the same id: searches
+    // must see only the new code (the tombstoned slot stays dead).
+    forall("id reuse after remove", 40, |g| {
+        let bits = g.usize_in(8, 64);
+        let n = g.usize_in(2, 40);
+        let db = random_codes(g, n, bits);
+        let mut mih = MihIndex::build(db.clone(), None);
+        let victim = g.usize_in(0, n - 1) as u32;
+        assert!(mih.remove(victim));
+        let fresh = random_codes(g, 1, bits);
+        mih.insert(victim, fresh.code(0));
+        let hits = mih.search(fresh.code(0), 1);
+        assert_eq!(hits[0].dist, 0);
+        // And the old code is only reachable if some live row equals it.
+        let old_hits = mih.search(db.code(victim as usize), n);
+        for h in &old_hits {
+            if h.id == victim {
+                // distance must be measured against the *new* code
+                let d = cbe::bits::hamming::hamming_words(
+                    db.code(victim as usize),
+                    fresh.code(0),
+                );
+                assert_eq!(h.dist, d);
+            }
+        }
+    });
+}
