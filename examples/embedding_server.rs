@@ -27,8 +27,10 @@ fn main() -> anyhow::Result<()> {
     if !artifacts.join("manifest.json").exists() {
         anyhow::bail!("run `make artifacts` first");
     }
-    // Retrieval backend is config: CBE_INDEX=linear|mih[:m]|sharded:<s>[:m]
-    // (default auto → routed by corpus size).
+    // Retrieval backend is config:
+    //   CBE_INDEX=linear|mih[:m]|mih-sampled[:m]|sharded:<s>[:m]
+    // (default auto → routed by corpus size; mih-sampled decorrelates
+    // adjacent CBE bits before bucketing).
     let backend = IndexBackend::from_spec(
         &std::env::var("CBE_INDEX").unwrap_or_else(|_| "auto".to_string()),
     )

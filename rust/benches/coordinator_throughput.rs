@@ -2,9 +2,18 @@
 //!
 //! 1. Batched PJRT encode latency/QPS (needs `make artifacts`; skipped
 //!    otherwise) — the L3 perf target of DESIGN.md §Perf.
-//! 2. Retrieval QPS: linear scan vs MIH vs sharded MIH over packed codes
-//!    at n ∈ {10⁴, 10⁵, 10⁶}, 256-bit — written to `BENCH_index.json`.
+//! 2. Retrieval QPS: linear scan vs MIH (contiguous and bit-sampled
+//!    substrings) vs sharded MIH over packed codes at n ∈ {10⁴, 10⁵, 10⁶},
+//!    256-bit — the `results` array of `BENCH_index.json` (the
+//!    sampled-vs-contiguous series is the `mih` vs `mih-sampled` rows).
 //!    Cap the sweep with `CBE_BENCH_MAX_N=100000` on small machines.
+//! 3. Bucket-store engines: the same key→postings workload through the
+//!    legacy `HashMap<u64, Vec<u32>>` layout and the flat open-addressing
+//!    arena `SubstringTable` — the `bucket_store` array of
+//!    `BENCH_index.json` (arena-vs-hashmap series). Set
+//!    `CBE_BENCH_ENFORCE=1` to hard-fail if the arena store probes slower
+//!    than the hashmap (left off in CI: shared runners are too noisy for
+//!    perf asserts).
 //!
 //! The retrieval corpus is *clustered* (cluster centers + per-bit flip
 //! noise), because that is the regime real embedding codes live in;
@@ -13,9 +22,11 @@
 
 use cbe::bits::BitCode;
 use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::index::substring::{extract_bits, BuildFastHash, KeySource, SubstringTable};
 use cbe::index::{build_index, IndexAny, IndexBackend};
 use cbe::util::json::Json;
 use cbe::util::rng::Pcg64;
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -102,6 +113,7 @@ fn bench_index_backends() {
         let backends = [
             IndexBackend::Linear,
             IndexBackend::Mih { m: None },
+            IndexBackend::MihSampled { m: None },
             IndexBackend::ShardedMih { shards, m: None },
         ];
         let mut reference: Option<Vec<Vec<cbe::bits::index::Hit>>> = None;
@@ -136,6 +148,7 @@ fn bench_index_backends() {
             ]));
         }
     }
+    let bucket_store = bench_bucket_store(max_n);
     let doc = Json::obj(vec![
         ("bits", Json::num(bits as f64)),
         ("k", Json::num(k as f64)),
@@ -143,9 +156,119 @@ fn bench_index_backends() {
         ("flip_prob", Json::num(flip)),
         ("shards", Json::num(shards as f64)),
         ("results", Json::Arr(results)),
+        ("bucket_store", Json::Arr(bucket_store)),
     ]);
     std::fs::write("BENCH_index.json", format!("{doc}\n")).expect("write BENCH_index.json");
     println!("wrote BENCH_index.json");
+}
+
+/// One timed probe workload, shared by both stores so the protocol
+/// (warm-up, rounds, checksum rule) cannot diverge between them: walk all
+/// query keys `rounds` times, summing every posting in every hit bucket.
+/// Returns (lookups per second, checksum).
+fn probe_rounds<'a>(
+    rounds: usize,
+    qkeys: &[u64],
+    lookup: impl Fn(u64) -> Option<&'a [u32]>,
+) -> (f64, u64) {
+    let one = |acc: u64| {
+        let mut sum = acc;
+        for &key in qkeys {
+            if let Some(bucket) = lookup(key) {
+                for &slot in bucket {
+                    sum = sum.wrapping_add(u64::from(slot) + 1);
+                }
+            }
+        }
+        sum
+    };
+    std::hint::black_box(one(0)); // warm caches
+    let t0 = Instant::now();
+    let mut sum = 0u64;
+    for _ in 0..rounds {
+        sum = one(sum);
+    }
+    let lps = (rounds * qkeys.len()) as f64 / t0.elapsed().as_secs_f64();
+    (lps, sum)
+}
+
+/// Storage-engine microbench: identical (key → postings) build + probe
+/// workloads through the legacy `HashMap<u64, Vec<u32>>` bucket layout and
+/// the flat open-addressing arena [`SubstringTable`], over one 32-bit
+/// substring of the clustered corpus. Checksums must match — both engines
+/// must visit exactly the same postings — or the comparison is void.
+fn bench_bucket_store(max_n: usize) -> Vec<Json> {
+    let bits = 256;
+    let span_len = 32;
+    let flip = 0.05;
+    println!("== bucket stores: hashmap vs arena, {span_len}-bit keys ==");
+    let mut out: Vec<Json> = Vec::new();
+    for n in [10_000usize, 100_000, 1_000_000] {
+        if n > max_n {
+            println!("n={n}: skipped (CBE_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let mut rng = Pcg64::new(0x570e + n as u64);
+        let db = clustered_codes(&mut rng, n, bits, (n / 1000).max(16), flip);
+        let queries = perturbed_queries(&mut rng, &db, 2000, flip);
+        let qkeys: Vec<u64> = (0..queries.n)
+            .map(|i| extract_bits(queries.code(i), 0, span_len))
+            .collect();
+        // Enough probe rounds that the slower store still runs >~100ms.
+        let rounds = (2_000_000 / qkeys.len()).max(1);
+
+        let t0 = Instant::now();
+        let mut hm: HashMap<u64, Vec<u32>, BuildFastHash> = HashMap::default();
+        for row in 0..db.n {
+            hm.entry(extract_bits(db.code(row), 0, span_len))
+                .or_default()
+                .push(row as u32);
+        }
+        let hm_build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (hm_lps, hm_sum) = probe_rounds(rounds, &qkeys, |key| hm.get(&key).map(Vec::as_slice));
+
+        let t0 = Instant::now();
+        let table = SubstringTable::build(
+            KeySource::Span {
+                start: 0,
+                len: span_len,
+            },
+            &db,
+        );
+        let ar_build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (ar_lps, ar_sum) = probe_rounds(rounds, &qkeys, |key| table.bucket(key));
+
+        assert_eq!(hm_sum, ar_sum, "stores visited different postings");
+        println!(
+            "n={n:<8} store=hashmap      build={hm_build_ms:>9.1} ms  lookups/s={hm_lps:>12.0}"
+        );
+        println!(
+            "n={n:<8} store=arena        build={ar_build_ms:>9.1} ms  lookups/s={ar_lps:>12.0}"
+        );
+        if ar_lps < hm_lps {
+            println!(
+                "WARNING: arena store probed {:.1}% slower than hashmap at n={n}",
+                (1.0 - ar_lps / hm_lps) * 100.0
+            );
+            let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
+            assert!(
+                !enforce,
+                "arena store regressed vs hashmap (CBE_BENCH_ENFORCE=1)"
+            );
+        }
+        for (store, build_ms, lps) in [
+            ("hashmap", hm_build_ms, hm_lps),
+            ("arena", ar_build_ms, ar_lps),
+        ] {
+            out.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("store", Json::str(store)),
+                ("build_ms", Json::num(build_ms)),
+                ("lookups_per_s", Json::num(lps)),
+            ]));
+        }
+    }
+    out
 }
 
 fn bench_pjrt_encode() {

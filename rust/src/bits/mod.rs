@@ -1,8 +1,22 @@
 //! Binary-code substrate: bit packing, Hamming distance, top-k retrieval.
 //!
-//! Once codes are generated (by any encoder), retrieval happens entirely in
-//! this module: ±1 codes are packed 64-per-u64 and compared with XOR +
-//! popcount — the operational payoff the paper's embedding exists for.
+//! Once codes are generated (by any encoder), retrieval happens entirely
+//! on this substrate: ±1 codes are packed 64-per-u64 ([`BitCode`], sign ≥ 0
+//! → bit set, row-major, padding bits zero) and compared with XOR +
+//! popcount ([`hamming`], unrolled for the common 4/8 words-per-code
+//! shapes) — the operational payoff the paper's embedding exists for.
+//!
+//! * [`bitcode`] — the packed code container and sign↔bit conversions.
+//! * [`hamming`] — the XOR+popcount distance kernels.
+//! * [`index`] — [`BinaryIndex`]: the exact O(n·d) linear-scan baseline
+//!   with bounded-heap top-k selection and a core-parallel batch path.
+//!
+//! Every retrieval backend in the repo — this linear scan and the
+//! sub-linear structures in [`crate::index`] — shares one result
+//! contract: hits are the k lexicographically smallest `(dist, id)`
+//! pairs, sorted, with distance ties broken by ascending id. The
+//! `index_equivalence` property tests hold all backends to it
+//! hit-for-hit.
 
 pub mod bitcode;
 pub mod hamming;

@@ -6,10 +6,19 @@
 //! * [`batcher`] — dynamic batching: requests accumulate until the
 //!   artifact's batch size is full or a deadline expires, then execute as
 //!   one PJRT call (padding the tail).
-//! * [`router`] — picks the artifact for a request's (kind, d).
+//! * [`router`] — picks the artifact for a request's (kind, d), and the
+//!   retrieval backend for a corpus size (`Router::pick_index`, the
+//!   resolution behind `IndexBackend::Auto`).
 //! * [`metrics`] — latency histograms + throughput counters.
 //! * [`service`] — [`EmbeddingService`]: the public facade wiring encoder
 //!   state, batcher, PJRT engine and the binary retrieval index together.
+//!
+//! Retrieval is configuration, not code: [`ServiceConfig::index`] takes
+//! any [`crate::index::IndexBackend`] spec (`auto | linear | mih[:m] |
+//! mih-sampled[:m] | sharded:<shards>[:m]`), the CLI exposes it as
+//! `--index`, and the embedding_server example reads `CBE_INDEX`. All
+//! backends are exact, so flipping the spec never changes results — only
+//! throughput.
 
 pub mod request;
 pub mod batcher;

@@ -31,11 +31,16 @@ pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     /// Retrieval backend built by [`EmbeddingService::build_index`].
     /// `Auto` defers to [`Router::pick_index`] at corpus-build time.
+    /// Parse from config with [`IndexBackend::from_spec`]
+    /// (`auto | linear | mih[:m] | mih-sampled[:m] | sharded:<shards>[:m]`;
+    /// the embedding_server example reads the spec from `CBE_INDEX`, the
+    /// CLI from `--index`).
     pub index: IndexBackend,
 }
 
 /// The serving facade. Construct with [`EmbeddingService::start`], submit
-/// with [`EmbeddingService::encode`] / [`encode_async`], stop by dropping.
+/// with [`EmbeddingService::encode`] / [`EmbeddingService::encode_async`],
+/// stop by dropping.
 pub struct EmbeddingService {
     tx: mpsc::Sender<EncodeRequest>,
     pub metrics: Arc<Metrics>,

@@ -1,12 +1,26 @@
 //! Every binary-embedding method the paper evaluates, behind one trait.
 //!
-//! * [`CbeRand`] / [`CbeOpt`] — the paper's contribution (§2–4).
+//! All encoders implement [`BinaryEncoder`]: train (where applicable) on a
+//! sample matrix, then map d-dim float rows to k-bit sign vectors, packed
+//! downstream via [`crate::bits::BitCode`]. The experiment drivers
+//! ([`crate::experiments`]) treat them uniformly through `&dyn
+//! BinaryEncoder`.
+//!
+//! * [`CbeRand`] / [`CbeOpt`] — the paper's contribution (§2–4): a
+//!   circulant projection applied via FFT, O(d log d) per vector instead
+//!   of the O(d²) dense multiply; `Opt` learns the circulant in the
+//!   frequency domain ([`crate::opt`]).
 //! * [`Lsh`] — full gaussian projection (Charikar 2002), the classic
 //!   baseline ("LSH" in the paper's figures).
 //! * [`BilinearRand`] / [`BilinearOpt`] — Gong et al. 2013a, the prior
 //!   state of the art for long codes.
 //! * [`Itq`], [`Sh`], [`Sklsh`], [`Aqbc`] — low-dimensional baselines of
 //!   Figure 5.
+//!
+//! One property of CBE matters downstream in [`crate::index`]: adjacent
+//! circulant bits are *correlated* (Yu et al., 2015), so an index that
+//! buckets on contiguous bit ranges sees skewed bucket occupancy — the
+//! `mih-sampled` backend exists to undo exactly that.
 
 pub mod traits;
 pub mod cbe;

@@ -7,12 +7,48 @@
 //! a vanishing fraction of the corpus is ever touched when codes carry
 //! neighbor structure. See the `crate::index` module docs for the probe
 //! schedule and its termination bound.
+//!
+//! Two serving-scale mechanisms live here rather than in the tables:
+//!
+//! * **Substring scheme** ([`SubstringScheme`]): substrings are either
+//!   contiguous bit spans (the classic MIH layout) or seeded-permutation
+//!   **bit samples** ([`super::substring::sampled_positions`]) that
+//!   decorrelate adjacent circulant-embedding bits before bucketing.
+//! * **Generation-stamped visited scratch**: deduplicating candidates used
+//!   to allocate (and O(n)-zero) a fresh bitmap per query; the index now
+//!   pools `u32` stamp buffers behind a mutex and bumps a generation
+//!   counter instead, so the per-query dedup cost is O(candidates), not
+//!   O(n) — while `search(&self)` stays `Sync` for the sharded fan-out.
 
-use super::substring::{for_each_key_at_radius, substring_spans, BuildFastHash, SubstringTable};
+use super::substring::{
+    for_each_key_at_radius, sampled_positions, substring_spans, BuildFastHash, KeySource,
+    SubstringTable,
+};
 use crate::bits::bitcode::BitCode;
 use crate::bits::hamming::hamming_words;
 use crate::bits::index::Hit;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Mutex;
+
+/// Seed of the bit-sampling permutation. A fixed constant: the permutation
+/// must be reproducible so a compacted/rebuilt index buckets exactly like
+/// the original.
+const SAMPLE_SEED: u64 = 0x53_4145_4d50_4c44;
+
+/// How substring keys are drawn from the full code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubstringScheme {
+    /// Contiguous bit spans (Norouzi et al.'s layout). Optimal when code
+    /// bits are independent.
+    Contiguous,
+    /// Seeded-permutation bit sampling: each table keys on a random
+    /// (deterministic) subset of bit positions. Adjacent CBE bits are
+    /// correlated (Yu et al., 2015), which skews contiguous-span bucket
+    /// occupancy; sampling restores the near-uniform bucket distribution
+    /// the probe-cost model assumes. Exactness is unaffected — the groups
+    /// still partition all bits, so the pigeonhole bound holds.
+    Sampled,
+}
 
 /// C(n, k), saturating in f64 — used only for probe-vs-sweep cost
 /// estimates, never for exact counting.
@@ -40,6 +76,65 @@ pub fn auto_m(bits: usize, n: usize) -> usize {
     target.clamp(min_m, bits.max(min_m))
 }
 
+/// One reusable visited-stamp buffer: `stamps[slot] == gen` ⇔ the slot was
+/// already re-ranked by the query currently holding the buffer.
+struct Scratch {
+    gen: u32,
+    stamps: Vec<u32>,
+}
+
+/// Pool of stamp buffers. The mutex is held only to take/return a buffer
+/// (two lock ops per query, never per candidate), which keeps `MihIndex`
+/// `Sync` so `ShardedIndex` can fan a single query out across shards on
+/// scoped threads.
+#[derive(Default)]
+struct ScratchPool(Mutex<Vec<Scratch>>);
+
+impl ScratchPool {
+    /// Borrow a buffer covering `n` slots with a fresh generation. New or
+    /// grown regions are zeroed; the generation starts at 1, so a zeroed
+    /// stamp can never read as visited. On u32 wrap-around the buffer is
+    /// re-zeroed — once every 2³² queries instead of every query.
+    fn take(&self, n: usize) -> Scratch {
+        let mut s = self
+            .0
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or(Scratch {
+                gen: 0,
+                stamps: Vec::new(),
+            });
+        if s.stamps.len() < n {
+            s.stamps.resize(n, 0);
+        }
+        s.gen = s.gen.wrapping_add(1);
+        if s.gen == 0 {
+            s.stamps.fill(0);
+            s.gen = 1;
+        }
+        s
+    }
+
+    /// Return a buffer to the pool. The pool is capped at roughly the
+    /// core count: buffers beyond that only exist during oversubscribed
+    /// bursts, and retaining them would pin `4·n` bytes each forever —
+    /// excess buffers are dropped instead. The cap is computed once
+    /// (`available_parallelism` is a syscall; this is the per-query path).
+    fn put(&self, s: Scratch) {
+        static POOL_CAP: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+        let cap = *POOL_CAP.get_or_init(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(8)
+        });
+        let mut pool = self.0.lock().expect("scratch pool poisoned");
+        if pool.len() < cap {
+            pool.push(s);
+        }
+    }
+}
+
 /// Multi-index hashing over packed CBE codes. Exact (same contract as
 /// [`crate::bits::BinaryIndex`]), with incremental `insert` / `remove` for
 /// live corpora. Removed rows are tombstoned in code storage but dropped
@@ -51,38 +146,70 @@ pub struct MihIndex {
     live: usize,
     slot_of: HashMap<u32, u32, BuildFastHash>,
     tables: Vec<SubstringTable>,
+    scheme: SubstringScheme,
+    scratch: ScratchPool,
 }
 
 impl MihIndex {
-    /// Build over a packed corpus with ids `0..n`. `m` = substring count
-    /// (None → [`auto_m`]).
+    /// Build over a packed corpus with ids `0..n`, contiguous substrings.
+    /// `m` = substring count (None → [`auto_m`]).
     pub fn build(codes: BitCode, m: Option<usize>) -> MihIndex {
         let ids = (0..codes.n as u32).collect();
         MihIndex::build_with_ids(codes, ids, m)
     }
 
-    /// Build with explicit external ids (must be unique).
+    /// Build with explicit external ids (must be unique), contiguous
+    /// substrings.
     pub fn build_with_ids(codes: BitCode, ids: Vec<u32>, m: Option<usize>) -> MihIndex {
+        MihIndex::build_inner(codes, ids, m, SubstringScheme::Contiguous)
+    }
+
+    /// Build over a packed corpus with ids `0..n`, **bit-sampled**
+    /// substrings (see [`SubstringScheme::Sampled`]).
+    pub fn build_sampled(codes: BitCode, m: Option<usize>) -> MihIndex {
+        let ids = (0..codes.n as u32).collect();
+        MihIndex::build_sampled_with_ids(codes, ids, m)
+    }
+
+    /// Build with explicit external ids, bit-sampled substrings.
+    pub fn build_sampled_with_ids(codes: BitCode, ids: Vec<u32>, m: Option<usize>) -> MihIndex {
+        MihIndex::build_inner(codes, ids, m, SubstringScheme::Sampled)
+    }
+
+    fn build_inner(
+        codes: BitCode,
+        ids: Vec<u32>,
+        m: Option<usize>,
+        scheme: SubstringScheme,
+    ) -> MihIndex {
         assert_eq!(codes.n, ids.len());
         assert!(codes.bits >= 1, "zero-width codes cannot be indexed");
         let min_m = codes.bits.div_ceil(64).max(1);
         let m = m
             .unwrap_or_else(|| auto_m(codes.bits, codes.n))
             .clamp(min_m, codes.bits);
-        let spans = substring_spans(codes.bits, m);
-        let mut tables: Vec<SubstringTable> = spans
-            .iter()
-            .map(|&(start, len)| SubstringTable::new(start, len))
+        let sources: Vec<KeySource> = match scheme {
+            SubstringScheme::Contiguous => substring_spans(codes.bits, m)
+                .into_iter()
+                .map(|(start, len)| KeySource::Span { start, len })
+                .collect(),
+            SubstringScheme::Sampled => sampled_positions(codes.bits, m, SAMPLE_SEED)
+                .into_iter()
+                .map(|positions| KeySource::Sampled {
+                    positions: positions.into_boxed_slice(),
+                })
+                .collect(),
+        };
+        // Two-pass bulk build per table: one exactly-sized postings arena
+        // each, zero per-bucket allocations.
+        let tables: Vec<SubstringTable> = sources
+            .into_iter()
+            .map(|source| SubstringTable::build(source, &codes))
             .collect();
-        let mut slot_of =
-            HashMap::with_capacity_and_hasher(codes.n, BuildFastHash::default());
-        for slot in 0..codes.n {
-            let code = codes.code(slot);
-            for t in tables.iter_mut() {
-                t.insert(t.key_of(code), slot as u32);
-            }
-            let prev = slot_of.insert(ids[slot], slot as u32);
-            assert!(prev.is_none(), "duplicate id {}", ids[slot]);
+        let mut slot_of = HashMap::with_capacity_and_hasher(codes.n, BuildFastHash::default());
+        for (slot, &id) in ids.iter().enumerate() {
+            let prev = slot_of.insert(id, slot as u32);
+            assert!(prev.is_none(), "duplicate id {id}");
         }
         let live = codes.n;
         let alive = vec![true; codes.n];
@@ -93,6 +220,8 @@ impl MihIndex {
             live,
             slot_of,
             tables,
+            scheme,
+            scratch: ScratchPool::default(),
         }
     }
 
@@ -110,6 +239,10 @@ impl MihIndex {
     /// Substring count m.
     pub fn m(&self) -> usize {
         self.tables.len()
+    }
+    /// The substring scheme this index buckets with.
+    pub fn scheme(&self) -> SubstringScheme {
+        self.scheme
     }
     /// Whether an external id is currently indexed.
     pub fn contains(&self, id: u32) -> bool {
@@ -152,8 +285,9 @@ impl MihIndex {
 
     /// Remove by external id; false if absent. O(m · bucket length),
     /// amortized: when tombstones outnumber live rows the storage is
-    /// compacted, so churn cannot grow memory (or per-query sweep/bitmap
-    /// cost) without bound.
+    /// compacted, so churn cannot grow memory (or per-query sweep/stamp
+    /// cost) without bound. (Each table's postings arena additionally
+    /// self-compacts; see [`SubstringTable`].)
     pub fn remove(&mut self, id: u32) -> bool {
         let Some(slot) = self.slot_of.remove(&id) else {
             return false;
@@ -176,7 +310,9 @@ impl MihIndex {
         self.codes.n
     }
 
-    /// Rebuild storage and tables over the live rows only.
+    /// Rebuild storage and tables over the live rows only, preserving the
+    /// substring scheme (the sampling permutation is seed-deterministic,
+    /// so a rebuilt index buckets exactly like the original).
     fn compact(&mut self) {
         let wpc = self.codes.words_per_code;
         let mut codes = BitCode::new(0, self.codes.bits);
@@ -189,7 +325,7 @@ impl MihIndex {
                 ids.push(self.ids[slot]);
             }
         }
-        *self = MihIndex::build_with_ids(codes, ids, Some(self.tables.len()));
+        *self = MihIndex::build_inner(codes, ids, Some(self.tables.len()), self.scheme);
     }
 
     /// Exact top-k by Hamming distance; ties broken by ascending id, hits
@@ -202,6 +338,10 @@ impl MihIndex {
     /// direct sweep of the not-yet-seen slots — tiny corpora, adversarial
     /// `m`, or neighbor-free uniform codes — it sweeps instead, so the
     /// worst case is bounded by the linear scan it replaces.
+    ///
+    /// Candidate dedup uses a pooled generation-stamped scratch buffer, so
+    /// a query pays for the candidates it touches, not an O(n) bitmap
+    /// memset.
     pub fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
         assert_eq!(q.len(), self.codes.words_per_code, "query word count");
         let k = k.min(self.live);
@@ -209,7 +349,9 @@ impl MihIndex {
             return Vec::new();
         }
         let m = self.tables.len() as u32;
-        let mut visited = vec![0u64; self.codes.n.div_ceil(64)];
+        let mut scratch = self.scratch.take(self.codes.n);
+        let gen = scratch.gen;
+        let stamps = &mut scratch.stamps;
         // Bounded max-heap of (dist, id): holds the k lexicographically
         // smallest pairs seen so far.
         let mut heap: BinaryHeap<(u32, u32)> = BinaryHeap::with_capacity(k + 1);
@@ -225,18 +367,20 @@ impl MihIndex {
         };
         // Live slots not yet re-ranked; the sweep-cutover budget.
         let mut unseen = self.live;
-        let max_radius = self.tables.iter().map(|t| t.len).max().unwrap_or(0);
+        // Per-table query keys are invariant across rounds; hoisted because
+        // sampled-scheme extraction is an O(key_bits) gather, not O(1).
+        let qkeys: Vec<u64> = self.tables.iter().map(|t| t.key_of(q)).collect();
+        let max_radius = self.tables.iter().map(|t| t.key_bits()).max().unwrap_or(0);
         for s in 0..=max_radius {
             let round_keys: f64 = self
                 .tables
                 .iter()
-                .map(|t| binomial_approx(t.len, s))
+                .map(|t| binomial_approx(t.key_bits(), s))
                 .sum();
             if round_keys > unseen as f64 {
                 // Cheaper to finish exhaustively than to enumerate keys.
                 for si in 0..self.codes.n {
-                    let (w, b) = (si / 64, si % 64);
-                    if visited[w] >> b & 1 == 1 || !self.alive[si] {
+                    if stamps[si] == gen || !self.alive[si] {
                         continue;
                     }
                     push(
@@ -246,17 +390,15 @@ impl MihIndex {
                 }
                 break;
             }
-            for t in &self.tables {
-                let qkey = t.key_of(q);
-                for_each_key_at_radius(qkey, t.len, s, &mut |key| {
+            for (t, &qkey) in self.tables.iter().zip(&qkeys) {
+                for_each_key_at_radius(qkey, t.key_bits(), s, &mut |key| {
                     let Some(bucket) = t.bucket(key) else { return };
                     for &slot in bucket {
-                        let (w, b) = ((slot / 64) as usize, slot % 64);
-                        if visited[w] >> b & 1 == 1 {
+                        let si = slot as usize;
+                        if stamps[si] == gen {
                             continue;
                         }
-                        visited[w] |= 1u64 << b;
-                        let si = slot as usize;
+                        stamps[si] = gen;
                         if !self.alive[si] {
                             continue;
                         }
@@ -280,6 +422,7 @@ impl MihIndex {
                 }
             }
         }
+        self.scratch.put(scratch);
         let mut hits: Vec<Hit> = heap
             .into_iter()
             .map(|(dist, id)| Hit { id, dist })
@@ -312,12 +455,21 @@ mod tests {
         for (n, bits, m) in [(60, 32, Some(4)), (120, 96, None), (40, 256, Some(8))] {
             let db = random_codes(&mut rng, n, bits);
             let mih = MihIndex::build(db.clone(), m);
+            let sampled = MihIndex::build_sampled(db.clone(), m);
             let linear = BinaryIndex::new(db);
             let queries = random_codes(&mut rng, 6, bits);
             for qi in 0..queries.n {
-                let a = mih.search(queries.code(qi), 9);
                 let b = linear.search(queries.code(qi), 9);
-                assert_eq!(a, b, "n={n} bits={bits} m={m:?} qi={qi}");
+                assert_eq!(
+                    mih.search(queries.code(qi), 9),
+                    b,
+                    "contiguous n={n} bits={bits} m={m:?} qi={qi}"
+                );
+                assert_eq!(
+                    sampled.search(queries.code(qi), 9),
+                    b,
+                    "sampled n={n} bits={bits} m={m:?} qi={qi}"
+                );
             }
         }
     }
@@ -346,20 +498,25 @@ mod tests {
     fn insert_then_remove_roundtrip() {
         let mut rng = Pcg64::new(204);
         let db = random_codes(&mut rng, 30, 96);
-        let mut mih = MihIndex::build(db.clone(), Some(6));
-        let extra = random_codes(&mut rng, 1, 96);
-        mih.insert(1000, extra.code(0));
-        assert_eq!(mih.len(), 31);
-        assert!(mih.contains(1000));
-        let hits = mih.search(extra.code(0), 1);
-        assert_eq!(hits[0].dist, 0);
-        assert_eq!(hits[0].id, 1000);
+        for build in [MihIndex::build, MihIndex::build_sampled] {
+            let mut mih = build(db.clone(), Some(6));
+            let extra = random_codes(&mut rng, 1, 96);
+            mih.insert(1000, extra.code(0));
+            assert_eq!(mih.len(), 31);
+            assert!(mih.contains(1000));
+            let hits = mih.search(extra.code(0), 1);
+            assert_eq!(hits[0].dist, 0);
+            assert_eq!(hits[0].id, 1000);
 
-        assert!(mih.remove(1000));
-        assert!(!mih.remove(1000));
-        assert_eq!(mih.len(), 30);
-        let hits = mih.search(extra.code(0), 30);
-        assert!(hits.iter().all(|h| h.id != 1000), "removed id must not surface");
+            assert!(mih.remove(1000));
+            assert!(!mih.remove(1000));
+            assert_eq!(mih.len(), 30);
+            let hits = mih.search(extra.code(0), 30);
+            assert!(
+                hits.iter().all(|h| h.id != 1000),
+                "removed id must not surface"
+            );
+        }
     }
 
     #[test]
@@ -387,6 +544,49 @@ mod tests {
         let linear = BinaryIndex::with_ids(survivors, (80u32..100).collect());
         let q = random_codes(&mut rng, 1, bits);
         assert_eq!(mih.search(q.code(0), 7), linear.search(q.code(0), 7));
+    }
+
+    #[test]
+    fn compact_preserves_sampled_scheme() {
+        let mut rng = Pcg64::new(206);
+        let bits = 96;
+        let db = random_codes(&mut rng, 100, bits);
+        let mut mih = MihIndex::build_sampled(db.clone(), Some(6));
+        for id in 0..80u32 {
+            assert!(mih.remove(id));
+        }
+        assert_eq!(mih.scheme(), SubstringScheme::Sampled);
+        assert!(mih.storage_slots() < 100, "compaction must have run");
+        // Post-compaction searches stay exact.
+        let mut survivors = BitCode::new(20, bits);
+        for (i, slot) in (80..100).enumerate() {
+            let wpc = survivors.words_per_code;
+            survivors.data[i * wpc..(i + 1) * wpc].copy_from_slice(db.code(slot));
+        }
+        let linear = BinaryIndex::with_ids(survivors, (80u32..100).collect());
+        let q = random_codes(&mut rng, 1, bits);
+        assert_eq!(mih.search(q.code(0), 9), linear.search(q.code(0), 9));
+    }
+
+    #[test]
+    fn stamped_scratch_is_reused_across_queries() {
+        // Back-to-back queries must stay exact while the pool recycles one
+        // buffer (the second query's generation invalidates the first's
+        // stamps without any re-zeroing).
+        let mut rng = Pcg64::new(207);
+        let db = random_codes(&mut rng, 120, 64);
+        let mih = MihIndex::build(db.clone(), Some(4));
+        let linear = BinaryIndex::new(db);
+        let queries = random_codes(&mut rng, 30, 64);
+        for qi in 0..queries.n {
+            assert_eq!(
+                mih.search(queries.code(qi), 5),
+                linear.search(queries.code(qi), 5),
+                "qi={qi}"
+            );
+        }
+        // The sequential batch path reuses a single pooled buffer.
+        assert_eq!(mih.scratch.0.lock().unwrap().len(), 1);
     }
 
     #[test]

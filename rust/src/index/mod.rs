@@ -9,24 +9,27 @@
 //!
 //! # How the probe schedule works
 //!
-//! Split every b-bit code into m contiguous substrings (as even as
-//! possible; see [`substring::substring_spans`]) and bucket each substring
-//! value in its own [`substring::SubstringTable`]. The pigeonhole argument:
-//! if two codes differ by at most r bits overall, some substring pair
-//! differs by at most ⌊r/m⌋ bits — a far smaller radius in a far smaller
-//! keyspace.
+//! Split every b-bit code into m substrings and bucket each substring
+//! value in its own [`substring::SubstringTable`]. Substrings are either
+//! contiguous spans ([`substring::substring_spans`]) or seeded-permutation
+//! bit samples ([`substring::sampled_positions`]; see
+//! [`mih::SubstringScheme`]) — either way they partition the b bits, so
+//! the pigeonhole argument holds: if two codes differ by at most r bits
+//! overall, some substring pair differs by at most ⌊r/m⌋ bits — a far
+//! smaller radius in a far smaller keyspace.
 //!
 //! A query therefore proceeds in rounds of increasing substring radius
 //! s = 0, 1, 2, …: in round s, every table enumerates the C(len, s) keys
 //! at distance exactly s from the query's substring and pulls the matching
-//! buckets. Every candidate is deduplicated (visited bitmap), re-ranked
-//! with the exact full-code Hamming kernel ([`crate::bits::hamming`]), and
-//! pushed into a bounded max-heap of the k smallest `(dist, id)` pairs.
-//! After finishing round s, any code *not yet seen* has all m substring
-//! distances ≥ s+1, hence full distance ≥ m·(s+1); the loop stops as soon
-//! as the current k-th best distance is strictly below that bound. This
-//! makes [`MihIndex`] **exact**: equal hit-for-hit (including ties, which
-//! break by ascending id) with a full linear scan.
+//! buckets. Every candidate is deduplicated (generation-stamped scratch,
+//! pooled across queries), re-ranked with the exact full-code Hamming
+//! kernel ([`crate::bits::hamming`]), and pushed into a bounded max-heap
+//! of the k smallest `(dist, id)` pairs. After finishing round s, any code
+//! *not yet seen* has all m substring distances ≥ s+1, hence full distance
+//! ≥ m·(s+1); the loop stops as soon as the current k-th best distance is
+//! strictly below that bound. This makes [`MihIndex`] **exact**: equal
+//! hit-for-hit (including ties, which break by ascending id) with a full
+//! linear scan.
 //!
 //! The schedule also self-bounds: before each round it compares the
 //! round's key-enumeration cost (Σ C(lenᵢ, s)) against the number of
@@ -36,6 +39,15 @@
 //! scan, while structured (real-embedding) corpora terminate after a few
 //! tiny rounds.
 //!
+//! # Storage engine
+//!
+//! Each [`substring::SubstringTable`] is a flat open-addressing key table
+//! whose postings live in one contiguous arena — zero allocations per
+//! bucket, two-pass (count → prefix-sum → fill) bulk builds, and
+//! tombstone-aware incremental churn with self-compaction. See the
+//! `substring` module docs for the layout and `ARCHITECTURE.md` for the
+//! design rationale.
+//!
 //! [`ShardedIndex`] layers horizontal scale on top: the corpus is
 //! partitioned round-robin across independent MIH shards, single queries
 //! fan out across shards on scoped threads, batches parallelize across
@@ -43,15 +55,16 @@
 //! query throughput scales with cores instead of corpus size.
 //!
 //! Backend choice is config, not code: [`IndexBackend`] (parsed from specs
-//! like `"mih:8"` or `"sharded:16"`) + [`build_index`] produce an
-//! [`IndexAny`], and everything downstream — `EmbeddingService::search`,
-//! the recall experiments, the benches — talks [`AnyIndex`].
+//! like `"mih:8"`, `"mih-sampled"` or `"sharded:16"`) + [`build_index`]
+//! produce an [`IndexAny`], and everything downstream —
+//! `EmbeddingService::search`, the recall experiments, the benches —
+//! talks [`AnyIndex`].
 
 pub mod mih;
 pub mod sharded;
 pub mod substring;
 
-pub use mih::MihIndex;
+pub use mih::{MihIndex, SubstringScheme};
 pub use sharded::ShardedIndex;
 
 use crate::bits::bitcode::BitCode;
@@ -112,7 +125,10 @@ impl AnyIndex for MihIndex {
         MihIndex::search_batch(self, queries, k)
     }
     fn backend_name(&self) -> &'static str {
-        "mih"
+        match self.scheme() {
+            SubstringScheme::Contiguous => "mih",
+            SubstringScheme::Sampled => "mih-sampled",
+        }
     }
 }
 
@@ -136,6 +152,30 @@ impl AnyIndex for ShardedIndex {
 
 /// Which retrieval backend to build — selected by config (service config,
 /// CLI flag, `CBE_INDEX` env var), not by code.
+///
+/// # Spec strings
+///
+/// [`IndexBackend::from_spec`] accepts exactly these forms (and
+/// [`IndexBackend::spec`] prints the canonical one back):
+///
+/// * `auto` — pick by corpus size via [`IndexBackend::auto_for`]: linear
+///   below ~8k codes, one MIH to ~256k, a shard per core beyond that.
+/// * `linear` (alias `scan`) — exact linear scan
+///   ([`crate::bits::BinaryIndex`]), the O(n·d) baseline. Immutable.
+/// * `mih` or `mih:<m>` — single [`MihIndex`] over contiguous substrings;
+///   `m` = substring count, ≥ 1 (omitted → [`mih::auto_m`]; explicit
+///   values are clamped at build time to `[ceil(bits/64), bits]` so
+///   substring keys fit a u64).
+/// * `mih-sampled` or `mih-sampled:<m>` — [`MihIndex`] over **bit-sampled**
+///   substrings ([`SubstringScheme::Sampled`]): a seeded permutation
+///   scatters the key bits so correlated adjacent CBE bits don't skew
+///   bucket occupancy. Same exactness, same `m` rules as `mih`.
+/// * `sharded:<shards>` or `sharded:<shards>:<m>` (alias `sharded-mih`) —
+///   [`ShardedIndex`]: corpus partitioned round-robin over `shards` ≥ 1
+///   MIH shards with parallel fan-out; `m` as for `mih`.
+///
+/// Anything else — unknown names, zero counts, non-numeric or empty
+/// fields, extra `:` segments — is rejected with a descriptive error.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum IndexBackend {
     /// Pick by corpus size: linear below ~8k codes, MIH to ~256k, one MIH
@@ -143,17 +183,20 @@ pub enum IndexBackend {
     Auto,
     /// Exact linear scan ([`BinaryIndex`]) — the O(n·d) baseline.
     Linear,
-    /// Single multi-index hash table set; `m` = substring count
-    /// (None → [`mih::auto_m`]; explicit values are clamped at build time
-    /// to `[ceil(bits/64), bits]` so substring keys fit a u64).
+    /// Single multi-index hash table set over contiguous substrings;
+    /// `m` = substring count (None → [`mih::auto_m`]).
     Mih { m: Option<usize> },
+    /// Single multi-index hash table set over bit-sampled substrings
+    /// ([`SubstringScheme::Sampled`]); `m` as in [`IndexBackend::Mih`].
+    MihSampled { m: Option<usize> },
     /// Corpus-partitioned MIH with parallel shard fan-out.
     ShardedMih { shards: usize, m: Option<usize> },
 }
 
 impl IndexBackend {
     /// Parse a backend spec: `auto` | `linear` | `mih[:m]` |
-    /// `sharded:<shards>[:m]`.
+    /// `mih-sampled[:m]` | `sharded:<shards>[:m]`. See the type-level docs
+    /// for the exact grammar.
     pub fn from_spec(spec: &str) -> Result<IndexBackend, String> {
         let parts: Vec<&str> = spec.trim().split(':').collect();
         let num = |s: &str| {
@@ -167,6 +210,17 @@ impl IndexBackend {
                 Err(format!("wrong arity in index spec '{spec}'"))
             }
         };
+        let opt_m = |idx: usize| -> Result<Option<usize>, String> {
+            if parts.len() > idx {
+                let m = num(parts[idx])?;
+                if m == 0 {
+                    return Err(format!("substring count must be >= 1 in '{spec}'"));
+                }
+                Ok(Some(m))
+            } else {
+                Ok(None)
+            }
+        };
         match parts[0] {
             "auto" => {
                 arity(1..=1)?;
@@ -178,16 +232,11 @@ impl IndexBackend {
             }
             "mih" => {
                 arity(1..=2)?;
-                let m = if parts.len() == 2 {
-                    let m = num(parts[1])?;
-                    if m == 0 {
-                        return Err(format!("substring count must be >= 1 in '{spec}'"));
-                    }
-                    Some(m)
-                } else {
-                    None
-                };
-                Ok(IndexBackend::Mih { m })
+                Ok(IndexBackend::Mih { m: opt_m(1)? })
+            }
+            "mih-sampled" => {
+                arity(1..=2)?;
+                Ok(IndexBackend::MihSampled { m: opt_m(1)? })
             }
             "sharded" | "sharded-mih" => {
                 arity(2..=3)?;
@@ -195,15 +244,14 @@ impl IndexBackend {
                 if shards == 0 {
                     return Err(format!("shard count must be >= 1 in '{spec}'"));
                 }
-                let m = if parts.len() == 3 {
-                    Some(num(parts[2])?)
-                } else {
-                    None
-                };
-                Ok(IndexBackend::ShardedMih { shards, m })
+                Ok(IndexBackend::ShardedMih {
+                    shards,
+                    m: opt_m(2)?,
+                })
             }
             other => Err(format!(
-                "unknown index backend '{other}' (want auto | linear | mih[:m] | sharded:<shards>[:m])"
+                "unknown index backend '{other}' (want auto | linear | mih[:m] | \
+                 mih-sampled[:m] | sharded:<shards>[:m])"
             )),
         }
     }
@@ -215,6 +263,8 @@ impl IndexBackend {
             IndexBackend::Linear => "linear".to_string(),
             IndexBackend::Mih { m: None } => "mih".to_string(),
             IndexBackend::Mih { m: Some(m) } => format!("mih:{m}"),
+            IndexBackend::MihSampled { m: None } => "mih-sampled".to_string(),
+            IndexBackend::MihSampled { m: Some(m) } => format!("mih-sampled:{m}"),
             IndexBackend::ShardedMih { shards, m: None } => format!("sharded:{shards}"),
             IndexBackend::ShardedMih { shards, m: Some(m) } => format!("sharded:{shards}:{m}"),
         }
@@ -222,7 +272,9 @@ impl IndexBackend {
 
     /// The serving heuristic behind [`IndexBackend::Auto`]: linear scan
     /// while the scan is cheap, one MIH beyond that, and a shard per core
-    /// once the corpus dwarfs the probe cost.
+    /// once the corpus dwarfs the probe cost. (Bit sampling stays opt-in:
+    /// it pays an O(len) gather per key extraction, which only buys QPS
+    /// back when the code bits are correlated enough to skew buckets.)
     pub fn auto_for(n: usize, _bits: usize) -> IndexBackend {
         if n < 8_192 {
             IndexBackend::Linear
@@ -242,6 +294,8 @@ impl IndexBackend {
 /// callers can use an `IndexAny` without importing the trait.
 pub enum IndexAny {
     Linear(BinaryIndex),
+    /// Both substring schemes land here; [`MihIndex::scheme`] tells them
+    /// apart (as does [`IndexAny::backend_name`]).
     Mih(MihIndex),
     Sharded(ShardedIndex),
 }
@@ -281,7 +335,7 @@ impl IndexAny {
     pub fn backend_name(&self) -> &'static str {
         match self {
             IndexAny::Linear(_) => "linear",
-            IndexAny::Mih(_) => "mih",
+            IndexAny::Mih(i) => AnyIndex::backend_name(i),
             IndexAny::Sharded(_) => "sharded-mih",
         }
     }
@@ -353,6 +407,9 @@ pub fn build_index_with_ids(codes: BitCode, ids: Vec<u32>, backend: &IndexBacken
         IndexBackend::Auto => unreachable!("auto resolved above"),
         IndexBackend::Linear => IndexAny::Linear(BinaryIndex::with_ids(codes, ids)),
         IndexBackend::Mih { m } => IndexAny::Mih(MihIndex::build_with_ids(codes, ids, m)),
+        IndexBackend::MihSampled { m } => {
+            IndexAny::Mih(MihIndex::build_sampled_with_ids(codes, ids, m))
+        }
         IndexBackend::ShardedMih { shards, m } => {
             IndexAny::Sharded(ShardedIndex::build_with_ids(codes, ids, shards, m))
         }
@@ -366,7 +423,16 @@ mod tests {
 
     #[test]
     fn spec_roundtrip() {
-        for spec in ["auto", "linear", "mih", "mih:8", "sharded:4", "sharded:4:8"] {
+        for spec in [
+            "auto",
+            "linear",
+            "mih",
+            "mih:8",
+            "mih-sampled",
+            "mih-sampled:8",
+            "sharded:4",
+            "sharded:4:8",
+        ] {
             let b = IndexBackend::from_spec(spec).unwrap();
             assert_eq!(b.spec(), spec);
             assert_eq!(IndexBackend::from_spec(&b.spec()).unwrap(), b);
@@ -375,8 +441,43 @@ mod tests {
             IndexBackend::from_spec("scan").unwrap(),
             IndexBackend::Linear
         );
-        for bad in ["", "mih:x", "mih:0", "sharded", "sharded:0", "hnsw", "auto:2", "mih:1:2:3"] {
-            assert!(IndexBackend::from_spec(bad).is_err(), "{bad} should fail");
+        assert_eq!(
+            IndexBackend::from_spec("sharded-mih:4").unwrap(),
+            IndexBackend::ShardedMih {
+                shards: 4,
+                m: None
+            }
+        );
+        // Leading/trailing whitespace is tolerated; the interior is not.
+        assert_eq!(
+            IndexBackend::from_spec(" mih-sampled:3 ").unwrap(),
+            IndexBackend::MihSampled { m: Some(3) }
+        );
+    }
+
+    #[test]
+    fn spec_rejects_malformed() {
+        for bad in [
+            "",
+            "mih:",           // empty m field
+            "mih:x",          // non-numeric m
+            "mih:0",          // zero substrings
+            "mih:1:2",        // trailing garbage
+            "mih-sampled:",   // empty m field
+            "mih-sampled:0",  // zero substrings
+            "mih-sampled:2:3",// trailing garbage
+            "sampled",        // not a backend name
+            "sharded",        // missing shard count
+            "sharded:",       // empty shard count
+            "sharded:0",      // zero shards
+            "sharded:2:0",    // zero substrings
+            "sharded:2:8:1",  // trailing garbage
+            "linear:1",       // arity
+            "auto:2",         // arity
+            "hnsw",           // unknown backend
+            "mih extra",      // embedded whitespace
+        ] {
+            assert!(IndexBackend::from_spec(bad).is_err(), "'{bad}' should fail");
         }
     }
 
@@ -405,6 +506,7 @@ mod tests {
             IndexBackend::Auto,
             IndexBackend::Linear,
             IndexBackend::Mih { m: Some(4) },
+            IndexBackend::MihSampled { m: Some(4) },
             IndexBackend::ShardedMih {
                 shards: 3,
                 m: None,
@@ -424,6 +526,16 @@ mod tests {
     }
 
     #[test]
+    fn backend_names_distinguish_schemes() {
+        let mut rng = Pcg64::new(403);
+        let db = BitCode::from_signs(&rng.sign_vec(20 * 32), 20, 32);
+        let plain = build_index(db.clone(), &IndexBackend::Mih { m: None });
+        let sampled = build_index(db, &IndexBackend::MihSampled { m: None });
+        assert_eq!(plain.backend_name(), "mih");
+        assert_eq!(sampled.backend_name(), "mih-sampled");
+    }
+
+    #[test]
     fn index_any_mutation_gating() {
         let mut rng = Pcg64::new(402);
         let bits = 32;
@@ -436,6 +548,7 @@ mod tests {
 
         for backend in [
             IndexBackend::Mih { m: None },
+            IndexBackend::MihSampled { m: None },
             IndexBackend::ShardedMih { shards: 2, m: None },
         ] {
             let mut idx = build_index(db.clone(), &backend);

@@ -6,6 +6,12 @@
 //! parallelize across queries (better cache behavior, same exactness).
 //! Because every shard is exact and the merge keeps the k smallest
 //! `(dist, id)` pairs, the result is identical to one big linear scan.
+//!
+//! The fan-out calls `MihIndex::search(&self, ..)` concurrently from
+//! several threads, which is only legal because `MihIndex` is `Sync`:
+//! its per-query visited scratch is a pooled, generation-stamped buffer
+//! behind a mutex rather than interior state mutated in place — see the
+//! [`super::mih`] module docs.
 
 use super::mih::MihIndex;
 use super::substring::BuildFastHash;

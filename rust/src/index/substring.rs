@@ -1,13 +1,45 @@
-//! Substring bucket store: the per-table layer of multi-index hashing.
+//! Substring bucket store: the per-table storage engine of multi-index
+//! hashing.
 //!
-//! A b-bit code is partitioned into m contiguous substrings; each
-//! [`SubstringTable`] owns one span and maps the span's (≤ 64-bit) value to
-//! the list of storage slots whose code carries that value. Probing a table
-//! at substring radius r means enumerating the C(len, r) keys at Hamming
+//! A b-bit code is partitioned into m substrings; each [`SubstringTable`]
+//! owns one substring (a contiguous span *or* a sampled bit set, see
+//! [`KeySource`]) and maps the substring's (≤ 64-bit) value to the list of
+//! storage slots whose code carries that value. Probing a table at
+//! substring radius r means enumerating the C(len, r) keys at Hamming
 //! distance exactly r from the query's key — [`for_each_key_at_radius`].
+//!
+//! # Storage layout
+//!
+//! The table is a **flat open-addressing hash table** (linear probing,
+//! power-of-two capacity, splitmix64-finalized keys) whose postings live in
+//! **one contiguous `u32` arena** — zero per-bucket allocations, unlike the
+//! `HashMap<u64, Vec<u32>>` it replaced (which paid one heap allocation per
+//! non-empty bucket, ruinous at the 10⁶+ scale).
+//!
+//! * **Bulk build** ([`SubstringTable::build`]) is two-pass: count keys →
+//!   prefix-sum bucket offsets → fill. The arena is sized exactly and each
+//!   posting is written once.
+//! * **Incremental insert** appends into the bucket's reserved capacity;
+//!   on overflow the bucket relocates to the arena tail with doubled
+//!   capacity, abandoning its old range. Abandoned capacity is tracked and
+//!   the arena is rewritten in place once more than half of it is dead, so
+//!   insert/remove churn cannot grow memory without bound.
+//! * **Remove** swap-removes within the bucket slice; a bucket that empties
+//!   tombstones its key slot (reclaimed by later inserts or the next
+//!   rehash).
 
-use std::collections::HashMap;
+use crate::bits::bitcode::BitCode;
 use std::hash::{BuildHasherDefault, Hasher};
+
+/// splitmix64 finalizer: the avalanche permutation behind both [`FastHash`]
+/// and the open-addressing probe start.
+#[inline]
+pub(crate) fn splitmix64(x: u64) -> u64 {
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
 
 /// Avalanche hasher for the u64 bucket keys (and u32 id keys). std's
 /// SipHash is DoS-hardened, which is wasted work on keys we control; this
@@ -25,10 +57,7 @@ impl Hasher for FastHash {
     }
     #[inline]
     fn write_u64(&mut self, x: u64) {
-        let mut z = self.0 ^ x;
-        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-        self.0 = z ^ (z >> 31);
+        self.0 = splitmix64(self.0 ^ x);
     }
     #[inline]
     fn finish(&self) -> u64 {
@@ -64,6 +93,33 @@ pub fn substring_spans(bits: usize, m: usize) -> Vec<(usize, usize)> {
     spans
 }
 
+/// Partition `bits` bit positions into `m` **sampled** (non-contiguous)
+/// groups via a seeded Fisher–Yates permutation, with the same
+/// even-as-possible group sizes as [`substring_spans`]. Every bit position
+/// lands in exactly one group, so the pigeonhole bound of the probe
+/// schedule holds unchanged; what changes is *which* bits share a bucket
+/// key. Adjacent circulant-embedding bits are correlated (Yu et al., 2015),
+/// which skews contiguous-span bucket occupancy; sampling decorrelates the
+/// bits behind each key and restores the near-uniform bucket distribution
+/// multi-index hashing assumes. Deterministic in `(bits, m, seed)`.
+pub fn sampled_positions(bits: usize, m: usize, seed: u64) -> Vec<Vec<u32>> {
+    use crate::util::rng::Pcg64;
+    let spans = substring_spans(bits, m);
+    let mut perm: Vec<u32> = (0..bits as u32).collect();
+    Pcg64::new(seed ^ ((bits as u64) << 20) ^ m as u64).shuffle(&mut perm);
+    let mut groups = Vec::with_capacity(m);
+    let mut at = 0usize;
+    for &(_, len) in &spans {
+        let mut g = perm[at..at + len].to_vec();
+        // Sorted within the group: key bit j is the j-th smallest sampled
+        // position, so extraction walks the code in address order.
+        g.sort_unstable();
+        groups.push(g);
+        at += len;
+    }
+    groups
+}
+
 /// Extract `len` (1..=64) bits starting at absolute bit `start` from a
 /// packed little-endian-bit code row.
 #[inline]
@@ -79,6 +135,19 @@ pub fn extract_bits(code: &[u64], start: usize, len: usize) -> u64 {
         v &= (1u64 << len) - 1;
     }
     v
+}
+
+/// Gather the bits at `positions` (each an absolute bit index, ≤ 64 of
+/// them) into a packed key: key bit j = code bit `positions[j]`.
+#[inline]
+pub fn gather_bits(code: &[u64], positions: &[u32]) -> u64 {
+    debug_assert!((1..=64).contains(&positions.len()));
+    let mut key = 0u64;
+    for (j, &p) in positions.iter().enumerate() {
+        let p = p as usize;
+        key |= (code[p / 64] >> (p % 64) & 1) << j;
+    }
+    key
 }
 
 /// Visit every key at Hamming distance exactly `r` from `key` within a
@@ -114,67 +183,324 @@ pub fn for_each_key_at_radius(key: u64, len: usize, r: usize, visit: &mut impl F
     }
 }
 
-/// One hash table of the multi-index: bucket store for a single substring
-/// span. Values are *storage slots* (row indices of the owning index's
-/// `BitCode`), not external ids — the owner translates after re-ranking.
-pub struct SubstringTable {
-    /// Absolute start bit of this table's span.
-    pub start: usize,
-    /// Span length in bits (1..=64).
-    pub len: usize,
-    buckets: HashMap<u64, Vec<u32>, BuildFastHash>,
+/// How a [`SubstringTable`] derives its key bits from a full packed code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KeySource {
+    /// `len` contiguous bits starting at absolute bit `start`.
+    Span { start: usize, len: usize },
+    /// Explicit (sorted, distinct) absolute bit positions, ≤ 64 of them —
+    /// the bit-sampled scheme of [`sampled_positions`].
+    Sampled { positions: Box<[u32]> },
 }
 
-impl SubstringTable {
-    pub fn new(start: usize, len: usize) -> SubstringTable {
-        assert!((1..=64).contains(&len));
-        SubstringTable {
-            start,
-            len,
-            buckets: HashMap::default(),
+impl KeySource {
+    /// Number of key bits this source produces.
+    #[inline]
+    pub fn key_bits(&self) -> usize {
+        match self {
+            KeySource::Span { len, .. } => *len,
+            KeySource::Sampled { positions } => positions.len(),
         }
+    }
+}
+
+/// Slot states of the open-addressing key table.
+const EMPTY: u8 = 0;
+const FULL: u8 = 1;
+const TOMB: u8 = 2;
+
+/// Bucket metadata: a half-open range of reserved arena capacity, of which
+/// the first `len` entries are live postings.
+#[derive(Clone, Copy, Default)]
+struct Bucket {
+    key: u64,
+    off: u32,
+    len: u32,
+    cap: u32,
+}
+
+/// One hash table of the multi-index: flat-arena bucket store for a single
+/// substring. Values are *storage slots* (row indices of the owning index's
+/// `BitCode`), not external ids — the owner translates after re-ranking.
+/// See the module docs for the memory layout.
+pub struct SubstringTable {
+    source: KeySource,
+    /// Open-addressing control bytes ([`EMPTY`]/[`FULL`]/[`TOMB`]),
+    /// power-of-two length, parallel to `buckets`.
+    ctrl: Vec<u8>,
+    buckets: Vec<Bucket>,
+    n_full: usize,
+    n_tomb: usize,
+    /// All postings, one contiguous allocation.
+    arena: Vec<u32>,
+    /// Arena capacity abandoned by bucket relocation / emptied buckets;
+    /// compacted away once it exceeds half the arena.
+    dead: usize,
+}
+
+const INITIAL_SLOTS: usize = 16;
+
+impl SubstringTable {
+    /// Empty table over a contiguous span (see [`SubstringTable::with_source`]
+    /// for sampled keys).
+    pub fn new(start: usize, len: usize) -> SubstringTable {
+        SubstringTable::with_source(KeySource::Span { start, len })
+    }
+
+    /// Empty table over an arbitrary key source.
+    pub fn with_source(source: KeySource) -> SubstringTable {
+        assert!(
+            (1..=64).contains(&source.key_bits()),
+            "substring keys must be 1..=64 bits"
+        );
+        SubstringTable {
+            source,
+            ctrl: vec![EMPTY; INITIAL_SLOTS],
+            buckets: vec![Bucket::default(); INITIAL_SLOTS],
+            n_full: 0,
+            n_tomb: 0,
+            arena: Vec::new(),
+            dead: 0,
+        }
+    }
+
+    /// Two-pass bulk build over a packed corpus: count keys → prefix-sum
+    /// offsets → fill. The arena is sized exactly (no dead capacity, no
+    /// per-bucket headroom) and every posting is written exactly once.
+    pub fn build(source: KeySource, codes: &BitCode) -> SubstringTable {
+        assert!(codes.n <= u32::MAX as usize, "storage slots must fit u32");
+        let mut t = SubstringTable::with_source(source);
+        // Pass 1: count occupancy per key (len doubles as the counter).
+        for row in 0..codes.n {
+            let key = t.key_of(codes.code(row));
+            let bi = t.slot_for_insert(key);
+            t.buckets[bi].len += 1;
+        }
+        // Prefix-sum the counts into exact arena offsets.
+        let mut total = 0usize;
+        for i in 0..t.ctrl.len() {
+            if t.ctrl[i] == FULL {
+                let count = t.buckets[i].len;
+                t.buckets[i].off = total as u32;
+                t.buckets[i].cap = count;
+                t.buckets[i].len = 0;
+                total += count as usize;
+            }
+        }
+        t.arena = vec![0u32; total];
+        // Pass 2: fill postings in slot order.
+        for row in 0..codes.n {
+            let key = t.key_of(codes.code(row));
+            let bi = t.find(key).expect("key present after counting pass");
+            let Bucket { off, len, .. } = t.buckets[bi];
+            t.arena[(off + len) as usize] = row as u32;
+            t.buckets[bi].len = len + 1;
+        }
+        t
+    }
+
+    /// The key source this table extracts with.
+    pub fn source(&self) -> &KeySource {
+        &self.source
+    }
+
+    /// Key width in bits (the radius-enumeration keyspace).
+    #[inline]
+    pub fn key_bits(&self) -> usize {
+        self.source.key_bits()
     }
 
     /// This table's key for a full packed code row.
     #[inline]
     pub fn key_of(&self, code: &[u64]) -> u64 {
-        extract_bits(code, self.start, self.len)
-    }
-
-    /// Append a slot to a bucket.
-    pub fn insert(&mut self, key: u64, slot: u32) {
-        self.buckets.entry(key).or_default().push(slot);
-    }
-
-    /// Remove a slot from a bucket; true if it was present.
-    pub fn remove(&mut self, key: u64, slot: u32) -> bool {
-        if let Some(bucket) = self.buckets.get_mut(&key) {
-            if let Some(pos) = bucket.iter().position(|s| *s == slot) {
-                bucket.swap_remove(pos);
-                if bucket.is_empty() {
-                    self.buckets.remove(&key);
-                }
-                return true;
-            }
+        match &self.source {
+            KeySource::Span { start, len } => extract_bits(code, *start, *len),
+            KeySource::Sampled { positions } => gather_bits(code, positions),
         }
-        false
+    }
+
+    /// Append a slot to a bucket. Amortized O(1): within reserved capacity
+    /// it is a single arena write; on overflow the bucket relocates to the
+    /// arena tail with doubled capacity.
+    pub fn insert(&mut self, key: u64, slot: u32) {
+        let bi = self.slot_for_insert(key);
+        let Bucket { off, len, cap, .. } = self.buckets[bi];
+        if len < cap {
+            self.arena[(off + len) as usize] = slot;
+            self.buckets[bi].len = len + 1;
+            return;
+        }
+        // saturating: a pathological single-bucket table near u32::MAX
+        // postings must hit the arena-addressing assert below, not wrap
+        // cap to a small value and corrupt the bucket range.
+        let new_cap = cap.saturating_mul(2).max(4);
+        let new_off = self.arena.len();
+        assert!(
+            new_off + new_cap as usize <= u32::MAX as usize,
+            "postings arena exceeds u32 addressing"
+        );
+        self.arena
+            .extend_from_within(off as usize..(off + len) as usize);
+        self.arena.push(slot);
+        self.arena.resize(new_off + new_cap as usize, 0);
+        self.dead += cap as usize;
+        let b = &mut self.buckets[bi];
+        b.off = new_off as u32;
+        b.len = len + 1;
+        b.cap = new_cap;
+        self.maybe_compact();
+    }
+
+    /// Remove a slot from a bucket; true if it was present. Swap-removes
+    /// within the bucket slice; an emptied bucket tombstones its key slot
+    /// and abandons its arena capacity (reclaimed by the next compaction).
+    pub fn remove(&mut self, key: u64, slot: u32) -> bool {
+        let Some(bi) = self.find(key) else {
+            return false;
+        };
+        let Bucket { off, len, cap, .. } = self.buckets[bi];
+        let (s, e) = (off as usize, (off + len) as usize);
+        let Some(pos) = self.arena[s..e].iter().position(|&x| x == slot) else {
+            return false;
+        };
+        self.arena.swap(s + pos, e - 1);
+        self.buckets[bi].len = len - 1;
+        if len == 1 {
+            self.ctrl[bi] = TOMB;
+            self.n_full -= 1;
+            self.n_tomb += 1;
+            self.dead += cap as usize;
+            self.maybe_compact();
+        }
+        true
     }
 
     /// The slots bucketed under `key`, if any.
     #[inline]
     pub fn bucket(&self, key: u64) -> Option<&[u32]> {
-        self.buckets.get(&key).map(|v| v.as_slice())
+        self.find(key).map(|bi| {
+            let Bucket { off, len, .. } = self.buckets[bi];
+            &self.arena[off as usize..(off + len) as usize]
+        })
     }
 
     /// Number of non-empty buckets.
     pub fn bucket_count(&self) -> usize {
-        self.buckets.len()
+        self.n_full
+    }
+
+    /// Total arena capacity in postings, dead ranges included
+    /// (diagnostics/tests).
+    pub fn arena_capacity(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Arena capacity currently abandoned (relocated or emptied buckets).
+    /// Bounded: compaction keeps `dead ≤ arena_capacity / 2`.
+    pub fn arena_dead(&self) -> usize {
+        self.dead
+    }
+
+    /// Find the table slot holding `key`, skipping tombstones.
+    fn find(&self, key: u64) -> Option<usize> {
+        let mask = self.ctrl.len() - 1;
+        let mut i = splitmix64(key) as usize & mask;
+        loop {
+            match self.ctrl[i] {
+                EMPTY => return None,
+                FULL if self.buckets[i].key == key => return Some(i),
+                _ => {}
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Find the slot for `key`, claiming a fresh one (reusing the first
+    /// tombstone on the probe path) if absent. Grows the table first when
+    /// occupancy (FULL + TOMB) would exceed 7/8, so a probe always
+    /// terminates at an EMPTY slot.
+    fn slot_for_insert(&mut self, key: u64) -> usize {
+        if (self.n_full + self.n_tomb + 1) * 8 > self.ctrl.len() * 7 {
+            self.rehash();
+        }
+        let mask = self.ctrl.len() - 1;
+        let mut i = splitmix64(key) as usize & mask;
+        let mut first_tomb: Option<usize> = None;
+        loop {
+            match self.ctrl[i] {
+                EMPTY => {
+                    let at = match first_tomb {
+                        Some(t) => {
+                            self.n_tomb -= 1;
+                            t
+                        }
+                        None => i,
+                    };
+                    self.ctrl[at] = FULL;
+                    self.n_full += 1;
+                    self.buckets[at] = Bucket {
+                        key,
+                        ..Bucket::default()
+                    };
+                    return at;
+                }
+                FULL if self.buckets[i].key == key => return i,
+                TOMB if first_tomb.is_none() => first_tomb = Some(i),
+                _ => {}
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Rebuild the key table at a capacity sized for the live keys,
+    /// dropping tombstones. Arena and bucket ranges are untouched.
+    fn rehash(&mut self) {
+        let new_len = (self.n_full * 2).max(INITIAL_SLOTS).next_power_of_two();
+        let old_ctrl = std::mem::replace(&mut self.ctrl, vec![EMPTY; new_len]);
+        let old_buckets = std::mem::replace(&mut self.buckets, vec![Bucket::default(); new_len]);
+        self.n_tomb = 0;
+        let mask = new_len - 1;
+        for (c, b) in old_ctrl.into_iter().zip(old_buckets) {
+            if c != FULL {
+                continue;
+            }
+            let mut i = splitmix64(b.key) as usize & mask;
+            while self.ctrl[i] == FULL {
+                i = (i + 1) & mask;
+            }
+            self.ctrl[i] = FULL;
+            self.buckets[i] = b;
+        }
+    }
+
+    /// Rewrite the arena over live postings once more than half of it is
+    /// dead. Bucket capacities shrink to their live lengths, so churn-heavy
+    /// tables converge to the same footprint a fresh bulk build would have.
+    fn maybe_compact(&mut self) {
+        if self.dead * 2 <= self.arena.len() || self.arena.len() < 64 {
+            return;
+        }
+        let mut packed = Vec::with_capacity(self.arena.len() - self.dead);
+        for i in 0..self.ctrl.len() {
+            if self.ctrl[i] != FULL {
+                continue;
+            }
+            let Bucket { off, len, .. } = self.buckets[i];
+            let new_off = packed.len() as u32;
+            packed.extend_from_slice(&self.arena[off as usize..(off + len) as usize]);
+            self.buckets[i].off = new_off;
+            self.buckets[i].cap = len;
+        }
+        self.arena = packed;
+        self.dead = 0;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg64;
+    use std::collections::HashMap;
 
     #[test]
     fn spans_partition_exactly() {
@@ -196,8 +522,35 @@ mod tests {
     }
 
     #[test]
+    fn sampled_positions_partition_all_bits() {
+        for (bits, m) in [(256usize, 8usize), (100, 7), (64, 1), (5, 5), (130, 3)] {
+            let groups = sampled_positions(bits, m, 0xcbe);
+            assert_eq!(groups.len(), m);
+            let mut all: Vec<u32> = groups.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..bits as u32).collect::<Vec<_>>(), "bits={bits} m={m}");
+            // group sizes match the contiguous partition's
+            let spans = substring_spans(bits, m);
+            for (g, &(_, len)) in groups.iter().zip(&spans) {
+                assert_eq!(g.len(), len);
+                assert!(g.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+            }
+            // deterministic in the seed
+            assert_eq!(groups, sampled_positions(bits, m, 0xcbe));
+            // m == 1 sorts the whole permutation back to 0..bits, so only
+            // multi-group partitions can differ across seeds.
+            if m > 1 && bits > m {
+                assert_ne!(
+                    groups,
+                    sampled_positions(bits, m, 0xcbe + 1),
+                    "different seed should permute differently (bits={bits} m={m})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn extract_matches_naive() {
-        use crate::util::rng::Pcg64;
         let mut rng = Pcg64::new(41);
         let words: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
         let bit = |i: usize| words[i / 64] >> (i % 64) & 1;
@@ -215,6 +568,28 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn gather_matches_extract_on_spans_and_naive_on_samples() {
+        let mut rng = Pcg64::new(43);
+        let words: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+        // A contiguous position set must agree with extract_bits.
+        for (start, len) in [(0usize, 16usize), (60, 8), (100, 64), (255, 1)] {
+            let positions: Vec<u32> = (start as u32..(start + len) as u32).collect();
+            assert_eq!(
+                gather_bits(&words, &positions),
+                extract_bits(&words, start, len)
+            );
+        }
+        // Arbitrary sample vs per-bit reads.
+        let positions = [3u32, 64, 65, 130, 200, 255];
+        let key = gather_bits(&words, &positions);
+        for (j, &p) in positions.iter().enumerate() {
+            let p = p as usize;
+            assert_eq!(key >> j & 1, words[p / 64] >> (p % 64) & 1);
+        }
+        assert_eq!(key >> positions.len(), 0);
     }
 
     #[test]
@@ -261,5 +636,121 @@ mod tests {
         assert!(t.remove(7, 1));
         assert!(t.bucket(7).is_none(), "empty buckets are dropped");
         assert_eq!(t.bucket_count(), 1);
+    }
+
+    #[test]
+    fn bulk_build_matches_incremental_inserts() {
+        let mut rng = Pcg64::new(47);
+        for (n, bits) in [(0usize, 64usize), (1, 32), (300, 96), (500, 17)] {
+            let codes = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+            let len = bits.min(16);
+            let bulk = SubstringTable::build(KeySource::Span { start: 0, len }, &codes);
+            let mut inc = SubstringTable::new(0, len);
+            for row in 0..n {
+                inc.insert(inc.key_of(codes.code(row)), row as u32);
+            }
+            assert_eq!(bulk.bucket_count(), inc.bucket_count(), "n={n} bits={bits}");
+            assert_eq!(bulk.arena_capacity(), n, "bulk build sizes the arena exactly");
+            assert_eq!(bulk.arena_dead(), 0);
+            for key in 0..1u64 << len.min(10) {
+                let a = bulk.bucket(key).map(|s| {
+                    let mut v = s.to_vec();
+                    v.sort_unstable();
+                    v
+                });
+                let b = inc.bucket(key).map(|s| {
+                    let mut v = s.to_vec();
+                    v.sort_unstable();
+                    v
+                });
+                assert_eq!(a, b, "key={key}");
+            }
+        }
+    }
+
+    /// Mirror model: drive the flat table and a plain HashMap-of-vecs with
+    /// the same random churn; bucket contents must stay identical and the
+    /// arena's dead capacity must stay within the compaction bound.
+    #[test]
+    fn churn_matches_hashmap_mirror_and_compacts() {
+        let mut rng = Pcg64::new(53);
+        let mut t = SubstringTable::new(0, 8);
+        let mut mirror: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut next_slot = 0u32;
+        for step in 0..4000 {
+            let key = rng.below(32); // dense keyspace → deep buckets
+            let remove = rng.below(100) < 45 && !mirror.is_empty();
+            if remove {
+                // remove a random live (key, slot)
+                let keys: Vec<u64> = mirror.keys().copied().collect();
+                let k = keys[rng.below(keys.len() as u64) as usize];
+                let bucket = mirror.get_mut(&k).unwrap();
+                let victim = bucket[rng.below(bucket.len() as u64) as usize];
+                bucket.retain(|&s| s != victim);
+                if bucket.is_empty() {
+                    mirror.remove(&k);
+                }
+                assert!(t.remove(k, victim), "step={step}");
+                assert!(!t.remove(k, victim), "double remove");
+            } else {
+                mirror.entry(key).or_default().push(next_slot);
+                t.insert(key, next_slot);
+                next_slot += 1;
+            }
+            assert!(
+                t.arena_dead() * 2 <= t.arena_capacity() || t.arena_capacity() < 64,
+                "step={step}: dead={} cap={}",
+                t.arena_dead(),
+                t.arena_capacity()
+            );
+        }
+        assert_eq!(t.bucket_count(), mirror.len());
+        for key in 0..256u64 {
+            let mut a = t.bucket(key).map(<[u32]>::to_vec).unwrap_or_default();
+            let mut b = mirror.get(&key).cloned().unwrap_or_default();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "key={key}");
+        }
+    }
+
+    #[test]
+    fn emptying_the_table_reclaims_the_arena() {
+        let mut t = SubstringTable::new(0, 12);
+        for slot in 0..2000u32 {
+            t.insert(u64::from(slot % 37), slot);
+        }
+        let peak = t.arena_capacity();
+        assert!(peak >= 2000);
+        for slot in 0..2000u32 {
+            assert!(t.remove(u64::from(slot % 37), slot));
+        }
+        assert_eq!(t.bucket_count(), 0);
+        assert!(
+            t.arena_capacity() < peak / 2,
+            "arena must compact once everything is dead: {} vs peak {peak}",
+            t.arena_capacity()
+        );
+    }
+
+    #[test]
+    fn sampled_table_buckets_by_gathered_key() {
+        let mut rng = Pcg64::new(59);
+        let bits = 96;
+        let n = 200;
+        let codes = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+        let positions: Box<[u32]> = vec![1u32, 17, 40, 64, 65, 90].into_boxed_slice();
+        let t = SubstringTable::build(
+            KeySource::Sampled {
+                positions: positions.clone(),
+            },
+            &codes,
+        );
+        assert_eq!(t.key_bits(), 6);
+        for row in 0..n {
+            let key = gather_bits(codes.code(row), &positions);
+            let bucket = t.bucket(key).expect("own key must be bucketed");
+            assert!(bucket.contains(&(row as u32)), "row={row}");
+        }
     }
 }

@@ -66,7 +66,8 @@ fn print_usage() {
          \x20 artifacts  list compiled artifacts\n\
          \n\
          common flags: --artifacts DIR --d N --bits K --seed S\n\
-         \x20             --index SPEC (auto | linear | mih[:m] | sharded:<shards>[:m])\n\
+         \x20             --index SPEC (auto | linear | mih[:m] | mih-sampled[:m] |\n\
+         \x20                           sharded:<shards>[:m])\n\
          scale flags:  --full (paper-scale dims; slow), default is CI scale"
     );
 }

@@ -1,7 +1,8 @@
-//! Property tests: the MIH subsystem is *exact* — [`MihIndex`] and
-//! [`ShardedIndex`] return hit-for-hit the same results as the linear-scan
-//! [`BinaryIndex`] on random corpora, including distance ties, k > n,
-//! empty corpora, and after interleaved insert/remove churn.
+//! Property tests: the MIH subsystem is *exact* — [`MihIndex`] (both
+//! substring schemes) and [`ShardedIndex`] return hit-for-hit the same
+//! results as the linear-scan [`BinaryIndex`] on random corpora, including
+//! distance ties, k > n, empty corpora, and after interleaved
+//! insert/remove churn against the arena-backed bucket store.
 
 use cbe::bits::{BinaryIndex, BitCode};
 use cbe::index::{MihIndex, ShardedIndex};
@@ -36,18 +37,46 @@ fn prop_mih_matches_linear_scan() {
 }
 
 #[test]
+fn prop_mih_sampled_matches_linear_scan() {
+    forall("mih-sampled == BinaryIndex on random corpora", 60, |g| {
+        let bits = g.usize_in(2, 200);
+        let n = g.usize_in(0, 250);
+        let db = random_codes(g, n, bits);
+        let m = if g.bool() {
+            None
+        } else {
+            Some(g.usize_in(1, bits.min(8)))
+        };
+        let mih = MihIndex::build_sampled(db.clone(), m);
+        let linear = BinaryIndex::new(db);
+        let k = g.usize_in(0, n + 5);
+        let q = random_codes(g, 1, bits);
+        assert_eq!(
+            mih.search(q.code(0), k),
+            linear.search(q.code(0), k),
+            "bits={bits} n={n} m={m:?} k={k}"
+        );
+    });
+}
+
+#[test]
 fn prop_mih_matches_linear_under_heavy_ties() {
     // Tiny codes over larger corpora force many duplicate codes and
-    // distance ties; selection must break ties identically (by id).
+    // distance ties; selection must break ties identically (by id) in
+    // both substring schemes.
     forall("MihIndex tie-breaking matches linear scan", 60, |g| {
         let bits = g.usize_in(2, 10);
         let n = g.usize_in(20, 300);
         let db = random_codes(g, n, bits);
-        let mih = MihIndex::build(db.clone(), Some(g.usize_in(1, bits.min(3))));
+        let m = Some(g.usize_in(1, bits.min(3)));
+        let mih = MihIndex::build(db.clone(), m);
+        let sampled = MihIndex::build_sampled(db.clone(), m);
         let linear = BinaryIndex::new(db);
         let k = g.usize_in(1, 25);
         let q = random_codes(g, 1, bits);
-        assert_eq!(mih.search(q.code(0), k), linear.search(q.code(0), k));
+        let want = linear.search(q.code(0), k);
+        assert_eq!(mih.search(q.code(0), k), want, "contiguous, m={m:?}");
+        assert_eq!(sampled.search(q.code(0), k), want, "sampled, m={m:?}");
     });
 }
 
@@ -108,6 +137,7 @@ fn prop_incremental_churn_stays_exact() {
         let shards = g.usize_in(1, 4);
 
         let mut mih = MihIndex::build(db.clone(), None);
+        let mut sampled = MihIndex::build_sampled(db.clone(), None);
         let mut sharded = ShardedIndex::build(db.clone(), shards, None);
         let mut mirror = Mirror {
             bits,
@@ -125,11 +155,13 @@ fn prop_incremental_churn_stays_exact() {
                 let id = mirror.rows[victim].0;
                 mirror.rows.remove(victim);
                 assert!(mih.remove(id));
+                assert!(sampled.remove(id));
                 assert!(sharded.remove(id));
                 assert!(!mih.remove(id), "double remove must report absence");
             } else {
                 let code = random_codes(g, 1, bits);
                 mih.insert(next_id, code.code(0));
+                sampled.insert(next_id, code.code(0));
                 sharded.insert(next_id, code.code(0));
                 mirror.rows.push((next_id, code.code(0).to_vec()));
                 next_id += 1;
@@ -138,15 +170,77 @@ fn prop_incremental_churn_stays_exact() {
 
         let linear = mirror.to_linear();
         assert_eq!(mih.len(), linear.len());
+        assert_eq!(sampled.len(), linear.len());
         assert_eq!(sharded.len(), linear.len());
         let k = g.usize_in(0, mirror.rows.len() + 3);
         let q = random_codes(g, 1, bits);
         let want = linear.search(q.code(0), k);
         assert_eq!(mih.search(q.code(0), k), want, "MihIndex after churn");
         assert_eq!(
+            sampled.search(q.code(0), k),
+            want,
+            "sampled MihIndex after churn"
+        );
+        assert_eq!(
             sharded.search(q.code(0), k),
             want,
             "ShardedIndex after churn"
+        );
+    });
+}
+
+#[test]
+fn prop_arena_survives_heavy_bucket_churn() {
+    // Wave churn aimed at the flat bucket store: repeatedly insert a wave
+    // of codes and remove the oldest wave, keeping the live count steady
+    // so MihIndex's own storage compaction rarely fires and the churn
+    // lands on the per-table postings arena (bucket relocation, tombstoned
+    // keys, arena compaction). Tiny keyspaces (small bits, small m) force
+    // deep buckets that relocate many times.
+    forall("postings arena stays exact under wave churn", 25, |g| {
+        let bits = g.usize_in(2, 24);
+        let m = Some(g.usize_in(1, bits.min(3)));
+        let n0 = g.usize_in(30, 60);
+        let db = random_codes(g, n0, bits);
+        let mut mih = MihIndex::build(db.clone(), m);
+        let mut sampled = MihIndex::build_sampled(db.clone(), m);
+        let mut mirror = Mirror {
+            bits,
+            rows: (0..n0)
+                .map(|i| (i as u32, db.code(i).to_vec()))
+                .collect(),
+        };
+        let mut next_id = n0 as u32;
+        let waves = g.usize_in(3, 8);
+        let wave = g.usize_in(10, 30);
+        for _ in 0..waves {
+            for _ in 0..wave {
+                let code = random_codes(g, 1, bits);
+                mih.insert(next_id, code.code(0));
+                sampled.insert(next_id, code.code(0));
+                mirror.rows.push((next_id, code.code(0).to_vec()));
+                next_id += 1;
+            }
+            for _ in 0..wave {
+                let id = mirror.rows.remove(0).0;
+                assert!(mih.remove(id));
+                assert!(sampled.remove(id));
+            }
+            // Spot-check mid-churn, not only at the end.
+            let linear = mirror.to_linear();
+            let q = random_codes(g, 1, bits);
+            let k = g.usize_in(1, 12);
+            let want = linear.search(q.code(0), k);
+            assert_eq!(mih.search(q.code(0), k), want, "contiguous mid-churn");
+            assert_eq!(sampled.search(q.code(0), k), want, "sampled mid-churn");
+        }
+        // Physical code storage must not have grown without bound either:
+        // MihIndex compaction keeps tombstones under half of storage.
+        assert!(
+            mih.storage_slots() <= 2 * mih.len().max(64),
+            "storage={} live={}",
+            mih.storage_slots(),
+            mih.len()
         );
     });
 }
