@@ -1,10 +1,13 @@
 //! End-to-end serving driver (the mandated e2e validation): train CBE-opt,
-//! start the EmbeddingService (dynamic batching over the compiled PJRT
-//! artifact), index a corpus, serve batched encode+search traffic, and
-//! report latency/throughput + recall. Results are recorded in
+//! start the EmbeddingService (dynamic batching over the parallel native
+//! batch-encode engine), index a corpus via the bulk `encode_corpus`
+//! path, serve batched encode+search traffic, and report
+//! latency/throughput + recall. Results are recorded in
 //! EXPERIMENTS.md §E2E.
 //!
-//! Run: `make artifacts && cargo run --release --example embedding_server`
+//! Run: `cargo run --release --example embedding_server`
+//! (a compiled-artifact manifest under `artifacts/` is optional — when
+//! present its routed batch dimension sizes the dynamic batches).
 
 use cbe::bits::BitCode;
 use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
@@ -24,9 +27,6 @@ fn main() -> anyhow::Result<()> {
     let n_db = 4000;
     let n_queries = 200;
     let artifacts = PathBuf::from("artifacts");
-    if !artifacts.join("manifest.json").exists() {
-        anyhow::bail!("run `make artifacts` first");
-    }
     // Retrieval backend is config:
     //   CBE_INDEX=linear|mih[:m]|mih-sampled[:m]|sharded:<s>[:m]
     // (default auto → routed by corpus size; mih-sampled decorrelates
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     let enc = CbeOpt::train(&train, tf, 13, Planner::new(), None);
     println!("CBE-opt trained in {:.1}s", t0.elapsed().as_secs_f64());
 
-    // Start the service over the compiled artifact.
+    // Start the service over the shared native projection.
     let svc = EmbeddingService::start(
         &artifacts,
         ServiceConfig {
@@ -70,13 +70,14 @@ fn main() -> anyhow::Result<()> {
         enc.proj.signs.clone(),
     )?;
 
-    // Index the corpus through the serving path (batched).
+    // Index the corpus through the bulk path (borrowed rows, parallel
+    // batch encode, no per-request round-trip).
     let rows: Vec<Vec<f32>> = (0..db_rows.rows).map(|i| db_rows.row(i).to_vec()).collect();
     let t0 = Instant::now();
     let index = svc.build_index(&rows)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "indexed {} vectors in {:.2}s ({:.0} vec/s through PJRT path, backend {})",
+        "indexed {} vectors in {:.2}s ({:.0} vec/s through encode_corpus, backend {})",
         index.len(),
         dt,
         index.len() as f64 / dt,

@@ -1,7 +1,8 @@
 //! Bench: serving-path throughput of the coordinator, in two parts.
 //!
-//! 1. Batched PJRT encode latency/QPS (needs `make artifacts`; skipped
-//!    otherwise) — the L3 perf target of DESIGN.md §Perf.
+//! 1. Batched serving-path encode latency/QPS through the native
+//!    parallel batch engine — the L3 perf target of DESIGN.md §Perf
+//!    (per-projection encode cost lives in `encode_throughput`).
 //! 2. Retrieval QPS: linear scan vs MIH (contiguous and bit-sampled
 //!    substrings) vs sharded MIH over packed codes at n ∈ {10⁴, 10⁵, 10⁶},
 //!    256-bit — the `results` array of `BENCH_index.json` (the
@@ -271,12 +272,10 @@ fn bench_bucket_store(max_n: usize) -> Vec<Json> {
     out
 }
 
-fn bench_pjrt_encode() {
+fn bench_service_encode() {
+    // Native parallel batch encode: no compiled artifacts required (a
+    // manifest, when present, only sizes the batches).
     let dir = PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("skipping coordinator encode bench: run `make artifacts` first");
-        return;
-    }
     let d = 512;
     let mut rng = Pcg64::new(1);
     for max_batch in [1usize, 8, 32] {
@@ -315,5 +314,5 @@ fn bench_pjrt_encode() {
 
 fn main() {
     bench_index_backends();
-    bench_pjrt_encode();
+    bench_service_encode();
 }

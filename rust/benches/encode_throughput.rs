@@ -1,0 +1,125 @@
+//! Bench: the parallel batch-encode engine vs the serial per-vector
+//! path — encode QPS at d ∈ {256, 1024, 25600} (two radix-2 sizes plus
+//! the paper's non-power-of-two Bluestein dimension), 1 thread vs all
+//! cores. Emits `BENCH_encode.json`.
+//!
+//! The serial arm is the honest hot-loop baseline: `encode_into` with a
+//! reused [`EncodeScratch`] + `set_row_from_signs` (no per-call
+//! allocation), not the allocating convenience wrappers. The batch arm
+//! is `encode_batch_into` (scoped-thread fan-out, direct sign→bit
+//! packing). Both arms must produce identical packed codes or the bench
+//! aborts — the speedup is only meaningful if the outputs agree.
+//!
+//! Env knobs, mirroring `coordinator_throughput`:
+//! * `CBE_BENCH_MAX_D=1024` caps the dim sweep (CI-sized machines);
+//! * `CBE_BENCH_ENCODE_ROWS=64` overrides rows per measured round;
+//! * `CBE_BENCH_ENFORCE=1` turns the batch-slower-than-serial warning
+//!   into a hard failure (left off in CI: shared runners are too noisy
+//!   for perf asserts).
+
+use cbe::bits::BitCode;
+use cbe::fft::Planner;
+use cbe::projections::{CirculantProjection, EncodeScratch, ScratchPool};
+use cbe::util::json::Json;
+use cbe::util::rng::Pcg64;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let k = 256usize;
+    let max_d = env_usize("CBE_BENCH_MAX_D", 25_600);
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    println!("== encode engine: serial per-vector vs batch-parallel ({cores} cores) ==");
+
+    let mut results: Vec<Json> = Vec::new();
+    for d in [256usize, 1024, 25_600] {
+        if d > max_d {
+            println!("d={d}: skipped (CBE_BENCH_MAX_D={max_d})");
+            continue;
+        }
+        let default_rows = if d >= 25_600 { 64 } else { 1024 };
+        let n = env_usize("CBE_BENCH_ENCODE_ROWS", default_rows);
+        let k_eff = k.min(d);
+        let mut rng = Pcg64::new(0xe2c + d as u64);
+        let proj = CirculantProjection::random(d, &mut rng, Planner::new());
+        let flat: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+        let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+
+        // Serial arm: one thread, reused scratch, ±1 signs intermediate
+        // then pack — the per-vector serving path before this engine.
+        let mut serial_codes = BitCode::new(n, k_eff);
+        let mut scratch = EncodeScratch::new();
+        let mut signs = vec![0f32; k_eff];
+        proj.encode_into(rows[0], &mut signs, &mut scratch); // warm plans
+        let t0 = Instant::now();
+        for (i, row) in rows.iter().enumerate() {
+            proj.encode_into(row, &mut signs, &mut scratch);
+            serial_codes.set_row_from_signs(i, &signs);
+        }
+        let dt_serial = t0.elapsed().as_secs_f64();
+        let serial_qps = n as f64 / dt_serial;
+
+        // Batch arm: all cores, warm round first (pool + plan caches).
+        let mut batch_codes = BitCode::new(n, k_eff);
+        let mut pool = ScratchPool::new();
+        proj.encode_batch_into(&rows, k_eff, &mut batch_codes, &mut pool);
+        let t0 = Instant::now();
+        proj.encode_batch_into(&rows, k_eff, &mut batch_codes, &mut pool);
+        let dt_batch = t0.elapsed().as_secs_f64();
+        let batch_qps = n as f64 / dt_batch;
+
+        assert_eq!(
+            batch_codes,
+            serial_codes,
+            "batch path diverged from per-vector at d={d}"
+        );
+
+        let speedup = batch_qps / serial_qps;
+        println!(
+            "d={d:<6} k={k_eff:<4} rows={n:<5} serial={serial_qps:>9.0} qps  \
+             batch={batch_qps:>9.0} qps  speedup={speedup:>5.2}x"
+        );
+        if speedup < 1.0 && cores >= 2 {
+            println!(
+                "WARNING: batch path {:.1}% slower than serial at d={d}",
+                (1.0 - speedup) * 100.0
+            );
+            let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
+            assert!(
+                !enforce,
+                "batch encode regressed vs serial (CBE_BENCH_ENFORCE=1)"
+            );
+        }
+
+        for (mode, threads, qps, batch_s) in [
+            ("serial", 1usize, serial_qps, dt_serial),
+            ("batch", cores, batch_qps, dt_batch),
+        ] {
+            results.push(Json::obj(vec![
+                ("d", Json::num(d as f64)),
+                ("k", Json::num(k_eff as f64)),
+                ("rows", Json::num(n as f64)),
+                ("mode", Json::str(mode)),
+                ("threads", Json::num(threads as f64)),
+                ("batch_s", Json::num(batch_s)),
+                ("qps", Json::num(qps)),
+                ("speedup_vs_serial", Json::num(qps / serial_qps)),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("cores", Json::num(cores as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_encode.json", format!("{doc}\n")).expect("write BENCH_encode.json");
+    println!("wrote BENCH_encode.json");
+}

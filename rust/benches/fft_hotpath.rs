@@ -1,22 +1,27 @@
 //! Perf-pass microbench: the circulant encode hot path (L3's dominant
 //! cost). Reports ms/encode for power-of-two (radix-2) and paper-native
-//! (25600, Bluestein) sizes. Used for the EXPERIMENTS.md §Perf log.
+//! (25600, Bluestein) sizes, through the allocation-free scratch API.
+//! Used for the EXPERIMENTS.md §Perf log. Batch-vs-serial throughput
+//! lives in `encode_throughput`.
 
 use cbe::bench::Bench;
 use cbe::fft::Planner;
-use cbe::projections::CirculantProjection;
+use cbe::projections::{CirculantProjection, EncodeScratch};
 use cbe::util::rng::Pcg64;
 
 fn main() {
     let planner = Planner::new();
     let mut rng = Pcg64::new(1);
     let mut bench = Bench::new(3, 15);
+    let mut scratch = EncodeScratch::new();
     for d in [4096usize, 65536, 25600] {
         let proj = CirculantProjection::random(d, &mut rng, planner.clone());
         let x = rng.normal_vec(d);
-        let _ = proj.project(&x); // warm plan cache
+        let mut out = vec![0f32; 256];
+        proj.encode_into(&x, &mut out, &mut scratch); // warm plan cache
         bench.run(&format!("encode d={d}"), || {
-            std::hint::black_box(proj.encode(std::hint::black_box(&x), 256));
+            proj.encode_into(std::hint::black_box(&x), &mut out, &mut scratch);
+            std::hint::black_box(&out);
         });
     }
     println!("{}", bench.report("fft hot path"));

@@ -20,6 +20,15 @@ impl BitCode {
         }
     }
 
+    /// Re-shape to `n` rows in place (same bit width), reusing the
+    /// allocation where possible; all words are reset to zero. The
+    /// batch-encode loop recycles one `BitCode` across batches with this.
+    pub fn reset(&mut self, n: usize) {
+        self.n = n;
+        self.data.clear();
+        self.data.resize(n * self.words_per_code, 0);
+    }
+
     /// Pack rows of ±1 (or arbitrary-sign f32) values; v ≥ 0 → bit set.
     pub fn from_signs(rows: &[f32], n: usize, bits: usize) -> BitCode {
         assert_eq!(rows.len(), n * bits);
@@ -93,6 +102,17 @@ mod tests {
         let bc = BitCode::from_signs(&[0.0, -0.0, 1.0, -1.0], 1, 4);
         // IEEE -0.0 >= 0.0 is true, so both zeros set the bit.
         assert_eq!(bc.to_signs(0), vec![1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn reset_reshapes_and_zeroes() {
+        let mut bc = BitCode::from_signs(&vec![1.0; 3 * 65], 3, 65);
+        bc.reset(2);
+        assert_eq!(bc.n, 2);
+        assert_eq!(bc.bits, 65);
+        assert_eq!(bc.data, vec![0u64; 2 * bc.words_per_code]);
+        bc.reset(4);
+        assert_eq!(bc.data.len(), 4 * bc.words_per_code);
     }
 
     #[test]

@@ -78,6 +78,14 @@ impl Batcher {
         Some(batch)
     }
 
+    /// Remove and return every pending request (oldest first), ignoring
+    /// deadline and batch-size policy — the explicit flush used on
+    /// shutdown/disconnect instead of faking an expired deadline.
+    pub fn drain_all(&mut self) -> Vec<EncodeRequest> {
+        self.oldest = None;
+        std::mem::take(&mut self.pending)
+    }
+
     /// Time until the current oldest request expires (for sleep pacing).
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
         self.oldest.map(|t| {
@@ -123,6 +131,22 @@ mod tests {
         let later = Instant::now() + Duration::from_millis(5);
         assert!(b.ready(later));
         assert_eq!(b.pop_ready(later).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn drain_all_ignores_policy() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(60),
+        });
+        for _ in 0..5 {
+            b.push(req(4));
+        }
+        // Not ready by size-or-deadline policy beyond one full batch, but
+        // drain_all flushes everything at once.
+        assert_eq!(b.drain_all().len(), 5);
+        assert!(b.is_empty());
+        assert!(b.time_to_deadline(Instant::now()).is_none());
     }
 
     #[test]

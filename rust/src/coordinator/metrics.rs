@@ -20,8 +20,10 @@ impl Metrics {
 
     pub fn record_batch(&self, size: usize, capacity: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+        // A shutdown flush may exceed the nominal capacity; clamp rather
+        // than underflow.
         self.padded_slots
-            .fetch_add((capacity - size) as u64, Ordering::Relaxed);
+            .fetch_add(capacity.saturating_sub(size) as u64, Ordering::Relaxed);
     }
 
     pub fn request_count(&self) -> u64 {

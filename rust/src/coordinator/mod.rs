@@ -3,15 +3,21 @@
 //! Architecture (vLLM-router-style, scaled to this paper's workload):
 //!
 //! * [`request`] — typed encode/search requests with completion handles.
-//! * [`batcher`] — dynamic batching: requests accumulate until the
-//!   artifact's batch size is full or a deadline expires, then execute as
-//!   one PJRT call (padding the tail).
+//! * [`batcher`] — dynamic batching: requests accumulate until the batch
+//!   size is full or a deadline expires, then encode as one parallel
+//!   batch (`Batcher::drain_all` is the explicit shutdown flush).
 //! * [`router`] — picks the artifact for a request's (kind, d), and the
 //!   retrieval backend for a corpus size (`Router::pick_index`, the
 //!   resolution behind `IndexBackend::Auto`).
 //! * [`metrics`] — latency histograms + throughput counters.
-//! * [`service`] — [`EmbeddingService`]: the public facade wiring encoder
-//!   state, batcher, PJRT engine and the binary retrieval index together.
+//! * [`service`] — [`EmbeddingService`]: the public facade wiring the
+//!   shared `Send + Sync` circulant projection, batcher and the binary
+//!   retrieval index together. Batches are encoded by the parallel
+//!   batch-encode engine
+//!   ([`crate::projections::CirculantProjection::encode_batch_into`]:
+//!   scoped-thread fan-out, signs packed directly into `BitCode` words);
+//!   bulk corpus encoding takes [`EmbeddingService::encode_corpus`],
+//!   which borrows rows and skips the request channel entirely.
 //!
 //! Retrieval is configuration, not code: [`ServiceConfig::index`] takes
 //! any [`crate::index::IndexBackend`] spec (`auto | linear | mih[:m] |

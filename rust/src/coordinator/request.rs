@@ -22,7 +22,7 @@ pub struct EncodeResponse {
     pub signs: Vec<f32>,
     /// Milliseconds spent queued before the batch launched.
     pub queue_ms: f64,
-    /// Milliseconds of PJRT execution (shared across the batch).
+    /// Milliseconds of batch encode execution (shared across the batch).
     pub exec_ms: f64,
 }
 

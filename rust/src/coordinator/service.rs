@@ -1,9 +1,19 @@
 //! [`EmbeddingService`]: the public serving facade.
 //!
-//! Owns the PJRT engine, the circulant model parameters (r, D), the
-//! dynamic batcher and the retrieval index. A background worker thread
-//! runs the event loop: drain requests → form batch → one PJRT execute →
-//! scatter replies. The request path is pure Rust + compiled XLA.
+//! Owns the circulant model (one shared `Send + Sync`
+//! [`CirculantProjection`]), the dynamic batcher and the retrieval index.
+//! A background worker thread runs the event loop: drain requests → form
+//! batch → one parallel batch-encode (scoped-thread fan-out across cores,
+//! signs packed straight into `BitCode` words) → scatter replies. Bulk
+//! indexing bypasses the request channel entirely via
+//! [`EmbeddingService::encode_corpus`].
+//!
+//! The compiled-artifact manifest is advisory: when `artifacts_dir` holds
+//! one, the routed artifact's batch dimension sizes the dynamic batches
+//! (keeping native batches aligned with the shapes the AOT pipeline was
+//! tuned for); without it the service runs fully native on
+//! `cfg.batcher.max_batch`. The PJRT [`crate::runtime::Engine`] remains
+//! the execution path for the `runtime_pjrt` integration suite.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
@@ -11,8 +21,10 @@ use super::request::{EncodeRequest, EncodeResponse};
 use super::router::Router;
 use crate::bits::index::Hit;
 use crate::bits::BitCode;
+use crate::fft::Planner;
 use crate::index::{build_index, AnyIndex, IndexAny, IndexBackend};
-use crate::runtime::Engine;
+use crate::projections::{CirculantProjection, ScratchPool};
+use crate::runtime::Manifest;
 use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -23,7 +35,7 @@ use std::time::{Duration, Instant};
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    /// Feature dimension (must match a compiled artifact).
+    /// Feature dimension.
     pub d: usize,
     /// Bits returned per code (k ≤ d).
     pub bits: usize,
@@ -40,19 +52,22 @@ pub struct ServiceConfig {
 
 /// The serving facade. Construct with [`EmbeddingService::start`], submit
 /// with [`EmbeddingService::encode`] / [`EmbeddingService::encode_async`],
-/// stop by dropping.
+/// bulk-index with [`EmbeddingService::build_index`], stop by dropping.
 pub struct EmbeddingService {
     tx: mpsc::Sender<EncodeRequest>,
     pub metrics: Arc<Metrics>,
     cfg: ServiceConfig,
+    /// The circulant model, shared with the worker thread (and with any
+    /// caller that wants zero-copy bulk encoding).
+    proj: Arc<CirculantProjection>,
     stop: Arc<AtomicBool>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl EmbeddingService {
-    /// Start the service: load artifacts, spawn the batching event loop.
-    /// `r` and `signs` are the circulant model parameters (e.g. from
-    /// CBE-opt training or random for CBE-rand).
+    /// Start the service: build the shared projection, spawn the batching
+    /// event loop. `r` and `signs` are the circulant model parameters
+    /// (e.g. from CBE-opt training or random for CBE-rand).
     pub fn start(
         artifacts_dir: &Path,
         cfg: ServiceConfig,
@@ -63,53 +78,45 @@ impl EmbeddingService {
         assert_eq!(signs.len(), cfg.d);
         assert!(cfg.bits <= cfg.d);
 
+        let proj = Arc::new(CirculantProjection::new(r, signs, Planner::new()));
+
+        // Adopt the routed artifact's batch dimension when a manifest is
+        // present; otherwise the configured max_batch governs.
+        let artifact_batch = Manifest::load(artifacts_dir)
+            .ok()
+            .and_then(|m| {
+                Router::from_manifest(&m)
+                    .route("cbe_encode", cfg.d)
+                    .map(|route| route.batch)
+                    .ok()
+            })
+            .unwrap_or(cfg.batcher.max_batch);
+
         let (tx, rx) = mpsc::channel::<EncodeRequest>();
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
-
-        // The PJRT client is not Send (Rc internals), so the engine is
-        // constructed ON the worker thread; startup errors come back over
-        // a one-shot channel.
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
         let m2 = Arc::clone(&metrics);
         let stop2 = Arc::clone(&stop);
         let cfg2 = cfg.clone();
-        let dir = artifacts_dir.to_path_buf();
+        let proj2 = Arc::clone(&proj);
         let worker = std::thread::spawn(move || {
-            let setup = (|| -> Result<(Engine, String, usize)> {
-                let mut engine = Engine::new(&dir)?;
-                let router = Router::from_manifest(engine.manifest());
-                let route = router.route("cbe_encode", cfg2.d)?.clone();
-                engine.load(&route.artifact)?;
-                Ok((engine, route.artifact, route.batch))
-            })();
-            match setup {
-                Ok((engine, artifact, batch)) => {
-                    let _ = ready_tx.send(Ok(batch));
-                    event_loop(engine, artifact, batch, cfg2, r, signs, rx, m2, stop2);
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                }
-            }
+            event_loop(artifact_batch, cfg2, proj2, rx, m2, stop2);
         });
-        // Propagate startup failure.
-        match ready_rx.recv() {
-            Ok(Ok(_batch)) => {}
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                return Err(e);
-            }
-            Err(_) => return Err(anyhow!("service worker died during startup")),
-        }
 
         Ok(EmbeddingService {
             tx,
             metrics,
             cfg,
+            proj,
             stop,
             worker: Some(worker),
         })
+    }
+
+    /// The shared circulant model (the same instance the worker encodes
+    /// with — `Send + Sync`, clone the `Arc` freely).
+    pub fn projection(&self) -> &Arc<CirculantProjection> {
+        &self.proj
     }
 
     /// Fire-and-forget submit; returns the response receiver.
@@ -132,19 +139,33 @@ impl EmbeddingService {
         rx.recv().map_err(|_| anyhow!("service dropped reply"))
     }
 
-    /// Encode a set of rows into a retrieval index (blocking, batched
-    /// through the same pipeline). The backend comes from
-    /// `ServiceConfig::index`; `Auto` routes by corpus size.
-    pub fn build_index(&self, rows: &[Vec<f32>]) -> Result<IndexAny> {
-        let mut codes = BitCode::new(rows.len(), self.cfg.bits);
-        let handles: Vec<_> = rows
-            .iter()
-            .map(|r| self.encode_async(r.clone()))
-            .collect::<Result<_>>()?;
-        for (i, h) in handles.into_iter().enumerate() {
-            let resp = h.recv().map_err(|_| anyhow!("reply lost"))?;
-            codes.set_row_from_signs(i, &resp.signs);
+    /// Bulk encode: run borrowed rows through the parallel batch engine,
+    /// bypassing the per-request channel round-trip (and any per-row
+    /// copies) entirely. Rows are packed straight into the returned
+    /// [`BitCode`].
+    pub fn encode_corpus(&self, rows: &[Vec<f32>]) -> Result<BitCode> {
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != self.cfg.d {
+                return Err(anyhow!(
+                    "row {i}: feature dim {} != service dim {}",
+                    row.len(),
+                    self.cfg.d
+                ));
+            }
         }
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut codes = BitCode::new(rows.len(), self.cfg.bits);
+        let mut pool = ScratchPool::new();
+        self.proj
+            .encode_batch_into(&refs, self.cfg.bits, &mut codes, &mut pool);
+        Ok(codes)
+    }
+
+    /// Encode a corpus into a retrieval index via
+    /// [`EmbeddingService::encode_corpus`]. The backend comes from
+    /// [`ServiceConfig::index`]; `Auto` routes by corpus size.
+    pub fn build_index(&self, rows: &[Vec<f32>]) -> Result<IndexAny> {
+        let codes = self.encode_corpus(rows)?;
         let backend = match &self.cfg.index {
             IndexBackend::Auto => Router::pick_index(rows.len(), self.cfg.bits),
             explicit => explicit.clone(),
@@ -171,24 +192,59 @@ impl Drop for EmbeddingService {
     }
 }
 
-/// The batching event loop (runs on the worker thread).
-#[allow(clippy::too_many_arguments)]
+/// Encode one formed batch through the shared projection (parallel
+/// fan-out, signs packed directly into the reused `codes` buffer) and
+/// scatter the replies.
+fn run_batch(
+    proj: &CirculantProjection,
+    bits: usize,
+    artifact_batch: usize,
+    batch: Vec<EncodeRequest>,
+    codes: &mut BitCode,
+    pool: &mut ScratchPool,
+    metrics: &Metrics,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    metrics.record_batch(batch.len(), artifact_batch);
+    let t0 = Instant::now();
+    let rows: Vec<&[f32]> = batch.iter().map(|r| r.features.as_slice()).collect();
+    codes.reset(batch.len());
+    proj.encode_batch_into(&rows, bits, codes, pool);
+    let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+    for (i, req) in batch.iter().enumerate() {
+        let queue_ms = t0.duration_since(req.t_enqueue).as_secs_f64() * 1e3;
+        let mut signs = codes.to_signs(i);
+        signs.truncate(req.bits);
+        let latency_us = (Instant::now().duration_since(req.t_enqueue).as_secs_f64() * 1e6) as u64;
+        metrics.record_request(latency_us);
+        let _ = req.reply.send(EncodeResponse {
+            signs,
+            queue_ms,
+            exec_ms,
+        });
+    }
+}
+
+/// The batching event loop (runs on the worker thread). The projection,
+/// scratch pool and packed-code buffer live for the whole loop — nothing
+/// is allocated per request, and nothing bigger than a `Vec` of row
+/// borrows per batch.
 fn event_loop(
-    mut engine: Engine,
-    artifact: String,
     artifact_batch: usize,
     cfg: ServiceConfig,
-    r: Vec<f32>,
-    signs: Vec<f32>,
+    proj: Arc<CirculantProjection>,
     rx: mpsc::Receiver<EncodeRequest>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) {
-    let d = cfg.d;
     let mut batcher = Batcher::new(BatcherConfig {
         max_batch: artifact_batch,
         ..cfg.batcher.clone()
     });
+    let mut pool = ScratchPool::new();
+    let mut codes = BitCode::new(0, cfg.bits);
     loop {
         // Pull at least one request (with timeout so we can observe stop).
         let wait = batcher
@@ -207,76 +263,49 @@ fn event_loop(
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                if batcher.is_empty() {
-                    return;
-                }
+                // Senders gone: flush the stragglers and exit.
+                let tail = batcher.drain_all();
+                run_batch(
+                    &proj,
+                    cfg.bits,
+                    artifact_batch,
+                    tail,
+                    &mut codes,
+                    &mut pool,
+                    &metrics,
+                );
+                return;
             }
         }
-        if stop.load(Ordering::SeqCst) && batcher.is_empty() {
+        if stop.load(Ordering::SeqCst) {
+            // Graceful shutdown: absorb requests already queued in the
+            // channel so in-flight encode_async callers still get their
+            // replies, then flush everything in one final batch.
+            while let Ok(req) = rx.try_recv() {
+                batcher.push(req);
+            }
+            let tail = batcher.drain_all();
+            run_batch(
+                &proj,
+                cfg.bits,
+                artifact_batch,
+                tail,
+                &mut codes,
+                &mut pool,
+                &metrics,
+            );
             return;
         }
-        let now = Instant::now();
-        // Disconnected-but-pending: force the flush by pretending deadline.
-        let force = stop.load(Ordering::SeqCst);
-        let ready = batcher.ready(now) || (force && !batcher.is_empty());
-        if !ready {
-            continue;
-        }
-        let batch = match batcher.pop_ready(now) {
-            Some(b) => b,
-            None => {
-                // force path: drain all
-                let mut all = Vec::new();
-                while let Some(mut b) = batcher.pop_ready(Instant::now() + Duration::from_secs(3600)) {
-                    all.append(&mut b);
-                }
-                if all.is_empty() {
-                    continue;
-                }
-                all
-            }
-        };
-
-        // Assemble the padded input tensor [artifact_batch, d].
-        let mut x = vec![0f32; artifact_batch * d];
-        for (i, req) in batch.iter().enumerate() {
-            x[i * d..(i + 1) * d].copy_from_slice(&req.features);
-        }
-        metrics.record_batch(batch.len(), artifact_batch);
-
-        let t0 = Instant::now();
-        let result = engine.execute(
-            &artifact,
-            &[
-                (&x, &[artifact_batch, d]),
-                (&r, &[d]),
-                (&signs, &[d]),
-            ],
-        );
-        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        match result {
-            Ok(outs) => {
-                let codes = &outs[0]; // [artifact_batch, d] of ±1
-                for (i, req) in batch.iter().enumerate() {
-                    let queue_ms =
-                        t0.duration_since(req.t_enqueue).as_secs_f64() * 1e3;
-                    let signs_out = codes[i * d..i * d + req.bits].to_vec();
-                    metrics.record_request(
-                        (Instant::now().duration_since(req.t_enqueue).as_secs_f64() * 1e6)
-                            as u64,
-                    );
-                    let _ = req.reply.send(EncodeResponse {
-                        signs: signs_out,
-                        queue_ms,
-                        exec_ms,
-                    });
-                }
-            }
-            Err(e) => {
-                eprintln!("batch execution failed: {e:#}");
-                // Drop replies — senders see a closed channel.
-            }
+        if let Some(batch) = batcher.pop_ready(Instant::now()) {
+            run_batch(
+                &proj,
+                cfg.bits,
+                artifact_batch,
+                batch,
+                &mut codes,
+                &mut pool,
+                &metrics,
+            );
         }
     }
 }

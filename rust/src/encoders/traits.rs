@@ -15,6 +15,12 @@ pub trait BinaryEncoder {
     fn encode_signs(&self, x: &[f32]) -> Vec<f32>;
 
     /// Encode a batch of rows into a packed BitCode.
+    ///
+    /// The default is the serial per-vector reference path
+    /// (`encode_signs` + `set_row_from_signs`); throughput-critical
+    /// encoders (CBE) override it with the parallel batch engine, which
+    /// must stay bit-exactly equal to this default — the equivalence
+    /// property tests in `rust/tests/encode_batch.rs` enforce that.
     fn encode_batch(&self, x: &Mat) -> BitCode {
         let k = self.bits();
         let mut bc = BitCode::new(x.rows, k);

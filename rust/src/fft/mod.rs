@@ -9,7 +9,23 @@
 //! * [`bluestein`] — Bluestein's chirp-z algorithm for arbitrary sizes
 //!   (the paper's datasets are d = 25,600 / 51,200 — *not* powers of two),
 //! * [`real`] — real-input forward/inverse wrappers (half-spectrum),
+//! * [`realpack`] — half-size real-FFT fast path for even lengths,
 //! * [`Planner`] — caches twiddles/chirp tables per size.
+//!
+//! # Threading model
+//!
+//! The substrate is thread-safe by construction (the parallel batch-encode
+//! engine fans one [`Plan`] out across scoped threads):
+//!
+//! * [`Plan`] is **immutable** — twiddle/chirp tables only, `Send + Sync`.
+//!   Bluestein's length-m work buffer is *caller-owned* ([`FftScratch`]),
+//!   passed to [`Plan::transform_with`]; nothing in a plan mutates.
+//! * [`Planner`] is an `Arc<RwLock<…>>`-backed size-keyed cache handing out
+//!   `Arc<Plan>`s. Cloning a planner shares the cache; hot paths resolve
+//!   their `Arc<Plan>` once and never touch the lock again.
+//! * Per-transform mutable state lives exclusively in [`FftScratch`] (and
+//!   the higher-level scratch types built on it), owned by exactly one
+//!   thread at a time.
 
 pub mod complex;
 pub mod radix2;
@@ -19,9 +35,8 @@ pub mod realpack;
 
 pub use complex::C64;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, RwLock};
 
 /// Direction of a transform.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,9 +45,25 @@ pub enum Dir {
     Inverse,
 }
 
+/// Caller-owned work space for [`Plan::transform_with`]. Radix-2 plans
+/// never touch it; Bluestein plans use it as the length-m convolution
+/// buffer. Reuse one per thread to keep the hot path allocation-free —
+/// the buffer grows to the largest size seen and stays there.
+#[derive(Default)]
+pub struct FftScratch {
+    work: Vec<C64>,
+}
+
+impl FftScratch {
+    pub fn new() -> FftScratch {
+        FftScratch::default()
+    }
+}
+
 /// A prepared FFT plan for one size (twiddle tables precomputed; forward
 /// and inverse tables kept separately so the butterfly loop never branches
-/// on direction — perf pass, see EXPERIMENTS.md §Perf).
+/// on direction — perf pass, see EXPERIMENTS.md §Perf). Immutable after
+/// construction, so one plan is freely shared across threads.
 pub struct Plan {
     pub n: usize,
     kind: PlanKind,
@@ -49,7 +80,6 @@ enum PlanKind {
         bfft: Vec<C64>,           // FFT_m of the chirp filter b
         m_twiddles: Vec<C64>,     // radix-2 twiddles for size m
         m_twiddles_inv: Vec<C64>, // conjugated table
-        scratch: RefCell<Vec<C64>>, // reusable length-m work buffer
     },
 }
 
@@ -77,15 +107,16 @@ impl Plan {
                     bfft,
                     m_twiddles: radix2::make_twiddles(m),
                     m_twiddles_inv: radix2::make_twiddles_inv(m),
-                    scratch: RefCell::new(vec![C64::ZERO; m]),
                 },
             }
         }
     }
 
-    /// In-place transform of `buf` (len n). `Inverse` includes the 1/n scale,
-    /// matching numpy's `ifft` convention.
-    pub fn transform(&self, buf: &mut [C64], dir: Dir) {
+    /// In-place transform of `buf` (len n) using caller-owned scratch.
+    /// `Inverse` includes the 1/n scale, matching numpy's `ifft`
+    /// convention. This is the hot-path entry point: with a reused
+    /// [`FftScratch`] it performs no allocation.
+    pub fn transform_with(&self, buf: &mut [C64], dir: Dir, scratch: &mut FftScratch) {
         assert_eq!(buf.len(), self.n);
         match &self.kind {
             PlanKind::Radix2 {
@@ -107,9 +138,8 @@ impl Plan {
                 bfft,
                 m_twiddles,
                 m_twiddles_inv,
-                scratch,
             } => {
-                let mut work = scratch.borrow_mut();
+                scratch.work.resize(*m, C64::ZERO);
                 bluestein::transform_with_scratch(
                     buf,
                     self.n,
@@ -118,18 +148,32 @@ impl Plan {
                     bfft,
                     m_twiddles,
                     m_twiddles_inv,
-                    &mut work,
+                    &mut scratch.work[..*m],
                     dir,
                 );
             }
         }
     }
+
+    /// Convenience wrapper around [`Plan::transform_with`] for callers
+    /// that don't thread a scratch (tests, `Planner::fft`/`ifft`, the
+    /// CBE-opt trainer). Backed by a per-thread scratch so repeated
+    /// Bluestein transforms don't reallocate the length-m buffer; the
+    /// plan itself stays immutable and `Sync`.
+    pub fn transform(&self, buf: &mut [C64], dir: Dir) {
+        use std::cell::RefCell;
+        thread_local! {
+            static SCRATCH: RefCell<FftScratch> = RefCell::new(FftScratch::new());
+        }
+        SCRATCH.with(|s| self.transform_with(buf, dir, &mut s.borrow_mut()));
+    }
 }
 
-/// Size-keyed plan cache. Cloning is cheap (Rc).
+/// Size-keyed plan cache. Cloning is cheap (`Arc`) and shares the cache;
+/// the planner is `Send + Sync`, so one cache serves every thread.
 #[derive(Clone, Default)]
 pub struct Planner {
-    plans: Rc<RefCell<HashMap<usize, Rc<Plan>>>>,
+    plans: Arc<RwLock<HashMap<usize, Arc<Plan>>>>,
 }
 
 impl Planner {
@@ -137,9 +181,15 @@ impl Planner {
         Self::default()
     }
 
-    pub fn plan(&self, n: usize) -> Rc<Plan> {
-        let mut map = self.plans.borrow_mut();
-        map.entry(n).or_insert_with(|| Rc::new(Plan::new(n))).clone()
+    /// Resolve (building on first use) the shared plan for length n. Hot
+    /// paths should call this once and keep the `Arc<Plan>`; the lock is
+    /// only for cache maintenance.
+    pub fn plan(&self, n: usize) -> Arc<Plan> {
+        if let Some(p) = self.plans.read().expect("planner lock poisoned").get(&n) {
+            return Arc::clone(p);
+        }
+        let mut map = self.plans.write().expect("planner lock poisoned");
+        Arc::clone(map.entry(n).or_insert_with(|| Arc::new(Plan::new(n))))
     }
 
     /// Forward FFT of a complex buffer (in place).
@@ -260,6 +310,38 @@ mod tests {
         let planner = Planner::new();
         let p1 = planner.plan(64);
         let p2 = planner.plan(64);
-        assert!(Rc::ptr_eq(&p1, &p2));
+        assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn cloned_planner_shares_cache() {
+        let planner = Planner::new();
+        let p1 = planner.plan(48);
+        let p2 = planner.clone().plan(48);
+        assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn shared_plan_transforms_concurrently() {
+        // One Bluestein plan, many threads, caller-owned scratch each:
+        // results must match the single-threaded transform exactly.
+        let planner = Planner::new();
+        let n = 100;
+        let plan = planner.plan(n);
+        let x = rand_signal(n, 77);
+        let mut want = x.clone();
+        plan.transform(&mut want, Dir::Forward);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    let mut scratch = FftScratch::new();
+                    let mut got = x.clone();
+                    plan.transform_with(&mut got, Dir::Forward, &mut scratch);
+                    for (a, b) in got.iter().zip(&want) {
+                        assert!((*a - *b).abs() == 0.0);
+                    }
+                });
+            }
+        });
     }
 }

@@ -7,13 +7,20 @@
 //! FFT plus O(d) untangling. Perf pass iteration 3 (EXPERIMENTS.md §Perf):
 //! ~1.8× on the dominant cost.
 //!
-//! Conventions: `rfft_half` returns the half-spectrum X[0..=h] (h = d/2,
-//! inclusive of the Nyquist bin; X[0] and X[h] are real). `irfft_half`
+//! Conventions: `rfft` returns the half-spectrum X[0..=h] (h = d/2,
+//! inclusive of the Nyquist bin; X[0] and X[h] are real). `irfft`
 //! inverts it including the 1/d scale.
+//!
+//! [`RealPackPlan`] is immutable (`Send + Sync`, cheap to clone — the
+//! half-size plan is `Arc`-shared); all per-transform state lives in the
+//! caller-owned [`RealPackScratch`], one per thread.
 
-use super::{C64, Planner};
+use super::{C64, Dir, FftScratch, Plan, Planner};
+use std::sync::Arc;
 
-/// Precomputed tables for one even length d.
+/// Precomputed tables for one even length d. Immutable and shareable
+/// across threads; clones share the underlying half-size [`Plan`].
+#[derive(Clone)]
 pub struct RealPackPlan {
     pub d: usize,
     h: usize,
@@ -21,54 +28,75 @@ pub struct RealPackPlan {
     w_fwd: Vec<C64>,
     /// W_d^{-k}, k = 0..h.
     w_inv: Vec<C64>,
-    planner: Planner,
-    scratch: std::cell::RefCell<Vec<C64>>,
+    /// Shared half-size complex plan (resolved once, no planner lock on
+    /// the hot path).
+    half_plan: Arc<Plan>,
+}
+
+/// Caller-owned work space for [`RealPackPlan`]: the packed half-size
+/// complex buffer plus the nested FFT scratch (h itself may be a
+/// Bluestein size, e.g. d = 100 → h = 50).
+#[derive(Default)]
+pub struct RealPackScratch {
+    z: Vec<C64>,
+    fft: FftScratch,
+}
+
+impl RealPackScratch {
+    pub fn new() -> RealPackScratch {
+        RealPackScratch::default()
+    }
 }
 
 impl RealPackPlan {
     /// d must be even (callers fall back to the full-complex path if not).
-    pub fn new(d: usize, planner: Planner) -> RealPackPlan {
+    pub fn new(d: usize, planner: &Planner) -> RealPackPlan {
         assert!(d >= 2 && d % 2 == 0, "RealPackPlan requires even d");
         let h = d / 2;
         let w_fwd: Vec<C64> = (0..=h)
             .map(|k| C64::cis(-2.0 * std::f64::consts::PI * k as f64 / d as f64))
             .collect();
         let w_inv: Vec<C64> = w_fwd.iter().map(|c| c.conj()).collect();
-        // Prime the half-size plan now (not on the first hot call).
-        planner.plan(h);
         RealPackPlan {
             d,
             h,
             w_fwd,
             w_inv,
-            planner,
-            scratch: std::cell::RefCell::new(vec![C64::ZERO; h]),
+            // Resolve the half-size plan now (not on the first hot call).
+            half_plan: planner.plan(h),
         }
     }
 
     /// Forward real FFT: x (len d, real) → half spectrum (len h+1).
     /// `pre_scale` multiplies inputs on the fly (used for the D sign flips).
-    pub fn rfft(&self, x: &[f32], pre_scale: Option<&[f32]>, out: &mut [C64]) {
+    pub fn rfft(
+        &self,
+        x: &[f32],
+        pre_scale: Option<&[f32]>,
+        out: &mut [C64],
+        scratch: &mut RealPackScratch,
+    ) {
         assert_eq!(x.len(), self.d);
         assert_eq!(out.len(), self.h + 1);
         let h = self.h;
-        let mut z = self.scratch.borrow_mut();
+        let RealPackScratch { z, fft } = scratch;
+        z.resize(h, C64::ZERO);
         match pre_scale {
             Some(s) => {
-                for k in 0..h {
-                    z[k] = C64::new(
+                for (k, zk) in z.iter_mut().enumerate() {
+                    *zk = C64::new(
                         (x[2 * k] * s[2 * k]) as f64,
                         (x[2 * k + 1] * s[2 * k + 1]) as f64,
                     );
                 }
             }
             None => {
-                for k in 0..h {
-                    z[k] = C64::new(x[2 * k] as f64, x[2 * k + 1] as f64);
+                for (k, zk) in z.iter_mut().enumerate() {
+                    *zk = C64::new(x[2 * k] as f64, x[2 * k + 1] as f64);
                 }
             }
         }
-        self.planner.fft(&mut z);
+        self.half_plan.transform_with(z, Dir::Forward, fft);
         // Untangle: F_even[k] = (Z[k] + Z*[h-k])/2,
         //           F_odd[k]  = -i (Z[k] - Z*[h-k])/2,
         //           X[k] = F_even[k] + W_d^k F_odd[k].
@@ -86,24 +114,25 @@ impl RealPackPlan {
     }
 
     /// Inverse real FFT: half spectrum (len h+1) → real signal (len d),
-    /// including the 1/d normalization. `emit` receives (index, value).
-    pub fn irfft(&self, spec: &[C64], out: &mut [f32]) {
+    /// including the 1/d normalization.
+    pub fn irfft(&self, spec: &[C64], out: &mut [f32], scratch: &mut RealPackScratch) {
         assert_eq!(spec.len(), self.h + 1);
         assert_eq!(out.len(), self.d);
         let h = self.h;
-        let mut z = self.scratch.borrow_mut();
+        let RealPackScratch { z, fft } = scratch;
+        z.resize(h, C64::ZERO);
         // Retangle: F_even[k] = (X[k] + X*[h-k])/2,
         //           F_odd[k]  = W_d^{-k} (X[k] - X*[h-k])/2,
         //           Z[k] = F_even[k] + i F_odd[k].
-        for k in 0..h {
+        for (k, zk) in z.iter_mut().enumerate() {
             let a = spec[k];
             let b = spec[h - k].conj();
             let fe = (a + b).scale(0.5);
             let fo = (self.w_inv[k] * (a - b)).scale(0.5);
             let ifo = C64::new(-fo.im, fo.re); // multiply by i
-            z[k] = fe + ifo;
+            *zk = fe + ifo;
         }
-        self.planner.ifft(&mut z);
+        self.half_plan.transform_with(z, Dir::Inverse, fft);
         for k in 0..h {
             out[2 * k] = z[k].re as f32;
             out[2 * k + 1] = z[k].im as f32;
@@ -121,11 +150,12 @@ mod tests {
     fn half_spectrum_matches_full_fft() {
         let planner = Planner::new();
         let mut rng = Pcg64::new(31);
+        let mut scratch = RealPackScratch::new();
         for d in [4usize, 16, 30, 64, 100] {
-            let plan = RealPackPlan::new(d, planner.clone());
+            let plan = RealPackPlan::new(d, &planner);
             let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
             let mut half = vec![C64::ZERO; d / 2 + 1];
-            plan.rfft(&x, None, &mut half);
+            plan.rfft(&x, None, &mut half, &mut scratch);
             let full = real::rfft_full(&planner, &x);
             for k in 0..=d / 2 {
                 let err = (half[k] - full[k]).abs();
@@ -138,13 +168,14 @@ mod tests {
     fn roundtrip_real_signal() {
         let planner = Planner::new();
         let mut rng = Pcg64::new(32);
+        let mut scratch = RealPackScratch::new();
         for d in [8usize, 20, 64, 256] {
-            let plan = RealPackPlan::new(d, planner.clone());
+            let plan = RealPackPlan::new(d, &planner);
             let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
             let mut half = vec![C64::ZERO; d / 2 + 1];
-            plan.rfft(&x, None, &mut half);
+            plan.rfft(&x, None, &mut half, &mut scratch);
             let mut back = vec![0f32; d];
-            plan.irfft(&half, &mut back);
+            plan.irfft(&half, &mut back, &mut scratch);
             for (a, b) in back.iter().zip(&x) {
                 assert!((a - b).abs() < 1e-4, "d={d}");
             }
@@ -155,17 +186,26 @@ mod tests {
     fn pre_scale_applies_sign_flips() {
         let planner = Planner::new();
         let mut rng = Pcg64::new(33);
+        let mut scratch = RealPackScratch::new();
         let d = 32;
-        let plan = RealPackPlan::new(d, planner.clone());
+        let plan = RealPackPlan::new(d, &planner);
         let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
         let s = rng.sign_vec(d);
         let flipped: Vec<f32> = x.iter().zip(&s).map(|(a, b)| a * b).collect();
         let mut h1 = vec![C64::ZERO; d / 2 + 1];
         let mut h2 = vec![C64::ZERO; d / 2 + 1];
-        plan.rfft(&x, Some(&s), &mut h1);
-        plan.rfft(&flipped, None, &mut h2);
+        plan.rfft(&x, Some(&s), &mut h1, &mut scratch);
+        plan.rfft(&flipped, None, &mut h2, &mut scratch);
         for (a, b) in h1.iter().zip(&h2) {
             assert!((*a - *b).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn clones_share_the_half_plan() {
+        let planner = Planner::new();
+        let plan = RealPackPlan::new(64, &planner);
+        let clone = plan.clone();
+        assert!(Arc::ptr_eq(&plan.half_plan, &clone.half_plan));
     }
 }

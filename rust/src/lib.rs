@@ -11,7 +11,8 @@
 //!
 //! The public API entry points are [`encoders::BinaryEncoder`] (train/encode
 //! any of the paper's methods), [`coordinator::EmbeddingService`] (the
-//! serving facade: dynamic batching + PJRT execution + binary retrieval),
+//! serving facade: dynamic batching + parallel batch encode + binary
+//! retrieval),
 //! [`index`] (sub-linear exact Hamming ANN: multi-index hashing, sharded
 //! fan-out, backend selection via [`index::IndexBackend`]), and
 //! [`experiments`] (one driver per paper table/figure).

@@ -1,9 +1,9 @@
 //! `cbe` — the coordinator binary.
 //!
 //! Subcommands:
-//!   serve       run the embedding service demo (PJRT request path)
+//!   serve       run the embedding service demo (parallel batch encode)
 //!   train       train CBE-opt on synthetic data, report objective trace
-//!   encode      encode random vectors through the PJRT pipeline
+//!   encode      encode random vectors through the serving pipeline
 //!   exp <id>    reproduce a paper table/figure: fig1 table2 fig2 fig3
 //!               fig4 fig5 table3 sec6 | all
 //!   artifacts   list compiled artifacts
@@ -58,9 +58,9 @@ fn print_usage() {
          usage: cbe <command> [flags]\n\
          \n\
          commands:\n\
-         \x20 serve      run the embedding service demo over PJRT artifacts\n\
+         \x20 serve      run the embedding service demo (parallel batch encode)\n\
          \x20 train      train CBE-opt on synthetic data (native optimizer)\n\
-         \x20 encode     batch-encode random vectors through PJRT\n\
+         \x20 encode     batch-encode random vectors through the service\n\
          \x20 exp <id>   reproduce a paper artifact: fig1 table2 fig2 fig3\n\
          \x20            fig4 fig5 table3 sec6 all\n\
          \x20 artifacts  list compiled artifacts\n\
@@ -158,7 +158,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         backend.spec()
     );
 
-    // Train CBE-opt natively, then serve through the PJRT artifact.
+    // Train CBE-opt natively, then serve through the parallel batch path.
     let ds = generate(&SynthConfig::flickr(n_db + 100, d, seed));
     let mut tf = TimeFreqConfig::new(bits);
     tf.iters = 5;

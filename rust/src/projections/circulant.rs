@@ -4,11 +4,79 @@
 //!     h(x) = sign(IFFT(FFT(r) ∘ FFT(D·x)))
 //! D is a random ±1 diagonal (random sign flips), required so adversarial
 //! inputs (e.g. the all-ones vector, §3) still have their norms preserved.
+//!
+//! # Threading and scratch ownership
+//!
+//! [`CirculantProjection`] is immutable per encode (`&self` everywhere) and
+//! `Send + Sync` — compile-time asserted below — so one projection is
+//! shared across threads. All per-call mutable state lives in a
+//! caller-owned [`EncodeScratch`]; [`ScratchPool`] keeps one scratch per
+//! worker thread for the batch fan-out. With a reused scratch, nothing on
+//! the encode path allocates or locks per vector.
+//!
+//! [`CirculantProjection::encode_batch_into`] is the throughput entry
+//! point: it splits rows across core-capped scoped threads (mirroring
+//! `ShardedIndex`'s fan-out) and packs signs **directly** into `BitCode`
+//! words — no per-row ±1 f32 intermediate.
 
-use crate::fft::{real, C64, Planner};
+use crate::bits::BitCode;
+use crate::fft::realpack::{RealPackPlan, RealPackScratch};
+use crate::fft::{real, C64, Dir, FftScratch, Plan, Planner};
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Below this total work (rows × d) the scoped-thread fan-out costs more
+/// than it saves and `encode_batch_into` degrades to a serial sweep.
+const PARALLEL_MIN_WORK: usize = 1 << 14;
+
+/// Per-thread mutable state for one projection's encode/project calls.
+/// Buffers grow to the projection's d on first use and are reused; keep
+/// one per thread (see [`ScratchPool`]) for allocation-free encoding.
+#[derive(Default)]
+pub struct EncodeScratch {
+    /// Full-complex work buffer (odd-d path), len d.
+    cplx: Vec<C64>,
+    /// Half-spectrum buffer (even-d realpack path), len d/2 + 1.
+    spec: Vec<C64>,
+    /// Real projection output before binarization, len d.
+    vals: Vec<f32>,
+    /// Nested real-pack scratch (packed half-size buffer + FFT work).
+    rp: RealPackScratch,
+    /// FFT work buffer for the full-complex Bluestein path.
+    fft: FftScratch,
+}
+
+impl EncodeScratch {
+    pub fn new() -> EncodeScratch {
+        EncodeScratch::default()
+    }
+}
+
+/// A bag of [`EncodeScratch`]es, one per worker thread of the batch
+/// fan-out. Reuse one pool across batches: slots grow to the thread count
+/// and the per-slot buffers stay warm.
+#[derive(Default)]
+pub struct ScratchPool {
+    slots: Vec<EncodeScratch>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// Hand out exactly `n` scratch slots (growing the pool if needed).
+    fn slots_mut(&mut self, n: usize) -> &mut [EncodeScratch] {
+        if self.slots.len() < n {
+            self.slots.resize_with(n, EncodeScratch::new);
+        }
+        &mut self.slots[..n]
+    }
+}
 
 /// A circulant projection R = circ(r) with sign-flip diagonal D.
+/// Immutable on the encode path and `Send + Sync`: share it behind an
+/// `Arc` (or plain `&`) across as many threads as the box has cores.
 #[derive(Clone)]
 pub struct CirculantProjection {
     pub d: usize,
@@ -19,35 +87,46 @@ pub struct CirculantProjection {
     /// Cached FFT(r).
     r_spec: Vec<C64>,
     planner: Planner,
-    /// Reusable complex work buffer — a d=2^16 projection would otherwise
-    /// pay a 1 MB allocation per call (perf pass, EXPERIMENTS.md §Perf).
-    scratch: std::cell::RefCell<Vec<C64>>,
+    /// Full-complex plan for size d (odd-d path), resolved once.
+    full_plan: Arc<Plan>,
     /// Half-size real-FFT fast path (even d): ~1.8× over the full-complex
     /// path on the encode hot loop (perf pass iteration 3).
     half: Option<HalfPath>,
 }
 
+/// Even-d fast path state. Clones share the underlying plan cache (the
+/// `RealPackPlan` clone is table + `Arc` copies — no twiddle recompute).
+#[derive(Clone)]
 struct HalfPath {
-    plan: crate::fft::realpack::RealPackPlan,
+    plan: RealPackPlan,
     /// FFT(r) half spectrum, len d/2 + 1.
     r_half: Vec<C64>,
-    spec_buf: std::cell::RefCell<Vec<C64>>,
-    out_buf: std::cell::RefCell<Vec<f32>>,
 }
 
-impl Clone for HalfPath {
-    fn clone(&self) -> Self {
-        HalfPath {
-            plan: crate::fft::realpack::RealPackPlan::new(
-                self.plan.d,
-                Planner::new(),
-            ),
-            r_half: self.r_half.clone(),
-            spec_buf: self.spec_buf.clone(),
-            out_buf: self.out_buf.clone(),
-        }
-    }
+thread_local! {
+    /// Per-thread scratch backing the allocating convenience wrappers
+    /// ([`CirculantProjection::project`]/[`CirculantProjection::encode`])
+    /// so per-row loops stay allocation-free; the explicit-scratch entry
+    /// points never touch it, and it lives outside the shared types, so
+    /// nothing here affects `Send`/`Sync`.
+    static WRAPPER_SCRATCH: std::cell::RefCell<EncodeScratch> =
+        std::cell::RefCell::new(EncodeScratch::new());
 }
+
+// Compile-time guarantee that the shared encode substrate stays
+// shareable across threads — interior mutability sneaking back into
+// these types fails to build right here.
+const _: () = {
+    #[allow(dead_code)]
+    fn assert_send_sync<T: Send + Sync>() {}
+    #[allow(dead_code)]
+    fn check() {
+        assert_send_sync::<CirculantProjection>();
+        assert_send_sync::<Plan>();
+        assert_send_sync::<Planner>();
+        assert_send_sync::<RealPackPlan>();
+    }
+};
 
 impl CirculantProjection {
     /// Build from an explicit r (and signs).
@@ -56,25 +135,21 @@ impl CirculantProjection {
         let d = r.len();
         let r_spec = real::rfft_full(&planner, &r);
         let half = if d >= 2 && d % 2 == 0 {
-            let plan = crate::fft::realpack::RealPackPlan::new(d, planner.clone());
+            let plan = RealPackPlan::new(d, &planner);
             let mut r_half = vec![C64::ZERO; d / 2 + 1];
-            plan.rfft(&r, None, &mut r_half);
-            Some(HalfPath {
-                plan,
-                r_half,
-                spec_buf: std::cell::RefCell::new(vec![C64::ZERO; d / 2 + 1]),
-                out_buf: std::cell::RefCell::new(vec![0f32; d]),
-            })
+            plan.rfft(&r, None, &mut r_half, &mut RealPackScratch::new());
+            Some(HalfPath { plan, r_half })
         } else {
             None
         };
+        let full_plan = planner.plan(d);
         CirculantProjection {
             d,
             r,
             signs,
             r_spec,
             planner,
-            scratch: std::cell::RefCell::new(Vec::new()),
+            full_plan,
             half,
         }
     }
@@ -91,89 +166,213 @@ impl CirculantProjection {
         assert_eq!(r.len(), self.d);
         self.r_spec = real::rfft_full(&self.planner, &r);
         if let Some(h) = &mut self.half {
-            h.plan.rfft(&r, None, &mut h.r_half);
+            let mut scratch = RealPackScratch::new();
+            h.plan.rfft(&r, None, &mut h.r_half, &mut scratch);
         }
         self.r = r;
     }
 
     /// Project one vector: y = R·D·x (full d outputs, no binarization).
+    /// Backed by a per-thread scratch, so per-row loops (experiments,
+    /// `encode_signs`) don't reallocate buffers every call.
     pub fn project(&self, x: &[f32]) -> Vec<f32> {
         let mut out = vec![0f32; self.d];
-        self.project_into(x, &mut out);
+        WRAPPER_SCRATCH.with(|s| self.project_into(x, &mut out, &mut s.borrow_mut()));
         out
     }
 
-    /// Allocation-free projection into a caller buffer (hot path).
-    pub fn project_into(&self, x: &[f32], out: &mut [f32]) {
+    /// Allocation-free projection into a caller buffer (hot path; reuse
+    /// the scratch across calls).
+    pub fn project_into(&self, x: &[f32], out: &mut [f32], scratch: &mut EncodeScratch) {
         assert_eq!(x.len(), self.d);
         assert_eq!(out.len(), self.d);
         if let Some(h) = &self.half {
-            let mut spec = h.spec_buf.borrow_mut();
-            h.plan.rfft(x, Some(&self.signs), &mut spec);
+            let EncodeScratch { spec, rp, .. } = scratch;
+            spec.resize(self.d / 2 + 1, C64::ZERO);
+            h.plan.rfft(x, Some(&self.signs), spec, rp);
             for (s, rs) in spec.iter_mut().zip(&h.r_half) {
                 *s = *s * *rs;
             }
-            h.plan.irfft(&spec, out);
+            h.plan.irfft(spec, out, rp);
             return;
         }
-        let mut buf = self.scratch.borrow_mut();
-        buf.clear();
-        buf.extend(
-            x.iter()
-                .zip(&self.signs)
-                .map(|(v, s)| C64::new((*v * *s) as f64, 0.0)),
-        );
-        self.planner.fft(&mut buf);
-        for (b, rs) in buf.iter_mut().zip(&self.r_spec) {
-            *b = *b * *rs;
-        }
-        self.planner.ifft(&mut buf);
-        for (o, c) in out.iter_mut().zip(buf.iter()) {
+        self.full_project(x, scratch);
+        for (o, c) in out.iter_mut().zip(scratch.cplx.iter()) {
             *o = c.re as f32;
         }
     }
 
     /// k-bit binary code: sign of the first k projections (k ≤ d).
+    /// Backed by the same per-thread scratch as
+    /// [`CirculantProjection::project`].
     pub fn encode(&self, x: &[f32], k: usize) -> Vec<f32> {
         assert!(k <= self.d);
         let mut out = vec![0f32; k];
-        self.encode_into(x, &mut out);
+        WRAPPER_SCRATCH.with(|s| self.encode_into(x, &mut out, &mut s.borrow_mut()));
         out
     }
 
-    /// Allocation-light encode into a caller buffer of length k.
-    pub fn encode_into(&self, x: &[f32], out: &mut [f32]) {
+    /// Allocation-free encode into a ±1 buffer of length k (hot path;
+    /// reuse the scratch across calls).
+    pub fn encode_into(&self, x: &[f32], out: &mut [f32], scratch: &mut EncodeScratch) {
         let k = out.len();
         assert!(k <= self.d);
         assert_eq!(x.len(), self.d);
         if let Some(h) = &self.half {
-            let mut spec = h.spec_buf.borrow_mut();
-            h.plan.rfft(x, Some(&self.signs), &mut spec);
-            for (s, rs) in spec.iter_mut().zip(&h.r_half) {
-                *s = *s * *rs;
-            }
-            let mut full = h.out_buf.borrow_mut();
-            h.plan.irfft(&spec, &mut full);
-            for (o, v) in out.iter_mut().zip(full.iter()) {
+            let vals = self.half_project(h, x, scratch);
+            for (o, v) in out.iter_mut().zip(vals.iter()) {
                 *o = if *v >= 0.0 { 1.0 } else { -1.0 };
             }
             return;
         }
-        let mut buf = self.scratch.borrow_mut();
-        buf.clear();
-        buf.extend(
+        self.full_project(x, scratch);
+        for (o, c) in out.iter_mut().zip(scratch.cplx.iter()) {
+            *o = if c.re >= 0.0 { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// Encode one vector straight into packed `BitCode` words (bit b set
+    /// iff projection b is ≥ 0) — bit-exactly the composition of
+    /// [`CirculantProjection::encode_into`] with
+    /// [`BitCode::set_row_from_signs`], without the ±1 f32 intermediate.
+    /// `words` must hold exactly `k.div_ceil(64)` words (one `BitCode`
+    /// row); trailing pad bits are written as zero.
+    pub fn encode_bits_into(
+        &self,
+        x: &[f32],
+        k: usize,
+        words: &mut [u64],
+        scratch: &mut EncodeScratch,
+    ) {
+        assert!(k <= self.d);
+        assert_eq!(x.len(), self.d);
+        assert_eq!(words.len(), k.div_ceil(64));
+        if let Some(h) = &self.half {
+            let vals = self.half_project(h, x, scratch);
+            // The sign decision happens on the same f32 values the
+            // per-vector path binarizes — bit-exact by construction.
+            for (w, word) in words.iter_mut().enumerate() {
+                let lo = w * 64;
+                let hi = (lo + 64).min(k);
+                let mut acc = 0u64;
+                for (b, v) in vals[lo..hi].iter().enumerate() {
+                    if *v >= 0.0 {
+                        acc |= 1u64 << b;
+                    }
+                }
+                *word = acc;
+            }
+            return;
+        }
+        self.full_project(x, scratch);
+        // Same decision as encode_into's `c.re >= 0.0` (f64, pre-cast).
+        for (w, word) in words.iter_mut().enumerate() {
+            let lo = w * 64;
+            let hi = (lo + 64).min(k);
+            let mut acc = 0u64;
+            for (b, c) in scratch.cplx[lo..hi].iter().enumerate() {
+                if c.re >= 0.0 {
+                    acc |= 1u64 << b;
+                }
+            }
+            *word = acc;
+        }
+    }
+
+    /// Batch encode: pack the k-bit codes of `rows` into `out` (row i of
+    /// `out` = code of `rows[i]`), fanning out across scoped threads
+    /// capped at the core count. Bit-exactly equal to per-vector
+    /// [`CirculantProjection::encode_into`] +
+    /// [`BitCode::set_row_from_signs`] for every row, at any thread
+    /// count. Pass a reused [`ScratchPool`] to keep per-thread buffers
+    /// warm across batches.
+    pub fn encode_batch_into(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        out: &mut BitCode,
+        pool: &mut ScratchPool,
+    ) {
+        assert!(k <= self.d);
+        assert_eq!(out.n, rows.len());
+        assert_eq!(out.bits, k);
+        let n = rows.len();
+        if n == 0 {
+            return;
+        }
+        let wpc = out.words_per_code;
+        let cores = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let threads = cores.min(n);
+        if threads <= 1 || n * self.d < PARALLEL_MIN_WORK {
+            let scratch = &mut pool.slots_mut(1)[0];
+            for (row, words) in rows.iter().zip(out.data.chunks_mut(wpc)) {
+                self.encode_bits_into(row, k, words, scratch);
+            }
+            return;
+        }
+        // Contiguous row ranges per thread; each worker owns a disjoint
+        // &mut window of the packed words, so no synchronization beyond
+        // the scope join.
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut rest_rows = rows;
+            let mut rest_words = out.data.as_mut_slice();
+            for scratch in pool.slots_mut(threads) {
+                if rest_rows.is_empty() {
+                    break;
+                }
+                let take = chunk.min(rest_rows.len());
+                let (row_chunk, tail_rows) = rest_rows.split_at(take);
+                let (word_chunk, tail_words) = rest_words.split_at_mut(take * wpc);
+                rest_rows = tail_rows;
+                rest_words = tail_words;
+                scope.spawn(move || {
+                    for (row, words) in row_chunk.iter().zip(word_chunk.chunks_mut(wpc)) {
+                        self.encode_bits_into(row, k, words, scratch);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Even-d path: project via the half-spectrum plan into
+    /// `scratch.vals`; returns the d real projection values.
+    fn half_project<'s>(
+        &self,
+        h: &HalfPath,
+        x: &[f32],
+        scratch: &'s mut EncodeScratch,
+    ) -> &'s [f32] {
+        let spec = &mut scratch.spec;
+        let vals = &mut scratch.vals;
+        let rp = &mut scratch.rp;
+        spec.resize(self.d / 2 + 1, C64::ZERO);
+        h.plan.rfft(x, Some(&self.signs), spec, rp);
+        for (s, rs) in spec.iter_mut().zip(&h.r_half) {
+            *s = *s * *rs;
+        }
+        vals.resize(self.d, 0.0);
+        h.plan.irfft(spec, vals, rp);
+        vals
+    }
+
+    /// Odd-d path: full-complex convolution; leaves IFFT(FFT(r)∘FFT(Dx))
+    /// in `scratch.cplx` (real parts are the projection values).
+    fn full_project(&self, x: &[f32], scratch: &mut EncodeScratch) {
+        let EncodeScratch { cplx, fft, .. } = scratch;
+        cplx.clear();
+        cplx.extend(
             x.iter()
                 .zip(&self.signs)
                 .map(|(v, s)| C64::new((*v * *s) as f64, 0.0)),
         );
-        self.planner.fft(&mut buf);
-        for (b, rs) in buf.iter_mut().zip(&self.r_spec) {
+        self.full_plan.transform_with(cplx, Dir::Forward, fft);
+        for (b, rs) in cplx.iter_mut().zip(&self.r_spec) {
             *b = *b * *rs;
         }
-        self.planner.ifft(&mut buf);
-        for (o, c) in out.iter_mut().zip(buf.iter()) {
-            *o = if c.re >= 0.0 { 1.0 } else { -1.0 };
-        }
+        self.full_plan.transform_with(cplx, Dir::Inverse, fft);
     }
 
     /// Naive O(d²) oracle: materialize circ(r)·D·x row by row.
@@ -272,6 +471,41 @@ mod tests {
             .map(|v| (*v - y2[0]).abs())
             .fold(0f32, f32::max);
         assert!(spread < 1e-3, "spread={spread}");
+    }
+
+    #[test]
+    fn clone_shares_plans_and_matches() {
+        // Regression: HalfPath::clone used to rebuild its RealPackPlan
+        // with a fresh empty Planner, silently dropping the shared plan
+        // cache. Clones must produce identical codes (and share tables).
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(41);
+        for d in [64usize, 100, 33] {
+            let proj = CirculantProjection::random(d, &mut rng, planner.clone());
+            let cloned = proj.clone();
+            let x = rng.normal_vec(d);
+            assert_eq!(proj.encode(&x, d), cloned.encode(&x, d), "d={d}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_vector_bits() {
+        forall("batch == per-vector packed bits", 20, |g| {
+            let d = g.usize_in(2, 80);
+            let k = g.usize_in(1, d);
+            let n = g.usize_in(1, 12);
+            let planner = Planner::new();
+            let proj = CirculantProjection::random(d, g.rng(), planner);
+            let flat: Vec<Vec<f32>> = (0..n).map(|_| g.normal_vec(d)).collect();
+            let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+            let mut batch = BitCode::new(n, k);
+            proj.encode_batch_into(&rows, k, &mut batch, &mut ScratchPool::new());
+            let mut per_vec = BitCode::new(n, k);
+            for (i, row) in rows.iter().enumerate() {
+                per_vec.set_row_from_signs(i, &proj.encode(row, k));
+            }
+            assert_eq!(batch, per_vec, "d={d} k={k} n={n}");
+        });
     }
 
     use crate::util::rng::Pcg64;

@@ -1,10 +1,16 @@
 //! The three projection families compared throughout the paper (Table 1/2):
 //! full (dense, O(d²)), bilinear (O(d^1.5)), circulant (O(d log d)).
+//!
+//! The circulant family is the serving hot path; see
+//! [`circulant::CirculantProjection`] for the threading model (shared
+//! `Send + Sync` projection, caller-owned [`circulant::EncodeScratch`],
+//! scoped-thread batch fan-out via
+//! [`circulant::CirculantProjection::encode_batch_into`]).
 
 pub mod circulant;
 pub mod full;
 pub mod bilinear;
 
-pub use circulant::CirculantProjection;
+pub use circulant::{CirculantProjection, EncodeScratch, ScratchPool};
 pub use full::FullProjection;
 pub use bilinear::BilinearProjection;

@@ -1,6 +1,8 @@
-//! Integration: the EmbeddingService end to end — dynamic batching over the
-//! PJRT request path, retrieval, metrics — plus property tests on the
-//! coordinator invariants (batching, routing) via proptest_lite.
+//! Integration: the EmbeddingService end to end — dynamic batching over
+//! the parallel native batch-encode path, retrieval, metrics — plus
+//! property tests on the coordinator invariants (batching, routing) via
+//! proptest_lite. The service no longer needs compiled artifacts (the
+//! manifest, when present, only sizes batches), so these run everywhere.
 
 use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
 use cbe::fft::Planner;
@@ -11,23 +13,16 @@ use cbe::util::rng::Pcg64;
 use std::path::PathBuf;
 use std::time::Duration;
 
-fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: run `make artifacts` first");
-        None
-    }
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn service(d: usize, bits: usize, seed: u64) -> Option<(EmbeddingService, Vec<f32>, Vec<f32>)> {
-    let dir = artifacts()?;
+fn service(d: usize, bits: usize, seed: u64) -> (EmbeddingService, Vec<f32>, Vec<f32>) {
     let mut rng = Pcg64::new(seed);
     let r = rng.normal_vec(d);
     let signs = rng.sign_vec(d);
     let svc = EmbeddingService::start(
-        &dir,
+        &artifacts_dir(),
         ServiceConfig {
             d,
             bits,
@@ -41,12 +36,12 @@ fn service(d: usize, bits: usize, seed: u64) -> Option<(EmbeddingService, Vec<f3
         signs.clone(),
     )
     .unwrap();
-    Some((svc, r, signs))
+    (svc, r, signs)
 }
 
 #[test]
 fn served_codes_match_native_encoder() {
-    let Some((svc, r, signs)) = service(512, 128, 11) else { return };
+    let (svc, r, signs) = service(512, 128, 11);
     let proj = CirculantProjection::new(r, signs, Planner::new());
     let mut rng = Pcg64::new(12);
     for _ in 0..5 {
@@ -65,7 +60,7 @@ fn served_codes_match_native_encoder() {
 
 #[test]
 fn concurrent_requests_batch_together() {
-    let Some((svc, _, _)) = service(512, 64, 13) else { return };
+    let (svc, _, _) = service(512, 64, 13);
     let mut rng = Pcg64::new(14);
     let handles: Vec<_> = (0..96)
         .map(|_| svc.encode_async(rng.normal_vec(512)).unwrap())
@@ -85,13 +80,13 @@ fn concurrent_requests_batch_together() {
 
 #[test]
 fn wrong_dim_rejected() {
-    let Some((svc, _, _)) = service(512, 64, 15) else { return };
+    let (svc, _, _) = service(512, 64, 15);
     assert!(svc.encode_async(vec![0.0; 100]).is_err());
 }
 
 #[test]
 fn index_and_search_roundtrip() {
-    let Some((svc, _, _)) = service(512, 256, 16) else { return };
+    let (svc, _, _) = service(512, 256, 16);
     let mut rng = Pcg64::new(17);
     let rows: Vec<Vec<f32>> = (0..64)
         .map(|_| {
@@ -108,6 +103,25 @@ fn index_and_search_roundtrip() {
         assert_eq!(hits[0].id, qi as u32);
         assert_eq!(hits[0].dist, 0);
     }
+}
+
+#[test]
+fn encode_corpus_matches_request_path() {
+    // d = 100: even → realpack half path with a Bluestein half plan —
+    // the gnarliest native route. Bulk codes must equal the per-request
+    // serving path bit for bit.
+    let (svc, _, _) = service(100, 64, 18);
+    let mut rng = Pcg64::new(19);
+    let rows: Vec<Vec<f32>> = (0..40).map(|_| rng.normal_vec(100)).collect();
+    let codes = svc.encode_corpus(&rows).unwrap();
+    assert_eq!(codes.n, 40);
+    assert_eq!(codes.bits, 64);
+    for (i, row) in rows.iter().enumerate() {
+        let resp = svc.encode(row.clone()).unwrap();
+        let via_request = cbe::bits::BitCode::from_signs(&resp.signs, 1, 64);
+        assert_eq!(codes.code(i), via_request.code(0), "row {i}");
+    }
+    assert!(svc.encode_corpus(&[vec![0.0; 3]]).is_err());
 }
 
 // ---------------------------------------------------------- properties

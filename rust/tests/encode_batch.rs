@@ -1,0 +1,133 @@
+//! Equivalence properties of the parallel batch-encode engine: for every
+//! FFT route (realpack half path for even d, Bluestein full-complex for
+//! odd d) and every k ≤ d, `encode_batch_into` must be **bit-exactly**
+//! the composition of per-vector `encode_into` (≡ `encode_signs`) with
+//! `BitCode::set_row_from_signs` — at any batch size and thread count.
+//! Thread-safety of the substrate itself is compile-time asserted in
+//! `projections::circulant` (`CirculantProjection`/`Plan`: Send + Sync).
+
+use cbe::bits::BitCode;
+use cbe::encoders::{BinaryEncoder, CbeRand};
+use cbe::fft::Planner;
+use cbe::linalg::Mat;
+use cbe::projections::{CirculantProjection, EncodeScratch, ScratchPool};
+use cbe::proptest_lite::forall;
+use cbe::util::rng::Pcg64;
+
+/// Per-vector reference path: encode_into + set_row_from_signs.
+fn per_vector_codes(proj: &CirculantProjection, rows: &[&[f32]], k: usize) -> BitCode {
+    let mut bc = BitCode::new(rows.len(), k);
+    let mut scratch = EncodeScratch::new();
+    let mut signs = vec![0f32; k];
+    for (i, row) in rows.iter().enumerate() {
+        proj.encode_into(row, &mut signs, &mut scratch);
+        bc.set_row_from_signs(i, &signs);
+    }
+    bc
+}
+
+fn batch_codes(proj: &CirculantProjection, rows: &[&[f32]], k: usize) -> BitCode {
+    let mut bc = BitCode::new(rows.len(), k);
+    let mut pool = ScratchPool::new();
+    proj.encode_batch_into(rows, k, &mut bc, &mut pool);
+    bc
+}
+
+/// Fresh seed per case (keeps cases independent of generator state).
+fn seed_from(g: &mut cbe::proptest_lite::Gen) -> u64 {
+    g.rng().next_u64()
+}
+
+fn check_equivalence(d: usize, k: usize, n: usize, seed: u64) {
+    let planner = Planner::new();
+    let mut rng = Pcg64::new(seed);
+    let proj = CirculantProjection::random(d, &mut rng, planner);
+    let flat: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+    let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+    let batch = batch_codes(&proj, &rows, k);
+    let reference = per_vector_codes(&proj, &rows, k);
+    assert_eq!(batch, reference, "d={d} k={k} n={n} seed={seed}");
+}
+
+#[test]
+fn prop_even_d_realpack_path_bit_exact() {
+    forall("batch == per-vector (even d, realpack)", 25, |g| {
+        let d = 2 * g.usize_in(1, 64);
+        let k = g.usize_in(1, d);
+        let n = g.usize_in(1, 20);
+        let seed = seed_from(g);
+        check_equivalence(d, k, n, seed);
+    });
+}
+
+#[test]
+fn prop_odd_d_bluestein_path_bit_exact() {
+    forall("batch == per-vector (odd d, Bluestein)", 25, |g| {
+        let d = 2 * g.usize_in(1, 64) + 1;
+        let k = g.usize_in(1, d);
+        let n = g.usize_in(1, 20);
+        let seed = seed_from(g);
+        check_equivalence(d, k, n, seed);
+    });
+}
+
+#[test]
+fn prop_k_lt_d_prefix_packed() {
+    // k < d: the packed batch rows are exactly the k-bit prefix of the
+    // full-d per-vector codes.
+    forall("batch k<d is the packed prefix", 20, |g| {
+        let d = g.usize_in(8, 96);
+        let k = g.usize_in(1, d - 1);
+        let planner = Planner::new();
+        let proj = CirculantProjection::random(d, g.rng(), planner);
+        let x = g.normal_vec(d);
+        let rows = [x.as_slice()];
+        let short = batch_codes(&proj, &rows, k);
+        let full = proj.encode(&x, d);
+        let mut prefix = BitCode::new(1, k);
+        prefix.set_row_from_signs(0, &full[..k]);
+        assert_eq!(short, prefix, "d={d} k={k}");
+    });
+}
+
+#[test]
+fn large_batch_spans_threads_bit_exact() {
+    // Enough rows × d to clear the fan-out cutover: the scoped-thread
+    // path must agree with the serial reference on every row.
+    for (d, n) in [(256usize, 200usize), (100, 300), (33, 600)] {
+        check_equivalence(d, d.min(128), n, 0xabc + d as u64);
+    }
+}
+
+#[test]
+fn trait_batch_override_matches_default() {
+    // CbeRand overrides BinaryEncoder::encode_batch with the parallel
+    // engine; the trait's default serial loop is the reference.
+    let mut rng = Pcg64::new(77);
+    for (d, k, n) in [(64usize, 64usize, 40usize), (50, 17, 25), (21, 21, 30)] {
+        let enc = CbeRand::new(d, k, 1000 + d as u64, Planner::new());
+        let x = Mat::randn(n, d, &mut rng);
+        let batch = enc.encode_batch(&x);
+        let mut reference = BitCode::new(n, k);
+        for i in 0..n {
+            reference.set_row_from_signs(i, &enc.encode_signs(x.row(i)));
+        }
+        assert_eq!(batch, reference, "d={d} k={k} n={n}");
+    }
+}
+
+#[test]
+fn empty_and_singleton_batches() {
+    let planner = Planner::new();
+    let mut rng = Pcg64::new(5);
+    let proj = CirculantProjection::random(16, &mut rng, planner);
+    let mut empty = BitCode::new(0, 8);
+    proj.encode_batch_into(&[], 8, &mut empty, &mut ScratchPool::new());
+    assert_eq!(empty.n, 0);
+    let x = rng.normal_vec(16);
+    let rows = [x.as_slice()];
+    assert_eq!(
+        batch_codes(&proj, &rows, 8),
+        per_vector_codes(&proj, &rows, 8)
+    );
+}
