@@ -10,9 +10,9 @@
 //! present its routed batch dimension sizes the dynamic batches).
 
 use cbe::bits::BitCode;
-use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::coordinator::{BatcherConfig, EmbeddingService, RetrainConfig, ServiceConfig};
 use cbe::data::{gather, generate, train_query_split, SynthConfig};
-use cbe::encoders::CbeOpt;
+use cbe::encoders::CbeTrainer;
 use cbe::eval::{recall_auc, recall_curve};
 use cbe::fft::Planner;
 use cbe::groundtruth::exact_knn;
@@ -48,13 +48,17 @@ fn main() -> anyhow::Result<()> {
     let queries = gather(&ds.x, &q_idx);
     let train = gather(&ds.x, &db_idx[..800]);
 
-    let t0 = Instant::now();
     let mut tf = TimeFreqConfig::new(bits);
     tf.iters = 5;
-    let enc = CbeOpt::train(&train, tf, 13, Planner::new(), None);
-    println!("CBE-opt trained in {:.1}s", t0.elapsed().as_secs_f64());
+    let enc = CbeTrainer::new(tf).seed(13).planner(Planner::new()).train(&train);
+    println!(
+        "CBE-opt trained in {:.1}s ({} threads, spectrum cache {:.1} MiB)",
+        enc.report.total_ms / 1e3,
+        enc.report.threads,
+        enc.report.spectrum_cache_bytes as f64 / (1 << 20) as f64
+    );
 
-    // Start the service over the shared native projection.
+    // Start the service over the registered native projection.
     let svc = EmbeddingService::start(
         &artifacts,
         ServiceConfig {
@@ -65,6 +69,7 @@ fn main() -> anyhow::Result<()> {
                 max_wait: Duration::from_millis(2),
             },
             index: backend,
+            retrain: RetrainConfig::default(),
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),
@@ -111,6 +116,47 @@ fn main() -> anyhow::Result<()> {
         curve[99],
         recall_auc(&curve)
     );
+
+    // CBE_RETRAIN=1: re-learn the model from the corpus reservoir and
+    // hot-swap it with the service live — queries keep flowing while the
+    // trainer runs, and the swap never touches an in-flight batch.
+    if std::env::var("CBE_RETRAIN").is_ok_and(|v| v == "1") {
+        let pending = svc.retrain()?;
+        // Keep serving while the background trainer works.
+        let mut served = 0usize;
+        let outcome = loop {
+            match pending.try_recv() {
+                Ok(result) => break result.map_err(|e| anyhow::anyhow!("retrain: {e}"))?,
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    let resp = svc.encode(queries.row(served % queries.rows).to_vec())?;
+                    assert_eq!(resp.signs.len(), bits);
+                    served += 1;
+                }
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    anyhow::bail!("service dropped retrain reply");
+                }
+            }
+        };
+        println!(
+            "retrained live: model v{} on {} sampled rows in {:.1} ms \
+             ({} threads); served {served} queries during training",
+            outcome.version,
+            outcome.rows_used,
+            outcome.report.total_ms,
+            outcome.report.threads
+        );
+        let t0 = Instant::now();
+        let index = svc.build_index(&rows)?;
+        let resp = svc.encode(queries.row(0).to_vec())?;
+        let q0 = BitCode::from_signs(&resp.signs, 1, bits);
+        let hits = index.search(q0.code(0), 10);
+        println!(
+            "post-swap: reindexed {} vectors in {:.2}s; top hit dist {}",
+            index.len(),
+            t0.elapsed().as_secs_f64(),
+            hits.first().map(|h| h.dist).unwrap_or(0)
+        );
+    }
     println!("service metrics: {}", svc.metrics.summary(32));
     Ok(())
 }

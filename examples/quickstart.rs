@@ -4,7 +4,7 @@
 
 use cbe::bits::BinaryIndex;
 use cbe::data::{gather, generate, train_query_split, SynthConfig};
-use cbe::encoders::{BinaryEncoder, CbeOpt, CbeRand};
+use cbe::encoders::{BinaryEncoder, CbeRand, CbeTrainer};
 use cbe::eval::{recall_auc, recall_curve};
 use cbe::fft::Planner;
 use cbe::groundtruth::exact_knn;
@@ -28,9 +28,11 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = TimeFreqConfig::new(k);
     cfg.iters = 6;
     let planner = Planner::new();
-    let enc = CbeOpt::train(&train, cfg, 3, planner.clone(), None);
+    let enc = CbeTrainer::new(cfg).seed(3).planner(planner.clone()).train(&train);
     println!(
-        "trained CBE-opt; objective {:.1} → {:.1}",
+        "trained CBE-opt in {:.0} ms on {} threads; objective {:.1} → {:.1}",
+        enc.report.total_ms,
+        enc.report.threads,
         enc.objective_trace[1],
         enc.objective_trace.last().unwrap()
     );

@@ -289,6 +289,7 @@ fn bench_service_encode() {
                     max_wait: Duration::from_millis(1),
                 },
                 index: IndexBackend::Auto,
+                retrain: cbe::coordinator::RetrainConfig::default(),
             },
             rng.normal_vec(d),
             rng.sign_vec(d),

@@ -1,0 +1,144 @@
+//! Bench: the spectrum-cached trainer vs the old per-row-FFT serial
+//! loop — CBE-opt training throughput at d ∈ {256, 1024}. Three arms:
+//!
+//! * `legacy`   — `opt::timefreq::reference::run`, the pre-refactor
+//!   serial trainer (recomputes every row FFT in every iteration);
+//! * `serial`   — the spectrum-cached trainer pinned to 1 thread
+//!   (isolates the cache win from the threading win);
+//! * `parallel` — the spectrum-cached trainer on all cores.
+//!
+//! Throughput is row-iterations per second (rows × iters / wall time,
+//! cache build included), the unit that matches the trainer's
+//! O(n·d log d)-per-iteration cost. The serial and parallel arms must
+//! produce bit-identical r (the deterministic-flag contract) or the
+//! bench aborts. Emits `BENCH_train.json`.
+//!
+//! Env knobs, mirroring `encode_throughput`:
+//! * `CBE_BENCH_MAX_D=256` caps the dim sweep (CI-sized machines);
+//! * `CBE_BENCH_TRAIN_N=128` overrides training rows per arm;
+//! * `CBE_BENCH_TRAIN_ITERS=3` overrides iterations;
+//! * `CBE_BENCH_ENFORCE=1` turns the parallel-slower-than-legacy
+//!   warning into a hard failure (left off in CI: shared runners are
+//!   too noisy for perf asserts).
+
+use cbe::fft::Planner;
+use cbe::linalg::Mat;
+use cbe::opt::timefreq::reference;
+use cbe::opt::{TimeFreqConfig, TimeFreqOptimizer};
+use cbe::util::json::Json;
+use cbe::util::rng::Pcg64;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let max_d = env_usize("CBE_BENCH_MAX_D", 1024);
+    let iters = env_usize("CBE_BENCH_TRAIN_ITERS", 5);
+    println!("== CBE-opt trainer: legacy per-row-FFT vs spectrum-cached ({cores} cores) ==");
+
+    let mut results: Vec<Json> = Vec::new();
+    for d in [256usize, 1024] {
+        if d > max_d {
+            println!("d={d}: skipped (CBE_BENCH_MAX_D={max_d})");
+            continue;
+        }
+        let n = env_usize("CBE_BENCH_TRAIN_N", 512);
+        let k = d / 2;
+        let mut rng = Pcg64::new(0x7a11 + d as u64);
+        let mut x = Mat::randn(n, d, &mut rng);
+        for i in 0..n {
+            cbe::util::l2_normalize(x.row_mut(i));
+        }
+        let r0 = rng.normal_vec(d);
+        let planner = Planner::new();
+        let mut cfg = TimeFreqConfig::new(k);
+        cfg.iters = iters;
+        cfg.deterministic = true;
+        // Warm the plan cache so no arm pays first-use twiddle builds.
+        let _ = planner.plan(d);
+
+        // Legacy arm: the old serial trainer, per-row FFTs everywhere.
+        let t0 = Instant::now();
+        let (_r_legacy, _) = reference::run(&planner, d, &cfg, &x, &r0, None);
+        let dt_legacy = t0.elapsed().as_secs_f64();
+
+        // Serial arm: spectrum cache, 1 thread.
+        cfg.threads = 1;
+        let mut opt = TimeFreqOptimizer::new(d, cfg.clone(), planner.clone());
+        let t0 = Instant::now();
+        let r_serial = opt.run(&x, &r0, None);
+        let dt_serial = t0.elapsed().as_secs_f64();
+
+        // Parallel arm: spectrum cache, all cores.
+        cfg.threads = cores;
+        let mut opt = TimeFreqOptimizer::new(d, cfg, planner.clone());
+        let t0 = Instant::now();
+        let r_parallel = opt.run(&x, &r0, None);
+        let dt_parallel = t0.elapsed().as_secs_f64();
+
+        for (i, (a, b)) in r_parallel.iter().zip(&r_serial).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "parallel trainer diverged from serial at d={d}, r[{i}]"
+            );
+        }
+
+        let row_iters = (n * iters) as f64;
+        let qps = |dt: f64| row_iters / dt;
+        println!(
+            "d={d:<5} k={k:<4} n={n:<5} iters={iters}  \
+             legacy={:>9.0} row-it/s  serial={:>9.0} ({:.2}x)  \
+             parallel={:>9.0} ({:.2}x)",
+            qps(dt_legacy),
+            qps(dt_serial),
+            dt_legacy / dt_serial,
+            qps(dt_parallel),
+            dt_legacy / dt_parallel,
+        );
+        if dt_parallel >= dt_legacy && cores >= 2 {
+            println!(
+                "WARNING: spectrum-cached parallel trainer {:.1}% slower than legacy at d={d}",
+                (dt_parallel / dt_legacy - 1.0) * 100.0
+            );
+            let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
+            assert!(
+                !enforce,
+                "parallel trainer regressed vs the old per-row-FFT path (CBE_BENCH_ENFORCE=1)"
+            );
+        }
+
+        for (mode, threads, dt) in [
+            ("legacy", 1usize, dt_legacy),
+            ("serial", 1, dt_serial),
+            ("parallel", cores, dt_parallel),
+        ] {
+            results.push(Json::obj(vec![
+                ("d", Json::num(d as f64)),
+                ("k", Json::num(k as f64)),
+                ("n", Json::num(n as f64)),
+                ("iters", Json::num(iters as f64)),
+                ("mode", Json::str(mode)),
+                ("threads", Json::num(threads as f64)),
+                ("train_s", Json::num(dt)),
+                ("row_iters_per_s", Json::num(qps(dt))),
+                ("speedup_vs_legacy", Json::num(dt_legacy / dt)),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("cores", Json::num(cores as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_train.json", format!("{doc}\n")).expect("write BENCH_train.json");
+    println!("wrote BENCH_train.json");
+}

@@ -10,14 +10,19 @@
 //!   retrieval backend for a corpus size (`Router::pick_index`, the
 //!   resolution behind `IndexBackend::Auto`).
 //! * [`metrics`] — latency histograms + throughput counters.
+//! * [`registry`] — [`ModelRegistry`]: the hot-swappable model slot.
+//!   A `Retrain` control request re-learns the circulant model from the
+//!   service's corpus reservoir on a background thread and swaps it in
+//!   atomically; each batch resolves the active model exactly once, so
+//!   in-flight requests are never dropped or re-encoded.
 //! * [`service`] — [`EmbeddingService`]: the public facade wiring the
-//!   shared `Send + Sync` circulant projection, batcher and the binary
-//!   retrieval index together. Batches are encoded by the parallel
-//!   batch-encode engine
+//!   model registry, batcher and the binary retrieval index together.
+//!   Batches are encoded by the parallel batch-encode engine
 //!   ([`crate::projections::CirculantProjection::encode_batch_into`]:
 //!   scoped-thread fan-out, signs packed directly into `BitCode` words);
 //!   bulk corpus encoding takes [`EmbeddingService::encode_corpus`],
-//!   which borrows rows and skips the request channel entirely.
+//!   which borrows rows, streams them in bounded slabs, and skips the
+//!   request channel entirely.
 //!
 //! Retrieval is configuration, not code: [`ServiceConfig::index`] takes
 //! any [`crate::index::IndexBackend`] spec (`auto | linear | mih[:m] |
@@ -30,10 +35,12 @@ pub mod request;
 pub mod batcher;
 pub mod router;
 pub mod metrics;
+pub mod registry;
 pub mod service;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
-pub use request::{EncodeRequest, EncodeResponse};
+pub use registry::ModelRegistry;
+pub use request::{ControlRequest, EncodeRequest, EncodeResponse, RetrainOutcome, RetrainResult};
 pub use router::Router;
-pub use service::{EmbeddingService, ServiceConfig};
+pub use service::{EmbeddingService, RetrainConfig, ServiceConfig};

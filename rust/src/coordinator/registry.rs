@@ -1,0 +1,146 @@
+//! [`ModelRegistry`]: the hot-swappable model slot behind the serving
+//! path.
+//!
+//! The event loop used to hold the `Arc<CirculantProjection>` directly,
+//! which froze the model for the service's lifetime — swapping in a
+//! freshly trained projection meant a restart. The registry decouples
+//! model *identity* from model *lifetime*:
+//!
+//! * [`ModelRegistry::current`] hands out a clone of the active `Arc` —
+//!   a read-lock held only for the refcount bump (no allocation, no
+//!   waiting on trainers).
+//! * [`ModelRegistry::swap`] atomically replaces the active `Arc` and
+//!   bumps the version counter. Nothing in flight is touched: any batch
+//!   that already resolved its `Arc` keeps encoding against the old
+//!   model to completion and the old projection is freed when its last
+//!   holder drops it. The event loop resolves [`ModelRegistry::current`]
+//!   once per batch, so a swap lands between batches, never inside one.
+//!
+//! This is the hot-swap contract (see ARCHITECTURE.md "Training
+//! pipeline"): **a batch is encoded by exactly one model version**, and
+//! a `Retrain` can never fail or corrupt an in-flight request — the
+//! worst case is a reply computed against the model that was active
+//! when its batch formed.
+
+use crate::projections::CirculantProjection;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// A versioned, atomically swappable slot holding the active circulant
+/// model. `Send + Sync`; share behind an `Arc`.
+pub struct ModelRegistry {
+    active: RwLock<Arc<CirculantProjection>>,
+    version: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Register the initial model as version 0.
+    pub fn new(proj: CirculantProjection) -> ModelRegistry {
+        ModelRegistry {
+            active: RwLock::new(Arc::new(proj)),
+            version: AtomicU64::new(0),
+        }
+    }
+
+    /// The active model. Cheap (one refcount bump under a read lock);
+    /// callers that encode a batch resolve this once and hold the `Arc`
+    /// for the whole batch.
+    pub fn current(&self) -> Arc<CirculantProjection> {
+        Arc::clone(&self.active.read().expect("model registry poisoned"))
+    }
+
+    /// Atomically install a new model and return its version. The
+    /// dimension is pinned at registration: a model of a different d
+    /// would silently break every queued request, so that's a panic, not
+    /// a swap.
+    pub fn swap(&self, proj: CirculantProjection) -> u64 {
+        let mut slot = self.active.write().expect("model registry poisoned");
+        assert_eq!(
+            proj.d, slot.d,
+            "hot-swap must preserve the model dimension"
+        );
+        *slot = Arc::new(proj);
+        // Publish the bump while still holding the write lock so
+        // version() can never run ahead of current().
+        self.version.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Monotone swap counter (0 = the model the service started with).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+}
+
+// The registry must stay shareable across the event loop, retrain
+// threads and callers.
+const _: () = {
+    #[allow(dead_code)]
+    fn assert_send_sync<T: Send + Sync>() {}
+    #[allow(dead_code)]
+    fn check() {
+        assert_send_sync::<ModelRegistry>();
+    }
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Planner;
+    use crate::util::rng::Pcg64;
+
+    fn proj(d: usize, seed: u64) -> CirculantProjection {
+        let mut rng = Pcg64::new(seed);
+        CirculantProjection::random(d, &mut rng, Planner::new())
+    }
+
+    #[test]
+    fn swap_bumps_version_and_replaces_model() {
+        let reg = ModelRegistry::new(proj(16, 1));
+        assert_eq!(reg.version(), 0);
+        let before = reg.current();
+        let v = reg.swap(proj(16, 2));
+        assert_eq!(v, 1);
+        assert_eq!(reg.version(), 1);
+        let after = reg.current();
+        assert!(!Arc::ptr_eq(&before, &after));
+        // The old Arc is still alive and usable by in-flight holders.
+        let x: Vec<f32> = (0..16).map(|i| i as f32 - 8.0).collect();
+        let _ = before.encode(&x, 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn swap_rejects_dimension_change() {
+        let reg = ModelRegistry::new(proj(16, 1));
+        reg.swap(proj(32, 2));
+    }
+
+    #[test]
+    fn concurrent_readers_see_a_full_model() {
+        // Hammer current() while swapping: every resolved Arc must encode
+        // self-consistently (no torn model state is even expressible —
+        // the Arc swap is the only mutation — but the test pins the
+        // lock discipline).
+        let reg = Arc::new(ModelRegistry::new(proj(32, 3)));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let reg = Arc::clone(&reg);
+                let stop = Arc::clone(&stop);
+                scope.spawn(move || {
+                    let x: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+                    while !stop.load(Ordering::Relaxed) {
+                        let p = reg.current();
+                        let code = p.encode(&x, 32);
+                        assert_eq!(code.len(), 32);
+                    }
+                });
+            }
+            for s in 0..20u64 {
+                reg.swap(proj(32, 100 + s));
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        assert_eq!(reg.version(), 20);
+    }
+}

@@ -1,5 +1,14 @@
 //! Request/response types flowing through the coordinator.
+//!
+//! Two channels feed the event loop: the data plane
+//! ([`EncodeRequest`] → [`EncodeResponse`]) and the control plane
+//! ([`ControlRequest`]), which carries operations on the service itself
+//! — today [`ControlRequest::Retrain`], which re-learns the circulant
+//! model from the service's corpus sample and hot-swaps it into the
+//! [`super::registry::ModelRegistry`] without touching in-flight
+//! encodes.
 
+use crate::opt::TrainReport;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -24,6 +33,32 @@ pub struct EncodeResponse {
     pub queue_ms: f64,
     /// Milliseconds of batch encode execution (shared across the batch).
     pub exec_ms: f64,
+}
+
+/// A control-plane operation on the service.
+pub enum ControlRequest {
+    /// Re-train the circulant model on the current corpus sample (in a
+    /// background thread — the event loop keeps serving) and hot-swap
+    /// it into the registry. The reply reports the outcome; an `Err`
+    /// (e.g. no corpus sampled yet) leaves the active model untouched.
+    Retrain {
+        reply: mpsc::Sender<RetrainResult>,
+    },
+}
+
+/// Reply to [`ControlRequest::Retrain`]. The error arm is a message, not
+/// an `anyhow::Error`, so it crosses the channel cheaply.
+pub type RetrainResult = Result<RetrainOutcome, String>;
+
+/// A completed, installed retrain.
+#[derive(Clone, Debug)]
+pub struct RetrainOutcome {
+    /// Registry version of the swapped-in model.
+    pub version: u64,
+    /// Corpus-sample rows the trainer saw.
+    pub rows_used: usize,
+    /// The trainer's convergence + performance record.
+    pub report: TrainReport,
 }
 
 impl EncodeRequest {

@@ -1,12 +1,27 @@
 //! [`EmbeddingService`]: the public serving facade.
 //!
-//! Owns the circulant model (one shared `Send + Sync`
-//! [`CirculantProjection`]), the dynamic batcher and the retrieval index.
-//! A background worker thread runs the event loop: drain requests → form
-//! batch → one parallel batch-encode (scoped-thread fan-out across cores,
-//! signs packed straight into `BitCode` words) → scatter replies. Bulk
-//! indexing bypasses the request channel entirely via
-//! [`EmbeddingService::encode_corpus`].
+//! Owns the model slot (a hot-swappable
+//! [`ModelRegistry`] of `Send + Sync` [`CirculantProjection`]s), the
+//! dynamic batcher and the retrieval index. A background worker thread
+//! runs the event loop: drain requests → form batch → one parallel
+//! batch-encode (scoped-thread fan-out across cores, signs packed
+//! straight into `BitCode` words) → scatter replies. Bulk indexing
+//! bypasses the request channel entirely via
+//! [`EmbeddingService::encode_corpus`], which streams the corpus through
+//! the fan-out in bounded slabs.
+//!
+//! # Online retraining
+//!
+//! The service can re-learn its circulant model without a restart:
+//! [`EmbeddingService::encode_corpus`] keeps a seeded reservoir sample
+//! of the rows it indexes (capacity [`RetrainConfig::sample`]), and a
+//! [`ControlRequest::Retrain`] — issued via
+//! [`EmbeddingService::retrain`] — trains CBE-opt on that sample in a
+//! background thread while the event loop keeps serving, then
+//! atomically swaps the new model into the registry. In-flight requests
+//! are never dropped or re-encoded: each batch resolves the active
+//! model once, so a swap lands between batches (see the hot-swap
+//! contract on [`ModelRegistry`]).
 //!
 //! The compiled-artifact manifest is advisory: when `artifacts_dir` holds
 //! one, the routed artifact's batch dimension sizes the dynamic batches
@@ -17,20 +32,56 @@
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
-use super::request::{EncodeRequest, EncodeResponse};
+use super::registry::ModelRegistry;
+use super::request::{ControlRequest, EncodeRequest, EncodeResponse, RetrainOutcome, RetrainResult};
 use super::router::Router;
 use crate::bits::index::Hit;
 use crate::bits::BitCode;
+use crate::encoders::CbeTrainer;
 use crate::fft::Planner;
 use crate::index::{build_index, AnyIndex, IndexAny, IndexBackend};
+use crate::linalg::Mat;
+use crate::opt::TimeFreqConfig;
 use crate::projections::{CirculantProjection, ScratchPool};
 use crate::runtime::Manifest;
+use crate::util::rng::Pcg64;
 use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Knobs for online retraining (the `Retrain` control request).
+#[derive(Clone, Debug)]
+pub struct RetrainConfig {
+    /// Reservoir capacity: how many corpus rows
+    /// [`EmbeddingService::encode_corpus`] retains as training data.
+    /// 0 disables sampling (and therefore retraining).
+    pub sample: usize,
+    /// Trainer iterations per retrain (paper: 5–10 suffice).
+    pub iters: usize,
+    /// λ of the near-orthogonality penalty.
+    pub lambda: f64,
+    /// Trainer fan-out threads (0 = auto, work-gated).
+    pub threads: usize,
+    /// Thread-count-invariant reductions in the trainer.
+    pub deterministic: bool,
+    /// Seed for the sign diagonal, r₀ init and the reservoir.
+    pub seed: u64,
+}
+
+impl Default for RetrainConfig {
+    fn default() -> RetrainConfig {
+        RetrainConfig {
+            sample: 512,
+            iters: 5,
+            lambda: 1.0,
+            threads: 0,
+            deterministic: true,
+            seed: 0x5eed,
+        }
+    }
+}
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -48,26 +99,69 @@ pub struct ServiceConfig {
     /// the embedding_server example reads the spec from `CBE_INDEX`, the
     /// CLI from `--index`).
     pub index: IndexBackend,
+    /// Online-retraining knobs (the CLI exposes `--retrain*`, the
+    /// embedding_server example `CBE_RETRAIN`).
+    pub retrain: RetrainConfig,
+}
+
+/// Seeded reservoir sample (Algorithm R) over the rows streamed through
+/// [`EmbeddingService::encode_corpus`] — the training set for `Retrain`.
+struct Reservoir {
+    cap: usize,
+    seen: u64,
+    rng: Pcg64,
+    rows: Vec<Vec<f32>>,
+}
+
+impl Reservoir {
+    fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            cap,
+            seen: 0,
+            rng: Pcg64::new(seed),
+            rows: Vec::new(),
+        }
+    }
+
+    fn add(&mut self, row: &[f32]) {
+        if self.cap == 0 {
+            return;
+        }
+        self.seen += 1;
+        if self.rows.len() < self.cap {
+            self.rows.push(row.to_vec());
+            return;
+        }
+        let j = self.rng.below(self.seen);
+        if (j as usize) < self.cap {
+            self.rows[j as usize] = row.to_vec();
+        }
+    }
 }
 
 /// The serving facade. Construct with [`EmbeddingService::start`], submit
 /// with [`EmbeddingService::encode`] / [`EmbeddingService::encode_async`],
-/// bulk-index with [`EmbeddingService::build_index`], stop by dropping.
+/// bulk-index with [`EmbeddingService::build_index`], re-learn the model
+/// with [`EmbeddingService::retrain`], stop by dropping.
 pub struct EmbeddingService {
     tx: mpsc::Sender<EncodeRequest>,
+    ctl: mpsc::Sender<ControlRequest>,
     pub metrics: Arc<Metrics>,
     cfg: ServiceConfig,
-    /// The circulant model, shared with the worker thread (and with any
-    /// caller that wants zero-copy bulk encoding).
-    proj: Arc<CirculantProjection>,
+    /// The hot-swappable model slot, shared with the worker thread, the
+    /// retrain threads and any caller that wants zero-copy bulk encoding.
+    registry: Arc<ModelRegistry>,
+    /// Corpus reservoir feeding `Retrain`.
+    sample: Arc<Mutex<Reservoir>>,
+    artifact_batch: usize,
     stop: Arc<AtomicBool>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl EmbeddingService {
-    /// Start the service: build the shared projection, spawn the batching
-    /// event loop. `r` and `signs` are the circulant model parameters
-    /// (e.g. from CBE-opt training or random for CBE-rand).
+    /// Start the service: register the initial projection, spawn the
+    /// batching event loop. `r` and `signs` are the circulant model
+    /// parameters (e.g. from CBE-opt training or random for CBE-rand).
     pub fn start(
         artifacts_dir: &Path,
         cfg: ServiceConfig,
@@ -78,7 +172,16 @@ impl EmbeddingService {
         assert_eq!(signs.len(), cfg.d);
         assert!(cfg.bits <= cfg.d);
 
-        let proj = Arc::new(CirculantProjection::new(r, signs, Planner::new()));
+        let planner = Planner::new();
+        let registry = Arc::new(ModelRegistry::new(CirculantProjection::new(
+            r,
+            signs,
+            planner.clone(),
+        )));
+        let sample = Arc::new(Mutex::new(Reservoir::new(
+            cfg.retrain.sample,
+            cfg.retrain.seed ^ 0x7e5e,
+        )));
 
         // Adopt the routed artifact's batch dimension when a manifest is
         // present; otherwise the configured max_batch governs.
@@ -93,30 +196,63 @@ impl EmbeddingService {
             .unwrap_or(cfg.batcher.max_batch);
 
         let (tx, rx) = mpsc::channel::<EncodeRequest>();
+        let (ctl, ctl_rx) = mpsc::channel::<ControlRequest>();
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
         let m2 = Arc::clone(&metrics);
         let stop2 = Arc::clone(&stop);
         let cfg2 = cfg.clone();
-        let proj2 = Arc::clone(&proj);
+        let registry2 = Arc::clone(&registry);
+        let sample2 = Arc::clone(&sample);
+        let planner2 = planner.clone();
         let worker = std::thread::spawn(move || {
-            event_loop(artifact_batch, cfg2, proj2, rx, m2, stop2);
+            event_loop(
+                artifact_batch,
+                cfg2,
+                planner2,
+                registry2,
+                sample2,
+                rx,
+                ctl_rx,
+                m2,
+                stop2,
+            );
         });
 
         Ok(EmbeddingService {
             tx,
+            ctl,
             metrics,
             cfg,
-            proj,
+            registry,
+            sample,
+            artifact_batch,
             stop,
             worker: Some(worker),
         })
     }
 
-    /// The shared circulant model (the same instance the worker encodes
-    /// with — `Send + Sync`, clone the `Arc` freely).
-    pub fn projection(&self) -> &Arc<CirculantProjection> {
-        &self.proj
+    /// The currently active circulant model (the same instance the
+    /// worker will encode the *next* batch with — `Send + Sync`, hold
+    /// the `Arc` as long as you like; a later hot-swap won't touch it).
+    pub fn projection(&self) -> Arc<CirculantProjection> {
+        self.registry.current()
+    }
+
+    /// The hot-swappable model slot itself.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Monotone model version (0 = the model the service started with;
+    /// each completed `Retrain` bumps it).
+    pub fn model_version(&self) -> u64 {
+        self.registry.version()
+    }
+
+    /// Rows currently held in the retrain reservoir.
+    pub fn corpus_sample_len(&self) -> usize {
+        self.sample.lock().expect("sample lock poisoned").rows.len()
     }
 
     /// Fire-and-forget submit; returns the response receiver.
@@ -139,11 +275,57 @@ impl EmbeddingService {
         rx.recv().map_err(|_| anyhow!("service dropped reply"))
     }
 
-    /// Bulk encode: run borrowed rows through the parallel batch engine,
-    /// bypassing the per-request channel round-trip (and any per-row
-    /// copies) entirely. Rows are packed straight into the returned
-    /// [`BitCode`].
+    /// Request a retrain: train CBE-opt on the corpus reservoir in a
+    /// background thread (the event loop keeps serving throughout) and
+    /// hot-swap the result into the registry. Returns the receiver for
+    /// the outcome; see [`EmbeddingService::retrain_blocking`] for the
+    /// synchronous wrapper.
+    pub fn retrain(&self) -> Result<mpsc::Receiver<RetrainResult>> {
+        if self.cfg.retrain.sample == 0 {
+            return Err(anyhow!(
+                "retraining disabled: ServiceConfig::retrain.sample is 0"
+            ));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.ctl
+            .send(ControlRequest::Retrain { reply })
+            .map_err(|_| anyhow!("service stopped"))?;
+        Ok(rx)
+    }
+
+    /// [`EmbeddingService::retrain`], waited to completion.
+    pub fn retrain_blocking(&self) -> Result<RetrainOutcome> {
+        match self.retrain()?.recv() {
+            Ok(Ok(outcome)) => Ok(outcome),
+            Ok(Err(msg)) => Err(anyhow!("retrain failed: {msg}")),
+            Err(_) => Err(anyhow!("service dropped retrain reply")),
+        }
+    }
+
+    /// Rows per `encode_corpus` slab: artifact-batch-sized, raised to
+    /// the smallest count that still saturates the batch fan-out (every
+    /// core gets work above the calibrated threshold), so streaming
+    /// never costs throughput.
+    fn corpus_slab(&self) -> usize {
+        let cores = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let min_rows = crate::tune::min_parallel_work().div_ceil(self.cfg.d.max(1));
+        self.artifact_batch.max(min_rows).max(cores).max(1)
+    }
+
+    /// Bulk encode: stream borrowed rows through the parallel batch
+    /// engine in artifact-batch-sized slabs, bypassing the per-request
+    /// channel round-trip (and any per-row copies) entirely. Each slab
+    /// is packed straight into its window of the returned [`BitCode`],
+    /// so transient memory is bounded by one slab of row borrows plus
+    /// the per-thread scratch — not by the corpus. The whole corpus is
+    /// encoded by one model version (resolved once, up front), and the
+    /// rows are folded into the retrain reservoir as they stream by.
     pub fn encode_corpus(&self, rows: &[Vec<f32>]) -> Result<BitCode> {
+        // All-or-nothing: validate every row before encoding anything or
+        // feeding a single row into the retrain reservoir, so a failed
+        // call has no side effects.
         for (i, row) in rows.iter().enumerate() {
             if row.len() != self.cfg.d {
                 return Err(anyhow!(
@@ -153,11 +335,25 @@ impl EmbeddingService {
                 ));
             }
         }
-        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
         let mut codes = BitCode::new(rows.len(), self.cfg.bits);
+        let wpc = codes.words_per_code;
+        let slab = self.corpus_slab();
+        let proj = self.registry.current();
         let mut pool = ScratchPool::new();
-        self.proj
-            .encode_batch_into(&refs, self.cfg.bits, &mut codes, &mut pool);
+        let mut refs: Vec<&[f32]> = Vec::with_capacity(slab.min(rows.len()));
+        for (s, chunk) in rows.chunks(slab).enumerate() {
+            let start = s * slab;
+            refs.clear();
+            refs.extend(chunk.iter().map(|r| r.as_slice()));
+            let words = &mut codes.data[start * wpc..(start + chunk.len()) * wpc];
+            proj.encode_batch_words(&refs, self.cfg.bits, words, wpc, &mut pool);
+            if self.cfg.retrain.sample > 0 {
+                let mut res = self.sample.lock().expect("sample lock poisoned");
+                for row in chunk {
+                    res.add(row);
+                }
+            }
+        }
         Ok(codes)
     }
 
@@ -192,7 +388,55 @@ impl Drop for EmbeddingService {
     }
 }
 
-/// Encode one formed batch through the shared projection (parallel
+/// Train a replacement model on the reservoir snapshot and hot-swap it.
+/// Runs on its own thread so the event loop keeps encoding; the handle
+/// is joined at loop shutdown.
+fn spawn_retrain(
+    cfg: &ServiceConfig,
+    planner: &Planner,
+    registry: &Arc<ModelRegistry>,
+    sample: &Arc<Mutex<Reservoir>>,
+    reply: mpsc::Sender<RetrainResult>,
+) -> std::thread::JoinHandle<()> {
+    let rc = cfg.retrain.clone();
+    let d = cfg.d;
+    let bits = cfg.bits.clamp(1, d);
+    let planner = planner.clone();
+    let registry = Arc::clone(registry);
+    let sample = Arc::clone(sample);
+    std::thread::spawn(move || {
+        let rows = {
+            let res = sample.lock().expect("sample lock poisoned");
+            res.rows.clone()
+        };
+        if rows.len() < 2 {
+            let _ = reply.send(Err(format!(
+                "corpus sample too small ({} rows) — index a corpus first",
+                rows.len()
+            )));
+            return;
+        }
+        let mut x = Mat::zeros(rows.len(), d);
+        for (i, row) in rows.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(row);
+        }
+        let mut tf = TimeFreqConfig::new(bits);
+        tf.iters = rc.iters;
+        tf.lambda = rc.lambda;
+        tf.threads = rc.threads;
+        tf.deterministic = rc.deterministic;
+        let enc = CbeTrainer::new(tf).seed(rc.seed).planner(planner).train(&x);
+        let report = enc.report.clone();
+        let version = registry.swap(enc.proj);
+        let _ = reply.send(Ok(RetrainOutcome {
+            version,
+            rows_used: rows.len(),
+            report,
+        }));
+    })
+}
+
+/// Encode one formed batch through the given projection (parallel
 /// fan-out, signs packed directly into the reused `codes` buffer) and
 /// scatter the replies.
 fn run_batch(
@@ -227,15 +471,22 @@ fn run_batch(
     }
 }
 
-/// The batching event loop (runs on the worker thread). The projection,
-/// scratch pool and packed-code buffer live for the whole loop — nothing
-/// is allocated per request, and nothing bigger than a `Vec` of row
-/// borrows per batch.
+/// The batching event loop (runs on the worker thread). The scratch pool
+/// and packed-code buffer live for the whole loop — nothing is allocated
+/// per request, and nothing bigger than a `Vec` of row borrows per
+/// batch. Each batch resolves the active model from the registry once
+/// (one refcount bump), which is what makes `Retrain` hot-swaps
+/// batch-atomic; retrains themselves run on side threads spawned here
+/// and joined at shutdown.
+#[allow(clippy::too_many_arguments)]
 fn event_loop(
     artifact_batch: usize,
     cfg: ServiceConfig,
-    proj: Arc<CirculantProjection>,
+    planner: Planner,
+    registry: Arc<ModelRegistry>,
+    sample: Arc<Mutex<Reservoir>>,
     rx: mpsc::Receiver<EncodeRequest>,
+    ctl_rx: mpsc::Receiver<ControlRequest>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) {
@@ -245,6 +496,7 @@ fn event_loop(
     });
     let mut pool = ScratchPool::new();
     let mut codes = BitCode::new(0, cfg.bits);
+    let mut trainers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
         // Pull at least one request (with timeout so we can observe stop).
         let wait = batcher
@@ -262,41 +514,22 @@ fn event_loop(
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Senders gone: flush the stragglers and exit.
-                let tail = batcher.drain_all();
-                run_batch(
-                    &proj,
-                    cfg.bits,
-                    artifact_batch,
-                    tail,
-                    &mut codes,
-                    &mut pool,
-                    &metrics,
-                );
-                return;
-            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
         if stop.load(Ordering::SeqCst) {
-            // Graceful shutdown: absorb requests already queued in the
-            // channel so in-flight encode_async callers still get their
-            // replies, then flush everything in one final batch.
-            while let Ok(req) = rx.try_recv() {
-                batcher.push(req);
+            break;
+        }
+        // Control plane: hand retrains to side threads so encoding
+        // continues while the trainer runs.
+        while let Ok(ctl) = ctl_rx.try_recv() {
+            match ctl {
+                ControlRequest::Retrain { reply } => {
+                    trainers.push(spawn_retrain(&cfg, &planner, &registry, &sample, reply));
+                }
             }
-            let tail = batcher.drain_all();
-            run_batch(
-                &proj,
-                cfg.bits,
-                artifact_batch,
-                tail,
-                &mut codes,
-                &mut pool,
-                &metrics,
-            );
-            return;
         }
         if let Some(batch) = batcher.pop_ready(Instant::now()) {
+            let proj = registry.current();
             run_batch(
                 &proj,
                 cfg.bits,
@@ -307,5 +540,68 @@ fn event_loop(
                 &metrics,
             );
         }
+    }
+    // Graceful shutdown (stop flag or senders gone): absorb requests
+    // already queued in the channel so in-flight encode_async callers
+    // still get their replies, flush everything in one final batch
+    // against the current model, refuse late control requests, and wait
+    // for any outstanding retrain to finish (its swap is then simply the
+    // last one).
+    while let Ok(req) = rx.try_recv() {
+        batcher.push(req);
+    }
+    let tail = batcher.drain_all();
+    let proj = registry.current();
+    run_batch(
+        &proj,
+        cfg.bits,
+        artifact_batch,
+        tail,
+        &mut codes,
+        &mut pool,
+        &metrics,
+    );
+    while let Ok(ctl) = ctl_rx.try_recv() {
+        match ctl {
+            ControlRequest::Retrain { reply } => {
+                let _ = reply.send(Err("service stopping".to_string()));
+            }
+        }
+    }
+    for t in trainers {
+        let _ = t.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_caps_and_is_uniformish() {
+        let mut res = Reservoir::new(32, 7);
+        for i in 0..1000 {
+            res.add(&[i as f32]);
+        }
+        assert_eq!(res.rows.len(), 32);
+        assert_eq!(res.seen, 1000);
+        // Uniform over the stream: the kept indices should span it, not
+        // cluster at the head (prefix-keep would have max < 32).
+        let max = res
+            .rows
+            .iter()
+            .map(|r| r[0] as u64)
+            .max()
+            .unwrap();
+        assert!(max > 500, "reservoir stuck on the stream head: max={max}");
+    }
+
+    #[test]
+    fn reservoir_zero_capacity_is_inert() {
+        let mut res = Reservoir::new(0, 7);
+        for i in 0..10 {
+            res.add(&[i as f32]);
+        }
+        assert!(res.rows.is_empty());
     }
 }

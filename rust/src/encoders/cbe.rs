@@ -3,12 +3,19 @@
 //! Both override [`BinaryEncoder::encode_batch`] with the parallel
 //! batch-encode engine (scoped-thread fan-out, direct sign→bit packing),
 //! which is bit-exactly equivalent to the serial per-vector default.
+//!
+//! Training goes through [`CbeTrainer`]: it owns the run configuration
+//! (λ, iterations, thread count, determinism), drives the
+//! spectrum-cached parallel [`TimeFreqOptimizer`], and hands back a
+//! [`CbeOpt`] carrying both the learned projection and the
+//! [`TrainReport`] of the run (per-iteration objective, wall time,
+//! thread count, cache footprint).
 
 use super::BinaryEncoder;
 use crate::bits::BitCode;
 use crate::fft::Planner;
 use crate::linalg::Mat;
-use crate::opt::{PairSet, TimeFreqConfig, TimeFreqOptimizer};
+use crate::opt::{PairSet, TimeFreqConfig, TimeFreqOptimizer, TrainReport};
 use crate::projections::{CirculantProjection, ScratchPool};
 use crate::util::rng::Pcg64;
 
@@ -53,27 +60,58 @@ impl BinaryEncoder for CbeRand {
     }
 }
 
-/// Learned CBE (§4): r optimized by the time–frequency alternating
-/// optimization on training data.
-pub struct CbeOpt {
-    pub proj: CirculantProjection,
-    pub k: usize,
-    /// Objective trace of the training run (diagnostics).
-    pub objective_trace: Vec<f64>,
+/// The CBE-opt training harness: configuration in, trained [`CbeOpt`]
+/// (+ [`TrainReport`]) out.
+///
+/// ```no_run
+/// # use cbe::encoders::CbeTrainer;
+/// # use cbe::opt::TimeFreqConfig;
+/// # use cbe::linalg::Mat;
+/// # let x = Mat::zeros(8, 16);
+/// let mut cfg = TimeFreqConfig::new(16);
+/// cfg.iters = 5;
+/// let enc = CbeTrainer::new(cfg).seed(7).train(&x);
+/// println!("trained in {:.1} ms on {} threads",
+///          enc.report.total_ms, enc.report.threads);
+/// ```
+#[derive(Clone)]
+pub struct CbeTrainer {
+    pub cfg: TimeFreqConfig,
+    pub seed: u64,
+    pub planner: Planner,
 }
 
-impl CbeOpt {
-    /// Train on rows of `x`. λ and iteration count come from `cfg`.
-    pub fn train(
-        x: &Mat,
-        cfg: TimeFreqConfig,
-        seed: u64,
-        planner: Planner,
-        pairs: Option<&PairSet>,
-    ) -> CbeOpt {
+impl CbeTrainer {
+    pub fn new(cfg: TimeFreqConfig) -> CbeTrainer {
+        CbeTrainer {
+            cfg,
+            seed: 1,
+            planner: Planner::new(),
+        }
+    }
+
+    /// Seed for the sign diagonal D and the r₀ init (default 1).
+    pub fn seed(mut self, seed: u64) -> CbeTrainer {
+        self.seed = seed;
+        self
+    }
+
+    /// Share an existing plan cache instead of building a fresh one.
+    pub fn planner(mut self, planner: Planner) -> CbeTrainer {
+        self.planner = planner;
+        self
+    }
+
+    /// Train on the rows of `x` (unsupervised).
+    pub fn train(&self, x: &Mat) -> CbeOpt {
+        self.train_with_pairs(x, None)
+    }
+
+    /// Train with optional §6 similar/dissimilar pair supervision.
+    pub fn train_with_pairs(&self, x: &Mat, pairs: Option<&PairSet>) -> CbeOpt {
         let d = x.cols;
-        let k = cfg.k;
-        let mut rng = Pcg64::new(seed);
+        let k = self.cfg.k;
+        let mut rng = Pcg64::new(self.seed);
         let signs = rng.sign_vec(d);
         let r0 = rng.normal_vec(d);
 
@@ -85,13 +123,44 @@ impl CbeOpt {
             }
         }
 
-        let mut opt = TimeFreqOptimizer::new(d, cfg, planner.clone());
+        let mut opt = TimeFreqOptimizer::new(d, self.cfg.clone(), self.planner.clone());
         let r = opt.run(&xflip, &r0, pairs);
         CbeOpt {
-            proj: CirculantProjection::new(r, signs, planner),
+            proj: CirculantProjection::new(r, signs, self.planner.clone()),
             k,
-            objective_trace: opt.objective_trace,
+            objective_trace: opt.objective_trace.clone(),
+            report: opt.report,
         }
+    }
+}
+
+/// Learned CBE (§4): r optimized by the time–frequency alternating
+/// optimization on training data.
+pub struct CbeOpt {
+    pub proj: CirculantProjection,
+    pub k: usize,
+    /// Objective trace of the training run (diagnostics; same values as
+    /// `report.objective_trace`).
+    pub objective_trace: Vec<f64>,
+    /// Full convergence + performance record of the training run.
+    pub report: TrainReport,
+}
+
+impl CbeOpt {
+    /// Train on rows of `x`. λ and iteration count come from `cfg`.
+    /// Thin wrapper over [`CbeTrainer`] for callers that don't need the
+    /// builder.
+    pub fn train(
+        x: &Mat,
+        cfg: TimeFreqConfig,
+        seed: u64,
+        planner: Planner,
+        pairs: Option<&PairSet>,
+    ) -> CbeOpt {
+        CbeTrainer::new(cfg)
+            .seed(seed)
+            .planner(planner)
+            .train_with_pairs(x, pairs)
     }
 }
 
@@ -153,15 +222,37 @@ mod tests {
         for i in 0..n {
             l2_normalize(x.row_mut(i));
         }
-        let planner = Planner::new();
         let cfg = TimeFreqConfig::new(d);
-        let enc = CbeOpt::train(&x, cfg, 7, planner.clone(), None);
+        let enc = CbeTrainer::new(cfg).seed(7).train(&x);
         assert_eq!(enc.bits(), d);
         let tr = &enc.objective_trace;
         assert!(!tr.is_empty());
         // trace[0] reflects the random init (see timefreq tests); descent
         // holds from iteration 1 onward.
         assert!(tr.last().unwrap() <= &tr[1]);
+        // The report mirrors the trace and records the run shape.
+        assert_eq!(enc.report.objective_trace, *tr);
+        assert_eq!(enc.report.n, n);
+        assert_eq!(enc.report.d, d);
+    }
+
+    #[test]
+    fn trainer_builder_matches_legacy_entry_point() {
+        // CbeOpt::train is a thin wrapper over CbeTrainer — identical
+        // model out (same seed → same signs, same r bits).
+        let d = 24;
+        let n = 40;
+        let mut rng = Pcg64::new(55);
+        let x = Mat::randn(n, d, &mut rng);
+        let mut cfg = TimeFreqConfig::new(d);
+        cfg.iters = 3;
+        let planner = Planner::new();
+        let a = CbeOpt::train(&x, cfg.clone(), 9, planner.clone(), None);
+        let b = CbeTrainer::new(cfg).seed(9).planner(planner).train(&x);
+        assert_eq!(a.proj.signs, b.proj.signs);
+        for (x, y) in a.proj.r.iter().zip(&b.proj.r) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod aqbc;
 
 pub use aqbc::Aqbc;
 pub use bilinear::{BilinearOpt, BilinearRand};
-pub use cbe::{CbeOpt, CbeRand};
+pub use cbe::{CbeOpt, CbeRand, CbeTrainer};
 pub use itq::Itq;
 pub use lsh::Lsh;
 pub use sh::Sh;

@@ -9,7 +9,7 @@
 
 use crate::bits::BinaryIndex;
 use crate::data::{gather, generate, train_query_split, SynthConfig};
-use crate::encoders::{BinaryEncoder, CbeOpt};
+use crate::encoders::{BinaryEncoder, CbeTrainer};
 use crate::eval::{recall_auc, recall_curve};
 use crate::fft::Planner;
 use crate::groundtruth::exact_knn;
@@ -39,7 +39,10 @@ pub fn run(d: usize, seed: u64) -> AblationResult {
     let k = d / 2;
 
     let auc_of = |cfg: TimeFreqConfig| -> f64 {
-        let enc = CbeOpt::train(&train, cfg, seed + 2, planner.clone(), None);
+        let enc = CbeTrainer::new(cfg)
+            .seed(seed + 2)
+            .planner(planner.clone())
+            .train(&train);
         let index = BinaryIndex::new(enc.encode_batch(&db));
         let q = enc.encode_batch(&queries);
         recall_auc(&recall_curve(&index, &q, &gt, 100))

@@ -5,7 +5,7 @@
 use crate::bits::BinaryIndex;
 use crate::data::{gather, generate, train_query_split, SynthConfig};
 use crate::encoders::{
-    Aqbc, BilinearOpt, BinaryEncoder, CbeOpt, CbeRand, Itq, Lsh, Sh, Sklsh,
+    Aqbc, BilinearOpt, BinaryEncoder, CbeRand, CbeTrainer, Itq, Lsh, Sh, Sklsh,
 };
 use crate::eval::{recall_auc, recall_curve};
 use crate::fft::Planner;
@@ -65,7 +65,10 @@ pub fn run(cfg: &Fig5Config) -> Fig5Result {
     for &k in &cfg.bits {
         let mut tf = TimeFreqConfig::new(k);
         tf.iters = 5;
-        let cbe_opt = CbeOpt::train(&train, tf, cfg.seed + 2, planner.clone(), None);
+        let cbe_opt = CbeTrainer::new(tf)
+            .seed(cfg.seed + 2)
+            .planner(planner.clone())
+            .train(&train);
         let cbe_rand = CbeRand::new(cfg.d, k, cfg.seed + 3, planner.clone());
         let lsh = Lsh::new(cfg.d, k, cfg.seed + 4);
         let bil_opt = BilinearOpt::train(&train, k, 3, cfg.seed + 5);

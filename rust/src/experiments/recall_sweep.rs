@@ -8,7 +8,7 @@
 //!   computed from measured per-vector encode times.
 
 use crate::data::{gather, generate, train_query_split, Dataset, SynthConfig};
-use crate::encoders::{BilinearOpt, BilinearRand, BinaryEncoder, CbeOpt, CbeRand, Lsh};
+use crate::encoders::{BilinearOpt, BilinearRand, BinaryEncoder, CbeRand, CbeTrainer, Lsh};
 use crate::eval::{recall_auc, recall_curve};
 use crate::fft::Planner;
 use crate::groundtruth::exact_knn;
@@ -133,7 +133,10 @@ pub fn run(cfg: &SweepConfig) -> SweepResult {
         let cbe_rand = CbeRand::new(cfg.d, k, cfg.seed + 2, planner.clone());
         let mut tf = TimeFreqConfig::new(k);
         tf.iters = cfg.opt_iters;
-        let cbe_opt = CbeOpt::train(&train, tf, cfg.seed + 3, planner.clone(), None);
+        let cbe_opt = CbeTrainer::new(tf)
+            .seed(cfg.seed + 3)
+            .planner(planner.clone())
+            .train(&train);
         let lsh = Lsh::new(cfg.d, k, cfg.seed + 4);
         let bil_rand = BilinearRand::new(cfg.d, k, cfg.seed + 5);
         let bil_opt = BilinearOpt::train(&train, k, 3, cfg.seed + 6);

@@ -5,7 +5,7 @@
 
 use crate::bits::BinaryIndex;
 use crate::data::{gather, generate, train_query_split, SynthConfig};
-use crate::encoders::{BinaryEncoder, CbeOpt};
+use crate::encoders::{BinaryEncoder, CbeOpt, CbeTrainer};
 use crate::eval::{recall_auc, recall_curve};
 use crate::fft::Planner;
 use crate::groundtruth::exact_knn;
@@ -119,10 +119,14 @@ pub fn run(cfg: &Sec6Config) -> Sec6Result {
 
     let mut tf = TimeFreqConfig::new(cfg.k);
     tf.iters = 6;
-    let plain = CbeOpt::train(&train, tf.clone(), cfg.seed + 3, planner.clone(), None);
+    let trainer = CbeTrainer::new(tf.clone()).seed(cfg.seed + 3).planner(planner);
+    let plain = trainer.train(&train);
     let mut tf_ss = tf;
     tf_ss.mu = cfg.mu;
-    let semi = CbeOpt::train(&train, tf_ss, cfg.seed + 3, planner, Some(&pairs));
+    let semi = CbeTrainer::new(tf_ss)
+        .seed(cfg.seed + 3)
+        .planner(trainer.planner.clone())
+        .train_with_pairs(&train, Some(&pairs));
 
     let auc_plain = eval(&plain);
     let auc_semi = eval(&semi);

@@ -6,7 +6,7 @@
 //! Bilinear-opt, CBE-opt — all at k = d bits.
 
 use crate::data::{generate, SynthConfig};
-use crate::encoders::{BilinearOpt, BinaryEncoder, CbeOpt, Lsh};
+use crate::encoders::{BilinearOpt, BinaryEncoder, CbeTrainer, Lsh};
 use crate::fft::Planner;
 use crate::linalg::Mat;
 use crate::opt::TimeFreqConfig;
@@ -113,7 +113,7 @@ pub fn run(cfg: &Table3Config) -> Table3Result {
     // CBE-opt.
     let mut tf = TimeFreqConfig::new(cfg.d);
     tf.iters = 5;
-    let cbe = CbeOpt::train(&xtrain, tf, cfg.seed + 3, planner, None);
+    let cbe = CbeTrainer::new(tf).seed(cfg.seed + 3).planner(planner).train(&xtrain);
     {
         let tr = project_all(&xtrain, &|x| cbe.encode_signs(x));
         let te = project_all(&xtest, &|x| cbe.proj.project(x));

@@ -19,6 +19,7 @@
 
 pub mod util;
 pub mod proptest_lite;
+pub mod tune;
 pub mod fft;
 pub mod linalg;
 pub mod bits;

@@ -8,9 +8,9 @@
 //!               fig4 fig5 table3 sec6 | all
 //!   artifacts   list compiled artifacts
 
-use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::coordinator::{BatcherConfig, EmbeddingService, RetrainConfig, ServiceConfig};
 use cbe::data::{generate, SynthConfig};
-use cbe::encoders::CbeOpt;
+use cbe::encoders::CbeTrainer;
 use cbe::experiments as exp;
 use cbe::index::IndexBackend;
 use cbe::fft::Planner;
@@ -68,6 +68,9 @@ fn print_usage() {
          common flags: --artifacts DIR --d N --bits K --seed S\n\
          \x20             --index SPEC (auto | linear | mih[:m] | mih-sampled[:m] |\n\
          \x20                           sharded:<shards>[:m])\n\
+         serve flags:  --retrain (train from the corpus reservoir and hot-swap\n\
+         \x20             the model live) --retrain-sample N --retrain-iters N\n\
+         train flags:  --threads N (0 = auto) --deterministic BOOL\n\
          scale flags:  --full (paper-scale dims; slow), default is CI scale"
     );
 }
@@ -95,12 +98,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mut tf = TimeFreqConfig::new(k);
     tf.iters = iters;
     tf.lambda = args.f32("lambda", 1.0) as f64;
-    let (enc, ms) = cbe::util::timer::time_ms(|| {
-        CbeOpt::train(&ds.x, tf, seed + 1, Planner::new(), None)
-    });
-    println!("trained in {ms:.1} ms; objective trace:");
-    for (i, o) in enc.objective_trace.iter().enumerate() {
-        println!("  iter {i}: {o:.3}");
+    tf.threads = args.usize("threads", 0);
+    tf.deterministic = args.bool("deterministic", true);
+    let enc = CbeTrainer::new(tf).seed(seed + 1).planner(Planner::new()).train(&ds.x);
+    let rep = &enc.report;
+    println!(
+        "trained in {:.1} ms ({} threads, spectrum cache {:.1} MiB); objective trace:",
+        rep.total_ms,
+        rep.threads,
+        rep.spectrum_cache_bytes as f64 / (1 << 20) as f64
+    );
+    for (i, (o, ms)) in rep.objective_trace.iter().zip(&rep.iter_ms).enumerate() {
+        println!("  iter {i}: {o:.3} ({ms:.1} ms)");
     }
     Ok(())
 }
@@ -121,6 +130,7 @@ fn cmd_encode(args: &Args) -> anyhow::Result<()> {
                 max_wait: Duration::from_millis(2),
             },
             index: IndexBackend::Auto,
+            retrain: RetrainConfig::default(),
         },
         rng.normal_vec(d),
         rng.sign_vec(d),
@@ -163,8 +173,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut tf = TimeFreqConfig::new(bits);
     tf.iters = 5;
     let train = cbe::data::gather(&ds.x, &(0..500.min(n_db)).collect::<Vec<_>>());
-    let enc = CbeOpt::train(&train, tf, seed, Planner::new(), None);
+    let enc = CbeTrainer::new(tf).seed(seed).train(&train);
 
+    let defaults = RetrainConfig::default();
+    let retrain = RetrainConfig {
+        sample: args.usize("retrain-sample", defaults.sample),
+        iters: args.usize("retrain-iters", defaults.iters),
+        ..defaults
+    };
     let service = EmbeddingService::start(
         &artifacts_dir(args),
         ServiceConfig {
@@ -172,6 +188,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             bits,
             batcher: BatcherConfig::default(),
             index: backend,
+            retrain,
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),
@@ -201,6 +218,37 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         qms / queries as f64,
         hits_self as f64 / queries as f64
     );
+
+    // --retrain: re-learn the model from the corpus reservoir and
+    // hot-swap it in with the service still running, then serve again.
+    if args.bool("retrain", false) {
+        let outcome = service
+            .retrain_blocking()
+            .map_err(|e| anyhow::anyhow!("retrain: {e}"))?;
+        println!(
+            "retrained: model v{} on {} sampled rows in {:.1} ms ({} threads), \
+             final objective {:.3}",
+            outcome.version,
+            outcome.rows_used,
+            outcome.report.total_ms,
+            outcome.report.threads,
+            outcome.report.objective_trace.last().copied().unwrap_or(f64::NAN)
+        );
+        // The old index was built with the old model; rebuild under the
+        // new one and prove the service still serves.
+        let (index, ms) = cbe::util::timer::time_ms(|| service.build_index(&rows).unwrap());
+        let mut hits_self = 0usize;
+        for qi in 0..queries {
+            let hits = service.search(&index, ds.x.row(qi).to_vec(), topk).unwrap();
+            if hits.iter().any(|h| h.id == qi as u32) {
+                hits_self += 1;
+            }
+        }
+        println!(
+            "post-swap: reindexed in {ms:.1} ms; self-recall@{topk}: {:.2}",
+            hits_self as f64 / queries as f64
+        );
+    }
     println!("metrics: {}", service.metrics.summary(32));
     Ok(())
 }

@@ -19,11 +19,45 @@
 //! §6 semi-supervised extension: similar/dissimilar pairs add μ·A to the
 //! per-bin quadratic coefficient (M → M + μA), nothing else changes.
 //!
-//! All per-iteration work is O(n·d log d) — the paper's claimed cost.
+//! # The spectrum cache
+//!
+//! Every quantity the optimization reads from the data — M (eq. 17), the
+//! per-iteration products F(xᵢ) ∘ r̃, the h/g accumulators, the §6 pair
+//! penalty, and the full objective — depends on the rows only through
+//! their spectra F(xᵢ). Those spectra never change across iterations, so
+//! [`SpectrumCache`] computes all of them exactly once (in parallel) and
+//! every later pass reads the cache: per iteration the trainer runs 2n
+//! FFTs (IFFT of the product, FFT of the new B rows) instead of the 3n+
+//! of the old per-row-re-FFT loop, and `objective`/`pair_penalty` run 0.
+//! Cache memory is 16·n·d bytes (one `C64` per row element).
+//!
+//! # Threading and determinism
+//!
+//! The per-row time-domain step and the per-bin frequency accumulation
+//! (h, g, M) fan out across core-capped `std::thread::scope` threads,
+//! built directly on the PR-3 substrate: one immutable `Arc<Plan>` shared
+//! by every worker, all mutable state in caller-owned [`FftScratch`]-based
+//! worker buffers. Reductions are **blocked**: rows are cut into
+//! fixed-order blocks, each block accumulates its partial (h, g, err)
+//! serially in row order, and partials are folded in ascending block
+//! order after the join. With [`TimeFreqConfig::deterministic`] set the
+//! block size is a fixed constant, so the reduction tree — and therefore
+//! every output bit — is identical at *any* thread count, including the
+//! serial cutover (work below the calibrated
+//! [`crate::tune::min_parallel_work`] threshold runs the same blocked
+//! loop on one thread). With the flag off, blocks are sized per thread
+//! (fewer partials; still deterministic for a fixed thread count).
 
 use super::cubic::minimize_quartic;
-use crate::fft::{real, C64, Planner};
+use crate::fft::{C64, Dir, FftScratch, Plan, Planner};
 use crate::linalg::Mat;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Fixed reduction-block size (rows) under
+/// [`TimeFreqConfig::deterministic`]: small enough that n ≫ block keeps
+/// every core busy, large enough that partial buffers stay negligible.
+pub const DETERMINISTIC_BLOCK: usize = 64;
 
 /// Similar/dissimilar pair supervision for the §6 extension.
 #[derive(Clone, Debug, Default)]
@@ -45,6 +79,14 @@ pub struct TimeFreqConfig {
     pub k: usize,
     /// μ — weight of the semi-supervised term (0 disables it).
     pub mu: f64,
+    /// Worker threads for the row fan-out. 0 = auto: all cores when the
+    /// total work n·d clears [`crate::tune::min_parallel_work`], else
+    /// serial. An explicit count bypasses the work gate (the caller — a
+    /// parity test, a bench — knows what it wants).
+    pub threads: usize,
+    /// Fixed-block reductions: outputs are bit-identical at any thread
+    /// count (see module docs). Costs a few extra partial buffers.
+    pub deterministic: bool,
 }
 
 impl TimeFreqConfig {
@@ -54,7 +96,93 @@ impl TimeFreqConfig {
             iters: 10,
             k,
             mu: 0.0,
+            threads: 0,
+            deterministic: true,
         }
+    }
+}
+
+/// Convergence + performance record of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// Training rows.
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Iterations run.
+    pub iters: usize,
+    /// Worker threads the row fan-out actually used (1 = serial
+    /// cutover; never exceeds the reduction-block count, so a short
+    /// corpus reports the real parallelism, not the requested one).
+    pub threads: usize,
+    /// Whether fixed-block (thread-count-invariant) reductions were on.
+    pub deterministic: bool,
+    /// Objective value after each iteration.
+    pub objective_trace: Vec<f64>,
+    /// Wall milliseconds per iteration.
+    pub iter_ms: Vec<f64>,
+    /// Total wall milliseconds (including the spectrum-cache build when
+    /// the run built one).
+    pub total_ms: f64,
+    /// Bytes held by the row-spectrum cache during the run.
+    pub spectrum_cache_bytes: usize,
+}
+
+/// All row spectra F(xᵢ), computed once and shared by every pass of the
+/// optimization ([`TimeFreqOptimizer::run_cached`],
+/// [`TimeFreqOptimizer::objective`], [`TimeFreqOptimizer::pair_penalty`]).
+/// Row-major `n × d` complex matrix; 16·n·d bytes.
+pub struct SpectrumCache {
+    /// Rows cached.
+    pub n: usize,
+    /// Spectrum length (= feature dimension).
+    pub d: usize,
+    data: Vec<C64>,
+}
+
+impl SpectrumCache {
+    /// Transform every row of `x` once, fanning rows across up to
+    /// `threads` scoped workers (each row is independent, so the build is
+    /// bit-exact at any thread count).
+    pub fn build(x: &Mat, planner: &Planner, threads: usize) -> SpectrumCache {
+        let n = x.rows;
+        let d = x.cols;
+        let plan = planner.plan(d);
+        let mut data = vec![C64::ZERO; n * d];
+        let threads = threads.clamp(1, n.max(1));
+        let fill_rows = |lo: usize, out: &mut [C64], scratch: &mut FftScratch| {
+            for (r, row_out) in out.chunks_mut(d).enumerate() {
+                for (c, v) in row_out.iter_mut().zip(x.row(lo + r)) {
+                    *c = C64::new(*v as f64, 0.0);
+                }
+                plan.transform_with(row_out, Dir::Forward, scratch);
+            }
+        };
+        if threads <= 1 {
+            fill_rows(0, &mut data[..], &mut FftScratch::new());
+        } else {
+            let rpt = n.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (t, chunk) in data.chunks_mut(rpt * d).enumerate() {
+                    let fill_rows = &fill_rows;
+                    scope.spawn(move || {
+                        fill_rows(t * rpt, chunk, &mut FftScratch::new());
+                    });
+                }
+            });
+        }
+        SpectrumCache { n, d, data }
+    }
+
+    /// The cached spectrum of row i (len d).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[C64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Cache footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<C64>()
     }
 }
 
@@ -63,41 +191,95 @@ pub struct TimeFreqOptimizer {
     pub cfg: TimeFreqConfig,
     pub d: usize,
     planner: Planner,
+    plan: Arc<Plan>,
     /// Objective value after each iteration (for convergence reporting).
     pub objective_trace: Vec<f64>,
+    /// Convergence + performance record of the last run.
+    pub report: TrainReport,
 }
 
 impl TimeFreqOptimizer {
     pub fn new(d: usize, cfg: TimeFreqConfig, planner: Planner) -> TimeFreqOptimizer {
         assert!(cfg.k >= 1 && cfg.k <= d);
+        let plan = planner.plan(d);
         TimeFreqOptimizer {
             cfg,
             d,
             planner,
+            plan,
             objective_trace: Vec::new(),
+            report: TrainReport::default(),
+        }
+    }
+
+    /// Worker threads for a pass over `n` rows: an explicit
+    /// `cfg.threads` wins; auto consults the calibrated work threshold.
+    fn fanout_threads(&self, n: usize) -> usize {
+        if n == 0 {
+            return 1;
+        }
+        if self.cfg.threads != 0 {
+            return self.cfg.threads.min(n);
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        if cores <= 1 || n * self.d < crate::tune::min_parallel_work() {
+            1
+        } else {
+            cores.min(n)
+        }
+    }
+
+    /// Reduction-block size (rows) for blocked accumulations.
+    fn block_rows(&self, n: usize, threads: usize) -> usize {
+        if self.cfg.deterministic {
+            DETERMINISTIC_BLOCK
+        } else {
+            n.div_ceil(threads.max(1)).max(1)
         }
     }
 
     /// Run the alternating optimization. `x` holds training rows (already
     /// sign-flipped by D). `r0` is the initial circulant vector (CBE-rand
-    /// init in the paper). Optional pair supervision. Returns the learned r.
+    /// init in the paper). Optional pair supervision. Returns the learned
+    /// r. Builds a throwaway [`SpectrumCache`]; callers that already hold
+    /// one (or need it afterwards for [`TimeFreqOptimizer::objective`])
+    /// should use [`TimeFreqOptimizer::run_cached`].
     pub fn run(&mut self, x: &Mat, r0: &[f32], pairs: Option<&PairSet>) -> Vec<f32> {
+        assert_eq!(x.cols, self.d);
+        let t0 = Instant::now();
+        let cache = SpectrumCache::build(x, &self.planner, self.fanout_threads(x.rows));
+        let cache_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let r = self.run_cached(&cache, r0, pairs);
+        self.report.total_ms += cache_ms;
+        r
+    }
+
+    /// The optimization loop proper, reading row spectra from `cache`.
+    pub fn run_cached(
+        &mut self,
+        cache: &SpectrumCache,
+        r0: &[f32],
+        pairs: Option<&PairSet>,
+    ) -> Vec<f32> {
         let d = self.d;
-        let n = x.rows;
-        assert_eq!(x.cols, d);
+        let n = cache.n;
+        assert_eq!(cache.d, d);
         assert_eq!(r0.len(), d);
 
+        let t_run = Instant::now();
+        let requested = self.fanout_threads(n);
+        let block = self.block_rows(n, requested);
+        // What the blocked passes can actually use (≤ one per block) —
+        // recorded in the report so it never overstates the fan-out.
+        let threads = effective_threads(requested, n, block);
+
         // ---- Precompute M (eq. 17): m_l = Σ_i |F(x_i)_l|², plus μ·A (§6).
-        let mut m = vec![0f64; d];
-        for i in 0..n {
-            let xf = real::rfft_full(&self.planner, x.row(i));
-            for (l, c) in xf.iter().enumerate() {
-                m[l] += c.norm_sqr();
-            }
-        }
+        let mut m = accumulate_m(cache, block, threads);
         if let Some(ps) = pairs {
             if self.cfg.mu != 0.0 {
-                let a = self.pair_penalty(x, ps);
+                let a = self.pair_penalty(cache, ps);
                 for l in 0..d {
                     m[l] += self.cfg.mu * a[l];
                 }
@@ -106,152 +288,92 @@ impl TimeFreqOptimizer {
 
         let mut r = r0.to_vec();
         self.objective_trace.clear();
+        let mut iter_ms = Vec::with_capacity(self.cfg.iters);
+        let mut scratch = FftScratch::new();
 
         for _iter in 0..self.cfg.iters {
-            let r_spec = real::rfft_full(&self.planner, &r);
+            let t_iter = Instant::now();
+            let mut r_spec: Vec<C64> = r.iter().map(|v| C64::new(*v as f64, 0.0)).collect();
+            self.plan.transform_with(&mut r_spec, Dir::Forward, &mut scratch);
 
             // ---- Time-domain pass: B = sign(XRᵀ) with cols ≥ k zeroed,
-            // and accumulate h, g (eq. 17) in the same sweep.
-            let mut h = vec![0f64; d];
-            let mut g = vec![0f64; d];
-            let mut binarization_err = 0f64; // ‖B − XRᵀ‖²_F for the trace
-
-            let mut bi = vec![0f32; d];
-            for i in 0..n {
-                let xf = real::rfft_full(&self.planner, x.row(i));
-                // y = R x_i via spectral product
-                let mut yspec: Vec<C64> = xf
-                    .iter()
-                    .zip(&r_spec)
-                    .map(|(a, b)| *a * *b)
-                    .collect();
-                self.planner.ifft(&mut yspec);
-                for j in 0..d {
-                    let y = yspec[j].re;
-                    let b = if j < self.cfg.k {
-                        if y >= 0.0 {
-                            1.0
-                        } else {
-                            -1.0
-                        }
-                    } else {
-                        0.0
-                    };
-                    bi[j] = b as f32;
-                    let e = b - y;
-                    binarization_err += e * e;
-                }
-                let bf = real::rfft_full(&self.planner, &bi);
-                for l in 0..d {
-                    // h = −2 Σ Re(x̃)∘Re(b̃) + Im(x̃)∘Im(b̃)
-                    h[l] -= 2.0 * (xf[l].re * bf[l].re + xf[l].im * bf[l].im);
-                    // g = 2 Σ Im(x̃)∘Re(b̃) − Re(x̃)∘Im(b̃)
-                    g[l] += 2.0 * (xf[l].im * bf[l].re - xf[l].re * bf[l].im);
-                }
-            }
+            // h/g (eq. 17) accumulated per frequency bin in the same
+            // sweep — fanned across the row blocks.
+            let (h, g, binarization_err) =
+                time_domain_pass(cache, &r_spec, self.cfg.k, &self.plan, block, threads);
 
             // ---- Frequency-domain pass: closed-form per-bin minimizers.
-            // (λ = 0 would degenerate the quartics; clamp keeps them convex.)
-            let lam_d = (self.cfg.lambda * d as f64).max(1e-9);
-            let mut spec = vec![C64::ZERO; d];
+            let spec = solve_bins(&m, &h, &g, &r_spec, self.cfg.lambda, d);
 
-            // DC bin (eq. 21): min m₀t² + h₀t + λd(t²−1)², t real.
-            // = λd·t⁴ + (m₀ − 2λd)t² + h₀t + λd
-            let (t0, _) = minimize_quartic(lam_d, m[0] - 2.0 * lam_d, h[0], lam_d);
-            spec[0] = C64::new(t0, 0.0);
-
-            // Nyquist bin for even d — same 1-variable form.
-            if d % 2 == 0 {
-                let l = d / 2;
-                let (t, _) = minimize_quartic(lam_d, m[l] - 2.0 * lam_d, h[l], lam_d);
-                spec[l] = C64::new(t, 0.0);
-            }
-
-            // Conjugate pairs (eq. 22): variables a = Re(r̃_i), b = Im(r̃_i).
-            //   f(a,b) = m'(a²+b²) + 2λd(a²+b²−1)² + h'a + g'b
-            // with m' = m_i + m_{d−i}, h' = h_i + h_{d−i}, g' = g_i − g_{d−i}.
-            // Radial reduction: (a,b) = −ρ·(h',g')/‖(h',g')‖ and minimize
-            //   f(ρ) = 2λd·ρ⁴ + (m' − 4λd)ρ² − ‖(h',g')‖ρ  over ρ ∈ R.
-            for i in 1..=(d - 1) / 2 {
-                let mp = m[i] + m[d - i];
-                let hp = h[i] + h[d - i];
-                let gp = g[i] - g[d - i];
-                let cnorm = (hp * hp + gp * gp).sqrt();
-                let a4 = 2.0 * lam_d;
-                let a2 = mp - 4.0 * lam_d;
-                let (re, im) = if cnorm > 1e-300 {
-                    let (rho, _) = minimize_quartic(a4, a2, -cnorm, 2.0 * lam_d);
-                    // rho may come out negative if the cubic picked the
-                    // mirrored root; fold the sign into the direction.
-                    (-rho * hp / cnorm, -rho * gp / cnorm)
-                } else {
-                    // No linear tilt: pick the radius minimizing the radial
-                    // part, direction along previous iterate for stability.
-                    let rho2 = ((4.0 * lam_d - mp) / (4.0 * lam_d)).max(0.0);
-                    let rho = rho2.sqrt();
-                    let prev = r_spec[i];
-                    let pn = prev.abs();
-                    if pn > 1e-300 {
-                        (rho * prev.re / pn, rho * prev.im / pn)
-                    } else {
-                        (rho, 0.0)
-                    }
-                };
-                spec[i] = C64::new(re, im);
-                spec[d - i] = C64::new(re, -im);
-            }
-
-            r = real::irfft_full(&self.planner, &spec);
+            let mut buf = spec.clone();
+            self.plan.transform_with(&mut buf, Dir::Inverse, &mut scratch);
+            r = buf.iter().map(|c| c.re as f32).collect();
 
             // ---- Objective for the trace (eq. 15, with the new B fixed
             // implicitly — we log binarization error of the *previous* r
             // plus the orthogonality penalty of the *new* r̃; monotonicity
             // of the true objective is asserted in tests on small cases).
-            let ortho: f64 = {
-                let mut s = 0f64;
-                for c in &spec {
-                    let e = c.norm_sqr() - 1.0;
-                    s += e * e;
-                }
-                s
-            };
+            let ortho: f64 = spec.iter().map(|c| (c.norm_sqr() - 1.0).powi(2)).sum();
             self.objective_trace
                 .push(binarization_err + self.cfg.lambda * ortho);
+            iter_ms.push(t_iter.elapsed().as_secs_f64() * 1e3);
         }
+
+        self.report = TrainReport {
+            n,
+            d,
+            iters: self.cfg.iters,
+            threads,
+            deterministic: self.cfg.deterministic,
+            objective_trace: self.objective_trace.clone(),
+            iter_ms,
+            total_ms: t_run.elapsed().as_secs_f64() * 1e3,
+            spectrum_cache_bytes: cache.bytes(),
+        };
         r
     }
 
     /// §6: per-bin penalty a_l = Σ_{M} |F(x_i)_l − F(x_j)_l|² −
-    /// Σ_{D} |F(x_i)_l − F(x_j)_l|².
-    fn pair_penalty(&self, x: &Mat, ps: &PairSet) -> Vec<f64> {
+    /// Σ_{D} |F(x_i)_l − F(x_j)_l|². Reads the shared spectrum cache —
+    /// no FFTs at all (the old path re-transformed both rows per pair).
+    pub fn pair_penalty(&self, cache: &SpectrumCache, ps: &PairSet) -> Vec<f64> {
         let d = self.d;
         let mut a = vec![0f64; d];
-        let add = |i: usize, j: usize, sign: f64, a: &mut Vec<f64>| {
-            let xi = real::rfft_full(&self.planner, x.row(i));
-            let xj = real::rfft_full(&self.planner, x.row(j));
+        let mut add = |i: usize, j: usize, sign: f64| {
+            let xi = cache.row(i);
+            let xj = cache.row(j);
             for l in 0..d {
                 a[l] += sign * (xi[l] - xj[l]).norm_sqr();
             }
         };
         for &(i, j) in &ps.similar {
-            add(i, j, 1.0, &mut a);
+            add(i, j, 1.0);
         }
         for &(i, j) in &ps.dissimilar {
-            add(i, j, -1.0, &mut a);
+            add(i, j, -1.0);
         }
         a
     }
 
-    /// Evaluate the full objective (eq. 15) for given r against data x —
-    /// used by tests to verify monotone descent.
-    pub fn objective(&self, x: &Mat, r: &[f32]) -> f64 {
+    /// Evaluate the full objective (eq. 15) for given r against the
+    /// cached row spectra — used by tests to verify monotone descent and
+    /// by the equality test against [`reference::objective`]. Zero FFTs
+    /// over the data (only r's forward transform and n inverse
+    /// transforms of the spectral product).
+    pub fn objective(&self, cache: &SpectrumCache, r: &[f32]) -> f64 {
         let d = self.d;
-        let r_spec = real::rfft_full(&self.planner, r);
+        assert_eq!(cache.d, d);
+        let mut scratch = FftScratch::new();
+        let mut r_spec: Vec<C64> = r.iter().map(|v| C64::new(*v as f64, 0.0)).collect();
+        self.plan.transform_with(&mut r_spec, Dir::Forward, &mut scratch);
         let mut bin_err = 0f64;
-        for i in 0..x.rows {
-            let xf = real::rfft_full(&self.planner, x.row(i));
-            let mut yspec: Vec<C64> = xf.iter().zip(&r_spec).map(|(a, b)| *a * *b).collect();
-            self.planner.ifft(&mut yspec);
+        let mut yspec = vec![C64::ZERO; d];
+        for i in 0..cache.n {
+            yspec.copy_from_slice(cache.row(i));
+            for (y, rs) in yspec.iter_mut().zip(&r_spec) {
+                *y = *y * *rs;
+            }
+            self.plan.transform_with(&mut yspec, Dir::Inverse, &mut scratch);
             for j in 0..d {
                 let y = yspec[j].re;
                 let b = if j < self.cfg.k {
@@ -272,9 +394,422 @@ impl TimeFreqOptimizer {
     }
 }
 
+// ------------------------------------------------------------------ passes
+
+/// Per-block partial of the time-domain sweep.
+struct PassAccum {
+    h: Vec<f64>,
+    g: Vec<f64>,
+    err: f64,
+}
+
+impl PassAccum {
+    fn new(d: usize) -> PassAccum {
+        PassAccum {
+            h: vec![0f64; d],
+            g: vec![0f64; d],
+            err: 0.0,
+        }
+    }
+}
+
+/// Per-worker mutable state of the time-domain sweep.
+struct PassState {
+    /// Spectral product / time-domain projection buffer, len d.
+    yspec: Vec<C64>,
+    /// Complex buffer for FFT(bᵢ), len d.
+    cplx: Vec<C64>,
+    /// Binarized row bᵢ, len d.
+    bi: Vec<f32>,
+    fft: FftScratch,
+}
+
+impl PassState {
+    fn new(d: usize) -> PassState {
+        PassState {
+            yspec: vec![C64::ZERO; d],
+            cplx: vec![C64::ZERO; d],
+            bi: vec![0f32; d],
+            fft: FftScratch::new(),
+        }
+    }
+}
+
+/// Accumulate rows [lo, hi) of the time-domain sweep into `acc`,
+/// strictly in ascending row order (the in-block reduction order every
+/// mode shares).
+#[allow(clippy::too_many_arguments)]
+fn pass_rows(
+    cache: &SpectrumCache,
+    r_spec: &[C64],
+    k: usize,
+    plan: &Plan,
+    lo: usize,
+    hi: usize,
+    acc: &mut PassAccum,
+    st: &mut PassState,
+) {
+    let d = cache.d;
+    for i in lo..hi {
+        let xf = cache.row(i);
+        // y = R x_i via spectral product on the cached spectrum.
+        st.yspec.copy_from_slice(xf);
+        for (y, rs) in st.yspec.iter_mut().zip(r_spec) {
+            *y = *y * *rs;
+        }
+        plan.transform_with(&mut st.yspec, Dir::Inverse, &mut st.fft);
+        for j in 0..d {
+            let y = st.yspec[j].re;
+            let b = if j < k {
+                if y >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            } else {
+                0.0
+            };
+            st.bi[j] = b as f32;
+            let e = b - y;
+            acc.err += e * e;
+        }
+        for (c, v) in st.cplx.iter_mut().zip(st.bi.iter()) {
+            *c = C64::new(*v as f64, 0.0);
+        }
+        plan.transform_with(&mut st.cplx, Dir::Forward, &mut st.fft);
+        for l in 0..d {
+            // h = −2 Σ Re(x̃)∘Re(b̃) + Im(x̃)∘Im(b̃)
+            acc.h[l] -= 2.0 * (xf[l].re * st.cplx[l].re + xf[l].im * st.cplx[l].im);
+            // g = 2 Σ Im(x̃)∘Re(b̃) − Re(x̃)∘Im(b̃)
+            acc.g[l] += 2.0 * (xf[l].im * st.cplx[l].re - xf[l].re * st.cplx[l].im);
+        }
+    }
+}
+
+/// Blocks (and therefore reduction-tree shape) for `n` rows cut into
+/// `block`-row blocks.
+fn block_count(n: usize, block: usize) -> usize {
+    n.div_ceil(block.max(1)).max(1)
+}
+
+/// Worker threads a blocked pass can actually use (never more than one
+/// per block) — also what [`TrainReport::threads`] records.
+fn effective_threads(threads: usize, n: usize, block: usize) -> usize {
+    threads.clamp(1, block_count(n, block))
+}
+
+/// The one blocked fan-out behind every trainer reduction: rows [0, n)
+/// are cut into `block`-row blocks, each block accumulates into its own
+/// slot (`body` is called with the block's [lo, hi) row range), and
+/// contiguous runs of blocks go to scoped worker threads, each with its
+/// own `new_state()` worker state. Returns the per-block partials in
+/// block order — the caller folds them 0..nblocks, so the reduction
+/// tree depends only on `block`, never on the thread count. Keeping the
+/// partition/spawn/fold discipline in exactly one place is what makes
+/// the determinism contract a property of the module, not of each pass.
+fn blocked_partials<A: Send, S>(
+    n: usize,
+    block: usize,
+    threads: usize,
+    new_accum: impl Fn() -> A + Sync,
+    new_state: impl Fn() -> S + Sync,
+    body: impl Fn(usize, usize, &mut A, &mut S) + Sync,
+) -> Vec<A> {
+    let block = block.max(1);
+    let nblocks = block_count(n, block);
+    let mut partials: Vec<A> = (0..nblocks).map(|_| new_accum()).collect();
+    let threads = effective_threads(threads, n, block);
+    let run_blocks = |first_block: usize, slots: &mut [A]| {
+        let mut st = new_state();
+        for (s, acc) in slots.iter_mut().enumerate() {
+            let b = first_block + s;
+            body(b * block, ((b + 1) * block).min(n), acc, &mut st);
+        }
+    };
+    if threads <= 1 {
+        run_blocks(0, &mut partials[..]);
+    } else {
+        let bpt = nblocks.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (t, chunk) in partials.chunks_mut(bpt).enumerate() {
+                let run_blocks = &run_blocks;
+                scope.spawn(move || run_blocks(t * bpt, chunk));
+            }
+        });
+    }
+    partials
+}
+
+/// The parallel time-domain sweep, as a blocked reduction over
+/// [`PassAccum`] partials.
+fn time_domain_pass(
+    cache: &SpectrumCache,
+    r_spec: &[C64],
+    k: usize,
+    plan: &Plan,
+    block: usize,
+    threads: usize,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let d = cache.d;
+    let partials = blocked_partials(
+        cache.n,
+        block,
+        threads,
+        || PassAccum::new(d),
+        || PassState::new(d),
+        |lo, hi, acc: &mut PassAccum, st: &mut PassState| {
+            pass_rows(cache, r_spec, k, plan, lo, hi, acc, st);
+        },
+    );
+    let mut h = vec![0f64; d];
+    let mut g = vec![0f64; d];
+    let mut err = 0f64;
+    for p in &partials {
+        for l in 0..d {
+            h[l] += p.h[l];
+            g[l] += p.g[l];
+        }
+        err += p.err;
+    }
+    (h, g, err)
+}
+
+/// Blocked-parallel M accumulation: m_l = Σ_i |F(x_i)_l|², same
+/// reduction discipline as [`time_domain_pass`].
+fn accumulate_m(cache: &SpectrumCache, block: usize, threads: usize) -> Vec<f64> {
+    let d = cache.d;
+    let partials = blocked_partials(
+        cache.n,
+        block,
+        threads,
+        || vec![0f64; d],
+        || (),
+        |lo, hi, acc: &mut Vec<f64>, _: &mut ()| {
+            for i in lo..hi {
+                for (l, c) in cache.row(i).iter().enumerate() {
+                    acc[l] += c.norm_sqr();
+                }
+            }
+        },
+    );
+    let mut m = vec![0f64; d];
+    for p in &partials {
+        for l in 0..d {
+            m[l] += p[l];
+        }
+    }
+    m
+}
+
+/// The frequency-domain pass: closed-form per-bin minimizers given the
+/// accumulated (M, h, g) and the previous spectrum (for the tilt-free
+/// tie-break). Shared verbatim by the trainer and [`reference`] so the
+/// two paths can only diverge in how they *accumulate*, never in how
+/// they solve. (λ = 0 would degenerate the quartics; clamp keeps them
+/// convex.)
+fn solve_bins(
+    m: &[f64],
+    h: &[f64],
+    g: &[f64],
+    r_spec: &[C64],
+    lambda: f64,
+    d: usize,
+) -> Vec<C64> {
+    let lam_d = (lambda * d as f64).max(1e-9);
+    let mut spec = vec![C64::ZERO; d];
+
+    // DC bin (eq. 21): min m₀t² + h₀t + λd(t²−1)², t real.
+    // = λd·t⁴ + (m₀ − 2λd)t² + h₀t + λd
+    let (t0, _) = minimize_quartic(lam_d, m[0] - 2.0 * lam_d, h[0], lam_d);
+    spec[0] = C64::new(t0, 0.0);
+
+    // Nyquist bin for even d — same 1-variable form.
+    if d % 2 == 0 {
+        let l = d / 2;
+        let (t, _) = minimize_quartic(lam_d, m[l] - 2.0 * lam_d, h[l], lam_d);
+        spec[l] = C64::new(t, 0.0);
+    }
+
+    // Conjugate pairs (eq. 22): variables a = Re(r̃_i), b = Im(r̃_i).
+    //   f(a,b) = m'(a²+b²) + 2λd(a²+b²−1)² + h'a + g'b
+    // with m' = m_i + m_{d−i}, h' = h_i + h_{d−i}, g' = g_i − g_{d−i}.
+    // Radial reduction: (a,b) = −ρ·(h',g')/‖(h',g')‖ and minimize
+    //   f(ρ) = 2λd·ρ⁴ + (m' − 4λd)ρ² − ‖(h',g')‖ρ  over ρ ∈ R.
+    for i in 1..=(d - 1) / 2 {
+        let mp = m[i] + m[d - i];
+        let hp = h[i] + h[d - i];
+        let gp = g[i] - g[d - i];
+        let cnorm = (hp * hp + gp * gp).sqrt();
+        let a4 = 2.0 * lam_d;
+        let a2 = mp - 4.0 * lam_d;
+        let (re, im) = if cnorm > 1e-300 {
+            let (rho, _) = minimize_quartic(a4, a2, -cnorm, 2.0 * lam_d);
+            // rho may come out negative if the cubic picked the
+            // mirrored root; fold the sign into the direction.
+            (-rho * hp / cnorm, -rho * gp / cnorm)
+        } else {
+            // No linear tilt: pick the radius minimizing the radial
+            // part, direction along previous iterate for stability.
+            let rho2 = ((4.0 * lam_d - mp) / (4.0 * lam_d)).max(0.0);
+            let rho = rho2.sqrt();
+            let prev = r_spec[i];
+            let pn = prev.abs();
+            if pn > 1e-300 {
+                (rho * prev.re / pn, rho * prev.im / pn)
+            } else {
+                (rho, 0.0)
+            }
+        };
+        spec[i] = C64::new(re, im);
+        spec[d - i] = C64::new(re, -im);
+    }
+    spec
+}
+
+// --------------------------------------------------------------- reference
+
+/// The pre-spectrum-cache serial trainer, kept verbatim as the
+/// measurement baseline for `cargo bench --bench train_throughput` and
+/// as the equality oracle for the cache refactor's tests: it recomputes
+/// `F(xᵢ)` for every row in every iteration (and again in every
+/// objective evaluation), exactly like the old `TimeFreqOptimizer`.
+/// Never use it to train — it exists to be compared against.
+pub mod reference {
+    use super::*;
+    use crate::fft::real;
+
+    /// The old serial run loop (per-row re-FFT everywhere). Returns the
+    /// learned r and the objective trace.
+    pub fn run(
+        planner: &Planner,
+        d: usize,
+        cfg: &TimeFreqConfig,
+        x: &Mat,
+        r0: &[f32],
+        pairs: Option<&PairSet>,
+    ) -> (Vec<f32>, Vec<f64>) {
+        let n = x.rows;
+        assert_eq!(x.cols, d);
+        assert_eq!(r0.len(), d);
+
+        let mut m = vec![0f64; d];
+        for i in 0..n {
+            let xf = real::rfft_full(planner, x.row(i));
+            for (l, c) in xf.iter().enumerate() {
+                m[l] += c.norm_sqr();
+            }
+        }
+        if let Some(ps) = pairs {
+            if cfg.mu != 0.0 {
+                let a = pair_penalty(planner, d, x, ps);
+                for l in 0..d {
+                    m[l] += cfg.mu * a[l];
+                }
+            }
+        }
+
+        let mut r = r0.to_vec();
+        let mut trace = Vec::new();
+
+        for _iter in 0..cfg.iters {
+            let r_spec = real::rfft_full(planner, &r);
+            let mut h = vec![0f64; d];
+            let mut g = vec![0f64; d];
+            let mut binarization_err = 0f64;
+
+            let mut bi = vec![0f32; d];
+            for i in 0..n {
+                let xf = real::rfft_full(planner, x.row(i));
+                let mut yspec: Vec<C64> =
+                    xf.iter().zip(&r_spec).map(|(a, b)| *a * *b).collect();
+                planner.ifft(&mut yspec);
+                for j in 0..d {
+                    let y = yspec[j].re;
+                    let b = if j < cfg.k {
+                        if y >= 0.0 {
+                            1.0
+                        } else {
+                            -1.0
+                        }
+                    } else {
+                        0.0
+                    };
+                    bi[j] = b as f32;
+                    let e = b - y;
+                    binarization_err += e * e;
+                }
+                let bf = real::rfft_full(planner, &bi);
+                for l in 0..d {
+                    h[l] -= 2.0 * (xf[l].re * bf[l].re + xf[l].im * bf[l].im);
+                    g[l] += 2.0 * (xf[l].im * bf[l].re - xf[l].re * bf[l].im);
+                }
+            }
+
+            let spec = solve_bins(&m, &h, &g, &r_spec, cfg.lambda, d);
+            r = real::irfft_full(planner, &spec);
+
+            let ortho: f64 = spec.iter().map(|c| (c.norm_sqr() - 1.0).powi(2)).sum();
+            trace.push(binarization_err + cfg.lambda * ortho);
+        }
+        (r, trace)
+    }
+
+    /// The old objective evaluation: one fresh FFT per row per call.
+    pub fn objective(
+        planner: &Planner,
+        d: usize,
+        cfg: &TimeFreqConfig,
+        x: &Mat,
+        r: &[f32],
+    ) -> f64 {
+        let r_spec = real::rfft_full(planner, r);
+        let mut bin_err = 0f64;
+        for i in 0..x.rows {
+            let xf = real::rfft_full(planner, x.row(i));
+            let mut yspec: Vec<C64> = xf.iter().zip(&r_spec).map(|(a, b)| *a * *b).collect();
+            planner.ifft(&mut yspec);
+            for j in 0..d {
+                let y = yspec[j].re;
+                let b = if j < cfg.k {
+                    if y >= 0.0 {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                } else {
+                    0.0
+                };
+                let e = b - y;
+                bin_err += e * e;
+            }
+        }
+        let ortho: f64 = r_spec.iter().map(|c| (c.norm_sqr() - 1.0).powi(2)).sum();
+        bin_err + cfg.lambda * ortho
+    }
+
+    fn pair_penalty(planner: &Planner, d: usize, x: &Mat, ps: &PairSet) -> Vec<f64> {
+        let mut a = vec![0f64; d];
+        let mut add = |i: usize, j: usize, sign: f64| {
+            let xi = real::rfft_full(planner, x.row(i));
+            let xj = real::rfft_full(planner, x.row(j));
+            for l in 0..d {
+                a[l] += sign * (xi[l] - xj[l]).norm_sqr();
+            }
+        };
+        for &(i, j) in &ps.similar {
+            add(i, j, 1.0);
+        }
+        for &(i, j) in &ps.dissimilar {
+            add(i, j, -1.0);
+        }
+        a
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fft::real;
     use crate::util::rng::Pcg64;
 
     fn make_data(n: usize, d: usize, seed: u64) -> Mat {
@@ -293,15 +828,12 @@ mod tests {
             let mut rng = Pcg64::new(4);
             let r0 = rng.normal_vec(d);
             let planner = Planner::new();
-            let mut opt =
-                TimeFreqOptimizer::new(d, TimeFreqConfig::new(d), planner.clone());
-            let obj_init = opt.objective(&x, &r0);
-            let r = opt.run(&x, &r0, None);
-            let obj_final = opt.objective(&x, &r);
-            assert!(
-                obj_final < obj_init,
-                "d={d}: {obj_final} !< {obj_init}"
-            );
+            let mut opt = TimeFreqOptimizer::new(d, TimeFreqConfig::new(d), planner.clone());
+            let cache = SpectrumCache::build(&x, &planner, 1);
+            let obj_init = opt.objective(&cache, &r0);
+            let r = opt.run_cached(&cache, &r0, None);
+            let obj_final = opt.objective(&cache, &r);
+            assert!(obj_final < obj_init, "d={d}: {obj_final} !< {obj_init}");
             // Per-step trace values mix old-B binarization error with
             // new-r orthogonality, so trace[0] still reflects the random
             // init's scale; from iteration 1 on the trace must descend.
@@ -337,10 +869,11 @@ mod tests {
         let mut rng = Pcg64::new(10);
         let r0 = rng.normal_vec(d);
         let planner = Planner::new();
-        let mut opt = TimeFreqOptimizer::new(d, TimeFreqConfig::new(8), planner);
-        let o0 = opt.objective(&x, &r0);
-        let r = opt.run(&x, &r0, None);
-        assert!(opt.objective(&x, &r) < o0);
+        let mut opt = TimeFreqOptimizer::new(d, TimeFreqConfig::new(8), planner.clone());
+        let cache = SpectrumCache::build(&x, &planner, 1);
+        let o0 = opt.objective(&cache, &r0);
+        let r = opt.run_cached(&cache, &r0, None);
+        assert!(opt.objective(&cache, &r) < o0);
     }
 
     #[test]
@@ -381,5 +914,103 @@ mod tests {
         let r = opt.run(&x, &r0, None);
         let spec = real::rfft_full(&planner, &r);
         assert!(real::symmetry_error(&spec) < 1e-6);
+    }
+
+    #[test]
+    fn cached_objective_equals_reference() {
+        // The satellite contract: objective() reading the spectrum cache
+        // computes the exact same arithmetic, in the same order, as the
+        // old per-row-re-FFT path — equality, not approximation.
+        for (n, d) in [(25usize, 16usize), (40, 21), (130, 32)] {
+            let x = make_data(n, d, 100 + d as u64);
+            let mut rng = Pcg64::new(101);
+            let r = rng.normal_vec(d);
+            let planner = Planner::new();
+            let cfg = TimeFreqConfig::new(d.min(12));
+            let opt = TimeFreqOptimizer::new(d, cfg.clone(), planner.clone());
+            let cache = SpectrumCache::build(&x, &planner, 4);
+            let cached = opt.objective(&cache, &r);
+            let legacy = reference::objective(&planner, d, &cfg, &x, &r);
+            assert!(
+                (cached - legacy).abs() <= 1e-9 * legacy.abs().max(1.0),
+                "n={n} d={d}: cached {cached} vs legacy {legacy}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_block_run_is_bit_identical_to_reference() {
+        // With n ≤ DETERMINISTIC_BLOCK the blocked reduction degenerates
+        // to the legacy running sum, so the whole refactor must be
+        // bit-preserving there: same r, same trace, to the last ulp.
+        for d in [16usize, 21] {
+            let n = 40;
+            assert!(n <= DETERMINISTIC_BLOCK);
+            let x = make_data(n, d, 200 + d as u64);
+            let mut rng = Pcg64::new(201);
+            let r0 = rng.normal_vec(d);
+            let planner = Planner::new();
+            let mut cfg = TimeFreqConfig::new(d);
+            cfg.iters = 4;
+            let (r_legacy, trace_legacy) =
+                reference::run(&planner, d, &cfg, &x, &r0, None);
+            let mut opt = TimeFreqOptimizer::new(d, cfg, planner);
+            let r_new = opt.run(&x, &r0, None);
+            for (a, b) in r_new.iter().zip(&r_legacy) {
+                assert_eq!(a.to_bits(), b.to_bits(), "d={d}");
+            }
+            for (a, b) in opt.objective_trace.iter().zip(&trace_legacy) {
+                assert_eq!(a.to_bits(), b.to_bits(), "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        // The deterministic-flag contract, in-module smoke version (the
+        // full property sweep lives in rust/tests/train_parallel.rs):
+        // thread count must not change a single output bit.
+        let d = 24;
+        let n = 150; // several DETERMINISTIC_BLOCK blocks
+        let x = make_data(n, d, 300);
+        let mut rng = Pcg64::new(301);
+        let r0 = rng.normal_vec(d);
+        let planner = Planner::new();
+        let mut cfg = TimeFreqConfig::new(d);
+        cfg.iters = 4;
+        cfg.deterministic = true;
+        cfg.threads = 1;
+        let mut serial = TimeFreqOptimizer::new(d, cfg.clone(), planner.clone());
+        let r_serial = serial.run(&x, &r0, None);
+        cfg.threads = 4;
+        let mut par = TimeFreqOptimizer::new(d, cfg, planner);
+        let r_par = par.run(&x, &r0, None);
+        for (a, b) in r_par.iter().zip(&r_serial) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // 150 rows / 64-row blocks = 3 blocks, so 4 requested workers
+        // clamp to the 3 the pass can actually use.
+        assert_eq!(par.report.threads, 3);
+        assert_eq!(serial.report.threads, 1);
+    }
+
+    #[test]
+    fn report_records_the_run() {
+        let d = 16;
+        let x = make_data(30, d, 400);
+        let mut rng = Pcg64::new(401);
+        let r0 = rng.normal_vec(d);
+        let mut cfg = TimeFreqConfig::new(d);
+        cfg.iters = 3;
+        let mut opt = TimeFreqOptimizer::new(d, cfg, Planner::new());
+        let _ = opt.run(&x, &r0, None);
+        let rep = &opt.report;
+        assert_eq!(rep.n, 30);
+        assert_eq!(rep.d, d);
+        assert_eq!(rep.iters, 3);
+        assert_eq!(rep.objective_trace.len(), 3);
+        assert_eq!(rep.iter_ms.len(), 3);
+        assert_eq!(rep.spectrum_cache_bytes, 30 * d * 16);
+        assert!(rep.total_ms >= 0.0);
     }
 }

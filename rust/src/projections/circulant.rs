@@ -25,9 +25,10 @@ use crate::fft::{real, C64, Dir, FftScratch, Plan, Planner};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
-/// Below this total work (rows × d) the scoped-thread fan-out costs more
-/// than it saves and `encode_batch_into` degrades to a serial sweep.
-const PARALLEL_MIN_WORK: usize = 1 << 14;
+// Below a total work (rows × d) of [`crate::tune::min_parallel_work`] —
+// calibrated once per process, fixed 2^14 fallback — the scoped-thread
+// fan-out costs more than it saves and `encode_batch_into` degrades to a
+// serial sweep. The trainer fan-out consults the same threshold.
 
 /// Per-thread mutable state for one projection's encode/project calls.
 /// Buffers grow to the projection's d on first use and are reused; keep
@@ -293,21 +294,40 @@ impl CirculantProjection {
         out: &mut BitCode,
         pool: &mut ScratchPool,
     ) {
-        assert!(k <= self.d);
         assert_eq!(out.n, rows.len());
         assert_eq!(out.bits, k);
+        self.encode_batch_words(rows, k, &mut out.data, out.words_per_code, pool);
+    }
+
+    /// The batch engine over a bare packed-word window: row i of `rows`
+    /// is encoded into `words[i*wpc .. (i+1)*wpc]`. This is what lets
+    /// [`crate::coordinator::EmbeddingService::encode_corpus`] stream a
+    /// large corpus through the fan-out in bounded slabs — each slab
+    /// targets a disjoint window of one big `BitCode` without any copy
+    /// or stitching step. `wpc` must equal `k.div_ceil(64)` (one
+    /// `BitCode` row).
+    pub fn encode_batch_words(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        words: &mut [u64],
+        wpc: usize,
+        pool: &mut ScratchPool,
+    ) {
+        assert!(k <= self.d);
+        assert_eq!(wpc, k.div_ceil(64));
+        assert_eq!(words.len(), rows.len() * wpc);
         let n = rows.len();
         if n == 0 {
             return;
         }
-        let wpc = out.words_per_code;
         let cores = std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1);
         let threads = cores.min(n);
-        if threads <= 1 || n * self.d < PARALLEL_MIN_WORK {
+        if threads <= 1 || n * self.d < crate::tune::min_parallel_work() {
             let scratch = &mut pool.slots_mut(1)[0];
-            for (row, words) in rows.iter().zip(out.data.chunks_mut(wpc)) {
+            for (row, words) in rows.iter().zip(words.chunks_mut(wpc)) {
                 self.encode_bits_into(row, k, words, scratch);
             }
             return;
@@ -318,7 +338,7 @@ impl CirculantProjection {
         let chunk = n.div_ceil(threads);
         std::thread::scope(|scope| {
             let mut rest_rows = rows;
-            let mut rest_words = out.data.as_mut_slice();
+            let mut rest_words = words;
             for scratch in pool.slots_mut(threads) {
                 if rest_rows.is_empty() {
                     break;

@@ -1,0 +1,147 @@
+//! Host calibration for the parallel fan-outs.
+//!
+//! Both scoped-thread fan-outs in this crate — the batch-encode engine
+//! ([`crate::projections::CirculantProjection::encode_batch_into`]) and
+//! the CBE-opt trainer ([`crate::opt::TimeFreqOptimizer`]) — degrade to a
+//! serial sweep when the total work (rows × d) is too small to amortize
+//! thread spawn/join. The cutover used to be a fixed `1 << 14`; the right
+//! value depends on the host (spawn cost, core count, FFT throughput), so
+//! [`min_parallel_work`] calibrates it once per process with a micro-probe
+//! and every fan-out reads the same calibrated threshold.
+//!
+//! The probe measures two quantities:
+//!
+//! * **spawn overhead** — the wall time of a `std::thread::scope` that
+//!   spawns one no-op thread per core (median of a few trials), and
+//! * **per-element FFT cost** — the amortized per-element time of a warm
+//!   radix-2 transform (the dominant kernel under both fan-outs).
+//!
+//! Fanning out pays once the serial time exceeds a few multiples of the
+//! spawn overhead, so the threshold is `work` such that
+//! `work × t_elem ≈ OVERHEAD_FACTOR × t_spawn`, clamped between
+//! [`MIN_WORK_FLOOR`] and [`MIN_WORK_CEIL`].
+//!
+//! Calibration never changes *results*: both fan-outs are bit-exact
+//! against their serial paths at any thread count, so a per-host
+//! threshold only moves the speed cliff, never the output.
+//!
+//! Env knobs:
+//! * `CBE_MIN_PARALLEL_WORK=N` — skip probing, use N (clamp still
+//!   applies; useful for benches and deterministic CI timing);
+//! * `CBE_CALIBRATE=0` — disable probing, use the fixed default.
+//!
+//! The probe also falls back to the default when its measurements are
+//! degenerate (zero-resolution timer, absurd spawn cost) — noisy hosts
+//! get the known-good fixed threshold rather than a garbage one.
+
+use crate::fft::{C64, Dir, FftScratch, Plan};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// The pre-calibration default (and the fallback when probing is
+/// disabled or noisy): the fixed cutover the encode engine shipped with.
+pub const DEFAULT_MIN_WORK: usize = 1 << 14;
+/// Calibration clamp: never fan out below this work even on a host that
+/// probes as spawn-cheap (scheduler noise dominates down there).
+pub const MIN_WORK_FLOOR: usize = 1 << 12;
+/// Calibration clamp: always fan out above this work even on a host that
+/// probes as spawn-expensive (the probe can only overestimate so much).
+pub const MIN_WORK_CEIL: usize = 1 << 18;
+
+/// Serial time ≈ this many spawn overheads before the fan-out engages.
+const OVERHEAD_FACTOR: f64 = 4.0;
+/// Probe transform length (radix-2, warm plan — the hot-loop kernel).
+const PROBE_N: usize = 256;
+/// Transforms per timing trial.
+const PROBE_REPS: usize = 64;
+
+static MIN_WORK: OnceLock<usize> = OnceLock::new();
+
+/// The calibrated minimum total work (rows × d) for a scoped-thread
+/// fan-out. Probes once per process on first call; every later call is a
+/// single atomic load.
+pub fn min_parallel_work() -> usize {
+    *MIN_WORK.get_or_init(calibrate)
+}
+
+fn calibrate() -> usize {
+    if let Ok(v) = std::env::var("CBE_MIN_PARALLEL_WORK") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.clamp(MIN_WORK_FLOOR, MIN_WORK_CEIL);
+        }
+    }
+    if std::env::var("CBE_CALIBRATE").is_ok_and(|v| v == "0") {
+        return DEFAULT_MIN_WORK;
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    if cores <= 1 {
+        // No fan-out will ever engage; the threshold is moot.
+        return DEFAULT_MIN_WORK;
+    }
+
+    let t_spawn = probe_spawn(cores);
+    let t_elem = probe_fft_per_elem();
+    // Noise guards: a zero measurement means the timer resolution beat
+    // the probe; a spawn cost above 50 ms means the host is swamped.
+    if t_spawn == Duration::ZERO
+        || t_elem <= 0.0
+        || t_spawn > Duration::from_millis(50)
+    {
+        return DEFAULT_MIN_WORK;
+    }
+
+    let work = OVERHEAD_FACTOR * t_spawn.as_secs_f64() / t_elem;
+    (work as usize).clamp(MIN_WORK_FLOOR, MIN_WORK_CEIL)
+}
+
+/// Median wall time of a scope spawning one no-op thread per core.
+fn probe_spawn(cores: usize) -> Duration {
+    let mut trials: Vec<Duration> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for _ in 0..cores {
+                    scope.spawn(|| std::hint::black_box(0u64));
+                }
+            });
+            t0.elapsed()
+        })
+        .collect();
+    trials.sort();
+    trials[trials.len() / 2]
+}
+
+/// Amortized per-element seconds of a warm radix-2 transform. The encode
+/// and train hot loops both run ~2–3 transforms per row, so scale by 2.5
+/// to approximate per-element *row* cost.
+fn probe_fft_per_elem() -> f64 {
+    let plan = Plan::new(PROBE_N);
+    let mut scratch = FftScratch::new();
+    let mut buf: Vec<C64> = (0..PROBE_N)
+        .map(|i| C64::new((i % 7) as f64 - 3.0, (i % 5) as f64 - 2.0))
+        .collect();
+    // Warm-up (twiddle tables are prebuilt; this warms caches).
+    plan.transform_with(&mut buf, Dir::Forward, &mut scratch);
+    let t0 = Instant::now();
+    for _ in 0..PROBE_REPS {
+        plan.transform_with(&mut buf, Dir::Forward, &mut scratch);
+        std::hint::black_box(&buf);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    2.5 * dt / (PROBE_REPS * PROBE_N) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_is_clamped_and_stable() {
+        let a = min_parallel_work();
+        let b = min_parallel_work();
+        assert_eq!(a, b, "calibration must be one-shot");
+        assert!((MIN_WORK_FLOOR..=MIN_WORK_CEIL).contains(&a), "work={a}");
+    }
+}

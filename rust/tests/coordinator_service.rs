@@ -4,7 +4,7 @@
 //! proptest_lite. The service no longer needs compiled artifacts (the
 //! manifest, when present, only sizes batches), so these run everywhere.
 
-use cbe::coordinator::{BatcherConfig, EmbeddingService, ServiceConfig};
+use cbe::coordinator::{BatcherConfig, EmbeddingService, RetrainConfig, ServiceConfig};
 use cbe::fft::Planner;
 use cbe::index::IndexBackend;
 use cbe::projections::CirculantProjection;
@@ -31,6 +31,7 @@ fn service(d: usize, bits: usize, seed: u64) -> (EmbeddingService, Vec<f32>, Vec
                 max_wait: Duration::from_millis(1),
             },
             index: IndexBackend::Auto,
+            retrain: RetrainConfig::default(),
         },
         r.clone(),
         signs.clone(),
@@ -122,6 +123,79 @@ fn encode_corpus_matches_request_path() {
         assert_eq!(codes.code(i), via_request.code(0), "row {i}");
     }
     assert!(svc.encode_corpus(&[vec![0.0; 3]]).is_err());
+}
+
+#[test]
+fn retrain_hot_swaps_without_dropping_requests() {
+    // Index a corpus (fills the retrain reservoir), then race waves of
+    // in-flight encode requests against a background Retrain. Contract:
+    // no request is dropped, every reply matches exactly one of the two
+    // model versions (batch-atomic swap), and post-swap traffic is
+    // served by the new model.
+    let (svc, _, _) = service(64, 32, 21);
+    let mut rng = Pcg64::new(22);
+    let rows: Vec<Vec<f32>> = (0..300)
+        .map(|_| {
+            let mut v = rng.normal_vec(64);
+            cbe::util::l2_normalize(&mut v);
+            v
+        })
+        .collect();
+    let _ = svc.build_index(&rows).unwrap();
+    assert!(svc.corpus_sample_len() >= 2, "reservoir not fed by encode_corpus");
+    assert_eq!(svc.model_version(), 0);
+    let old_proj = svc.projection();
+
+    let queries: Vec<Vec<f32>> = (0..48).map(|_| rng.normal_vec(64)).collect();
+    let pending = svc.retrain().unwrap();
+    let mut responses: Vec<(usize, Vec<f32>)> = Vec::new();
+    let outcome = loop {
+        let handles: Vec<_> = queries
+            .iter()
+            .map(|q| svc.encode_async(q.clone()).unwrap())
+            .collect();
+        for (qi, h) in handles.into_iter().enumerate() {
+            let resp = h.recv().expect("in-flight request dropped during retrain");
+            assert_eq!(resp.signs.len(), 32);
+            responses.push((qi, resp.signs));
+        }
+        match pending.try_recv() {
+            Ok(result) => break result.expect("retrain failed"),
+            Err(std::sync::mpsc::TryRecvError::Empty) => {}
+            Err(e) => panic!("retrain reply lost: {e:?}"),
+        }
+    };
+    assert_eq!(outcome.version, 1);
+    assert!(outcome.rows_used >= 2);
+    assert!(!outcome.report.objective_trace.is_empty());
+    assert_eq!(svc.model_version(), 1);
+
+    let new_proj = svc.projection();
+    assert!(!std::sync::Arc::ptr_eq(&old_proj, &new_proj));
+    // Snapshot consistency: every reply came from one whole model.
+    for (qi, signs) in &responses {
+        let old_code = old_proj.encode(&queries[*qi], 32);
+        let new_code = new_proj.encode(&queries[*qi], 32);
+        assert!(
+            *signs == old_code || *signs == new_code,
+            "reply for query {qi} matches neither model version"
+        );
+    }
+    // Post-swap requests are served by the new model.
+    let resp = svc.encode(queries[0].clone()).unwrap();
+    assert_eq!(resp.signs, new_proj.encode(&queries[0], 32));
+}
+
+#[test]
+fn retrain_without_corpus_reports_error_and_keeps_model() {
+    let (svc, _, _) = service(32, 16, 23);
+    let err = svc.retrain_blocking().unwrap_err();
+    assert!(format!("{err}").contains("corpus sample"), "{err}");
+    assert_eq!(svc.model_version(), 0);
+    // Service still serves after the refused retrain.
+    let mut rng = Pcg64::new(24);
+    let resp = svc.encode(rng.normal_vec(32)).unwrap();
+    assert_eq!(resp.signs.len(), 16);
 }
 
 // ---------------------------------------------------------- properties

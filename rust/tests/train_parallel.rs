@@ -1,0 +1,197 @@
+//! Integration properties of the spectrum-cached parallel trainer:
+//!
+//! * **Determinism** — under `TimeFreqConfig::deterministic`, parallel
+//!   training is bit-for-bit identical to the serial path (threads = 1)
+//!   for every shape class the optimizer special-cases: even d (Nyquist
+//!   bin), odd d (Bluestein plans, no Nyquist), k < d (zeroed B
+//!   columns), and §6 semi-supervised pairs.
+//! * **Monotone objective** — the per-iteration trace still descends
+//!   (from iteration 1; trace[0] mixes the random init's binarization
+//!   error) when training runs parallel.
+//! * **Cache correctness** — `objective` reading the shared
+//!   [`SpectrumCache`] equals the old per-row-re-FFT evaluation on the
+//!   same r.
+
+use cbe::encoders::CbeTrainer;
+use cbe::fft::Planner;
+use cbe::linalg::Mat;
+use cbe::opt::timefreq::{reference, DETERMINISTIC_BLOCK};
+use cbe::opt::{PairSet, SpectrumCache, TimeFreqConfig, TimeFreqOptimizer};
+use cbe::proptest_lite::forall;
+use cbe::util::rng::Pcg64;
+
+fn make_data(n: usize, d: usize, rng: &mut Pcg64) -> Mat {
+    let mut x = Mat::randn(n, d, rng);
+    for i in 0..n {
+        cbe::util::l2_normalize(x.row_mut(i));
+    }
+    x
+}
+
+fn make_pairs(n: usize, count: usize, rng: &mut Pcg64) -> PairSet {
+    let mut ps = PairSet::default();
+    for t in 0..count {
+        let i = rng.below(n as u64) as usize;
+        let j = (i + 1 + rng.below((n - 1) as u64) as usize) % n;
+        if t % 2 == 0 {
+            ps.similar.push((i, j));
+        } else {
+            ps.dissimilar.push((i, j));
+        }
+    }
+    ps
+}
+
+/// Train twice — serial and at `threads` workers — and require bitwise
+/// identical learned r and objective trace.
+fn assert_parity(
+    d: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    pairs: Option<&PairSet>,
+    seed: u64,
+) {
+    let mut rng = Pcg64::new(seed);
+    let x = make_data(n, d, &mut rng);
+    let r0 = rng.normal_vec(d);
+    let planner = Planner::new();
+
+    let mut cfg = TimeFreqConfig::new(k);
+    cfg.iters = 3;
+    cfg.mu = if pairs.is_some() { 0.7 } else { 0.0 };
+    cfg.deterministic = true;
+
+    cfg.threads = 1;
+    let mut serial = TimeFreqOptimizer::new(d, cfg.clone(), planner.clone());
+    let r_serial = serial.run(&x, &r0, pairs);
+
+    cfg.threads = threads;
+    let mut parallel = TimeFreqOptimizer::new(d, cfg, planner);
+    let r_parallel = parallel.run(&x, &r0, pairs);
+
+    // The report records the fan-out actually used: one worker per
+    // reduction block at most.
+    let nblocks = n.div_ceil(DETERMINISTIC_BLOCK).max(1);
+    assert_eq!(parallel.report.threads, threads.min(nblocks));
+    for (i, (a, b)) in r_parallel.iter().zip(&r_serial).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "d={d} k={k} n={n} threads={threads}: r[{i}] {a} != {b}"
+        );
+    }
+    for (a, b) in parallel
+        .objective_trace
+        .iter()
+        .zip(&serial.objective_trace)
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "trace diverged");
+    }
+}
+
+#[test]
+fn parallel_equals_serial_even_d() {
+    assert_parity(32, 32, 170, 4, None, 1);
+}
+
+#[test]
+fn parallel_equals_serial_odd_d() {
+    assert_parity(27, 27, 150, 4, None, 2);
+}
+
+#[test]
+fn parallel_equals_serial_k_less_than_d() {
+    assert_parity(30, 9, 160, 4, None, 3);
+}
+
+#[test]
+fn parallel_equals_serial_semi_supervised() {
+    let mut rng = Pcg64::new(4);
+    let n = 140;
+    let pairs = make_pairs(n, 60, &mut rng);
+    assert_parity(24, 24, n, 4, Some(&pairs), 5);
+}
+
+#[test]
+fn parallel_equals_serial_property_sweep() {
+    // Random shapes, random thread counts — including thread counts that
+    // don't divide the block count and exceed the row count.
+    forall("parallel trainer ≡ serial trainer", 12, |g| {
+        let d = g.usize_in(4, 40);
+        let k = g.usize_in(1, d);
+        let n = g.usize_in(2, 200);
+        let threads = g.usize_in(2, 8);
+        assert_parity(d, k, n, threads, None, 1000 + n as u64);
+    });
+}
+
+#[test]
+fn parallel_objective_stays_monotone() {
+    let d = 30;
+    let n = 180;
+    let mut rng = Pcg64::new(6);
+    let x = make_data(n, d, &mut rng);
+    let r0 = rng.normal_vec(d);
+    let mut cfg = TimeFreqConfig::new(d);
+    cfg.iters = 8;
+    cfg.threads = 4;
+    let planner = Planner::new();
+    let mut opt = TimeFreqOptimizer::new(d, cfg, planner.clone());
+    let cache = SpectrumCache::build(&x, &planner, 4);
+    let o0 = opt.objective(&cache, &r0);
+    let r = opt.run_cached(&cache, &r0, None);
+    assert!(opt.objective(&cache, &r) < o0);
+    for w in opt.objective_trace[1..].windows(2) {
+        assert!(w[1] <= w[0] + 1e-6, "trace not monotone: {w:?}");
+    }
+}
+
+#[test]
+fn cached_objective_equals_old_path_property() {
+    forall("cache objective ≡ per-row-FFT objective", 15, |g| {
+        let d = g.usize_in(2, 48);
+        let k = g.usize_in(1, d);
+        let n = g.usize_in(1, 120);
+        let x = make_data(n, d, g.rng());
+        let r = g.normal_vec(d);
+        let planner = Planner::new();
+        let cfg = TimeFreqConfig::new(k);
+        let opt = TimeFreqOptimizer::new(d, cfg.clone(), planner.clone());
+        let cache = SpectrumCache::build(&x, &planner, 3);
+        let cached = opt.objective(&cache, &r);
+        let legacy = reference::objective(&planner, d, &cfg, &x, &r);
+        assert!(
+            (cached - legacy).abs() <= 1e-9 * legacy.abs().max(1.0),
+            "d={d} k={k} n={n}: {cached} vs {legacy}"
+        );
+    });
+}
+
+#[test]
+fn trained_encoder_is_thread_count_invariant_end_to_end() {
+    // The whole CbeTrainer pipeline (sign flips, init, training, model
+    // build) must give the same *codes* whether it trained serial or
+    // parallel.
+    let d = 28;
+    let n = 130;
+    let mut rng = Pcg64::new(7);
+    let x = make_data(n, d, &mut rng);
+    let probe: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(d)).collect();
+
+    let mut cfg = TimeFreqConfig::new(d);
+    cfg.iters = 3;
+    cfg.deterministic = true;
+    cfg.threads = 1;
+    let serial = CbeTrainer::new(cfg.clone()).seed(9).train(&x);
+    cfg.threads = 4;
+    let parallel = CbeTrainer::new(cfg).seed(9).train(&x);
+
+    for p in &probe {
+        assert_eq!(serial.proj.encode(p, d), parallel.proj.encode(p, d));
+    }
+    assert_eq!(
+        serial.report.objective_trace,
+        parallel.report.objective_trace
+    );
+}
