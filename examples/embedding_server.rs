@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         "CBE-opt trained in {:.1}s ({} threads, spectrum cache {:.1} MiB)",
         enc.report.total_ms / 1e3,
         enc.report.threads,
-        enc.report.spectrum_cache_bytes as f64 / (1 << 20) as f64
+        enc.report.cache_bytes as f64 / (1 << 20) as f64
     );
 
     // Start the service over the registered native projection.

@@ -1,25 +1,37 @@
-//! Bench: the spectrum-cached trainer vs the old per-row-FFT serial
-//! loop — CBE-opt training throughput at d ∈ {256, 1024}. Three arms:
+//! Bench: the half-spectrum trainer vs the layouts it replaced — CBE-opt
+//! training throughput at d ∈ {256, 1024}. Four arms:
 //!
-//! * `legacy`   — `opt::timefreq::reference::run`, the pre-refactor
-//!   serial trainer (recomputes every row FFT in every iteration);
-//! * `serial`   — the spectrum-cached trainer pinned to 1 thread
-//!   (isolates the cache win from the threading win);
-//! * `parallel` — the spectrum-cached trainer on all cores.
+//! * `legacy`   — `opt::timefreq::reference::run`, the pre-cache serial
+//!   trainer (recomputes every row FFT in every iteration);
+//! * `full`     — `opt::timefreq::reference::run_full_cache`, the PR-4
+//!   layout: spectra cached once as **full** d-point complex rows
+//!   (16·n·d bytes), full-size per-iteration transforms;
+//! * `serial`   — the half-spectrum trainer pinned to 1 thread
+//!   (isolates the half-size FFT + half-cache win from the threading
+//!   win);
+//! * `parallel` — the half-spectrum trainer on all cores.
 //!
 //! Throughput is row-iterations per second (rows × iters / wall time,
 //! cache build included), the unit that matches the trainer's
-//! O(n·d log d)-per-iteration cost. The serial and parallel arms must
+//! O(n·d log d)-per-iteration cost; the full-vs-half comparison is also
+//! reported **per iteration** (cache build excluded) since that is what
+//! the half-size transforms halve. The serial and parallel arms must
 //! produce bit-identical r (the deterministic-flag contract) or the
-//! bench aborts. Emits `BENCH_train.json`.
+//! bench aborts. Emits `BENCH_train.json`, including `cache_bytes` per
+//! arm so the memory halving is recorded alongside the speed.
 //!
 //! Env knobs, mirroring `encode_throughput`:
 //! * `CBE_BENCH_MAX_D=256` caps the dim sweep (CI-sized machines);
 //! * `CBE_BENCH_TRAIN_N=128` overrides training rows per arm;
 //! * `CBE_BENCH_TRAIN_ITERS=3` overrides iterations;
-//! * `CBE_BENCH_ENFORCE=1` turns the parallel-slower-than-legacy
-//!   warning into a hard failure (left off in CI: shared runners are
-//!   too noisy for perf asserts).
+//! * `CBE_BENCH_ENFORCE=1` turns regressions into hard failures: the
+//!   half-spectrum cache must stay ≤ 0.55× the full layout (exact,
+//!   deterministic), the half-spectrum per-iteration time must not
+//!   exceed the full-spectrum arm's ×1.15 (expected ratio ~0.55–0.6),
+//!   and the parallel arm must stay under ×1.25 of legacy (expected
+//!   ≤ ~0.5). The timing gates **re-measure the offending pair once
+//!   before failing**: a shared-runner stall doesn't reproduce, a real
+//!   regression does — which is what makes them safe to enforce in CI.
 
 use cbe::fft::Planner;
 use cbe::linalg::Mat;
@@ -42,7 +54,8 @@ fn main() {
         .unwrap_or(1);
     let max_d = env_usize("CBE_BENCH_MAX_D", 1024);
     let iters = env_usize("CBE_BENCH_TRAIN_ITERS", 5);
-    println!("== CBE-opt trainer: legacy per-row-FFT vs spectrum-cached ({cores} cores) ==");
+    let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
+    println!("== CBE-opt trainer: legacy / full-spectrum cache / half-spectrum ({cores} cores) ==");
 
     let mut results: Vec<Json> = Vec::new();
     for d in [256usize, 1024] {
@@ -62,27 +75,43 @@ fn main() {
         let mut cfg = TimeFreqConfig::new(k);
         cfg.iters = iters;
         cfg.deterministic = true;
-        // Warm the plan cache so no arm pays first-use twiddle builds.
+        let mut cfg_serial = cfg.clone();
+        cfg_serial.threads = 1;
+        let mut cfg_par = cfg.clone();
+        cfg_par.threads = cores;
+        // Warm the plan caches so no arm pays first-use twiddle builds.
         let _ = planner.plan(d);
+        let _ = planner.plan(d / 2);
 
-        // Legacy arm: the old serial trainer, per-row FFTs everywhere.
-        let t0 = Instant::now();
-        let (_r_legacy, _) = reference::run(&planner, d, &cfg, &x, &r0, None);
-        let dt_legacy = t0.elapsed().as_secs_f64();
+        let per_iter = |secs: f64| secs / iters.max(1) as f64;
+        // One measurement per arm, repeatable for the retry gates below.
+        let measure_legacy = || {
+            let t0 = Instant::now();
+            let _ = reference::run(&planner, d, &cfg, &x, &r0, None);
+            t0.elapsed().as_secs_f64()
+        };
+        let measure_full = || {
+            let t0 = Instant::now();
+            let (_r, _trace, iter_s, bytes) = reference::run_full_cache(&planner, d, &cfg, &x, &r0);
+            (
+                t0.elapsed().as_secs_f64(),
+                per_iter(iter_s.iter().sum::<f64>()),
+                bytes,
+            )
+        };
+        let measure_half = |arm_cfg: &TimeFreqConfig| {
+            let mut opt = TimeFreqOptimizer::new(d, arm_cfg.clone(), planner.clone());
+            let t0 = Instant::now();
+            let r = opt.run(&x, &r0, None);
+            let dt = t0.elapsed().as_secs_f64();
+            let it = per_iter(opt.report.iter_ms.iter().sum::<f64>() / 1e3);
+            (dt, it, opt.report.cache_bytes, r)
+        };
 
-        // Serial arm: spectrum cache, 1 thread.
-        cfg.threads = 1;
-        let mut opt = TimeFreqOptimizer::new(d, cfg.clone(), planner.clone());
-        let t0 = Instant::now();
-        let r_serial = opt.run(&x, &r0, None);
-        let dt_serial = t0.elapsed().as_secs_f64();
-
-        // Parallel arm: spectrum cache, all cores.
-        cfg.threads = cores;
-        let mut opt = TimeFreqOptimizer::new(d, cfg, planner.clone());
-        let t0 = Instant::now();
-        let r_parallel = opt.run(&x, &r0, None);
-        let dt_parallel = t0.elapsed().as_secs_f64();
+        let mut dt_legacy = measure_legacy();
+        let (dt_full, mut full_iter, full_cache_bytes) = measure_full();
+        let (dt_serial, mut half_iter, half_cache_bytes, r_serial) = measure_half(&cfg_serial);
+        let (mut dt_parallel, par_iter, _, r_parallel) = measure_half(&cfg_par);
 
         for (i, (a, b)) in r_parallel.iter().zip(&r_serial).enumerate() {
             assert_eq!(
@@ -92,34 +121,84 @@ fn main() {
             );
         }
 
+        // Timing gates re-measure the offending pair once before
+        // judging: a noisy-neighbor stall on a shared runner doesn't
+        // reproduce, a real regression does.
+        if half_iter > full_iter * 1.15 {
+            let (_, full2, _) = measure_full();
+            let (_, half2, _, _) = measure_half(&cfg_serial);
+            full_iter = full_iter.min(full2);
+            half_iter = half_iter.min(half2);
+        }
+        if dt_parallel >= dt_legacy && cores >= 2 {
+            dt_legacy = dt_legacy.min(measure_legacy());
+            let (dtp2, _, _, _) = measure_half(&cfg_par);
+            dt_parallel = dt_parallel.min(dtp2);
+        }
+
         let row_iters = (n * iters) as f64;
         let qps = |dt: f64| row_iters / dt;
+        let cache_ratio = half_cache_bytes as f64 / full_cache_bytes as f64;
+        let iter_speedup = full_iter / half_iter;
         println!(
             "d={d:<5} k={k:<4} n={n:<5} iters={iters}  \
-             legacy={:>9.0} row-it/s  serial={:>9.0} ({:.2}x)  \
-             parallel={:>9.0} ({:.2}x)",
+             legacy={:>9.0} row-it/s  full={:>9.0} ({:.2}x)  \
+             serial={:>9.0} ({:.2}x)  parallel={:>9.0} ({:.2}x)",
             qps(dt_legacy),
+            qps(dt_full),
+            dt_legacy / dt_full,
             qps(dt_serial),
             dt_legacy / dt_serial,
             qps(dt_parallel),
             dt_legacy / dt_parallel,
         );
-        if dt_parallel >= dt_legacy && cores >= 2 {
+        println!(
+            "        half vs full: cache {half_cache_bytes} B vs {full_cache_bytes} B \
+             ({:.2}x), per-iter {:.1} ms vs {:.1} ms ({iter_speedup:.2}x)",
+            cache_ratio,
+            half_iter * 1e3,
+            full_iter * 1e3,
+        );
+
+        // Memory is deterministic: the half layout must stay ≤ 0.55×.
+        if cache_ratio > 0.55 {
+            println!("WARNING: half-spectrum cache ratio {cache_ratio:.3} exceeds 0.55");
+            assert!(!enforce, "cache_bytes regression (CBE_BENCH_ENFORCE=1)");
+        }
+        // Throughput: the half path must not be slower per iteration
+        // than the full layout it replaced (target ≥ 1.3×; the 1.15
+        // margin is noise headroom, not an accepted regression).
+        if half_iter > full_iter * 1.15 {
             println!(
-                "WARNING: spectrum-cached parallel trainer {:.1}% slower than legacy at d={d}",
-                (dt_parallel / dt_legacy - 1.0) * 100.0
+                "WARNING: half-spectrum per-iteration {:.1} ms slower than full-spectrum {:.1} ms",
+                half_iter * 1e3,
+                full_iter * 1e3
             );
-            let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
             assert!(
                 !enforce,
+                "half-spectrum trainer regressed vs full (CBE_BENCH_ENFORCE=1)"
+            );
+        } else if iter_speedup < 1.3 {
+            println!(
+                "note: half-vs-full per-iteration speedup {iter_speedup:.2}x below the 1.3x target"
+            );
+        }
+        if dt_parallel >= dt_legacy && cores >= 2 {
+            println!(
+                "WARNING: half-spectrum parallel trainer {:.1}% slower than legacy at d={d}",
+                (dt_parallel / dt_legacy - 1.0) * 100.0
+            );
+            assert!(
+                !enforce || dt_parallel <= dt_legacy * 1.25,
                 "parallel trainer regressed vs the old per-row-FFT path (CBE_BENCH_ENFORCE=1)"
             );
         }
 
-        for (mode, threads, dt) in [
-            ("legacy", 1usize, dt_legacy),
-            ("serial", 1, dt_serial),
-            ("parallel", cores, dt_parallel),
+        for (mode, threads, dt, iter_avg, cache_bytes) in [
+            ("legacy", 1usize, dt_legacy, per_iter(dt_legacy), 0usize),
+            ("full", 1, dt_full, full_iter, full_cache_bytes),
+            ("serial", 1, dt_serial, half_iter, half_cache_bytes),
+            ("parallel", cores, dt_parallel, par_iter, half_cache_bytes),
         ] {
             results.push(Json::obj(vec![
                 ("d", Json::num(d as f64)),
@@ -129,6 +208,8 @@ fn main() {
                 ("mode", Json::str(mode)),
                 ("threads", Json::num(threads as f64)),
                 ("train_s", Json::num(dt)),
+                ("iter_s_avg", Json::num(iter_avg)),
+                ("cache_bytes", Json::num(cache_bytes as f64)),
                 ("row_iters_per_s", Json::num(qps(dt))),
                 ("speedup_vs_legacy", Json::num(dt_legacy / dt)),
             ]));

@@ -17,6 +17,10 @@
 //!   in-flight requests are never dropped or re-encoded.
 //! * [`service`] — [`EmbeddingService`]: the public facade wiring the
 //!   model registry, batcher and the binary retrieval index together.
+//!   `build_index` stamps the registry version its codes were encoded
+//!   with, and `search()` rejects an index whose stamp mismatches the live
+//!   model ([`crate::error::CbeError::StaleIndex`]) instead of mixing
+//!   codes from two models.
 //!   Batches are encoded by the parallel batch-encode engine
 //!   ([`crate::projections::CirculantProjection::encode_batch_into`]:
 //!   scoped-thread fan-out, signs packed directly into `BitCode` words);

@@ -49,6 +49,17 @@ impl ModelRegistry {
         Arc::clone(&self.active.read().expect("model registry poisoned"))
     }
 
+    /// The active model *and* its version, read under one read lock so
+    /// the pair is always consistent (swaps publish the version bump
+    /// while still holding the write lock). This is what index builds
+    /// stamp: resolving `current()` and `version()` separately could
+    /// race a swap and stamp a new version onto codes encoded by the
+    /// old model.
+    pub fn current_versioned(&self) -> (Arc<CirculantProjection>, u64) {
+        let slot = self.active.read().expect("model registry poisoned");
+        (Arc::clone(&slot), self.version.load(Ordering::SeqCst))
+    }
+
     /// Atomically install a new model and return its version. The
     /// dimension is pinned at registration: a model of a different d
     /// would silently break every queued request, so that's a panic, not
@@ -98,10 +109,16 @@ mod tests {
         let reg = ModelRegistry::new(proj(16, 1));
         assert_eq!(reg.version(), 0);
         let before = reg.current();
+        let (before2, v0) = reg.current_versioned();
+        assert_eq!(v0, 0);
+        assert!(Arc::ptr_eq(&before, &before2));
         let v = reg.swap(proj(16, 2));
         assert_eq!(v, 1);
         assert_eq!(reg.version(), 1);
+        let (after2, v1) = reg.current_versioned();
+        assert_eq!(v1, 1);
         let after = reg.current();
+        assert!(Arc::ptr_eq(&after, &after2));
         assert!(!Arc::ptr_eq(&before, &after));
         // The old Arc is still alive and usable by in-flight holders.
         let x: Vec<f32> = (0..16).map(|i| i as f32 - 8.0).collect();

@@ -23,6 +23,16 @@
 //! model once, so a swap lands between batches (see the hot-swap
 //! contract on [`ModelRegistry`]).
 //!
+//! Indexes are part of the same contract: [`EmbeddingService::build_index`]
+//! stamps the registry version its codes were encoded with onto the
+//! returned [`IndexAny`], and [`EmbeddingService::search`] refuses an
+//! index whose stamp mismatches the live model with
+//! [`CbeError::StaleIndex`] — mixing codes from two models silently
+//! returns garbage neighbors, so the rebuild-after-retrain rule is
+//! enforced by code, not documentation. Unversioned indexes (built
+//! directly over codes, outside the service) are not checked; their
+//! staleness is the caller's contract.
+//!
 //! The compiled-artifact manifest is advisory: when `artifacts_dir` holds
 //! one, the routed artifact's batch dimension sizes the dynamic batches
 //! (keeping native batches aligned with the shapes the AOT pipeline was
@@ -38,6 +48,7 @@ use super::router::Router;
 use crate::bits::index::Hit;
 use crate::bits::BitCode;
 use crate::encoders::CbeTrainer;
+use crate::error::CbeError;
 use crate::fft::Planner;
 use crate::index::{build_index, AnyIndex, IndexAny, IndexBackend};
 use crate::linalg::Mat;
@@ -66,6 +77,10 @@ pub struct RetrainConfig {
     pub threads: usize,
     /// Thread-count-invariant reductions in the trainer.
     pub deterministic: bool,
+    /// Resident spectrum-cache budget for the trainer in bytes
+    /// (0 = unlimited); oversized retrain samples stream in tiles. See
+    /// [`crate::opt::TimeFreqConfig::cache_budget`].
+    pub cache_budget: usize,
     /// Seed for the sign diagonal, r₀ init and the reservoir.
     pub seed: u64,
 }
@@ -78,6 +93,7 @@ impl Default for RetrainConfig {
             lambda: 1.0,
             threads: 0,
             deterministic: true,
+            cache_budget: 0,
             seed: 0x5eed,
         }
     }
@@ -323,6 +339,15 @@ impl EmbeddingService {
     /// encoded by one model version (resolved once, up front), and the
     /// rows are folded into the retrain reservoir as they stream by.
     pub fn encode_corpus(&self, rows: &[Vec<f32>]) -> Result<BitCode> {
+        Ok(self.encode_corpus_versioned(rows)?.0)
+    }
+
+    /// [`EmbeddingService::encode_corpus`] plus the registry version the
+    /// codes were encoded with — model and version are resolved together
+    /// under one registry read, which is what makes the version stamp on
+    /// [`EmbeddingService::build_index`] trustworthy across a concurrent
+    /// `Retrain` swap.
+    fn encode_corpus_versioned(&self, rows: &[Vec<f32>]) -> Result<(BitCode, u64)> {
         // All-or-nothing: validate every row before encoding anything or
         // feeding a single row into the retrain reservoir, so a failed
         // call has no side effects.
@@ -338,7 +363,7 @@ impl EmbeddingService {
         let mut codes = BitCode::new(rows.len(), self.cfg.bits);
         let wpc = codes.words_per_code;
         let slab = self.corpus_slab();
-        let proj = self.registry.current();
+        let (proj, version) = self.registry.current_versioned();
         let mut pool = ScratchPool::new();
         let mut refs: Vec<&[f32]> = Vec::with_capacity(slab.min(rows.len()));
         for (s, chunk) in rows.chunks(slab).enumerate() {
@@ -354,26 +379,72 @@ impl EmbeddingService {
                 }
             }
         }
-        Ok(codes)
+        Ok((codes, version))
     }
 
     /// Encode a corpus into a retrieval index via
     /// [`EmbeddingService::encode_corpus`]. The backend comes from
-    /// [`ServiceConfig::index`]; `Auto` routes by corpus size.
+    /// [`ServiceConfig::index`]; `Auto` routes by corpus size. The
+    /// returned index is stamped with the registry version its codes
+    /// were encoded with, so a `search()` after a later `Retrain`
+    /// hot-swap fails with [`CbeError::StaleIndex`] instead of silently
+    /// mixing models — rebuild through this method after every retrain.
     pub fn build_index(&self, rows: &[Vec<f32>]) -> Result<IndexAny> {
-        let codes = self.encode_corpus(rows)?;
+        let (codes, version) = self.encode_corpus_versioned(rows)?;
         let backend = match &self.cfg.index {
             IndexBackend::Auto => Router::pick_index(rows.len(), self.cfg.bits),
             explicit => explicit.clone(),
         };
-        Ok(build_index(codes, &backend))
+        Ok(build_index(codes, &backend).with_model_version(version))
     }
 
     /// Encode a query and search an index — any backend that speaks
     /// [`AnyIndex`] (an [`IndexAny`] from [`EmbeddingService::build_index`],
     /// a bare `BinaryIndex`, `MihIndex`, `ShardedIndex`, …).
-    pub fn search(&self, index: &dyn AnyIndex, query: Vec<f32>, topk: usize) -> Result<Vec<Hit>> {
-        let resp = self.encode(query)?;
+    ///
+    /// A versioned index (one built by [`EmbeddingService::build_index`])
+    /// whose stamp differs from the live
+    /// [`EmbeddingService::model_version`] is rejected with
+    /// [`CbeError::StaleIndex`]: its codes come from a different model
+    /// (usually one retired by a `Retrain`; a stamp *ahead* of this
+    /// service means the index belongs to another instance), so its
+    /// distances to the freshly encoded query are meaningless.
+    /// Unversioned indexes skip the check (their staleness is the
+    /// caller's contract).
+    ///
+    /// The guard runs twice: once before encoding (fast fail, no wasted
+    /// batch slot) and once after the reply — a `Retrain` swap can land
+    /// while the query is in flight, in which case the reply may already
+    /// be new-model. The version bump is published before any batch can
+    /// resolve the new model, so a query encoded by a newer model than
+    /// the index can never slip past the second check; the only
+    /// mid-flight outcome is a spurious (and safe) rejection of an
+    /// old-model reply, and the caller was about to need a rebuild
+    /// anyway.
+    pub fn search(
+        &self,
+        index: &dyn AnyIndex,
+        query: Vec<f32>,
+        topk: usize,
+    ) -> Result<Vec<Hit>, CbeError> {
+        let guard = || -> Result<(), CbeError> {
+            if let Some(built) = index.model_version() {
+                let current = self.model_version();
+                // Any mismatch is a cross-model search: trailing means a
+                // retrain retired the index's model; *ahead* means the
+                // index was built by a different service instance. Both
+                // mix embeddings, so both are rejected.
+                if built != current {
+                    return Err(CbeError::StaleIndex { built, current });
+                }
+            }
+            Ok(())
+        };
+        guard()?;
+        let resp = self
+            .encode(query)
+            .map_err(|e| CbeError::Service(e.to_string()))?;
+        guard()?;
         let qc = BitCode::from_signs(&resp.signs, 1, self.cfg.bits);
         Ok(index.search(qc.code(0), topk))
     }
@@ -425,6 +496,7 @@ fn spawn_retrain(
         tf.lambda = rc.lambda;
         tf.threads = rc.threads;
         tf.deterministic = rc.deterministic;
+        tf.cache_budget = rc.cache_budget;
         let enc = CbeTrainer::new(tf).seed(rc.seed).planner(planner).train(&x);
         let report = enc.report.clone();
         let version = registry.swap(enc.proj);

@@ -5,11 +5,11 @@
 //! which is bit-exactly equivalent to the serial per-vector default.
 //!
 //! Training goes through [`CbeTrainer`]: it owns the run configuration
-//! (λ, iterations, thread count, determinism), drives the
-//! spectrum-cached parallel [`TimeFreqOptimizer`], and hands back a
-//! [`CbeOpt`] carrying both the learned projection and the
+//! (λ, iterations, thread count, determinism, spectrum-memory budget),
+//! drives the half-spectrum-cached parallel [`TimeFreqOptimizer`], and
+//! hands back a [`CbeOpt`] carrying both the learned projection and the
 //! [`TrainReport`] of the run (per-iteration objective, wall time,
-//! thread count, cache footprint).
+//! thread count, resident cache bytes / tile size).
 
 use super::BinaryEncoder;
 use crate::bits::BitCode;
@@ -99,6 +99,16 @@ impl CbeTrainer {
     /// Share an existing plan cache instead of building a fresh one.
     pub fn planner(mut self, planner: Planner) -> CbeTrainer {
         self.planner = planner;
+        self
+    }
+
+    /// Cap the trainer's resident spectrum memory (bytes). Training sets
+    /// whose half-spectrum cache would exceed the budget stream through
+    /// block-aligned tiles instead — bit-identical results, bounded
+    /// memory (0 = never tile). See
+    /// [`TimeFreqConfig::cache_budget`](crate::opt::TimeFreqConfig::cache_budget).
+    pub fn cache_budget(mut self, bytes: usize) -> CbeTrainer {
+        self.cfg.cache_budget = bytes;
         self
     }
 
@@ -252,6 +262,29 @@ mod tests {
         assert_eq!(a.proj.signs, b.proj.signs);
         for (x, y) in a.proj.r.iter().zip(&b.proj.r) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn cache_budget_does_not_change_the_model() {
+        // The memory budget tiles the cache build; the learned model
+        // must not move by a single bit.
+        let d = 24;
+        let n = 150;
+        let mut rng = Pcg64::new(77);
+        let x = Mat::randn(n, d, &mut rng);
+        let mut cfg = TimeFreqConfig::new(d);
+        cfg.iters = 3;
+        let full = CbeTrainer::new(cfg.clone()).seed(5).train(&x);
+        let tiled = CbeTrainer::new(cfg)
+            .seed(5)
+            .cache_budget(70 * (d / 2 + 1) * 16)
+            .train(&x);
+        assert!(tiled.report.tile_rows > 0, "budget did not trigger tiling");
+        assert!(tiled.report.cache_bytes < full.report.cache_bytes);
+        assert_eq!(full.proj.signs, tiled.proj.signs);
+        for (a, b) in full.proj.r.iter().zip(&tiled.proj.r) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

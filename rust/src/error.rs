@@ -1,0 +1,67 @@
+//! Typed, matchable errors for the serving path.
+//!
+//! The crate-wide [`crate::Result`] alias is string-backed `anyhow` —
+//! right for "something failed, tell the operator" paths, useless for
+//! callers that must *dispatch* on the failure. [`CbeError`] is the
+//! typed complement: the serving facade returns it where the caller is
+//! expected to react programmatically (today: rebuilding a stale index).
+//! It implements [`std::error::Error`], so `?` still lifts it into
+//! `anyhow::Result` contexts.
+
+use std::fmt;
+
+/// Errors the serving path reports as values a caller can match on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CbeError {
+    /// A `search()` was issued against an index whose codes were encoded
+    /// by a different model than the one serving the query: the index
+    /// was stamped at registry version `built`, but the service is at
+    /// `current` (trailing = a `Retrain` retired the index's model;
+    /// ahead = the index came from another service instance). Mixing
+    /// the two silently returns garbage neighbors (the query and the
+    /// corpus live in different embeddings), so the service rejects
+    /// it — rebuild the index with `EmbeddingService::build_index` and
+    /// retry.
+    StaleIndex { built: u64, current: u64 },
+    /// Any other serving failure (encode path, service stopped, …),
+    /// carried as its display string.
+    Service(String),
+}
+
+impl fmt::Display for CbeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CbeError::StaleIndex { built, current } => write!(
+                f,
+                "stale index: built at model version {built}, but the service is at \
+                 version {current} — rebuild the index after a retrain"
+            ),
+            CbeError::Service(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CbeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_versions() {
+        let e = CbeError::StaleIndex { built: 2, current: 5 };
+        let s = e.to_string();
+        assert!(s.contains("stale index"), "{s}");
+        assert!(s.contains('2') && s.contains('5'), "{s}");
+    }
+
+    #[test]
+    fn lifts_into_anyhow() {
+        fn inner() -> crate::Result<()> {
+            Err(CbeError::StaleIndex { built: 0, current: 1 })?;
+            Ok(())
+        }
+        let msg = inner().unwrap_err().to_string();
+        assert!(msg.contains("stale index"), "{msg}");
+    }
+}

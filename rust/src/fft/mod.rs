@@ -8,8 +8,11 @@
 //! * [`radix2`] — iterative in-place Cooley–Tukey for power-of-two sizes,
 //! * [`bluestein`] — Bluestein's chirp-z algorithm for arbitrary sizes
 //!   (the paper's datasets are d = 25,600 / 51,200 — *not* powers of two),
-//! * [`real`] — real-input forward/inverse wrappers (half-spectrum),
-//! * [`realpack`] — half-size real-FFT fast path for even lengths,
+//! * [`real`] — real-input forward/inverse wrappers (full spectra),
+//! * [`realpack`] — the half-spectrum substrate: half-size real-FFT fast
+//!   path for even lengths ([`realpack::RealPackPlan`]), the any-length
+//!   [`RealFft`] facade the trainer stores its conjugate-symmetric
+//!   half-spectra through, and the per-bin spectral kernels,
 //! * [`Planner`] — caches twiddles/chirp tables per size.
 //!
 //! # Threading model
@@ -34,6 +37,7 @@ pub mod real;
 pub mod realpack;
 
 pub use complex::C64;
+pub use realpack::RealFft;
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};

@@ -1,22 +1,63 @@
 //! Real-input FFT via half-size complex FFT (the "pack two reals into one
-//! complex" trick, Numerical Recipes `realft` lineage).
+//! complex" trick, Numerical Recipes `realft` lineage) — and the
+//! half-spectrum substrate the CBE trainer runs on.
 //!
 //! CBE's signals — data vectors, the circulant parameter r, and the
-//! projections — are all real, so every transform in the encode hot path
-//! can run at half size: a d-point real FFT costs one (d/2)-point complex
-//! FFT plus O(d) untangling. Perf pass iteration 3 (EXPERIMENTS.md §Perf):
-//! ~1.8× on the dominant cost.
+//! projections — are all real, so their spectra are **conjugate
+//! symmetric**: only the ⌊d/2⌋+1 bins `X[0..=d/2]` are independent, the
+//! rest mirror as `X[d−l] = conj(X[l])`. Two consequences this module
+//! exploits:
 //!
-//! Conventions: `rfft` returns the half-spectrum X[0..=h] (h = d/2,
-//! inclusive of the Nyquist bin; X[0] and X[h] are real). `irfft`
-//! inverts it including the 1/d scale.
+//! * every transform in the encode hot path can run at *half size*: a
+//!   d-point real FFT costs one (d/2)-point complex FFT plus O(d)
+//!   untangling ([`RealPackPlan`]; perf pass iteration 3,
+//!   EXPERIMENTS.md §Perf — ~1.8× on the dominant cost), and
+//! * every spectrum the training engine stores or sweeps only needs the
+//!   independent half — half the bytes, half the bandwidth. [`RealFft`]
+//!   is the any-length entry point the trainer builds on, and the
+//!   [`spectral_mul`] / [`spectral_energy_accum`] / [`spectral_corr_accum`]
+//!   kernels are the per-bin accumulations of §4 phrased on half-spectra.
 //!
-//! [`RealPackPlan`] is immutable (`Send + Sync`, cheap to clone — the
-//! half-size plan is `Arc`-shared); all per-transform state lives in the
+//! # Conventions and the DC/Nyquist realness contract
+//!
+//! `rfft` returns the half-spectrum X[0..=h] (h = ⌊d/2⌋, inclusive of the
+//! Nyquist bin when d is even). For a **real** signal, X[0] (DC) and —
+//! for even d — X[h] (Nyquist) are purely real; `rfft` produces them with
+//! exactly zero imaginary part. `irfft` inverts the half-spectrum back to
+//! a real signal, including the 1/d scale, and **requires** those bins to
+//! be (numerically) real on input: an imaginary part there has no
+//! real-signal representation and would be silently corrupted, so debug
+//! builds reject it (`debug_assert!`) instead of discarding it. Callers
+//! that synthesize spectra (rather than round-tripping `rfft` output)
+//! must zero those imaginary parts themselves — the trainer's per-bin
+//! solver constructs them real by design.
+//!
+//! [`RealPackPlan`] and [`RealFft`] are immutable (`Send + Sync`, cheap to
+//! clone — plans are `Arc`-shared); all per-transform state lives in the
 //! caller-owned [`RealPackScratch`], one per thread.
 
 use super::{C64, Dir, FftScratch, Plan, Planner};
 use std::sync::Arc;
+
+/// Bins in the conjugate-symmetric half-spectrum of a d-point real
+/// signal: ⌊d/2⌋ + 1.
+#[inline]
+pub const fn half_len(d: usize) -> usize {
+    d / 2 + 1
+}
+
+/// The realness contract on the DC / Nyquist bins (see module docs):
+/// debug builds reject spectra whose self-conjugate bins carry an
+/// imaginary part that `irfft` would otherwise silently corrupt.
+#[inline]
+fn debug_assert_real_bin(c: C64, what: &str) {
+    debug_assert!(
+        c.im.abs() <= 1e-6 * (1.0 + c.re.abs()),
+        "{what} must be real for a real signal (got {} + {}i)",
+        c.re,
+        c.im
+    );
+}
 
 /// Precomputed tables for one even length d. Immutable and shareable
 /// across threads; clones share the underlying half-size [`Plan`].
@@ -33,9 +74,10 @@ pub struct RealPackPlan {
     half_plan: Arc<Plan>,
 }
 
-/// Caller-owned work space for [`RealPackPlan`]: the packed half-size
-/// complex buffer plus the nested FFT scratch (h itself may be a
-/// Bluestein size, e.g. d = 100 → h = 50).
+/// Caller-owned work space for [`RealPackPlan`] / [`RealFft`]: the packed
+/// half-size (or, on the odd-length fallback, full-size) complex buffer
+/// plus the nested FFT scratch (h itself may be a Bluestein size, e.g.
+/// d = 100 → h = 50).
 #[derive(Default)]
 pub struct RealPackScratch {
     z: Vec<C64>,
@@ -49,7 +91,8 @@ impl RealPackScratch {
 }
 
 impl RealPackPlan {
-    /// d must be even (callers fall back to the full-complex path if not).
+    /// d must be even (callers fall back to [`RealFft::Full`] — or the
+    /// full-complex path — if not).
     pub fn new(d: usize, planner: &Planner) -> RealPackPlan {
         assert!(d >= 2 && d % 2 == 0, "RealPackPlan requires even d");
         let h = d / 2;
@@ -68,7 +111,9 @@ impl RealPackPlan {
     }
 
     /// Forward real FFT: x (len d, real) → half spectrum (len h+1).
-    /// `pre_scale` multiplies inputs on the fly (used for the D sign flips).
+    /// `pre_scale` multiplies inputs on the fly (used for the D sign
+    /// flips). The DC and Nyquist outputs are produced with exactly zero
+    /// imaginary part (they are self-conjugate bins of a real signal).
     pub fn rfft(
         &self,
         x: &[f32],
@@ -113,12 +158,14 @@ impl RealPackPlan {
         }
     }
 
-    /// Inverse real FFT: half spectrum (len h+1) → real signal (len d),
-    /// including the 1/d normalization.
-    pub fn irfft(&self, spec: &[C64], out: &mut [f32], scratch: &mut RealPackScratch) {
+    /// Shared retangle + half-size inverse transform behind
+    /// [`RealPackPlan::irfft`] / [`RealPackPlan::irfft_f64`]: leaves the
+    /// packed time samples in `scratch.z` (re = even indices, im = odd).
+    fn inverse_packed(&self, spec: &[C64], scratch: &mut RealPackScratch) {
         assert_eq!(spec.len(), self.h + 1);
-        assert_eq!(out.len(), self.d);
         let h = self.h;
+        debug_assert_real_bin(spec[0], "irfft: spec[0] (DC)");
+        debug_assert_real_bin(spec[h], "irfft: spec[h] (Nyquist)");
         let RealPackScratch { z, fft } = scratch;
         z.resize(h, C64::ZERO);
         // Retangle: F_even[k] = (X[k] + X*[h-k])/2,
@@ -133,10 +180,213 @@ impl RealPackPlan {
             *zk = fe + ifo;
         }
         self.half_plan.transform_with(z, Dir::Inverse, fft);
-        for k in 0..h {
-            out[2 * k] = z[k].re as f32;
-            out[2 * k + 1] = z[k].im as f32;
+    }
+
+    /// Inverse real FFT: half spectrum (len h+1) → real signal (len d),
+    /// including the 1/d normalization. `spec[0]` and `spec[h]` must be
+    /// real (see the module-level contract); debug builds assert it.
+    pub fn irfft(&self, spec: &[C64], out: &mut [f32], scratch: &mut RealPackScratch) {
+        assert_eq!(out.len(), self.d);
+        self.inverse_packed(spec, scratch);
+        for (k, zk) in scratch.z.iter().enumerate() {
+            out[2 * k] = zk.re as f32;
+            out[2 * k + 1] = zk.im as f32;
         }
+    }
+
+    /// [`RealPackPlan::irfft`] at full f64 output precision — the
+    /// trainer's time-domain sweep binarizes against the f64 samples, so
+    /// rounding through f32 would perturb its objective accounting.
+    pub fn irfft_f64(&self, spec: &[C64], out: &mut [f64], scratch: &mut RealPackScratch) {
+        assert_eq!(out.len(), self.d);
+        self.inverse_packed(spec, scratch);
+        for (k, zk) in scratch.z.iter().enumerate() {
+            out[2 * k] = zk.re;
+            out[2 * k + 1] = zk.im;
+        }
+    }
+}
+
+/// Real-FFT plan for **any** length d, producing conjugate-symmetric
+/// half-spectra `X[0..=d/2]` (the ⌊d/2⌋+1 independent bins; the mirror
+/// half `X[d−l] = conj(X[l])` is never materialized).
+///
+/// Even d routes through the packed half-size fast path
+/// ([`RealPackPlan`]: one (d/2)-point complex FFT per transform); odd d
+/// falls back to a full d-point complex transform with the redundant
+/// mirror half dropped on output — same half layout and memory, full
+/// transform cost. The DC/Nyquist realness contract of the module docs
+/// applies to both arms.
+///
+/// Immutable, `Send + Sync`, cheap to clone (plans are `Arc`-shared);
+/// per-transform state lives in a caller-owned [`RealPackScratch`].
+#[derive(Clone)]
+pub enum RealFft {
+    /// Even d: packed half-size fast path.
+    Packed(RealPackPlan),
+    /// Odd d: full-size complex transform, half-spectrum views.
+    Full { d: usize, plan: Arc<Plan> },
+}
+
+impl RealFft {
+    pub fn new(d: usize, planner: &Planner) -> RealFft {
+        assert!(d >= 1);
+        if d >= 2 && d % 2 == 0 {
+            RealFft::Packed(RealPackPlan::new(d, planner))
+        } else {
+            RealFft::Full {
+                d,
+                plan: planner.plan(d),
+            }
+        }
+    }
+
+    /// Signal length.
+    pub fn d(&self) -> usize {
+        match self {
+            RealFft::Packed(p) => p.d,
+            RealFft::Full { d, .. } => *d,
+        }
+    }
+
+    /// Half-spectrum length ⌊d/2⌋ + 1.
+    pub fn half_len(&self) -> usize {
+        half_len(self.d())
+    }
+
+    /// Forward real FFT: x (len d) → half spectrum (len ⌊d/2⌋+1). The DC
+    /// bin (and Nyquist, even d) is produced exactly real.
+    pub fn rfft(&self, x: &[f32], out: &mut [C64], scratch: &mut RealPackScratch) {
+        match self {
+            RealFft::Packed(p) => p.rfft(x, None, out, scratch),
+            RealFft::Full { d, plan } => {
+                assert_eq!(x.len(), *d);
+                assert_eq!(out.len(), half_len(*d));
+                let RealPackScratch { z, fft } = scratch;
+                z.resize(*d, C64::ZERO);
+                for (zk, v) in z.iter_mut().zip(x) {
+                    *zk = C64::new(*v as f64, 0.0);
+                }
+                plan.transform_with(z, Dir::Forward, fft);
+                out.copy_from_slice(&z[..out.len()]);
+                // A real signal's DC bin is Σxᵢ: enforce the exact
+                // realness the packed arm produces by construction
+                // (Bluestein leaves ~1 ulp of imaginary dirt).
+                out[0] = C64::new(out[0].re, 0.0);
+            }
+        }
+    }
+
+    /// Batch helper for cache builds: `rows` is a row-major concatenation
+    /// of real rows (len multiple of d), `out` the matching concatenation
+    /// of half-spectra (stride [`RealFft::half_len`]).
+    pub fn rfft_batch(&self, rows: &[f32], out: &mut [C64], scratch: &mut RealPackScratch) {
+        let d = self.d();
+        let hl = self.half_len();
+        assert_eq!(rows.len() % d, 0, "rows not a multiple of d");
+        assert_eq!(out.len(), rows.len() / d * hl, "out/rows length mismatch");
+        for (row, spec) in rows.chunks_exact(d).zip(out.chunks_exact_mut(hl)) {
+            self.rfft(row, spec, scratch);
+        }
+    }
+
+    /// Inverse real FFT: half spectrum → real signal (1/d scale
+    /// included). Requires real DC/Nyquist bins (module contract).
+    pub fn irfft(&self, spec: &[C64], out: &mut [f32], scratch: &mut RealPackScratch) {
+        match self {
+            RealFft::Packed(p) => p.irfft(spec, out, scratch),
+            RealFft::Full { d, plan } => {
+                assert_eq!(out.len(), *d);
+                Self::full_inverse(*d, plan, spec, scratch);
+                for (o, zk) in out.iter_mut().zip(scratch.z.iter()) {
+                    *o = zk.re as f32;
+                }
+            }
+        }
+    }
+
+    /// [`RealFft::irfft`] at full f64 output precision (see
+    /// [`RealPackPlan::irfft_f64`]).
+    pub fn irfft_f64(&self, spec: &[C64], out: &mut [f64], scratch: &mut RealPackScratch) {
+        match self {
+            RealFft::Packed(p) => p.irfft_f64(spec, out, scratch),
+            RealFft::Full { d, plan } => {
+                assert_eq!(out.len(), *d);
+                Self::full_inverse(*d, plan, spec, scratch);
+                for (o, zk) in out.iter_mut().zip(scratch.z.iter()) {
+                    *o = zk.re;
+                }
+            }
+        }
+    }
+
+    /// Odd-length inverse: rebuild the mirror half by conjugate symmetry
+    /// and run the full-size inverse transform into `scratch.z`.
+    fn full_inverse(d: usize, plan: &Plan, spec: &[C64], scratch: &mut RealPackScratch) {
+        assert_eq!(spec.len(), half_len(d));
+        debug_assert_real_bin(spec[0], "irfft: spec[0] (DC)");
+        let RealPackScratch { z, fft } = scratch;
+        z.resize(d, C64::ZERO);
+        z[..spec.len()].copy_from_slice(spec);
+        for l in 1..spec.len() {
+            z[d - l] = spec[l].conj();
+        }
+        plan.transform_with(z, Dir::Inverse, fft);
+    }
+}
+
+// The trainer fans one RealFft out across scoped worker threads.
+const _: () = {
+    #[allow(dead_code)]
+    fn assert_send_sync<T: Send + Sync>() {}
+    #[allow(dead_code)]
+    fn check() {
+        assert_send_sync::<RealFft>();
+        assert_send_sync::<RealPackPlan>();
+    }
+};
+
+// ------------------------------------------------- half-spectrum kernels
+//
+// The per-bin accumulations of the §4 trainer, phrased on half-spectra.
+// Conjugate symmetry makes the half layout closed under all of them: the
+// product of two conjugate-symmetric spectra is conjugate-symmetric, and
+// every mirror bin's contribution to a per-bin reduction equals its
+// partner's (|X[d−l]|² = |X[l]|², Re mirrors, Im negates), so the
+// trainer folds the factor of 2 into the per-bin solve instead of ever
+// touching a mirror bin.
+
+/// out[l] = a[l]·b[l] — the half-spectrum product behind every circulant
+/// apply (y = IFFT(F(x) ∘ F(r))).
+#[inline]
+pub fn spectral_mul(a: &[C64], b: &[C64], out: &mut [C64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = *x * *y;
+    }
+}
+
+/// acc[l] += |s[l]|² — the M accumulation of eq. 17 on a half-spectrum
+/// (the solver doubles the paired bins; DC/Nyquist count once).
+#[inline]
+pub fn spectral_energy_accum(s: &[C64], acc: &mut [f64]) {
+    debug_assert_eq!(s.len(), acc.len());
+    for (a, c) in acc.iter_mut().zip(s) {
+        *a += c.norm_sqr();
+    }
+}
+
+/// The eq. 17 h/g correlation accumulators on half-spectra:
+/// h[l] −= 2·Re(x[l]·conj(b[l])), g[l] += 2·Im(x[l]·conj(b[l])).
+#[inline]
+pub fn spectral_corr_accum(x: &[C64], b: &[C64], h: &mut [f64], g: &mut [f64]) {
+    debug_assert_eq!(x.len(), b.len());
+    debug_assert_eq!(x.len(), h.len());
+    debug_assert_eq!(x.len(), g.len());
+    for l in 0..x.len() {
+        h[l] -= 2.0 * (x[l].re * b[l].re + x[l].im * b[l].im);
+        g[l] += 2.0 * (x[l].im * b[l].re - x[l].re * b[l].im);
     }
 }
 
@@ -207,5 +457,185 @@ mod tests {
         let plan = RealPackPlan::new(64, &planner);
         let clone = plan.clone();
         assert!(Arc::ptr_eq(&plan.half_plan, &clone.half_plan));
+    }
+
+    // ------------------------------------------------ RealFft (any d)
+
+    #[test]
+    fn realfft_matches_full_fft_even_and_odd() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(41);
+        let mut scratch = RealPackScratch::new();
+        for d in [1usize, 2, 3, 7, 16, 21, 27, 64, 100, 135] {
+            let rf = RealFft::new(d, &planner);
+            assert_eq!(rf.d(), d);
+            assert_eq!(rf.half_len(), d / 2 + 1);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mut half = vec![C64::ZERO; rf.half_len()];
+            rf.rfft(&x, &mut half, &mut scratch);
+            let full = real::rfft_full(&planner, &x);
+            for k in 0..half.len() {
+                let err = (half[k] - full[k]).abs();
+                assert!(err < 1e-6 * (1.0 + full[k].abs()), "d={d} k={k} err={err}");
+            }
+            // The realness contract on the self-conjugate bins is exact.
+            assert_eq!(half[0].im, 0.0, "d={d}: DC bin not exactly real");
+            if d % 2 == 0 && d >= 2 {
+                assert_eq!(half[d / 2].im, 0.0, "d={d}: Nyquist bin not exactly real");
+            }
+        }
+    }
+
+    #[test]
+    fn realfft_roundtrip_f32_and_f64() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(42);
+        let mut scratch = RealPackScratch::new();
+        for d in [2usize, 5, 20, 27, 64] {
+            let rf = RealFft::new(d, &planner);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mut half = vec![C64::ZERO; rf.half_len()];
+            rf.rfft(&x, &mut half, &mut scratch);
+            let mut back32 = vec![0f32; d];
+            rf.irfft(&half, &mut back32, &mut scratch);
+            let mut back64 = vec![0f64; d];
+            rf.irfft_f64(&half, &mut back64, &mut scratch);
+            for j in 0..d {
+                assert!((back32[j] - x[j]).abs() < 1e-4, "d={d} f32");
+                assert!((back64[j] - x[j] as f64).abs() < 1e-9, "d={d} f64");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_batch_equals_per_row() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(43);
+        let mut scratch = RealPackScratch::new();
+        for d in [12usize, 15] {
+            let rf = RealFft::new(d, &planner);
+            let hl = rf.half_len();
+            let rows: Vec<f32> = (0..4 * d).map(|_| rng.normal() as f32).collect();
+            let mut batch = vec![C64::ZERO; 4 * hl];
+            rf.rfft_batch(&rows, &mut batch, &mut scratch);
+            for r in 0..4 {
+                let mut one = vec![C64::ZERO; hl];
+                rf.rfft(&rows[r * d..(r + 1) * d], &mut one, &mut scratch);
+                for k in 0..hl {
+                    // Bit-identical: the batch helper is the same code path.
+                    assert_eq!(batch[r * hl + k], one[k], "d={d} row={r} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nyquist_only_signal_roundtrips() {
+        // x = (+1, −1, +1, …) is pure Nyquist: all energy in bin h, which
+        // must come out exactly real and invert exactly.
+        let planner = Planner::new();
+        let mut scratch = RealPackScratch::new();
+        for d in [8usize, 32] {
+            let rf = RealFft::new(d, &planner);
+            let x: Vec<f32> = (0..d).map(|j| if j % 2 == 0 { 1.0 } else { -1.0 }).collect();
+            let mut half = vec![C64::ZERO; rf.half_len()];
+            rf.rfft(&x, &mut half, &mut scratch);
+            assert_eq!(half[d / 2].im, 0.0);
+            assert!((half[d / 2].re - d as f64).abs() < 1e-9, "d={d}");
+            for k in 0..d / 2 {
+                assert!(half[k].abs() < 1e-9, "d={d} bin {k} leaked {}", half[k].abs());
+            }
+            let mut back = vec![0f64; d];
+            rf.irfft_f64(&half, &mut back, &mut scratch);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - *b as f64).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_kernels_match_full_spectrum_accumulation() {
+        // The half-spectrum kernels plus the solver's pairing rules must
+        // reproduce the full-spectrum quantities: m' = m_l + m_{d−l} =
+        // 2m_l, h' = h_l + h_{d−l} = 2h_l, g' = g_l − g_{d−l} = 2g_l.
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(44);
+        let mut scratch = RealPackScratch::new();
+        for d in [16usize, 21] {
+            let rf = RealFft::new(d, &planner);
+            let hl = rf.half_len();
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..d)
+                .map(|_| if rng.next_f64() < 0.5 { 1.0 } else { -1.0 })
+                .collect();
+            let mut xh = vec![C64::ZERO; hl];
+            let mut bh = vec![C64::ZERO; hl];
+            rf.rfft(&x, &mut xh, &mut scratch);
+            rf.rfft(&b, &mut bh, &mut scratch);
+            let xf = real::rfft_full(&planner, &x);
+            let bf = real::rfft_full(&planner, &b);
+
+            let mut m_half = vec![0f64; hl];
+            spectral_energy_accum(&xh, &mut m_half);
+            let mut h_half = vec![0f64; hl];
+            let mut g_half = vec![0f64; hl];
+            spectral_corr_accum(&xh, &bh, &mut h_half, &mut g_half);
+
+            for l in 1..=(d - 1) / 2 {
+                let m_full = xf[l].norm_sqr() + xf[d - l].norm_sqr();
+                let h_full = -2.0
+                    * (xf[l].re * bf[l].re + xf[l].im * bf[l].im
+                        + xf[d - l].re * bf[d - l].re
+                        + xf[d - l].im * bf[d - l].im);
+                let g_full = 2.0 * (xf[l].im * bf[l].re - xf[l].re * bf[l].im)
+                    - 2.0 * (xf[d - l].im * bf[d - l].re - xf[d - l].re * bf[d - l].im);
+                assert!(
+                    (2.0 * m_half[l] - m_full).abs() < 1e-6 * (1.0 + m_full.abs()),
+                    "m d={d} l={l}"
+                );
+                assert!(
+                    (2.0 * h_half[l] - h_full).abs() < 1e-6 * (1.0 + h_full.abs()),
+                    "h d={d} l={l}"
+                );
+                assert!(
+                    (2.0 * g_half[l] - g_full).abs() < 1e-6 * (1.0 + g_full.abs()),
+                    "g d={d} l={l}"
+                );
+            }
+            // Spectral product mirrors the full-spectrum product on the
+            // shared bins.
+            let mut prod = vec![C64::ZERO; hl];
+            spectral_mul(&xh, &bh, &mut prod);
+            for l in 0..hl {
+                let full = xf[l] * bf[l];
+                assert!((prod[l] - full).abs() < 1e-6 * (1.0 + full.abs()), "d={d} l={l}");
+            }
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "must be real")]
+    fn irfft_rejects_complex_nyquist_in_debug() {
+        let planner = Planner::new();
+        let d = 8;
+        let plan = RealPackPlan::new(d, &planner);
+        let mut spec = vec![C64::ZERO; d / 2 + 1];
+        spec[d / 2] = C64::new(1.0, 0.5); // illegal: Nyquist must be real
+        let mut out = vec![0f32; d];
+        plan.irfft(&spec, &mut out, &mut RealPackScratch::new());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "must be real")]
+    fn odd_irfft_rejects_complex_dc_in_debug() {
+        let planner = Planner::new();
+        let d = 7;
+        let rf = RealFft::new(d, &planner);
+        let mut spec = vec![C64::ZERO; d / 2 + 1];
+        spec[0] = C64::new(1.0, 0.5); // illegal: DC must be real
+        let mut out = vec![0f32; d];
+        rf.irfft(&spec, &mut out, &mut RealPackScratch::new());
     }
 }

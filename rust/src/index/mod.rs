@@ -91,6 +91,16 @@ pub trait AnyIndex: Send + Sync {
     }
     /// Short backend tag for logs/metrics.
     fn backend_name(&self) -> &'static str;
+    /// The encoder-model version the codes were produced with, when
+    /// known. `EmbeddingService::build_index` stamps its registry
+    /// version here so a `search()` against an index that predates a
+    /// `Retrain` hot-swap is rejected (`CbeError::StaleIndex`) instead
+    /// of silently mixing codes from two models. `None` (the default,
+    /// and what bare backends report) means unversioned: the caller
+    /// owns staleness.
+    fn model_version(&self) -> Option<u64> {
+        None
+    }
 }
 
 impl AnyIndex for BinaryIndex {
@@ -290,9 +300,8 @@ impl IndexBackend {
     }
 }
 
-/// A concrete backend instance. Inherent methods mirror [`AnyIndex`] so
-/// callers can use an `IndexAny` without importing the trait.
-pub enum IndexAny {
+/// The backend variants behind [`IndexAny`].
+pub enum IndexKind {
     Linear(BinaryIndex),
     /// Both substring schemes land here; [`MihIndex::scheme`] tells them
     /// apart (as does [`IndexAny::backend_name`]).
@@ -300,57 +309,96 @@ pub enum IndexAny {
     Sharded(ShardedIndex),
 }
 
+/// A concrete backend instance plus the serving metadata stamped at
+/// build time (today: the encoder-model version behind the codes).
+/// Inherent methods mirror [`AnyIndex`] so callers can use an
+/// `IndexAny` without importing the trait.
+pub struct IndexAny {
+    kind: IndexKind,
+    /// Registry version of the model that encoded the codes, stamped by
+    /// `EmbeddingService::build_index` ([`IndexAny::with_model_version`]);
+    /// `None` for indexes built directly over codes.
+    model_version: Option<u64>,
+}
+
+impl From<IndexKind> for IndexAny {
+    fn from(kind: IndexKind) -> IndexAny {
+        IndexAny {
+            kind,
+            model_version: None,
+        }
+    }
+}
+
 impl IndexAny {
+    /// The concrete backend.
+    pub fn kind(&self) -> &IndexKind {
+        &self.kind
+    }
+
+    /// Stamp the encoder-model version the codes were produced with
+    /// (builder style; used by `EmbeddingService::build_index`).
+    pub fn with_model_version(mut self, version: u64) -> IndexAny {
+        self.model_version = Some(version);
+        self
+    }
+
+    /// The stamped model version, if any (see
+    /// [`AnyIndex::model_version`]).
+    pub fn model_version(&self) -> Option<u64> {
+        self.model_version
+    }
+
     pub fn len(&self) -> usize {
-        match self {
-            IndexAny::Linear(i) => i.len(),
-            IndexAny::Mih(i) => i.len(),
-            IndexAny::Sharded(i) => i.len(),
+        match &self.kind {
+            IndexKind::Linear(i) => i.len(),
+            IndexKind::Mih(i) => i.len(),
+            IndexKind::Sharded(i) => i.len(),
         }
     }
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
     pub fn bits(&self) -> usize {
-        match self {
-            IndexAny::Linear(i) => i.codes.bits,
-            IndexAny::Mih(i) => i.bits(),
-            IndexAny::Sharded(i) => i.bits(),
+        match &self.kind {
+            IndexKind::Linear(i) => i.codes.bits,
+            IndexKind::Mih(i) => i.bits(),
+            IndexKind::Sharded(i) => i.bits(),
         }
     }
     pub fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
-        match self {
-            IndexAny::Linear(i) => i.search(q, k),
-            IndexAny::Mih(i) => i.search(q, k),
-            IndexAny::Sharded(i) => i.search(q, k),
+        match &self.kind {
+            IndexKind::Linear(i) => i.search(q, k),
+            IndexKind::Mih(i) => i.search(q, k),
+            IndexKind::Sharded(i) => i.search(q, k),
         }
     }
     pub fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
-        match self {
-            IndexAny::Linear(i) => i.search_batch(queries, k),
-            IndexAny::Mih(i) => i.search_batch(queries, k),
-            IndexAny::Sharded(i) => i.search_batch(queries, k),
+        match &self.kind {
+            IndexKind::Linear(i) => i.search_batch(queries, k),
+            IndexKind::Mih(i) => i.search_batch(queries, k),
+            IndexKind::Sharded(i) => i.search_batch(queries, k),
         }
     }
     pub fn backend_name(&self) -> &'static str {
-        match self {
-            IndexAny::Linear(_) => "linear",
-            IndexAny::Mih(i) => AnyIndex::backend_name(i),
-            IndexAny::Sharded(_) => "sharded-mih",
+        match &self.kind {
+            IndexKind::Linear(_) => "linear",
+            IndexKind::Mih(i) => AnyIndex::backend_name(i),
+            IndexKind::Sharded(_) => "sharded-mih",
         }
     }
 
     /// Incremental insert; `Err` on the immutable linear backend.
     pub fn insert(&mut self, id: u32, code: &[u64]) -> Result<(), String> {
-        match self {
-            IndexAny::Linear(_) => {
+        match &mut self.kind {
+            IndexKind::Linear(_) => {
                 Err("linear index is immutable; use mih or sharded for live corpora".to_string())
             }
-            IndexAny::Mih(i) => {
+            IndexKind::Mih(i) => {
                 i.insert(id, code);
                 Ok(())
             }
-            IndexAny::Sharded(i) => {
+            IndexKind::Sharded(i) => {
                 i.insert(id, code);
                 Ok(())
             }
@@ -360,12 +408,12 @@ impl IndexAny {
     /// Incremental remove; `Ok(false)` when the id is absent, `Err` on the
     /// immutable linear backend.
     pub fn remove(&mut self, id: u32) -> Result<bool, String> {
-        match self {
-            IndexAny::Linear(_) => {
+        match &mut self.kind {
+            IndexKind::Linear(_) => {
                 Err("linear index is immutable; use mih or sharded for live corpora".to_string())
             }
-            IndexAny::Mih(i) => Ok(i.remove(id)),
-            IndexAny::Sharded(i) => Ok(i.remove(id)),
+            IndexKind::Mih(i) => Ok(i.remove(id)),
+            IndexKind::Sharded(i) => Ok(i.remove(id)),
         }
     }
 }
@@ -386,6 +434,9 @@ impl AnyIndex for IndexAny {
     fn backend_name(&self) -> &'static str {
         IndexAny::backend_name(self)
     }
+    fn model_version(&self) -> Option<u64> {
+        IndexAny::model_version(self)
+    }
 }
 
 /// Build the configured backend over a packed corpus with ids `0..n`.
@@ -403,17 +454,18 @@ pub fn build_index_with_ids(codes: BitCode, ids: Vec<u32>, backend: &IndexBacken
         IndexBackend::Auto => IndexBackend::auto_for(codes.n, codes.bits),
         b => b.clone(),
     };
-    match backend {
+    let kind = match backend {
         IndexBackend::Auto => unreachable!("auto resolved above"),
-        IndexBackend::Linear => IndexAny::Linear(BinaryIndex::with_ids(codes, ids)),
-        IndexBackend::Mih { m } => IndexAny::Mih(MihIndex::build_with_ids(codes, ids, m)),
+        IndexBackend::Linear => IndexKind::Linear(BinaryIndex::with_ids(codes, ids)),
+        IndexBackend::Mih { m } => IndexKind::Mih(MihIndex::build_with_ids(codes, ids, m)),
         IndexBackend::MihSampled { m } => {
-            IndexAny::Mih(MihIndex::build_sampled_with_ids(codes, ids, m))
+            IndexKind::Mih(MihIndex::build_sampled_with_ids(codes, ids, m))
         }
         IndexBackend::ShardedMih { shards, m } => {
-            IndexAny::Sharded(ShardedIndex::build_with_ids(codes, ids, shards, m))
+            IndexKind::Sharded(ShardedIndex::build_with_ids(codes, ids, shards, m))
         }
-    }
+    };
+    IndexAny::from(kind)
 }
 
 #[cfg(test)]
@@ -558,5 +610,19 @@ mod tests {
             assert_eq!(idx.remove(99), Ok(false));
             assert_eq!(idx.len(), 10);
         }
+    }
+
+    #[test]
+    fn model_version_stamping() {
+        let mut rng = Pcg64::new(404);
+        let db = BitCode::from_signs(&rng.sign_vec(10 * 32), 10, 32);
+        let idx = build_index(db, &IndexBackend::Linear);
+        // Indexes built directly over codes are unversioned …
+        assert_eq!(idx.model_version(), None);
+        assert_eq!(AnyIndex::model_version(&idx), None);
+        // … and the service's build path stamps its registry version.
+        let stamped = idx.with_model_version(3);
+        assert_eq!(stamped.model_version(), Some(3));
+        assert_eq!(AnyIndex::model_version(&stamped), Some(3));
     }
 }

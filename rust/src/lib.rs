@@ -17,6 +17,7 @@
 //! fan-out, backend selection via [`index::IndexBackend`]), and
 //! [`experiments`] (one driver per paper table/figure).
 
+pub mod error;
 pub mod util;
 pub mod proptest_lite;
 pub mod tune;
@@ -36,6 +37,8 @@ pub mod pool;
 pub mod coordinator;
 pub mod bench;
 pub mod experiments;
+
+pub use error::CbeError;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

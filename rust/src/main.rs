@@ -106,7 +106,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "trained in {:.1} ms ({} threads, spectrum cache {:.1} MiB); objective trace:",
         rep.total_ms,
         rep.threads,
-        rep.spectrum_cache_bytes as f64 / (1 << 20) as f64
+        rep.cache_bytes as f64 / (1 << 20) as f64
     );
     for (i, (o, ms)) in rep.objective_trace.iter().zip(&rep.iter_ms).enumerate() {
         println!("  iter {i}: {o:.3} ({ms:.1} ms)");
@@ -234,8 +234,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             outcome.report.threads,
             outcome.report.objective_trace.last().copied().unwrap_or(f64::NAN)
         );
-        // The old index was built with the old model; rebuild under the
-        // new one and prove the service still serves.
+        // The old index was built with the old model — the service now
+        // refuses it (CbeError::StaleIndex) instead of serving
+        // cross-model garbage. Rebuild under the new model and serve.
+        let stale = service
+            .search(&index, ds.x.row(0).to_vec(), topk)
+            .expect_err("stale index must be rejected after a retrain");
+        println!("stale index rejected: {stale}");
         let (index, ms) = cbe::util::timer::time_ms(|| service.build_index(&rows).unwrap());
         let mut hits_self = 0usize;
         for qi in 0..queries {

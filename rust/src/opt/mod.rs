@@ -1,19 +1,25 @@
 //! Learning machinery for data-dependent CBE.
 //!
 //! [`timefreq`] is the §4 time–frequency alternating optimizer, rebuilt
-//! on the thread-safe FFT substrate: every row spectrum F(xᵢ) is
-//! computed exactly once into a shared [`SpectrumCache`] and every pass
-//! — M, the per-iteration time-domain sweep, the §6 pair penalty, the
-//! full objective — reads the cache; the per-row work fans out across
-//! core-capped scoped threads with blocked (optionally
-//! thread-count-invariant) reductions. [`cubic`] supplies the
-//! closed-form quartic minimizer behind the per-bin frequency updates.
+//! on the conjugate-symmetric **half-spectrum** substrate
+//! ([`crate::fft::RealFft`]): every row spectrum F(xᵢ) is computed
+//! exactly once into a shared [`SpectrumCache`] holding only the
+//! ⌊d/2⌋+1 independent bins (~8·n·d bytes), and every pass — M, the
+//! per-iteration time-domain sweep, the §6 pair penalty, the per-bin
+//! frequency solve, the full objective — operates on half-spectra; the
+//! per-row work fans out across core-capped scoped threads with blocked
+//! (optionally thread-count-invariant) reductions, and
+//! [`TimeFreqConfig::cache_budget`] bounds resident memory by streaming
+//! block-aligned tiles when the cache would exceed it (bit-identical
+//! results either way). [`cubic`] supplies the closed-form quartic
+//! minimizer behind the per-bin frequency updates.
 //!
 //! Training entry points: [`crate::encoders::CbeTrainer`] (the high
 //! level API, produces a [`crate::encoders::CbeOpt`] + [`TrainReport`]),
 //! or [`TimeFreqOptimizer`] directly when the caller manages its own
 //! cache. `timefreq::reference` preserves the old per-row-re-FFT serial
-//! loop as the bench baseline and equality oracle.
+//! loop and the PR-4 full-spectrum cached loop as bench baselines and
+//! equality oracles.
 
 pub mod cubic;
 pub mod timefreq;

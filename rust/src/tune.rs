@@ -27,8 +27,12 @@
 //!
 //! Env knobs:
 //! * `CBE_MIN_PARALLEL_WORK=N` — skip probing, use N (clamp still
-//!   applies; useful for benches and deterministic CI timing);
-//! * `CBE_CALIBRATE=0` — disable probing, use the fixed default.
+//!   applies; useful for benches and deterministic CI timing). An
+//!   unparsable value (`"16k"`, `"auto"`, …) warns on stderr and uses
+//!   the fixed [`DEFAULT_MIN_WORK`] — never the nondeterministic probe
+//!   the operator was clearly trying to pin down;
+//! * `CBE_CALIBRATE=0` — disable probing, use the fixed default
+//!   (honored even when `CBE_MIN_PARALLEL_WORK` fails to parse).
 //!
 //! The probe also falls back to the default when its measurements are
 //! degenerate (zero-resolution timer, absurd spawn cost) — noisy hosts
@@ -65,13 +69,10 @@ pub fn min_parallel_work() -> usize {
 }
 
 fn calibrate() -> usize {
-    if let Ok(v) = std::env::var("CBE_MIN_PARALLEL_WORK") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.clamp(MIN_WORK_FLOOR, MIN_WORK_CEIL);
-        }
-    }
-    if std::env::var("CBE_CALIBRATE").is_ok_and(|v| v == "0") {
-        return DEFAULT_MIN_WORK;
+    let min_work = std::env::var("CBE_MIN_PARALLEL_WORK").ok();
+    let probing_disabled = std::env::var("CBE_CALIBRATE").is_ok_and(|v| v == "0");
+    if let Some(work) = resolve_override(min_work.as_deref(), probing_disabled) {
+        return work;
     }
     let cores = std::thread::available_parallelism()
         .map(|p| p.get())
@@ -94,6 +95,34 @@ fn calibrate() -> usize {
 
     let work = OVERHEAD_FACTOR * t_spawn.as_secs_f64() / t_elem;
     (work as usize).clamp(MIN_WORK_FLOOR, MIN_WORK_CEIL)
+}
+
+/// Pure resolution of the env overrides (extracted so it can be unit
+/// tested without racing the process environment or the `OnceLock`).
+/// `Some(threshold)` short-circuits the probe; `None` means probe.
+///
+/// A set-but-unparsable `CBE_MIN_PARALLEL_WORK` used to fall through to
+/// the nondeterministic probe — exactly what an operator pinning the
+/// threshold was trying to avoid. Now it warns on stderr and resolves to
+/// the fixed [`DEFAULT_MIN_WORK`] (which also honors `CBE_CALIBRATE=0`,
+/// trivially, since the probe is never reached).
+fn resolve_override(min_work: Option<&str>, probing_disabled: bool) -> Option<usize> {
+    if let Some(v) = min_work {
+        match v.trim().parse::<usize>() {
+            Ok(n) => return Some(n.clamp(MIN_WORK_FLOOR, MIN_WORK_CEIL)),
+            Err(_) => {
+                eprintln!(
+                    "cbe: CBE_MIN_PARALLEL_WORK='{v}' is not an integer; \
+                     using the fixed default {DEFAULT_MIN_WORK} (probe skipped)"
+                );
+                return Some(DEFAULT_MIN_WORK);
+            }
+        }
+    }
+    if probing_disabled {
+        return Some(DEFAULT_MIN_WORK);
+    }
+    None
 }
 
 /// Median wall time of a scope spawning one no-op thread per core.
@@ -143,5 +172,32 @@ mod tests {
         let b = min_parallel_work();
         assert_eq!(a, b, "calibration must be one-shot");
         assert!((MIN_WORK_FLOOR..=MIN_WORK_CEIL).contains(&a), "work={a}");
+    }
+
+    #[test]
+    fn parsable_override_is_clamped() {
+        assert_eq!(resolve_override(Some("32768"), false), Some(32768));
+        assert_eq!(resolve_override(Some(" 32768 "), false), Some(32768));
+        assert_eq!(resolve_override(Some("1"), false), Some(MIN_WORK_FLOOR));
+        assert_eq!(
+            resolve_override(Some("99999999999"), false),
+            Some(MIN_WORK_CEIL)
+        );
+    }
+
+    #[test]
+    fn unparsable_override_falls_back_to_default_not_probe() {
+        // The PR-5 bugfix: "16k" used to fall through to the
+        // nondeterministic probe; now it pins the fixed default …
+        assert_eq!(resolve_override(Some("16k"), false), Some(DEFAULT_MIN_WORK));
+        assert_eq!(resolve_override(Some(""), false), Some(DEFAULT_MIN_WORK));
+        // … and CBE_CALIBRATE=0 stays honored alongside the bad value.
+        assert_eq!(resolve_override(Some("16k"), true), Some(DEFAULT_MIN_WORK));
+    }
+
+    #[test]
+    fn calibrate_0_disables_probing() {
+        assert_eq!(resolve_override(None, true), Some(DEFAULT_MIN_WORK));
+        assert_eq!(resolve_override(None, false), None);
     }
 }

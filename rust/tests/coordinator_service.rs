@@ -187,6 +187,59 @@ fn retrain_hot_swaps_without_dropping_requests() {
 }
 
 #[test]
+fn stale_index_rejected_after_retrain() {
+    // The PR-4 rebuild-after-retrain contract, now enforced by code:
+    // build_index stamps the registry version its codes were encoded
+    // with, and search() against an index whose stamp mismatches the live
+    // model fails with CbeError::StaleIndex instead of silently mixing
+    // codes from two models.
+    let (svc, _, _) = service(64, 32, 31);
+    let mut rng = Pcg64::new(32);
+    let rows: Vec<Vec<f32>> = (0..64)
+        .map(|_| {
+            let mut v = rng.normal_vec(64);
+            cbe::util::l2_normalize(&mut v);
+            v
+        })
+        .collect();
+    let old_index = svc.build_index(&rows).unwrap();
+    assert_eq!(old_index.model_version(), Some(0));
+
+    // Pre-retrain the stamped index serves normally.
+    let hits = svc.search(&old_index, rows[3].clone(), 3).unwrap();
+    assert_eq!(hits[0].id, 3);
+    assert_eq!(hits[0].dist, 0);
+
+    svc.retrain_blocking().unwrap();
+    assert_eq!(svc.model_version(), 1);
+
+    // Post-retrain, the pre-swap index is refused …
+    let err = svc.search(&old_index, rows[3].clone(), 3).unwrap_err();
+    assert_eq!(
+        err,
+        cbe::CbeError::StaleIndex {
+            built: 0,
+            current: 1
+        }
+    );
+    assert!(err.to_string().contains("stale index"), "{err}");
+
+    // … a rebuilt index carries the new stamp and is accepted …
+    let fresh = svc.build_index(&rows).unwrap();
+    assert_eq!(fresh.model_version(), Some(1));
+    let hits = svc.search(&fresh, rows[3].clone(), 3).unwrap();
+    assert_eq!(hits[0].id, 3);
+    assert_eq!(hits[0].dist, 0);
+
+    // … and an unversioned index (built outside the service) is not
+    // version-checked: its staleness stays the caller's contract.
+    let codes = svc.encode_corpus(&rows).unwrap();
+    let bare = cbe::index::build_index(codes, &cbe::index::IndexBackend::Linear);
+    assert_eq!(bare.model_version(), None);
+    svc.search(&bare, rows[0].clone(), 3).unwrap();
+}
+
+#[test]
 fn retrain_without_corpus_reports_error_and_keeps_model() {
     let (svc, _, _) = service(32, 16, 23);
     let err = svc.retrain_blocking().unwrap_err();

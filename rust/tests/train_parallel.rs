@@ -1,10 +1,18 @@
-//! Integration properties of the spectrum-cached parallel trainer:
+//! Integration properties of the half-spectrum-cached parallel trainer:
 //!
 //! * **Determinism** — under `TimeFreqConfig::deterministic`, parallel
 //!   training is bit-for-bit identical to the serial path (threads = 1)
 //!   for every shape class the optimizer special-cases: even d (Nyquist
-//!   bin), odd d (Bluestein plans, no Nyquist), k < d (zeroed B
+//!   bin), odd d (full-size fallback, no Nyquist), k < d (zeroed B
 //!   columns), and §6 semi-supervised pairs.
+//! * **Half-spectrum fidelity** — models trained by the half-spectrum
+//!   engine emit *identical binary codes* to the full-spectrum
+//!   `opt::timefreq::reference` oracle on a held-out probe set, at 1, 4
+//!   and 8 threads (the engines differ in FFT rounding, so r agrees to
+//!   ulps, but the codes — the product the serving path ships — must
+//!   not move).
+//! * **Memory budget** — a `cache_budget` small enough to force tiling
+//!   changes resident memory, not one output bit.
 //! * **Monotone objective** — the per-iteration trace still descends
 //!   (from iteration 1; trace[0] mixes the random init's binarization
 //!   error) when training runs parallel.
@@ -17,6 +25,7 @@ use cbe::fft::Planner;
 use cbe::linalg::Mat;
 use cbe::opt::timefreq::{reference, DETERMINISTIC_BLOCK};
 use cbe::opt::{PairSet, SpectrumCache, TimeFreqConfig, TimeFreqOptimizer};
+use cbe::projections::CirculantProjection;
 use cbe::proptest_lite::forall;
 use cbe::util::rng::Pcg64;
 
@@ -90,6 +99,45 @@ fn assert_parity(
     }
 }
 
+/// Train with the half-spectrum engine at `threads` workers and with the
+/// full-spectrum reference oracle; the two learned models must emit
+/// identical k-bit codes on a held-out probe set.
+fn assert_codes_match_reference(
+    d: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    pairs: Option<&PairSet>,
+    seed: u64,
+) {
+    let mut rng = Pcg64::new(seed);
+    let x = make_data(n, d, &mut rng);
+    let r0 = rng.normal_vec(d);
+    let probe: Vec<Vec<f32>> = (0..12).map(|_| rng.normal_vec(d)).collect();
+    let planner = Planner::new();
+
+    let mut cfg = TimeFreqConfig::new(k);
+    cfg.iters = 3;
+    cfg.mu = if pairs.is_some() { 0.7 } else { 0.0 };
+    cfg.deterministic = true;
+
+    let (r_ref, _) = reference::run(&planner, d, &cfg, &x, &r0, pairs);
+    cfg.threads = threads;
+    let mut opt = TimeFreqOptimizer::new(d, cfg, planner.clone());
+    let r_half = opt.run(&x, &r0, pairs);
+
+    let signs = vec![1f32; d];
+    let p_ref = CirculantProjection::new(r_ref, signs.clone(), planner.clone());
+    let p_half = CirculantProjection::new(r_half, signs, planner);
+    for (t, q) in probe.iter().enumerate() {
+        assert_eq!(
+            p_half.encode(q, k),
+            p_ref.encode(q, k),
+            "d={d} k={k} n={n} threads={threads} probe {t}"
+        );
+    }
+}
+
 #[test]
 fn parallel_equals_serial_even_d() {
     assert_parity(32, 32, 170, 4, None, 1);
@@ -124,6 +172,68 @@ fn parallel_equals_serial_property_sweep() {
         let threads = g.usize_in(2, 8);
         assert_parity(d, k, n, threads, None, 1000 + n as u64);
     });
+}
+
+#[test]
+fn half_spectrum_codes_match_reference_even_d() {
+    for threads in [1usize, 4, 8] {
+        assert_codes_match_reference(32, 32, 120, threads, None, 40 + threads as u64);
+    }
+}
+
+#[test]
+fn half_spectrum_codes_match_reference_odd_d() {
+    for threads in [1usize, 4, 8] {
+        assert_codes_match_reference(27, 27, 110, threads, None, 50 + threads as u64);
+    }
+}
+
+#[test]
+fn half_spectrum_codes_match_reference_k_less_than_d() {
+    for threads in [1usize, 4, 8] {
+        assert_codes_match_reference(30, 9, 130, threads, None, 60 + threads as u64);
+    }
+}
+
+#[test]
+fn half_spectrum_codes_match_reference_semi_supervised() {
+    let mut rng = Pcg64::new(70);
+    let n = 120;
+    let pairs = make_pairs(n, 40, &mut rng);
+    for threads in [1usize, 4, 8] {
+        assert_codes_match_reference(24, 24, n, threads, Some(&pairs), 71 + threads as u64);
+    }
+}
+
+#[test]
+fn budget_tiled_training_matches_cached_end_to_end() {
+    // The CbeTrainer pipeline under a memory budget small enough to
+    // force tiling must produce the same model — same r bits, same
+    // probe codes — as the unbounded run, at any thread count.
+    let d = 26;
+    let n = 180; // several DETERMINISTIC_BLOCK tiles
+    let mut rng = Pcg64::new(81);
+    let x = make_data(n, d, &mut rng);
+    let probe: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(d)).collect();
+
+    let mut cfg = TimeFreqConfig::new(d);
+    cfg.iters = 3;
+    cfg.threads = 4;
+    let full = CbeTrainer::new(cfg.clone()).seed(9).train(&x);
+    assert_eq!(full.report.tile_rows, 0);
+
+    cfg.cache_budget = 80 * (d / 2 + 1) * 16; // fits ~80 of the 180 rows
+    let tiled = CbeTrainer::new(cfg).seed(9).train(&x);
+    assert_eq!(tiled.report.tile_rows, DETERMINISTIC_BLOCK);
+    assert!(tiled.report.cache_bytes < full.report.cache_bytes);
+    assert!(tiled.report.cache_bytes <= 80 * (d / 2 + 1) * 16);
+
+    for (a, b) in full.proj.r.iter().zip(&tiled.proj.r) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for p in &probe {
+        assert_eq!(full.proj.encode(p, d), tiled.proj.encode(p, d));
+    }
 }
 
 #[test]
