@@ -50,6 +50,14 @@ fn main() -> anyhow::Result<()> {
 
     let mut tf = TimeFreqConfig::new(bits);
     tf.iters = 5;
+    // CBE_CACHE_BUDGET=<bytes>: cap the trainer's resident spectrum cache
+    // (0 / unset = unlimited); oversized training sets stream in tiles.
+    // Applies to both the initial training run and live retrains.
+    let tf_cache_budget: usize = std::env::var("CBE_CACHE_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    tf.cache_budget = tf_cache_budget;
     let enc = CbeTrainer::new(tf).seed(13).planner(Planner::new()).train(&train);
     println!(
         "CBE-opt trained in {:.1}s ({} threads, spectrum cache {:.1} MiB)",
@@ -69,7 +77,10 @@ fn main() -> anyhow::Result<()> {
                 max_wait: Duration::from_millis(2),
             },
             index: backend,
-            retrain: RetrainConfig::default(),
+            retrain: RetrainConfig {
+                cache_budget: tf_cache_budget,
+                ..RetrainConfig::default()
+            },
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),
@@ -158,5 +169,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("service metrics: {}", svc.metrics.summary(32));
+    // CBE_STATS=1: print the structured stats snapshot as the final
+    // stdout line (machine-readable — CI pipes it into a JSON parser).
+    if std::env::var("CBE_STATS").is_ok_and(|v| v == "1") {
+        println!("{}", svc.stats()?.to_json());
+    }
     Ok(())
 }

@@ -50,6 +50,9 @@ impl BinaryIndex {
         if k == 0 {
             return Vec::new();
         }
+        // A linear scan is all re-rank: every row gets an exact distance.
+        let _rerank = crate::obs::span(crate::obs::Stage::ReRank);
+        crate::obs::add(crate::obs::Counter::Reranked, n as u64);
         let mut dists = vec![0u32; n];
         hamming_to_all(query, &self.codes, &mut dists);
         // Bounded max-heap of (dist, id).

@@ -1,21 +1,34 @@
-//! Service metrics: counters + latency histogram (log-scale buckets).
+//! Service metrics: throughput counters + a lock-free fixed-bucket
+//! log-scale latency histogram ([`crate::obs::Histogram`]).
+//!
+//! Everything here is bounded and wait-free on the request path: the
+//! histogram is ~15 KiB of atomic buckets however many requests the
+//! service has served (the PR-6 bugfix — latencies used to pile up in an
+//! unbounded `Mutex<Vec<u64>>` that was clone-and-sorted on every read),
+//! and the counters are relaxed atomics. [`Metrics::snapshot`] merges
+//! this per-service record with the process-global stage recorder into a
+//! [`StatsSnapshot`] for the `ControlRequest::Stats` control plane.
 
+use crate::obs::{self, Histogram, StageStats, StatsSnapshot};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
-/// Fixed log-scale latency histogram (µs buckets) + counters.
+/// Per-service counters + end-to-end request-latency histogram (µs).
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    /// Completed `Retrain` hot-swaps.
+    pub retrains: AtomicU64,
+    /// Searches refused with [`crate::error::CbeError::StaleIndex`].
+    pub stale_rejections: AtomicU64,
+    latency_us: Histogram,
 }
 
 impl Metrics {
     pub fn record_request(&self, latency_us: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(latency_us);
+        self.latency_us.record(latency_us);
     }
 
     pub fn record_batch(&self, size: usize, capacity: usize) {
@@ -26,6 +39,14 @@ impl Metrics {
             .fetch_add(capacity.saturating_sub(size) as u64, Ordering::Relaxed);
     }
 
+    pub fn record_retrain(&self) {
+        self.retrains.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_stale_rejection(&self) {
+        self.stale_rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn request_count(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -34,15 +55,27 @@ impl Metrics {
         self.batches.load(Ordering::Relaxed)
     }
 
-    /// (p50, p99, max) request latency in microseconds.
+    pub fn retrain_count(&self) -> u64 {
+        self.retrains.load(Ordering::Relaxed)
+    }
+
+    pub fn stale_rejection_count(&self) -> u64 {
+        self.stale_rejections.load(Ordering::Relaxed)
+    }
+
+    /// The full end-to-end request-latency histogram (µs buckets).
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latency_us
+    }
+
+    /// (p50, p99, max) request latency in microseconds. p50/p99 carry the
+    /// histogram's ≤3.125% bucket error; max is exact.
     pub fn latency_percentiles(&self) -> (u64, u64, u64) {
-        let mut v = self.latencies_us.lock().unwrap().clone();
-        if v.is_empty() {
-            return (0, 0, 0);
-        }
-        v.sort_unstable();
-        let pick = |p: f64| v[((p * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)];
-        (pick(0.50), pick(0.99), *v.last().unwrap())
+        (
+            self.latency_us.p(0.50),
+            self.latency_us.p(0.99),
+            self.latency_us.max(),
+        )
     }
 
     /// Mean occupancy of launched batches (1.0 = always full).
@@ -67,6 +100,22 @@ impl Metrics {
             max
         )
     }
+
+    /// Build a [`StatsSnapshot`]: this service's counters and latency
+    /// histogram, plus the process-global per-stage recorder.
+    pub fn snapshot(&self, capacity: usize, model_version: u64) -> StatsSnapshot {
+        StatsSnapshot {
+            model_version,
+            requests: self.request_count(),
+            batches: self.batch_count(),
+            batch_occupancy: self.batch_occupancy(capacity),
+            retrains: self.retrain_count(),
+            stale_rejections: self.stale_rejection_count(),
+            latency: StageStats::from_histogram(&self.latency_us),
+            ..Default::default()
+        }
+        .with_stages(obs::global())
+    }
 }
 
 #[cfg(test)]
@@ -82,10 +131,39 @@ mod tests {
         m.record_batch(3, 4);
         m.record_batch(4, 4);
         let (p50, p99, max) = m.latency_percentiles();
-        assert_eq!(p50, 300);
-        assert_eq!(max, 1000);
+        // p50 reports the bucket upper edge: within +3.125% of the true
+        // median (the old Vec-backed path was exact but unbounded).
+        assert!(p50 >= 300 && p50 as f64 <= 300.0 * 1.03125, "p50={p50}");
+        assert_eq!(max, 1000, "max is exact via fetch_max");
         assert!(p99 >= 400);
         assert!((m.batch_occupancy(4) - 7.0 / 8.0).abs() < 1e-9);
         assert!(m.summary(4).contains("requests=5"));
+    }
+
+    #[test]
+    fn retrain_and_stale_counters() {
+        let m = Metrics::default();
+        m.record_retrain();
+        m.record_stale_rejection();
+        m.record_stale_rejection();
+        assert_eq!(m.retrain_count(), 1);
+        assert_eq!(m.stale_rejection_count(), 2);
+        let snap = m.snapshot(4, 3);
+        assert_eq!(snap.retrains, 1);
+        assert_eq!(snap.stale_rejections, 2);
+        assert_eq!(snap.model_version, 3);
+    }
+
+    #[test]
+    fn snapshot_carries_the_latency_histogram() {
+        let m = Metrics::default();
+        for us in [10u64, 20, 5000] {
+            m.record_request(us);
+        }
+        let snap = m.snapshot(8, 0);
+        assert_eq!(snap.requests, 3);
+        assert_eq!(snap.latency.count, 3);
+        assert_eq!(snap.latency.max_us, 5000);
+        assert!(snap.latency.p999_us >= snap.latency.p50_us);
     }
 }

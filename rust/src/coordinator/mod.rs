@@ -9,7 +9,10 @@
 //! * [`router`] — picks the artifact for a request's (kind, d), and the
 //!   retrieval backend for a corpus size (`Router::pick_index`, the
 //!   resolution behind `IndexBackend::Auto`).
-//! * [`metrics`] — latency histograms + throughput counters.
+//! * [`metrics`] — throughput counters + a lock-free log-scale latency
+//!   histogram; `Metrics::snapshot` merges them with the process-global
+//!   [`crate::obs`] stage recorder into a `StatsSnapshot`, served over
+//!   the control plane as `ControlRequest::Stats`.
 //! * [`registry`] — [`ModelRegistry`]: the hot-swappable model slot.
 //!   A `Retrain` control request re-learns the circulant model from the
 //!   service's corpus reservoir on a background thread and swaps it in

@@ -2,12 +2,14 @@
 //!
 //! Two channels feed the event loop: the data plane
 //! ([`EncodeRequest`] → [`EncodeResponse`]) and the control plane
-//! ([`ControlRequest`]), which carries operations on the service itself
-//! — today [`ControlRequest::Retrain`], which re-learns the circulant
-//! model from the service's corpus sample and hot-swaps it into the
-//! [`super::registry::ModelRegistry`] without touching in-flight
-//! encodes.
+//! ([`ControlRequest`]), which carries operations on the service itself:
+//! [`ControlRequest::Retrain`] re-learns the circulant model from the
+//! service's corpus sample and hot-swaps it into the
+//! [`super::registry::ModelRegistry`] without touching in-flight encodes,
+//! and [`ControlRequest::Stats`] answers with a structured
+//! [`StatsSnapshot`] of counters + per-stage latency histograms.
 
+use crate::obs::StatsSnapshot;
 use crate::opt::TrainReport;
 use std::sync::mpsc;
 use std::time::Instant;
@@ -43,6 +45,12 @@ pub enum ControlRequest {
     /// (e.g. no corpus sampled yet) leaves the active model untouched.
     Retrain {
         reply: mpsc::Sender<RetrainResult>,
+    },
+    /// Snapshot the service's statistics (counters, latency histogram,
+    /// per-stage timings). Answered inline by the event loop — and also
+    /// during shutdown drain, so a final scrape never races teardown.
+    Stats {
+        reply: mpsc::Sender<StatsSnapshot>,
     },
 }
 

@@ -10,6 +10,12 @@
 //! [`EmbeddingService::encode_corpus`], which streams the corpus through
 //! the fan-out in bounded slabs.
 //!
+//! The pipeline is instrumented end to end: each batch reports
+//! queue-wait → model-resolve → encode → pack stage timings to the
+//! [`crate::obs`] recorder (gated, near-zero overhead), and
+//! [`EmbeddingService::stats`] returns a structured
+//! [`StatsSnapshot`] over the control plane.
+//!
 //! # Online retraining
 //!
 //! The service can re-learn its circulant model without a restart:
@@ -52,6 +58,7 @@ use crate::error::CbeError;
 use crate::fft::Planner;
 use crate::index::{build_index, AnyIndex, IndexAny, IndexBackend};
 use crate::linalg::Mat;
+use crate::obs::{self, Stage, StatsSnapshot};
 use crate::opt::TimeFreqConfig;
 use crate::projections::{CirculantProjection, ScratchPool};
 use crate::runtime::Manifest;
@@ -318,6 +325,20 @@ impl EmbeddingService {
         }
     }
 
+    /// Snapshot the service's statistics over the control plane:
+    /// counters (requests, retrains, `StaleIndex` rejections), the
+    /// end-to-end latency histogram, index/plan-cache totals and the
+    /// per-stage timing histograms. Serialize with
+    /// [`StatsSnapshot::to_json`]; the CLI exposes it as `--stats` /
+    /// `--stats-every`, the embedding_server example as `CBE_STATS=1`.
+    pub fn stats(&self) -> Result<StatsSnapshot> {
+        let (reply, rx) = mpsc::channel();
+        self.ctl
+            .send(ControlRequest::Stats { reply })
+            .map_err(|_| anyhow!("service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("service dropped stats reply"))
+    }
+
     /// Rows per `encode_corpus` slab: artifact-batch-sized, raised to
     /// the smallest count that still saturates the batch fan-out (every
     /// core gets work above the calibrated threshold), so streaming
@@ -435,6 +456,7 @@ impl EmbeddingService {
                 // index was built by a different service instance. Both
                 // mix embeddings, so both are rejected.
                 if built != current {
+                    self.metrics.record_stale_rejection();
                     return Err(CbeError::StaleIndex { built, current });
                 }
             }
@@ -467,6 +489,7 @@ fn spawn_retrain(
     planner: &Planner,
     registry: &Arc<ModelRegistry>,
     sample: &Arc<Mutex<Reservoir>>,
+    metrics: &Arc<Metrics>,
     reply: mpsc::Sender<RetrainResult>,
 ) -> std::thread::JoinHandle<()> {
     let rc = cfg.retrain.clone();
@@ -475,6 +498,7 @@ fn spawn_retrain(
     let planner = planner.clone();
     let registry = Arc::clone(registry);
     let sample = Arc::clone(sample);
+    let metrics = Arc::clone(metrics);
     std::thread::spawn(move || {
         let rows = {
             let res = sample.lock().expect("sample lock poisoned");
@@ -500,6 +524,7 @@ fn spawn_retrain(
         let enc = CbeTrainer::new(tf).seed(rc.seed).planner(planner).train(&x);
         let report = enc.report.clone();
         let version = registry.swap(enc.proj);
+        metrics.record_retrain();
         let _ = reply.send(Ok(RetrainOutcome {
             version,
             rows_used: rows.len(),
@@ -524,11 +549,22 @@ fn run_batch(
         return;
     }
     metrics.record_batch(batch.len(), artifact_batch);
+    let on = obs::enabled();
     let t0 = Instant::now();
+    if on {
+        // Queue-wait ends when the batch launches; one sample per request.
+        for req in &batch {
+            obs::record(Stage::QueueWait, t0.duration_since(req.t_enqueue));
+        }
+    }
     let rows: Vec<&[f32]> = batch.iter().map(|r| r.features.as_slice()).collect();
     codes.reset(batch.len());
-    proj.encode_batch_into(&rows, bits, codes, pool);
+    {
+        let _encode = on.then(|| obs::global().start(Stage::Encode));
+        proj.encode_batch_into(&rows, bits, codes, pool);
+    }
     let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let _pack = on.then(|| obs::global().start(Stage::Pack));
     for (i, req) in batch.iter().enumerate() {
         let queue_ms = t0.duration_since(req.t_enqueue).as_secs_f64() * 1e3;
         let mut signs = codes.to_signs(i);
@@ -592,16 +628,25 @@ fn event_loop(
             break;
         }
         // Control plane: hand retrains to side threads so encoding
-        // continues while the trainer runs.
+        // continues while the trainer runs; stats are answered inline
+        // (snapshotting is a few hundred atomic loads).
         while let Ok(ctl) = ctl_rx.try_recv() {
             match ctl {
                 ControlRequest::Retrain { reply } => {
-                    trainers.push(spawn_retrain(&cfg, &planner, &registry, &sample, reply));
+                    trainers.push(spawn_retrain(
+                        &cfg, &planner, &registry, &sample, &metrics, reply,
+                    ));
+                }
+                ControlRequest::Stats { reply } => {
+                    let _ = reply.send(metrics.snapshot(artifact_batch, registry.version()));
                 }
             }
         }
         if let Some(batch) = batcher.pop_ready(Instant::now()) {
-            let proj = registry.current();
+            let proj = {
+                let _resolve = obs::span(Stage::ModelResolve);
+                registry.current()
+            };
             run_batch(
                 &proj,
                 cfg.bits,
@@ -637,6 +682,11 @@ fn event_loop(
         match ctl {
             ControlRequest::Retrain { reply } => {
                 let _ = reply.send(Err("service stopping".to_string()));
+            }
+            // A final scrape is still answerable — the counters outlive
+            // the loop; refusing would turn clean shutdowns into races.
+            ControlRequest::Stats { reply } => {
+                let _ = reply.send(metrics.snapshot(artifact_batch, registry.version()));
             }
         }
     }

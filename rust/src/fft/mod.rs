@@ -190,8 +190,13 @@ impl Planner {
     /// only for cache maintenance.
     pub fn plan(&self, n: usize) -> Arc<Plan> {
         if let Some(p) = self.plans.read().expect("planner lock poisoned").get(&n) {
+            crate::obs::add(crate::obs::Counter::PlanHit, 1);
             return Arc::clone(p);
         }
+        // Write-path entries count as misses; racers that lose the entry
+        // race may double-count a miss, which is fine for a diagnostic —
+        // the signal is "hot paths should hit the read path".
+        crate::obs::add(crate::obs::Counter::PlanMiss, 1);
         let mut map = self.plans.write().expect("planner lock poisoned");
         Arc::clone(map.entry(n).or_insert_with(|| Arc::new(Plan::new(n))))
     }

@@ -27,8 +27,10 @@ use super::substring::{
 use crate::bits::bitcode::BitCode;
 use crate::bits::hamming::hamming_words;
 use crate::bits::index::Hit;
+use crate::obs::{self, Counter, Stage};
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Seed of the bit-sampling permutation. A fixed constant: the permutation
 /// must be reproducible so a compacted/rebuilt index buckets exactly like
@@ -76,11 +78,13 @@ pub fn auto_m(bits: usize, n: usize) -> usize {
     target.clamp(min_m, bits.max(min_m))
 }
 
-/// One reusable visited-stamp buffer: `stamps[slot] == gen` ⇔ the slot was
-/// already re-ranked by the query currently holding the buffer.
+/// One reusable visited-stamp buffer (`stamps[slot] == gen` ⇔ the slot was
+/// already re-ranked by the query currently holding the buffer) plus the
+/// raw-candidate gather list each probe round fills before dedup.
 struct Scratch {
     gen: u32,
     stamps: Vec<u32>,
+    cands: Vec<u32>,
 }
 
 /// Pool of stamp buffers. The mutex is held only to take/return a buffer
@@ -104,6 +108,7 @@ impl ScratchPool {
             .unwrap_or(Scratch {
                 gen: 0,
                 stamps: Vec::new(),
+                cands: Vec::new(),
             });
         if s.stamps.len() < n {
             s.stamps.resize(n, 0);
@@ -342,6 +347,14 @@ impl MihIndex {
     /// Candidate dedup uses a pooled generation-stamped scratch buffer, so
     /// a query pays for the candidates it touches, not an O(n) bitmap
     /// memset.
+    ///
+    /// Each round runs as three explicit phases — **probe** (key
+    /// enumeration + bucket gather), **candidate-dedup** (generation-stamp
+    /// filter), **re-rank** (exact Hamming + heap) — reported per query to
+    /// the [`crate::obs`] recorder as stage timings and probe/candidate/
+    /// re-rank totals. The bounded min-k heap is push-order-invariant, so
+    /// batching pushes after the gather returns exactly the results the
+    /// old interleaved loop did.
     pub fn search(&self, q: &[u64], k: usize) -> Vec<Hit> {
         assert_eq!(q.len(), self.codes.words_per_code, "query word count");
         let k = k.min(self.live);
@@ -351,7 +364,7 @@ impl MihIndex {
         let m = self.tables.len() as u32;
         let mut scratch = self.scratch.take(self.codes.n);
         let gen = scratch.gen;
-        let stamps = &mut scratch.stamps;
+        let Scratch { stamps, cands, .. } = &mut scratch;
         // Bounded max-heap of (dist, id): holds the k lexicographically
         // smallest pairs seen so far.
         let mut heap: BinaryHeap<(u32, u32)> = BinaryHeap::with_capacity(k + 1);
@@ -371,6 +384,13 @@ impl MihIndex {
         // sampled-scheme extraction is an O(key_bits) gather, not O(1).
         let qkeys: Vec<u64> = self.tables.iter().map(|t| t.key_of(q)).collect();
         let max_radius = self.tables.iter().map(|t| t.key_bits()).max().unwrap_or(0);
+        // Per-query accounting, flushed to the global recorder once at the
+        // end; `on == false` costs one branch per phase and nothing else.
+        let on = obs::enabled();
+        let (mut n_probes, mut n_cands, mut n_reranked) = (0u64, 0u64, 0u64);
+        let mut probe_dur = Duration::ZERO;
+        let mut dedup_dur = Duration::ZERO;
+        let mut rerank_dur = Duration::ZERO;
         for s in 0..=max_radius {
             let round_keys: f64 = self
                 .tables
@@ -379,36 +399,72 @@ impl MihIndex {
                 .sum();
             if round_keys > unseen as f64 {
                 // Cheaper to finish exhaustively than to enumerate keys.
+                // The sweep is re-rank work: exact distances on every
+                // not-yet-seen row.
+                let t0 = on.then(Instant::now);
                 for si in 0..self.codes.n {
                     if stamps[si] == gen || !self.alive[si] {
                         continue;
                     }
+                    n_reranked += 1;
                     push(
                         &mut heap,
                         (hamming_words(q, self.codes.code(si)), self.ids[si]),
                     );
                 }
+                if let Some(t0) = t0 {
+                    rerank_dur += t0.elapsed();
+                }
                 break;
             }
+            // Probe: enumerate candidate keys at substring radius s and
+            // gather raw postings (duplicates included — one slot can land
+            // in several tables' buckets).
+            let t_probe = on.then(Instant::now);
+            cands.clear();
             for (t, &qkey) in self.tables.iter().zip(&qkeys) {
                 for_each_key_at_radius(qkey, t.key_bits(), s, &mut |key| {
-                    let Some(bucket) = t.bucket(key) else { return };
-                    for &slot in bucket {
-                        let si = slot as usize;
-                        if stamps[si] == gen {
-                            continue;
-                        }
-                        stamps[si] = gen;
-                        if !self.alive[si] {
-                            continue;
-                        }
-                        unseen -= 1;
-                        push(
-                            &mut heap,
-                            (hamming_words(q, self.codes.code(si)), self.ids[si]),
-                        );
+                    n_probes += 1;
+                    if let Some(bucket) = t.bucket(key) {
+                        cands.extend_from_slice(bucket);
                     }
                 });
+            }
+            n_cands += cands.len() as u64;
+            // Candidate-dedup: generation-stamp filter, in place. Dead
+            // slots are stamped too (so a later round skips them cheaply)
+            // but only live first-sightings spend the re-rank budget.
+            let t_dedup = on.then(Instant::now);
+            if let (Some(a), Some(b)) = (t_probe, t_dedup) {
+                probe_dur += b.duration_since(a);
+            }
+            cands.retain(|&slot| {
+                let si = slot as usize;
+                if stamps[si] == gen {
+                    return false;
+                }
+                stamps[si] = gen;
+                if !self.alive[si] {
+                    return false;
+                }
+                unseen -= 1;
+                true
+            });
+            // Re-rank: exact full-code Hamming on the deduped survivors.
+            let t_rerank = on.then(Instant::now);
+            if let (Some(a), Some(b)) = (t_dedup, t_rerank) {
+                dedup_dur += b.duration_since(a);
+            }
+            n_reranked += cands.len() as u64;
+            for &slot in cands.iter() {
+                let si = slot as usize;
+                push(
+                    &mut heap,
+                    (hamming_words(q, self.codes.code(si)), self.ids[si]),
+                );
+            }
+            if let Some(t0) = t_rerank {
+                rerank_dur += t0.elapsed();
             }
             // Pigeonhole bound: after probing every table at all substring
             // radii ≤ s, any unseen code differs by ≥ m·(s+1) overall. Once
@@ -423,6 +479,15 @@ impl MihIndex {
             }
         }
         self.scratch.put(scratch);
+        if on {
+            let rec = obs::global();
+            rec.record(Stage::Probe, probe_dur);
+            rec.record(Stage::CandidateDedup, dedup_dur);
+            rec.record(Stage::ReRank, rerank_dur);
+            rec.add(Counter::Probes, n_probes);
+            rec.add(Counter::Candidates, n_cands);
+            rec.add(Counter::Reranked, n_reranked);
+        }
         let mut hits: Vec<Hit> = heap
             .into_iter()
             .map(|(dist, id)| Hit { id, dist })

@@ -21,6 +21,7 @@ pub mod error;
 pub mod util;
 pub mod proptest_lite;
 pub mod tune;
+pub mod obs;
 pub mod fft;
 pub mod linalg;
 pub mod bits;

@@ -19,10 +19,23 @@ use cbe::runtime::Manifest;
 use cbe::util::cli::Args;
 use cbe::util::rng::Pcg64;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+/// Trainer spectrum-cache budget in bytes: `--cache-budget` wins, then the
+/// `CBE_CACHE_BUDGET` env var, then 0 (unlimited — no tiling).
+fn cache_budget_arg(args: &Args) -> usize {
+    if args.has("cache-budget") {
+        return args.usize("cache-budget", 0);
+    }
+    std::env::var("CBE_CACHE_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -70,7 +83,11 @@ fn print_usage() {
          \x20                           sharded:<shards>[:m])\n\
          serve flags:  --retrain (train from the corpus reservoir and hot-swap\n\
          \x20             the model live) --retrain-sample N --retrain-iters N\n\
+         \x20             --stats (print the stats snapshot as JSON on exit)\n\
+         \x20             --stats-every SECS (stream snapshots to stderr)\n\
          train flags:  --threads N (0 = auto) --deterministic BOOL\n\
+         \x20             --cache-budget BYTES (trainer spectrum-cache budget,\n\
+         \x20             also env CBE_CACHE_BUDGET; 0 = unlimited)\n\
          scale flags:  --full (paper-scale dims; slow), default is CI scale"
     );
 }
@@ -100,6 +117,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     tf.lambda = args.f32("lambda", 1.0) as f64;
     tf.threads = args.usize("threads", 0);
     tf.deterministic = args.bool("deterministic", true);
+    tf.cache_budget = cache_budget_arg(args);
     let enc = CbeTrainer::new(tf).seed(seed + 1).planner(Planner::new()).train(&ds.x);
     let rep = &enc.report;
     println!(
@@ -107,6 +125,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         rep.total_ms,
         rep.threads,
         rep.cache_bytes as f64 / (1 << 20) as f64
+    );
+    println!(
+        "phases: cache-build {:.1} ms, sweep {:.1} ms, bin-solve {:.1} ms",
+        rep.cache_build_ms, rep.sweep_ms, rep.bin_solve_ms
     );
     for (i, (o, ms)) in rep.objective_trace.iter().zip(&rep.iter_ms).enumerate() {
         println!("  iter {i}: {o:.3} ({ms:.1} ms)");
@@ -179,6 +201,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let retrain = RetrainConfig {
         sample: args.usize("retrain-sample", defaults.sample),
         iters: args.usize("retrain-iters", defaults.iters),
+        cache_budget: cache_budget_arg(args),
         ..defaults
     };
     let service = EmbeddingService::start(
@@ -194,6 +217,54 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         enc.proj.signs.clone(),
     )?;
 
+    // --stats-every N: a scoped ticker thread streams stats snapshots to
+    // stderr every N seconds while the demo runs (stdout stays reserved
+    // for the demo output and the final --stats JSON line).
+    let stats_every = args.usize("stats-every", 0);
+    let ticker_stop = AtomicBool::new(false);
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        if stats_every > 0 {
+            let (svc, stop) = (&service, &ticker_stop);
+            scope.spawn(move || {
+                let period = Duration::from_secs(stats_every as u64);
+                let mut next = std::time::Instant::now() + period;
+                // Poll the stop flag at 200 ms so demo exit never waits
+                // out a whole period.
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(200));
+                    if std::time::Instant::now() >= next {
+                        if let Ok(snap) = svc.stats() {
+                            eprintln!("{}", snap.to_json());
+                        }
+                        next += period;
+                    }
+                }
+            });
+        }
+        let result = serve_demo(args, &service, &ds, n_db, topk);
+        ticker_stop.store(true, Ordering::Relaxed);
+        result
+    })?;
+    println!("metrics: {}", service.metrics.summary(32));
+    // --stats: the machine-readable snapshot, as the last stdout line (CI
+    // smoke pipes it straight into a JSON parser).
+    if args.bool("stats", false) {
+        let snap = service.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
+        println!("{}", snap.to_json());
+    }
+    Ok(())
+}
+
+/// The serve-demo workload proper: index the corpus, serve queries, and
+/// optionally retrain + rebuild ( `--retrain`). Split out of [`cmd_serve`]
+/// so the stats ticker can scope around it.
+fn serve_demo(
+    args: &Args,
+    service: &EmbeddingService,
+    ds: &cbe::data::Dataset,
+    n_db: usize,
+    topk: usize,
+) -> anyhow::Result<()> {
     let rows: Vec<Vec<f32>> = (0..n_db).map(|i| ds.x.row(i).to_vec()).collect();
     let (index, ms) = cbe::util::timer::time_ms(|| service.build_index(&rows).unwrap());
     println!(
@@ -254,7 +325,6 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             hits_self as f64 / queries as f64
         );
     }
-    println!("metrics: {}", service.metrics.summary(32));
     Ok(())
 }
 

@@ -1,0 +1,258 @@
+//! Lock-free log-linear histogram with fixed memory and bounded error.
+//!
+//! HdrHistogram-style bucketing over `u64` values (the serving paths
+//! record microseconds): values below [`Histogram::LINEAR_MAX`] each get
+//! their own bucket (exact); above, every power-of-two octave is split
+//! into 32 equal sub-buckets, so a bucket's width is at most 1/32 of the
+//! values it holds and any reported quantile is within **+3.125%** of the
+//! true value (~2 significant digits). The whole range of `u64` fits in
+//! 1920 buckets (~15 KiB of `AtomicU64`s) — a histogram never grows,
+//! however long the service lives.
+//!
+//! Recording is three relaxed `fetch_add`s plus one `fetch_max` — no
+//! locks, no allocation, safe from any thread. Reads ([`Histogram::p`],
+//! [`Histogram::merge`]) walk the buckets without stopping writers; a
+//! snapshot taken under concurrent recording is a valid histogram of
+//! *some* interleaving, which is all a stats endpoint needs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power-of-two octave: the resolution knob. 32 ⇒ bucket
+/// width ≤ value/32 ⇒ quantile error ≤ 3.125%.
+const SUBBUCKETS: usize = 32;
+/// log2([`SUBBUCKETS`]).
+const SUB_SHIFT: u32 = 5;
+/// Octaves above the exact linear region (exponents 5..=63).
+const OCTAVES: usize = 64 - SUB_SHIFT as usize;
+/// Total buckets covering all of `u64`.
+const NBUCKETS: usize = SUBBUCKETS + OCTAVES * SUBBUCKETS;
+
+/// Lock-free fixed-bucket log-scale histogram (see module docs).
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    /// Exact maximum (`fetch_max`), so `p(1.0)` and `max()` never suffer
+    /// bucket quantization.
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Values below this map to their own bucket, exactly.
+    pub const LINEAR_MAX: u64 = SUBBUCKETS as u64;
+
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of a value: identity below [`Histogram::LINEAR_MAX`],
+    /// log-linear (octave × sub-bucket) above.
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v < Self::LINEAR_MAX {
+            v as usize
+        } else {
+            let exp = 63 - v.leading_zeros();
+            let sub = (v >> (exp - SUB_SHIFT)) as usize - SUBBUCKETS;
+            SUBBUCKETS + (exp - SUB_SHIFT) as usize * SUBBUCKETS + sub
+        }
+    }
+
+    /// Largest value mapping to bucket `idx` (quantiles report this upper
+    /// edge, hence the one-sided +1/32 error bound).
+    #[inline]
+    fn bucket_high(idx: usize) -> u64 {
+        if idx < SUBBUCKETS {
+            idx as u64
+        } else {
+            let oct = ((idx - SUBBUCKETS) / SUBBUCKETS) as u32;
+            let sub = ((idx - SUBBUCKETS) % SUBBUCKETS) as u64;
+            let width = 1u64 << oct;
+            (SUBBUCKETS as u64 + sub) * width + (width - 1)
+        }
+    }
+
+    /// Record one value. Lock-free; callable from any thread.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Values recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of recorded values (wrapping only past 2⁶⁴).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// The q-quantile (q ∈ [0, 1]): the bucket upper edge at the
+    /// ⌈q·count⌉-th smallest record, capped at the exact max — so
+    /// `p(0.5)` ≤ true p50 × 1.03125 and `p(1.0)` is exact. Returns 0 on
+    /// an empty histogram.
+    pub fn p(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_high(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// (p50, p99, p999, max) in one pass-per-quantile.
+    pub fn percentiles(&self) -> (u64, u64, u64, u64) {
+        (self.p(0.50), self.p(0.99), self.p(0.999), self.max())
+    }
+
+    /// Fold another histogram into this one (bucket-wise add). Lock-free;
+    /// concurrent records on either side land in some valid interleaving.
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in 0..Histogram::LINEAR_MAX {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 32);
+        assert_eq!(h.sum(), (0..32).sum::<u64>());
+        assert_eq!(h.max(), 31);
+        assert_eq!(h.p(1.0), 31);
+        // With 32 records, the 16th smallest is value 15 — exact below
+        // LINEAR_MAX.
+        assert_eq!(h.p(0.5), 15);
+    }
+
+    #[test]
+    fn bucket_round_trip_is_within_one_thirty_second() {
+        let mut rng = Pcg64::new(7);
+        for _ in 0..50_000 {
+            // Exercise every magnitude: shift a random u64 by 0..=63.
+            let v = rng.next_u64() >> rng.below(64);
+            let high = Histogram::bucket_high(Histogram::bucket_of(v));
+            assert!(high >= v, "v={v} high={high}");
+            assert!(high - v <= v / 32, "v={v} high={high}");
+        }
+        // Extremes.
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(u64::MAX), NBUCKETS - 1);
+        assert_eq!(Histogram::bucket_high(NBUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one() {
+        let mut rng = Pcg64::new(9);
+        let (a, b, whole) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 0..10_000u64 {
+            let v = rng.below(1 << 20);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum(), whole.sum());
+        assert_eq!(a.max(), whole.max());
+        for q in [0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(a.p(q), whole.p(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_is_exact_in_count_and_bounded_in_quantile() {
+        // N threads × M records: the totals must be *exact* (no lost
+        // updates) and the quantiles within the bucket error bound of a
+        // single-threaded sorted reference over the same values.
+        let h = Histogram::new();
+        let threads = 8u64;
+        let per = 20_000usize;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let h = &h;
+                scope.spawn(move || {
+                    let mut rng = Pcg64::new(100 + t);
+                    for _ in 0..per {
+                        h.record(rng.below(1_000_000) + 1);
+                    }
+                });
+            }
+        });
+        let mut reference: Vec<u64> = Vec::with_capacity(threads as usize * per);
+        for t in 0..threads {
+            let mut rng = Pcg64::new(100 + t);
+            for _ in 0..per {
+                reference.push(rng.below(1_000_000) + 1);
+            }
+        }
+        reference.sort_unstable();
+        assert_eq!(h.count(), reference.len() as u64);
+        assert_eq!(h.sum(), reference.iter().sum::<u64>());
+        assert_eq!(h.max(), *reference.last().unwrap());
+        assert_eq!(h.p(1.0), *reference.last().unwrap());
+        for q in [0.5, 0.99, 0.999] {
+            let exact = reference[((q * (reference.len() - 1) as f64).round() as usize)
+                .min(reference.len() - 1)] as f64;
+            let got = h.p(q) as f64;
+            // One-sided bucket quantization (+1/32) plus a whisker of
+            // rank-definition slack.
+            assert!(
+                got >= exact * 0.999 && got <= exact * 1.04,
+                "q={q}: got {got}, exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.percentiles(), (0, 0, 0, 0));
+        assert_eq!(h.count(), 0);
+    }
+}

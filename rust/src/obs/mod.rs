@@ -1,0 +1,121 @@
+//! Observability substrate: lock-free latency histograms, per-stage span
+//! timing, and structured stats snapshots.
+//!
+//! Three pieces, threaded through every hot path of the crate:
+//!
+//! * [`Histogram`] — a fixed-bucket log-scale histogram (atomic u64
+//!   buckets, ≤3.125% quantile error, mergeable) backing both the
+//!   per-service request-latency record in
+//!   [`crate::coordinator::Metrics`] and every stage timer here.
+//! * [`Stage`] + [`Recorder`] — a near-zero-overhead scoped span
+//!   recorder. The request pipeline (`queue-wait → model-resolve →
+//!   encode → pack`), the index path (`probe → candidate-dedup →
+//!   re-rank`) and the trainer (`cache-build → sweep → bin-solve`) each
+//!   report wall time per stage into the process-global [`global`]
+//!   recorder, alongside event [`Counter`]s (probe/candidate/re-rank
+//!   totals, FFT plan-cache hits).
+//! * [`StatsSnapshot`] — a plain struct rendering all of the above (plus
+//!   service counters) as one JSON object; exposed as
+//!   `ControlRequest::Stats` on the service, `--stats` / `--stats-every`
+//!   on the CLI and `CBE_STATS=1` in the embedding_server example.
+//!
+//! # The gate
+//!
+//! Stage recording is controlled two ways:
+//!
+//! * **Runtime**: `CBE_OBS=0` (or `false` / `off`) in the environment
+//!   disables recording at startup; [`set_enabled`] overrides either way
+//!   at runtime (the obs bench flips it in-process to measure its own
+//!   overhead). Default: enabled.
+//! * **Compile time**: building with `--no-default-features` (dropping
+//!   the `obs` cargo feature) makes [`enabled`] a constant `false`, so
+//!   every span/counter site folds away.
+//!
+//! A disabled site costs one relaxed atomic load (plus one `Once` check);
+//! the overhead contract — instrumentation ≤3% of encode+serve
+//! throughput — is measured by `cargo bench coordinator_throughput`
+//! (`BENCH_obs.json`) and enforceable with `CBE_BENCH_ENFORCE=1`.
+//!
+//! [`crate::coordinator::Metrics`] request/batch counters and the
+//! end-to-end latency histogram are *not* gated: they are the service's
+//! always-on operational record, and recording them is already lock-free
+//! and allocation-free.
+
+pub mod histogram;
+pub mod snapshot;
+pub mod span;
+
+pub use histogram::Histogram;
+pub use snapshot::{StageStats, StatsSnapshot};
+pub use span::{global, Counter, Recorder, Span, Stage};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+use std::time::Duration;
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static ENV_INIT: Once = Once::new();
+
+/// Whether stage recording is on. Constant `false` without the `obs`
+/// cargo feature; otherwise initialized once from `CBE_OBS` (`0` /
+/// `false` / `off` disable) and overridable via [`set_enabled`].
+#[inline]
+pub fn enabled() -> bool {
+    if cfg!(not(feature = "obs")) {
+        return false;
+    }
+    ENV_INIT.call_once(|| {
+        if let Ok(v) = std::env::var("CBE_OBS") {
+            if matches!(v.as_str(), "0" | "false" | "off") {
+                ENABLED.store(false, Ordering::Relaxed);
+            }
+        }
+    });
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip the runtime gate (wins over `CBE_OBS`; no-op semantically when
+/// the `obs` feature is compiled out). The obs bench uses this to compare
+/// instrumented vs uninstrumented throughput in one process.
+pub fn set_enabled(on: bool) {
+    // Consume the env init so a later first call to `enabled()` cannot
+    // override this explicit choice.
+    ENV_INIT.call_once(|| {});
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Open a scoped span on the global recorder; `None` (and nothing else)
+/// when recording is disabled.
+#[inline]
+pub fn span(stage: Stage) -> Option<Span<'static>> {
+    if enabled() {
+        Some(global().start(stage))
+    } else {
+        None
+    }
+}
+
+/// Record an externally measured duration for `stage` on the global
+/// recorder (no-op when disabled).
+#[inline]
+pub fn record(stage: Stage, dur: Duration) {
+    if enabled() {
+        global().record(stage, dur);
+    }
+}
+
+/// [`record`], with the duration already in microseconds.
+#[inline]
+pub fn record_us(stage: Stage, us: u64) {
+    if enabled() {
+        global().record_us(stage, us);
+    }
+}
+
+/// Bump a global event counter by `n` (no-op when disabled).
+#[inline]
+pub fn add(counter: Counter, n: u64) {
+    if enabled() {
+        global().add(counter, n);
+    }
+}

@@ -1,0 +1,194 @@
+//! [`StatsSnapshot`]: a point-in-time, structured view of service +
+//! pipeline statistics, serializable to JSON with the crate's hand-rolled
+//! [`crate::util::json::Json`] (the toolchain is offline — no serde).
+//!
+//! The snapshot merges two sources: per-service counters and the
+//! end-to-end latency histogram from [`crate::coordinator::Metrics`]
+//! (filled in by `Metrics::snapshot`), and the process-global per-stage
+//! recorder ([`super::span::global`]) folded in via
+//! [`StatsSnapshot::with_stages`]. It crosses the control-plane channel
+//! as a plain struct (`ControlRequest::Stats`) and prints as one JSON
+//! object — the schema is documented in ARCHITECTURE.md §Observability.
+
+use super::histogram::Histogram;
+use super::span::{Counter, Recorder, Stage};
+use crate::util::json::Json;
+
+/// Summary of one latency histogram (µs buckets): count, total time and
+/// the p50/p99/p999/max quantiles. Quantiles carry the histogram's
+/// +3.125% bucket error; `max_us` is exact.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageStats {
+    pub count: u64,
+    pub total_ms: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub max_us: u64,
+}
+
+impl StageStats {
+    pub fn from_histogram(h: &Histogram) -> StageStats {
+        let (p50, p99, p999, max) = h.percentiles();
+        StageStats {
+            count: h.count(),
+            total_ms: h.sum() as f64 / 1e3,
+            p50_us: p50,
+            p99_us: p99,
+            p999_us: p999,
+            max_us: max,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("total_ms", Json::num(self.total_ms)),
+            ("p50_us", Json::num(self.p50_us as f64)),
+            ("p99_us", Json::num(self.p99_us as f64)),
+            ("p999_us", Json::num(self.p999_us as f64)),
+            ("max_us", Json::num(self.max_us as f64)),
+        ])
+    }
+}
+
+/// Point-in-time service statistics (see module docs for provenance).
+#[derive(Clone, Debug, Default)]
+pub struct StatsSnapshot {
+    /// Live model version of the answering service.
+    pub model_version: u64,
+    /// Requests served through the data plane.
+    pub requests: u64,
+    /// Batches launched.
+    pub batches: u64,
+    /// Mean occupancy of launched batches (1.0 = always full).
+    pub batch_occupancy: f64,
+    /// Completed retrain hot-swaps on this service.
+    pub retrains: u64,
+    /// Searches refused with `CbeError::StaleIndex`.
+    pub stale_rejections: u64,
+    /// Process-wide MIH bucket lookups.
+    pub probes: u64,
+    /// Process-wide postings touched before dedup.
+    pub candidates: u64,
+    /// Process-wide exact Hamming re-rank computations.
+    pub reranked: u64,
+    /// FFT plan-cache read-path hits (process-wide).
+    pub plan_cache_hits: u64,
+    /// FFT plan-cache write-path entries (process-wide).
+    pub plan_cache_misses: u64,
+    /// End-to-end request latency (enqueue → reply), this service.
+    pub latency: StageStats,
+    /// Per-stage timings from the process-global recorder, keyed by
+    /// [`Stage::name`].
+    pub stages: Vec<(&'static str, StageStats)>,
+}
+
+impl StatsSnapshot {
+    /// Fold the per-stage histograms and event counters of `rec`
+    /// (normally [`super::span::global`]) into the snapshot.
+    pub fn with_stages(mut self, rec: &Recorder) -> StatsSnapshot {
+        self.probes = rec.counter(Counter::Probes);
+        self.candidates = rec.counter(Counter::Candidates);
+        self.reranked = rec.counter(Counter::Reranked);
+        self.plan_cache_hits = rec.counter(Counter::PlanHit);
+        self.plan_cache_misses = rec.counter(Counter::PlanMiss);
+        self.stages = Stage::ALL
+            .iter()
+            .map(|&s| (s.name(), StageStats::from_histogram(rec.histogram(s))))
+            .collect();
+        self
+    }
+
+    /// The stats of one stage, by its snake_case name.
+    pub fn stage(&self, name: &str) -> Option<StageStats> {
+        self.stages.iter().find(|(n, _)| *n == name).map(|(_, s)| *s)
+    }
+
+    /// Serialize to one JSON object (schema: ARCHITECTURE.md
+    /// §Observability).
+    pub fn to_json(&self) -> Json {
+        let stages = Json::Obj(
+            self.stages
+                .iter()
+                .map(|(name, s)| (name.to_string(), s.to_json()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("model_version", Json::num(self.model_version as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batch_occupancy", Json::num(self.batch_occupancy)),
+            ("retrains", Json::num(self.retrains as f64)),
+            ("stale_rejections", Json::num(self.stale_rejections as f64)),
+            (
+                "index",
+                Json::obj(vec![
+                    ("probes", Json::num(self.probes as f64)),
+                    ("candidates", Json::num(self.candidates as f64)),
+                    ("reranked", Json::num(self.reranked as f64)),
+                ]),
+            ),
+            (
+                "fft_plan_cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.plan_cache_hits as f64)),
+                    ("misses", Json::num(self.plan_cache_misses as f64)),
+                ]),
+            ),
+            ("latency_us", self.latency.to_json()),
+            ("stages", stages),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let rec = Recorder::new();
+        rec.record_us(Stage::Encode, 120);
+        rec.record_us(Stage::Probe, 40);
+        rec.add(Counter::Probes, 6);
+        let hist = Histogram::new();
+        hist.record(500);
+        let snap = StatsSnapshot {
+            model_version: 2,
+            requests: 1,
+            batches: 1,
+            batch_occupancy: 0.5,
+            retrains: 2,
+            stale_rejections: 1,
+            latency: StageStats::from_histogram(&hist),
+            ..Default::default()
+        }
+        .with_stages(&rec);
+
+        assert_eq!(snap.probes, 6);
+        assert_eq!(snap.stages.len(), Stage::COUNT);
+        assert_eq!(snap.stage("encode").unwrap().count, 1);
+        assert!(snap.stage("nope").is_none());
+
+        let text = snap.to_json().to_string();
+        let parsed = Json::parse(&text).expect("snapshot JSON must parse");
+        assert_eq!(parsed.get("retrains").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            parsed
+                .get("index")
+                .and_then(|i| i.get("probes"))
+                .and_then(Json::as_f64),
+            Some(6.0)
+        );
+        let enc = parsed.get("stages").and_then(|s| s.get("encode")).unwrap();
+        assert_eq!(enc.get("count").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            parsed
+                .get("latency_us")
+                .and_then(|l| l.get("max_us"))
+                .and_then(Json::as_f64),
+            Some(500.0)
+        );
+    }
+}

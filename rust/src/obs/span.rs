@@ -1,0 +1,276 @@
+//! Per-stage span recorder: where the time goes, per pipeline stage.
+//!
+//! A [`Recorder`] holds one [`Histogram`] (µs resolution) per [`Stage`]
+//! plus a bank of monotonic event [`Counter`]s. Hot paths either open a
+//! scoped [`Span`] guard ([`Recorder::start`], recorded on drop) or
+//! report an externally measured duration ([`Recorder::record`]); both
+//! cost a handful of relaxed atomics. The free functions in
+//! [`crate::obs`] (`span`, `record`, `add`) route to the process-global
+//! recorder behind the `CBE_OBS` gate, so an instrumented path that is
+//! disabled pays one atomic load and nothing else.
+//!
+//! Stage timings live in one process-global recorder rather than per
+//! service because the deepest spans (index probing, trainer phases) run
+//! in code that has no service handle — per-service attribution stays in
+//! [`crate::coordinator::Metrics`]; the recorder answers "where does the
+//! time go in this process".
+
+use super::histogram::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Every instrumented pipeline stage, across the three hot paths:
+/// request (`QueueWait → ModelResolve → Encode → Pack`), index
+/// (`Probe → CandidateDedup → ReRank`), trainer
+/// (`CacheBuild → Sweep → BinSolve`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Request time queued before its batch launched.
+    QueueWait,
+    /// Resolving the active model from the registry (per batch).
+    ModelResolve,
+    /// The parallel batch encode (per batch).
+    Encode,
+    /// Per-request sign extraction + reply scatter (per batch).
+    Pack,
+    /// MIH key enumeration + bucket fetches (per query).
+    Probe,
+    /// Generation-stamp candidate dedup (per query).
+    CandidateDedup,
+    /// Exact Hamming re-rank, sweep-cutover rows included (per query).
+    ReRank,
+    /// Trainer: building (or streaming) the half-spectrum cache.
+    CacheBuild,
+    /// Trainer: time-domain sweep (B = sign(XRᵀ), h/g folds).
+    Sweep,
+    /// Trainer: closed-form per-bin solve + inverse FFT.
+    BinSolve,
+}
+
+impl Stage {
+    pub const COUNT: usize = 10;
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::QueueWait,
+        Stage::ModelResolve,
+        Stage::Encode,
+        Stage::Pack,
+        Stage::Probe,
+        Stage::CandidateDedup,
+        Stage::ReRank,
+        Stage::CacheBuild,
+        Stage::Sweep,
+        Stage::BinSolve,
+    ];
+
+    /// Stable snake_case name — the key used in the stats snapshot JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::ModelResolve => "model_resolve",
+            Stage::Encode => "encode",
+            Stage::Pack => "pack",
+            Stage::Probe => "probe",
+            Stage::CandidateDedup => "candidate_dedup",
+            Stage::ReRank => "re_rank",
+            Stage::CacheBuild => "cache_build",
+            Stage::Sweep => "sweep",
+            Stage::BinSolve => "bin_solve",
+        }
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Monotonic event counters riding alongside the stage timers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// MIH bucket lookups (keys enumerated).
+    Probes,
+    /// Postings touched before dedup.
+    Candidates,
+    /// Exact Hamming distance computations.
+    Reranked,
+    /// FFT plan-cache read-path hits.
+    PlanHit,
+    /// FFT plan-cache write-path entries (first build of a length).
+    PlanMiss,
+}
+
+impl Counter {
+    pub const COUNT: usize = 5;
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::Probes,
+        Counter::Candidates,
+        Counter::Reranked,
+        Counter::PlanHit,
+        Counter::PlanMiss,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Probes => "probes",
+            Counter::Candidates => "candidates",
+            Counter::Reranked => "reranked",
+            Counter::PlanHit => "plan_hits",
+            Counter::PlanMiss => "plan_misses",
+        }
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// A bank of per-stage histograms + counters. Construct private ones in
+/// tests for exact assertions; production paths share [`global`].
+pub struct Recorder {
+    cells: [Histogram; Stage::COUNT],
+    counters: [AtomicU64; Counter::COUNT],
+}
+
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            cells: std::array::from_fn(|_| Histogram::new()),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Open a scoped span: the stage is timed from now until the guard
+    /// drops.
+    #[inline]
+    pub fn start(&self, stage: Stage) -> Span<'_> {
+        Span {
+            rec: self,
+            stage,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Record an externally measured duration (µs resolution; sub-µs
+    /// spans count but round to 0).
+    #[inline]
+    pub fn record(&self, stage: Stage, dur: Duration) {
+        self.record_us(stage, dur.as_micros() as u64);
+    }
+
+    /// Record a duration already expressed in microseconds.
+    #[inline]
+    pub fn record_us(&self, stage: Stage, us: u64) {
+        self.cells[stage.idx()].record(us);
+    }
+
+    /// Bump an event counter by `n`.
+    #[inline]
+    pub fn add(&self, counter: Counter, n: u64) {
+        self.counters[counter.idx()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value of an event counter.
+    pub fn counter(&self, counter: Counter) -> u64 {
+        self.counters[counter.idx()].load(Ordering::Relaxed)
+    }
+
+    /// The stage's latency histogram (µs).
+    pub fn histogram(&self, stage: Stage) -> &Histogram {
+        &self.cells[stage.idx()]
+    }
+
+    /// Total wall time attributed to a stage.
+    pub fn total(&self, stage: Stage) -> Duration {
+        Duration::from_micros(self.cells[stage.idx()].sum())
+    }
+}
+
+/// Scoped span guard: records `stage` on drop. Nesting attributes each
+/// level to its own stage — the outer span's time *includes* the inner
+/// span's (wall-clock attribution, not exclusive self-time).
+pub struct Span<'a> {
+    rec: &'a Recorder,
+    stage: Stage,
+    t0: Instant,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.rec.record(self.stage, self.t0.elapsed());
+    }
+}
+
+static GLOBAL: OnceLock<Recorder> = OnceLock::new();
+
+/// The process-global recorder behind [`crate::obs::span`] /
+/// [`crate::obs::record`] / [`crate::obs::add`].
+pub fn global() -> &'static Recorder {
+    GLOBAL.get_or_init(Recorder::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_spans_attribute_to_their_own_stages() {
+        let r = Recorder::new();
+        {
+            let _outer = r.start(Stage::Encode);
+            std::thread::sleep(Duration::from_millis(4));
+            {
+                let _inner = r.start(Stage::Pack);
+                std::thread::sleep(Duration::from_millis(4));
+            }
+        }
+        assert_eq!(r.histogram(Stage::Encode).count(), 1);
+        assert_eq!(r.histogram(Stage::Pack).count(), 1);
+        // Wall-clock attribution: the outer span covers the inner one.
+        assert!(r.total(Stage::Encode) >= r.total(Stage::Pack));
+        assert!(r.total(Stage::Pack) >= Duration::from_millis(3));
+        // Untouched stages stay empty.
+        for s in [Stage::Probe, Stage::Sweep, Stage::QueueWait] {
+            assert_eq!(r.histogram(s).count(), 0, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn record_us_feeds_the_stage_histogram() {
+        let r = Recorder::new();
+        r.record_us(Stage::Probe, 250);
+        r.record_us(Stage::Probe, 750);
+        assert_eq!(r.histogram(Stage::Probe).count(), 2);
+        assert_eq!(r.histogram(Stage::Probe).max(), 750);
+        assert_eq!(r.total(Stage::Probe), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn counters_accumulate_independently() {
+        let r = Recorder::new();
+        r.add(Counter::Probes, 3);
+        r.add(Counter::Probes, 4);
+        r.add(Counter::Reranked, 5);
+        assert_eq!(r.counter(Counter::Probes), 7);
+        assert_eq!(r.counter(Counter::Reranked), 5);
+        assert_eq!(r.counter(Counter::Candidates), 0);
+        assert_eq!(r.counter(Counter::PlanHit), 0);
+    }
+
+    #[test]
+    fn stage_names_are_unique_and_stable() {
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Stage::COUNT);
+        assert_eq!(Stage::QueueWait.name(), "queue_wait");
+        assert_eq!(Stage::ReRank.name(), "re_rank");
+    }
+}

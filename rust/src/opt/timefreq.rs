@@ -77,7 +77,8 @@ use crate::fft::realpack::{
 };
 use crate::fft::{C64, Dir, FftScratch, Planner};
 use crate::linalg::Mat;
-use std::time::Instant;
+use crate::obs::{self, Stage};
+use std::time::{Duration, Instant};
 
 /// Fixed reduction-block size (rows) under
 /// [`TimeFreqConfig::deterministic`]: small enough that n ≫ block keeps
@@ -159,6 +160,16 @@ pub struct TrainReport {
     /// Total wall milliseconds (including the spectrum-cache build when
     /// the run built one).
     pub total_ms: f64,
+    /// Milliseconds building the resident half-spectrum cache (0.0 when
+    /// the run streamed tiles instead — their per-pass refills are sweep
+    /// work and land in [`TrainReport::sweep_ms`]).
+    pub cache_build_ms: f64,
+    /// Milliseconds in the time-domain sweep across all iterations: the
+    /// M fold, r's forward FFT, and the B = sign(XRᵀ) + h/g fold.
+    pub sweep_ms: f64,
+    /// Milliseconds in the frequency-domain solve across all iterations:
+    /// closed-form per-bin minimizers, the inverse FFT, the objective.
+    pub bin_solve_ms: f64,
     /// Bytes resident for row spectra during the run: the whole
     /// half-spectrum cache (16·n·(⌊d/2⌋+1) — about half the PR-4
     /// full-spectrum layout's 16·n·d), or one tile of it when
@@ -327,9 +338,12 @@ impl TimeFreqOptimizer {
         let t0 = Instant::now();
         let mut cache = SpectrumCache::with_capacity(self.d, x.rows);
         cache.fill(x, 0, x.rows, &self.rfft, self.fanout_threads(x.rows));
-        let cache_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let cache_dur = t0.elapsed();
+        obs::record(Stage::CacheBuild, cache_dur);
+        let cache_ms = cache_dur.as_secs_f64() * 1e3;
         let r = self.run_cached(&cache, r0, pairs);
         self.report.total_ms += cache_ms;
+        self.report.cache_build_ms += cache_ms;
         r
     }
 
@@ -447,9 +461,15 @@ impl TimeFreqOptimizer {
         let rfft = self.rfft.clone();
 
         let t_run = Instant::now();
+        // Phase attribution for the report + the obs recorder. The M fold
+        // and each iteration's time-domain pass are "sweep"; the per-bin
+        // closed-form solve + inverse FFT + objective are "bin-solve".
+        let mut sweep_dur = Duration::ZERO;
+        let mut solve_dur = Duration::ZERO;
 
         // ---- Precompute M (eq. 17) on the half-spectrum:
         // m_l = Σ_i |F(x_i)_l|² for l ≤ ⌊d/2⌋, plus μ·A (§6).
+        let t_sweep = Instant::now();
         let mut m = vec![0f64; hlen];
         tiles.for_each(&rfft, |cache| {
             for p in m_partials(cache, block, threads) {
@@ -463,6 +483,7 @@ impl TimeFreqOptimizer {
                 *t += self.cfg.mu * *v;
             }
         }
+        sweep_dur += t_sweep.elapsed();
 
         let mut r = r0.to_vec();
         self.objective_trace.clear();
@@ -472,6 +493,7 @@ impl TimeFreqOptimizer {
 
         for _iter in 0..iters {
             let t_iter = Instant::now();
+            let t_sweep = t_iter;
             rfft.rfft(&r, &mut r_spec, &mut scratch);
 
             // ---- Time-domain pass: B = sign(XRᵀ) with cols ≥ k zeroed,
@@ -491,6 +513,8 @@ impl TimeFreqOptimizer {
             });
 
             // ---- Frequency-domain pass: closed-form per-bin minimizers.
+            let t_solve = Instant::now();
+            sweep_dur += t_solve.duration_since(t_sweep);
             let spec = solve_bins_half(&m, &h, &g, &r_spec, lambda, d);
             rfft.irfft(&spec, &mut r, &mut scratch);
 
@@ -500,8 +524,11 @@ impl TimeFreqOptimizer {
             // of the true objective is asserted in tests on small cases).
             self.objective_trace
                 .push(err + lambda * ortho_half(&spec, d));
+            solve_dur += t_solve.elapsed();
             iter_ms.push(t_iter.elapsed().as_secs_f64() * 1e3);
         }
+        obs::record(Stage::Sweep, sweep_dur);
+        obs::record(Stage::BinSolve, solve_dur);
 
         self.report = TrainReport {
             n,
@@ -512,6 +539,11 @@ impl TimeFreqOptimizer {
             objective_trace: self.objective_trace.clone(),
             iter_ms,
             total_ms: t_run.elapsed().as_secs_f64() * 1e3,
+            // `run()` folds the resident cache build in after this
+            // literal; tiled runs have no separate build phase.
+            cache_build_ms: 0.0,
+            sweep_ms: sweep_dur.as_secs_f64() * 1e3,
+            bin_solve_ms: solve_dur.as_secs_f64() * 1e3,
             cache_bytes,
             tile_rows,
         };

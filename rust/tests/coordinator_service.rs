@@ -251,6 +251,87 @@ fn retrain_without_corpus_reports_error_and_keeps_model() {
     assert_eq!(resp.signs.len(), 16);
 }
 
+#[test]
+fn stats_snapshot_reflects_served_workload() {
+    // The observability acceptance path end to end: serve a workload
+    // (encode + MIH search), retrain, trip a StaleIndex rejection, then
+    // assert ControlRequest::Stats reports all of it — counters, per-stage
+    // histograms, and a JSON rendering that round-trips.
+    cbe::obs::set_enabled(true);
+    let mut rng = Pcg64::new(41);
+    let svc = EmbeddingService::start(
+        &artifacts_dir(),
+        ServiceConfig {
+            d: 64,
+            bits: 32,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(1),
+            },
+            // Explicit MIH: Auto routes a corpus this small to the linear
+            // backend, which would leave the probe histogram empty.
+            index: IndexBackend::Mih { m: None },
+            retrain: RetrainConfig::default(),
+        },
+        rng.normal_vec(64),
+        rng.sign_vec(64),
+    )
+    .unwrap();
+    let rows: Vec<Vec<f32>> = (0..128)
+        .map(|_| {
+            let mut v = rng.normal_vec(64);
+            cbe::util::l2_normalize(&mut v);
+            v
+        })
+        .collect();
+    let index = svc.build_index(&rows).unwrap();
+    for qi in 0..8 {
+        let hits = svc.search(&index, rows[qi].clone(), 3).unwrap();
+        assert_eq!(hits[0].id, qi as u32);
+    }
+    svc.retrain_blocking().unwrap();
+    svc.search(&index, rows[0].clone(), 3)
+        .expect_err("stale index must be rejected");
+
+    let snap = svc.stats().unwrap();
+    // Service-local counters: 8 search-path encodes (bulk indexing and
+    // the refused stale search never enter the request channel).
+    assert_eq!(snap.requests, 8);
+    assert_eq!(snap.retrains, 1);
+    assert_eq!(snap.stale_rejections, 1);
+    assert_eq!(snap.model_version, 1);
+    assert!(snap.batches >= 1);
+    assert_eq!(snap.latency.count, 8);
+    let l = &snap.latency;
+    assert!(l.p50_us <= l.p99_us && l.p99_us <= l.p999_us && l.p999_us <= l.max_us);
+    // Per-stage histograms (process-global, so ≥ — other tests in this
+    // binary may have contributed too) must be non-empty for the full
+    // request + index pipeline.
+    for stage in ["queue_wait", "model_resolve", "encode", "pack", "probe", "re_rank"] {
+        let s = snap.stage(stage).unwrap_or_else(|| panic!("stage {stage} missing"));
+        assert!(s.count > 0, "stage {stage} recorded nothing");
+    }
+    assert!(snap.probes > 0, "no MIH bucket probes counted");
+    assert!(snap.reranked > 0, "no re-rank work counted");
+    assert!(snap.plan_cache_hits > 0, "FFT plan cache never hit");
+
+    // The JSON rendering parses and carries the same numbers.
+    let text = snap.to_json().to_string();
+    let parsed = cbe::util::json::Json::parse(&text).expect("stats JSON must parse");
+    assert_eq!(
+        parsed.get("retrains").and_then(cbe::util::json::Json::as_f64),
+        Some(1.0)
+    );
+    let encode = parsed
+        .get("stages")
+        .and_then(|s| s.get("encode"))
+        .expect("stages.encode in JSON");
+    assert_eq!(
+        encode.get("count").and_then(cbe::util::json::Json::as_f64),
+        Some(snap.stage("encode").unwrap().count as f64)
+    );
+}
+
 // ---------------------------------------------------------- properties
 
 #[test]
