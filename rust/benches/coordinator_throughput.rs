@@ -19,6 +19,12 @@
 //!    recording enabled vs disabled (`cbe::obs::set_enabled`, flipped
 //!    in-process), best-of-N per mode — `BENCH_obs.json`. The overhead
 //!    contract is ≤3%; `CBE_BENCH_ENFORCE=1` hard-fails past it.
+//! 5. Kernel A/B: the linear-scan and MIH search paths at 512-bit codes
+//!    (8 words per code — wide enough that the AVX2 popcount kernels
+//!    engage) with the SIMD gate forced off vs on
+//!    (`cbe::simd::set_enabled`), hits asserted identical — the
+//!    `kernel_ab` array of `BENCH_index.json`. `CBE_BENCH_ENFORCE=1`
+//!    hard-fails if the simd arm is slower.
 //!
 //! The retrieval corpus is *clustered* (cluster centers + per-bit flip
 //! noise), because that is the regime real embedding codes live in;
@@ -154,6 +160,7 @@ fn bench_index_backends() {
         }
     }
     let bucket_store = bench_bucket_store(max_n);
+    let kernel_ab = bench_kernel_ab(max_n);
     let doc = Json::obj(vec![
         ("bits", Json::num(bits as f64)),
         ("k", Json::num(k as f64)),
@@ -162,6 +169,7 @@ fn bench_index_backends() {
         ("shards", Json::num(shards as f64)),
         ("results", Json::Arr(results)),
         ("bucket_store", Json::Arr(bucket_store)),
+        ("kernel_ab", Json::Arr(kernel_ab)),
     ]);
     std::fs::write("BENCH_index.json", format!("{doc}\n")).expect("write BENCH_index.json");
     println!("wrote BENCH_index.json");
@@ -273,6 +281,90 @@ fn bench_bucket_store(max_n: usize) -> Vec<Json> {
             ]));
         }
     }
+    out
+}
+
+/// Kernel A/B over the retrieval hot loops: 512-bit codes (8 words per
+/// code) through the linear scan (`hamming_to_all` bulk kernel) and MIH
+/// (per-candidate `hamming_words` re-rank), SIMD gate forced off vs on.
+/// Interleaved best-of-3 per backend; hits must be identical — the
+/// popcount kernels are bit-exact, so divergence is a bug, not noise.
+fn bench_kernel_ab(max_n: usize) -> Vec<Json> {
+    let mut out: Vec<Json> = Vec::new();
+    if !cbe::simd::available() {
+        println!("== kernel A/B: skipped (SIMD kernels unavailable on this host/build) ==");
+        return out;
+    }
+    let bits = 512;
+    let k = 10;
+    let nq = 200;
+    let flip = 0.05;
+    let n = 10_000usize;
+    if n > max_n {
+        println!("== kernel A/B: skipped (CBE_BENCH_MAX_N={max_n}) ==");
+        return out;
+    }
+    println!("== search kernels: scalar vs simd popcount, bits={bits} n={n} ==");
+    let mut rng = Pcg64::new(0x51d + n as u64);
+    let db = clustered_codes(&mut rng, n, bits, (n / 1000).max(16), flip);
+    let queries = perturbed_queries(&mut rng, &db, nq, flip);
+    for backend in [IndexBackend::Linear, IndexBackend::Mih { m: None }] {
+        let index: IndexAny = build_index(db.clone(), &backend);
+        std::hint::black_box(index.search_batch(&queries, k)); // warm
+        let mut best = [f64::INFINITY; 2]; // [scalar, simd]
+        let mut hits_by_mode: Vec<Vec<Vec<cbe::bits::index::Hit>>> = Vec::new();
+        for round in 0..3 {
+            for (mode, on) in [(0usize, false), (1usize, true)] {
+                cbe::simd::set_enabled(on);
+                let t0 = Instant::now();
+                let hits = index.search_batch(&queries, k);
+                best[mode] = best[mode].min(t0.elapsed().as_secs_f64());
+                if round == 0 {
+                    hits_by_mode.push(hits);
+                }
+            }
+        }
+        assert_eq!(
+            hits_by_mode[0],
+            hits_by_mode[1],
+            "kernel A/B hits diverged for backend {}",
+            backend.spec()
+        );
+        let (scalar_qps, simd_qps) = (nq as f64 / best[0], nq as f64 / best[1]);
+        println!(
+            "backend={:<8} scalar={scalar_qps:>9.0} qps  simd={simd_qps:>9.0} qps  ratio={:>5.2}x",
+            backend.spec(),
+            simd_qps / scalar_qps
+        );
+        if simd_qps < scalar_qps {
+            println!(
+                "WARNING: simd search {:.1}% slower than scalar for backend {}",
+                (1.0 - simd_qps / scalar_qps) * 100.0,
+                backend.spec()
+            );
+            let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
+            assert!(
+                !enforce,
+                "simd search regressed vs scalar (CBE_BENCH_ENFORCE=1)"
+            );
+        }
+        for (kernel, qps, dt) in [("scalar", scalar_qps, best[0]), ("simd", simd_qps, best[1])] {
+            out.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("bits", Json::num(bits as f64)),
+                ("backend", Json::str(&backend.spec())),
+                ("kernel", Json::str(kernel)),
+                ("batch_s", Json::num(dt)),
+                ("qps", Json::num(qps)),
+            ]));
+        }
+    }
+    // Leave the gate the way the environment asked for it.
+    let env_on = !matches!(
+        std::env::var("CBE_SIMD").ok().as_deref(),
+        Some("0") | Some("false") | Some("off")
+    );
+    cbe::simd::set_enabled(env_on);
     out
 }
 

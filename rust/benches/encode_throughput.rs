@@ -10,12 +10,18 @@
 //! packing). Both arms must produce identical packed codes or the bench
 //! aborts — the speedup is only meaningful if the outputs agree.
 //!
+//! When the SIMD gate can open ([`cbe::simd::available`]) a third pair of
+//! arms A/Bs the kernel layer itself: the batch engine with the AVX2
+//! kernels forced off vs on (`mode` = `batch-scalar` / `batch-simd`,
+//! interleaved best-of-3 rounds, packed codes asserted identical — the
+//! kernels are bit-exact, so any divergence is a bug, not noise).
+//!
 //! Env knobs, mirroring `coordinator_throughput`:
 //! * `CBE_BENCH_MAX_D=1024` caps the dim sweep (CI-sized machines);
 //! * `CBE_BENCH_ENCODE_ROWS=64` overrides rows per measured round;
 //! * `CBE_BENCH_ENFORCE=1` turns the batch-slower-than-serial warning
-//!   into a hard failure (left off in CI: shared runners are too noisy
-//!   for perf asserts).
+//!   into a hard failure, and likewise simd-slower-than-scalar (left off
+//!   in CI: shared runners are too noisy for perf asserts).
 
 use cbe::bits::BitCode;
 use cbe::fft::Planner;
@@ -99,10 +105,61 @@ fn main() {
             );
         }
 
-        for (mode, threads, qps, batch_s) in [
+        let mut arms = vec![
             ("serial", 1usize, serial_qps, dt_serial),
             ("batch", cores, batch_qps, dt_batch),
-        ] {
+        ];
+
+        // Kernel A/B: the same batch engine with the AVX2 kernels forced
+        // off vs on. Interleaved best-of-3 so drift hits both arms alike;
+        // packed codes must be identical (bit-exact contract).
+        if cbe::simd::available() {
+            let mut scalar_codes = BitCode::new(n, k_eff);
+            let mut simd_codes = BitCode::new(n, k_eff);
+            let mut best = [f64::INFINITY; 2];
+            for _ in 0..3 {
+                cbe::simd::set_enabled(false);
+                let t0 = Instant::now();
+                proj.encode_batch_into(&rows, k_eff, &mut scalar_codes, &mut pool);
+                best[0] = best[0].min(t0.elapsed().as_secs_f64());
+                cbe::simd::set_enabled(true);
+                let t0 = Instant::now();
+                proj.encode_batch_into(&rows, k_eff, &mut simd_codes, &mut pool);
+                best[1] = best[1].min(t0.elapsed().as_secs_f64());
+            }
+            // Restore whatever the environment asked for before the
+            // forced A/B (mirrors the obs bench's env restore).
+            let env_on = !matches!(
+                std::env::var("CBE_SIMD").ok().as_deref(),
+                Some("0") | Some("false") | Some("off")
+            );
+            cbe::simd::set_enabled(env_on);
+            assert_eq!(
+                simd_codes, scalar_codes,
+                "simd batch codes diverged from scalar at d={d}"
+            );
+            let (scalar_qps, simd_qps) = (n as f64 / best[0], n as f64 / best[1]);
+            println!(
+                "d={d:<6} kernel A/B: scalar={scalar_qps:>9.0} qps  \
+                 simd={simd_qps:>9.0} qps  ratio={:>5.2}x",
+                simd_qps / scalar_qps
+            );
+            if simd_qps < scalar_qps {
+                println!(
+                    "WARNING: simd kernels {:.1}% slower than scalar at d={d}",
+                    (1.0 - simd_qps / scalar_qps) * 100.0
+                );
+                let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
+                assert!(
+                    !enforce,
+                    "simd encode regressed vs scalar (CBE_BENCH_ENFORCE=1)"
+                );
+            }
+            arms.push(("batch-scalar", cores, scalar_qps, best[0]));
+            arms.push(("batch-simd", cores, simd_qps, best[1]));
+        }
+
+        for (mode, threads, qps, batch_s) in arms {
             results.push(Json::obj(vec![
                 ("d", Json::num(d as f64)),
                 ("k", Json::num(k_eff as f64)),

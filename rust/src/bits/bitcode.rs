@@ -62,6 +62,20 @@ impl BitCode {
         &self.data[i * self.words_per_code..(i + 1) * self.words_per_code]
     }
 
+    /// Are all tail-word padding bits (bit positions ≥ `bits` in the last
+    /// word of each row) zero? Every writer in this module keeps them
+    /// zero; the popcount kernels (scalar and SIMD alike) count whole
+    /// words, so a stray padding bit would silently inflate distances.
+    /// The padding regression tests churn codes and assert this.
+    pub fn padding_is_zero(&self) -> bool {
+        let tail = self.bits % 64;
+        if tail == 0 || self.words_per_code == 0 {
+            return true;
+        }
+        let mask = !0u64 << tail;
+        (0..self.n).all(|i| self.code(i)[self.words_per_code - 1] & mask == 0)
+    }
+
     /// Unpack code i back to ±1 f32 values.
     pub fn to_signs(&self, i: usize) -> Vec<f32> {
         let code = self.code(i);

@@ -1,10 +1,34 @@
 //! XOR + popcount Hamming distance over packed codes.
+//!
+//! Integer paths are the strict tier of the SIMD exactness contract:
+//! the AVX2 kernels ([`super::simd`], gated by [`crate::simd::active`])
+//! produce bit-identical distances to the scalar loops here, which stay
+//! public as the differential-test oracles. Dispatch thresholds: the
+//! pairwise [`hamming_words`] takes the vector kernel from 8 words
+//! (512-bit codes) where the 4-word XOR+`vpshufb` chunks amortize; the
+//! bulk [`hamming_to_all`] from 4 words, where the per-row setup is
+//! hoisted out of the scan.
 
 use super::BitCode;
 
 /// Hamming distance between two packed codes (same word count).
+/// SIMD-dispatched at ≥ 8 words; narrower codes keep the scalar loop
+/// (the MIH re-rank hammers 4-word windows where `count_ones` already
+/// pipelines and the in-register table setup would dominate).
 #[inline]
 pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if a.len() >= 8 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        return unsafe { super::simd::hamming_words(a, b) };
+    }
+    hamming_words_scalar(a, b)
+}
+
+/// The scalar word loop — the oracle the SIMD path is compared against,
+/// and the only path on non-AVX2 hosts / scalar builds.
+#[inline]
+pub fn hamming_words_scalar(a: &[u64], b: &[u64]) -> u32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0u32;
     for i in 0..a.len() {
@@ -20,8 +44,23 @@ pub fn hamming(a: &BitCode, i: usize, b: &BitCode, j: usize) -> u32 {
 }
 
 /// Distances from query code `q` (packed words) to every code in `db`,
-/// written into `out` (len db.n).
+/// written into `out` (len db.n). SIMD-dispatched at ≥ 4 words per code;
+/// results are bit-identical to [`hamming_to_all_scalar`] either way.
 pub fn hamming_to_all(q: &[u64], db: &BitCode, out: &mut [u32]) {
+    assert_eq!(out.len(), db.n);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if db.words_per_code >= 4 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::hamming_to_all(q, db, out) };
+        return;
+    }
+    hamming_to_all_scalar(q, db, out);
+}
+
+/// The scalar scan (unrolled at the common 4/8-word shapes) — the oracle
+/// the SIMD path is compared against, and the only path on non-AVX2
+/// hosts / scalar builds.
+pub fn hamming_to_all_scalar(q: &[u64], db: &BitCode, out: &mut [u32]) {
     assert_eq!(out.len(), db.n);
     let wpc = db.words_per_code;
     match wpc {
@@ -67,7 +106,7 @@ pub fn hamming_to_all(q: &[u64], db: &BitCode, out: &mut [u32]) {
         }
         _ => {
             for (i, o) in out.iter_mut().enumerate() {
-                *o = hamming_words(q, db.code(i));
+                *o = hamming_words_scalar(q, db.code(i));
             }
         }
     }

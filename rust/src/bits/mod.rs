@@ -4,7 +4,8 @@
 //! on this substrate: ±1 codes are packed 64-per-u64 ([`BitCode`], sign ≥ 0
 //! → bit set, row-major, padding bits zero) and compared with XOR +
 //! popcount ([`hamming`], unrolled for the common 4/8 words-per-code
-//! shapes) — the operational payoff the paper's embedding exists for.
+//! shapes, with an AVX2 bulk kernel behind the [`crate::simd`] gate for
+//! wide scans) — the operational payoff the paper's embedding exists for.
 //!
 //! * [`bitcode`] — the packed code container and sign↔bit conversions.
 //! * [`hamming`] — the XOR+popcount distance kernels.
@@ -21,6 +22,8 @@
 pub mod bitcode;
 pub mod hamming;
 pub mod index;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) mod simd;
 
 pub use bitcode::BitCode;
 pub use index::BinaryIndex;

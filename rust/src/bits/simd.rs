@@ -1,0 +1,83 @@
+//! AVX2 popcount kernels for the Hamming-distance hot loops.
+//!
+//! Integer XOR + popcount has one result whatever the lane width, so
+//! these kernels sit in the strict **bit-exact** tier of the contract
+//! trivially: the differential suite (`rust/tests/simd_kernels.rs`)
+//! asserts equality against the scalar paths for every `words_per_code`,
+//! including ragged tails.
+//!
+//! The vector body is the Muła–Kurz–Lemire positional-popcount idiom:
+//! XOR four words at a time, split each byte into nibbles, look both up
+//! in an in-register 16-entry table (`vpshufb`), and horizontally sum
+//! the per-byte counts with `vpsadbw`. The SAD runs once per 4-word
+//! chunk into a 64-bit accumulator, so no byte/short counter can
+//! saturate for any code width. Word tails (`len % 4`) finish with
+//! scalar `count_ones` inside the kernel.
+//!
+//! # Safety
+//!
+//! `#[target_feature(enable = "avx2")]` throughout — call only when
+//! [`crate::simd::active`] returned true. Unaligned loads; all pointer
+//! arithmetic stays inside the passed slices.
+
+use super::BitCode;
+use std::arch::x86_64::*;
+
+/// Popcount of `a[..len] ^ b[..len]` (raw-pointer windows into two code
+/// rows). Bit-exact with the scalar word loop.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn xor_popcnt_words(a: *const u64, b: *const u64, len: usize) -> u32 {
+    // Per-nibble popcount table, replicated across both 128-bit halves.
+    let table = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3,
+        3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let zero = _mm256_setzero_si256();
+    let mut acc = _mm256_setzero_si256();
+    let mut k = 0usize;
+    while k + 4 <= len {
+        let va = _mm256_loadu_si256(a.add(k) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.add(k) as *const __m256i);
+        let v = _mm256_xor_si256(va, vb);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+        let cnt = _mm256_add_epi8(
+            _mm256_shuffle_epi8(table, lo),
+            _mm256_shuffle_epi8(table, hi),
+        );
+        // Widen per-byte counts to four u64 partial sums immediately:
+        // nothing narrower than 64 bits ever accumulates across chunks.
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+        k += 4;
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+    while k < len {
+        total += (*a.add(k) ^ *b.add(k)).count_ones();
+        k += 1;
+    }
+    total
+}
+
+/// Hamming distance between two equal-length word slices.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    xor_popcnt_words(a.as_ptr(), b.as_ptr(), a.len())
+}
+
+/// Distances from query `q` to every code in `db`, written into `out`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn hamming_to_all(q: &[u64], db: &BitCode, out: &mut [u32]) {
+    let wpc = db.words_per_code;
+    debug_assert_eq!(q.len(), wpc);
+    debug_assert_eq!(out.len(), db.n);
+    let qp = q.as_ptr();
+    let dp = db.data.as_ptr();
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = xor_popcnt_words(qp, dp.add(i * wpc), wpc);
+    }
+}

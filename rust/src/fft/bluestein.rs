@@ -63,9 +63,7 @@ pub fn transform_with_scratch(
         *v = C64::ZERO;
     }
     radix2::fft_inplace_tw(a, m_twiddles);
-    for (av, bv) in a.iter_mut().zip(bfft) {
-        *av = *av * *bv;
-    }
+    super::cmul_in_place(a, bfft);
     radix2::fft_inplace_tw(a, m_twiddles_inv);
     let scale = 1.0 / m as f64;
     for k in 0..n {

@@ -3,7 +3,12 @@
 use std::ops::{Add, Mul, Neg, Sub};
 
 /// A complex number with f64 parts.
+///
+/// `repr(C)` is load-bearing: the SIMD kernels reinterpret `&[C64]` as a
+/// flat `[re, im, re, im, …]` f64 buffer (two complex lanes per
+/// `__m256d`), which requires the guaranteed field order and no padding.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
 pub struct C64 {
     pub re: f64,
     pub im: f64,

@@ -35,6 +35,8 @@ pub mod radix2;
 pub mod bluestein;
 pub mod real;
 pub mod realpack;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) mod simd;
 
 pub use complex::C64;
 pub use realpack::RealFft;
@@ -209,6 +211,23 @@ impl Planner {
     /// Inverse FFT (with 1/n scale) of a complex buffer (in place).
     pub fn ifft(&self, buf: &mut [C64]) {
         self.plan(buf.len()).transform(buf, Dir::Inverse);
+    }
+}
+
+/// Pointwise in-place complex product `a[i] ← a[i]·b[i]` — the spectral
+/// multiply used by the Bluestein convolution and the circulant
+/// projection. Dispatched through [`crate::simd`]: the AVX2 kernel is
+/// bit-exact vs this scalar loop (element-wise mul/sub/add, no FMA).
+pub fn cmul_in_place(a: &mut [C64], b: &[C64]) {
+    assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if a.len() >= 2 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { simd::cmul_in_place(a, b) };
+        return;
+    }
+    for (av, bv) in a.iter_mut().zip(b) {
+        *av = *av * *bv;
     }
 }
 

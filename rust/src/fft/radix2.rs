@@ -35,7 +35,27 @@ fn bit_reverse_permute(buf: &mut [C64]) {
 
 /// In-place FFT of a power-of-two buffer using a prebuilt twiddle table
 /// (forward table → forward DFT, conjugated table → unnormalized inverse).
+///
+/// Dispatch point of the SIMD layer: when [`crate::simd::active`] the
+/// butterfly stages run as AVX2 two-complex lanes
+/// ([`super::simd::fft_stages`]), which perform the identical IEEE-754
+/// operations in the same order as [`fft_inplace_tw_scalar`] — the two
+/// paths are bit-exact, not merely close (enforced by
+/// `rust/tests/simd_kernels.rs`).
 pub fn fft_inplace_tw(buf: &mut [C64], twiddles: &[C64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if buf.len() >= 4 && crate::simd::active() {
+        bit_reverse_permute(buf);
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::fft_stages(buf, twiddles) };
+        return;
+    }
+    fft_inplace_tw_scalar(buf, twiddles);
+}
+
+/// The scalar butterfly loop — the oracle the SIMD path is compared
+/// against, and the only path on non-AVX2 hosts / scalar builds.
+pub fn fft_inplace_tw_scalar(buf: &mut [C64], twiddles: &[C64]) {
     let n = buf.len();
     if n <= 1 {
         return;

@@ -4,6 +4,11 @@
 //! their spectra are conjugate-symmetric: F(t)_{d-i} = conj(F(t)_i). The
 //! learning step of §4 works directly on the half-spectrum; these helpers
 //! convert between real time-domain slices and full complex spectra.
+//!
+//! These wrappers hold no loops worth vectorizing themselves, but the
+//! planner FFTs they call dispatch through the SIMD layer
+//! ([`crate::simd`]) like every other transform — the full-spectrum path
+//! and the packed path stay bit-identical per kernel choice.
 
 use super::{C64, Planner};
 

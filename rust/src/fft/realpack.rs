@@ -126,36 +126,14 @@ impl RealPackPlan {
         let h = self.h;
         let RealPackScratch { z, fft } = scratch;
         z.resize(h, C64::ZERO);
-        match pre_scale {
-            Some(s) => {
-                for (k, zk) in z.iter_mut().enumerate() {
-                    *zk = C64::new(
-                        (x[2 * k] * s[2 * k]) as f64,
-                        (x[2 * k + 1] * s[2 * k + 1]) as f64,
-                    );
-                }
-            }
-            None => {
-                for (k, zk) in z.iter_mut().enumerate() {
-                    *zk = C64::new(x[2 * k] as f64, x[2 * k + 1] as f64);
-                }
-            }
-        }
+        pack_real(x, pre_scale, z);
         self.half_plan.transform_with(z, Dir::Forward, fft);
-        // Untangle: F_even[k] = (Z[k] + Z*[h-k])/2,
-        //           F_odd[k]  = -i (Z[k] - Z*[h-k])/2,
-        //           X[k] = F_even[k] + W_d^k F_odd[k].
+        // The self-conjugate bins (DC + Nyquist) stay scalar so their
+        // exactly-zero imaginary parts are produced by construction.
         let zk0 = z[0];
         out[0] = C64::new(zk0.re + zk0.im, 0.0);
         out[h] = C64::new(zk0.re - zk0.im, 0.0);
-        for k in 1..h {
-            let a = z[k];
-            let b = z[h - k].conj();
-            let fe = (a + b).scale(0.5);
-            let fo = (a - b).scale(0.5);
-            let fo = C64::new(fo.im, -fo.re); // multiply by -i
-            out[k] = fe + self.w_fwd[k] * fo;
-        }
+        untangle(z, &self.w_fwd, out);
     }
 
     /// Shared retangle + half-size inverse transform behind
@@ -168,17 +146,7 @@ impl RealPackPlan {
         debug_assert_real_bin(spec[h], "irfft: spec[h] (Nyquist)");
         let RealPackScratch { z, fft } = scratch;
         z.resize(h, C64::ZERO);
-        // Retangle: F_even[k] = (X[k] + X*[h-k])/2,
-        //           F_odd[k]  = W_d^{-k} (X[k] - X*[h-k])/2,
-        //           Z[k] = F_even[k] + i F_odd[k].
-        for (k, zk) in z.iter_mut().enumerate() {
-            let a = spec[k];
-            let b = spec[h - k].conj();
-            let fe = (a + b).scale(0.5);
-            let fo = (self.w_inv[k] * (a - b)).scale(0.5);
-            let ifo = C64::new(-fo.im, fo.re); // multiply by i
-            *zk = fe + ifo;
-        }
+        retangle(spec, &self.w_inv, z);
         self.half_plan.transform_with(z, Dir::Inverse, fft);
     }
 
@@ -188,10 +156,7 @@ impl RealPackPlan {
     pub fn irfft(&self, spec: &[C64], out: &mut [f32], scratch: &mut RealPackScratch) {
         assert_eq!(out.len(), self.d);
         self.inverse_packed(spec, scratch);
-        for (k, zk) in scratch.z.iter().enumerate() {
-            out[2 * k] = zk.re as f32;
-            out[2 * k + 1] = zk.im as f32;
-        }
+        unpack_f32(&scratch.z, out);
     }
 
     /// [`RealPackPlan::irfft`] at full f64 output precision — the
@@ -204,6 +169,96 @@ impl RealPackPlan {
             out[2 * k] = zk.re;
             out[2 * k + 1] = zk.im;
         }
+    }
+}
+
+// ---------------------------------------------------- kernel dispatchers
+//
+// The pack/untangle/retangle/unpack loops of the packed path, each split
+// into a dispatcher (below) and its scalar body. When the
+// [`crate::simd`] gate is open the AVX2 kernels in [`super::simd`] run
+// instead; they perform the identical IEEE-754 operations in the same
+// order, so both sides are bit-exact (enforced by
+// `rust/tests/simd_kernels.rs`). The w tables are passed in because the
+// dispatchers are free functions shared by the plan methods above.
+
+/// z[k] = (x[2k]·s[2k], x[2k+1]·s[2k+1]) widened to f64 (s optional).
+fn pack_real(x: &[f32], pre_scale: Option<&[f32]>, z: &mut [C64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if z.len() >= 2 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::pack_real(x, pre_scale, z) };
+        return;
+    }
+    match pre_scale {
+        Some(s) => {
+            for (k, zk) in z.iter_mut().enumerate() {
+                *zk = C64::new(
+                    (x[2 * k] * s[2 * k]) as f64,
+                    (x[2 * k + 1] * s[2 * k + 1]) as f64,
+                );
+            }
+        }
+        None => {
+            for (k, zk) in z.iter_mut().enumerate() {
+                *zk = C64::new(x[2 * k] as f64, x[2 * k + 1] as f64);
+            }
+        }
+    }
+}
+
+/// Untangle (k ∈ [1, h)): F_even[k] = (Z[k] + Z*[h−k])/2,
+/// F_odd[k] = −i (Z[k] − Z*[h−k])/2, X[k] = F_even[k] + W_d^k F_odd[k].
+/// The caller writes the self-conjugate bins `out[0]` / `out[h]`.
+fn untangle(z: &[C64], w_fwd: &[C64], out: &mut [C64]) {
+    let h = z.len();
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if h >= 3 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::untangle(z, w_fwd, out) };
+        return;
+    }
+    for k in 1..h {
+        let a = z[k];
+        let b = z[h - k].conj();
+        let fe = (a + b).scale(0.5);
+        let fo = (a - b).scale(0.5);
+        let fo = C64::new(fo.im, -fo.re); // multiply by -i
+        out[k] = fe + w_fwd[k] * fo;
+    }
+}
+
+/// Retangle (k ∈ [0, h)): F_even[k] = (X[k] + X*[h−k])/2,
+/// F_odd[k] = W_d^{−k} (X[k] − X*[h−k])/2, Z[k] = F_even[k] + i F_odd[k].
+fn retangle(spec: &[C64], w_inv: &[C64], z: &mut [C64]) {
+    let h = z.len();
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if h >= 2 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::retangle(spec, w_inv, z) };
+        return;
+    }
+    for (k, zk) in z.iter_mut().enumerate() {
+        let a = spec[k];
+        let b = spec[h - k].conj();
+        let fe = (a + b).scale(0.5);
+        let fo = (w_inv[k] * (a - b)).scale(0.5);
+        let ifo = C64::new(-fo.im, fo.re); // multiply by i
+        *zk = fe + ifo;
+    }
+}
+
+/// out[2k], out[2k+1] = z[k].re, z[k].im as f32.
+fn unpack_f32(z: &[C64], out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if z.len() >= 2 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::unpack_f32(z, out) };
+        return;
+    }
+    for (k, zk) in z.iter().enumerate() {
+        out[2 * k] = zk.re as f32;
+        out[2 * k + 1] = zk.im as f32;
     }
 }
 
@@ -357,11 +412,17 @@ const _: () = {
 // touching a mirror bin.
 
 /// out[l] = a[l]·b[l] — the half-spectrum product behind every circulant
-/// apply (y = IFFT(F(x) ∘ F(r))).
+/// apply (y = IFFT(F(x) ∘ F(r))). SIMD-dispatched, bit-exact both sides.
 #[inline]
 pub fn spectral_mul(a: &[C64], b: &[C64], out: &mut [C64]) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len(), out.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if a.len() >= 2 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::cmul_into(a, b, out) };
+        return;
+    }
     for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
         *o = *x * *y;
     }
@@ -369,9 +430,16 @@ pub fn spectral_mul(a: &[C64], b: &[C64], out: &mut [C64]) {
 
 /// acc[l] += |s[l]|² — the M accumulation of eq. 17 on a half-spectrum
 /// (the solver doubles the paired bins; DC/Nyquist count once).
+/// SIMD-dispatched, bit-exact both sides.
 #[inline]
 pub fn spectral_energy_accum(s: &[C64], acc: &mut [f64]) {
     debug_assert_eq!(s.len(), acc.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if s.len() >= 4 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::energy_accum(s, acc) };
+        return;
+    }
     for (a, c) in acc.iter_mut().zip(s) {
         *a += c.norm_sqr();
     }
@@ -379,11 +447,18 @@ pub fn spectral_energy_accum(s: &[C64], acc: &mut [f64]) {
 
 /// The eq. 17 h/g correlation accumulators on half-spectra:
 /// h[l] −= 2·Re(x[l]·conj(b[l])), g[l] += 2·Im(x[l]·conj(b[l])).
+/// SIMD-dispatched, bit-exact both sides.
 #[inline]
 pub fn spectral_corr_accum(x: &[C64], b: &[C64], h: &mut [f64], g: &mut [f64]) {
     debug_assert_eq!(x.len(), b.len());
     debug_assert_eq!(x.len(), h.len());
     debug_assert_eq!(x.len(), g.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if x.len() >= 4 && crate::simd::active() {
+        // SAFETY: `active()` implies runtime AVX2 detection succeeded.
+        unsafe { super::simd::corr_accum(x, b, h, g) };
+        return;
+    }
     for l in 0..x.len() {
         h[l] -= 2.0 * (x[l].re * b[l].re + x[l].im * b[l].im);
         g[l] += 2.0 * (x[l].im * b[l].re - x[l].re * b[l].im);

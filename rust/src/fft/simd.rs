@@ -1,0 +1,350 @@
+//! AVX2 kernels for the complex/f64 hot loops of the FFT substrate.
+//!
+//! Lane layout: every `__m256d` holds **two interleaved complex numbers**
+//! `[re0, im0, re1, im1]` — [`C64`] is `repr(C)`, so a `&[C64]` slice
+//! reinterprets directly as the flat f64 buffer these kernels load from.
+//!
+//! # Exactness contract (the strict tier)
+//!
+//! Each kernel performs the *identical* IEEE-754 operations, in the same
+//! order, as the scalar loop it replaces: multiplies and adds are
+//! element-wise `_mm256_{mul,add,sub,addsub}_pd` (never FMA — a fused
+//! multiply-add rounds once where the scalar code rounds twice), complex
+//! multiplication reproduces [`C64`]'s `Mul` term order up to the
+//! commutativity of IEEE `*`/`+` (which is exact), and sign flips
+//! (conjugation, ±i rotation) are sign-bit XORs — exact negation, just
+//! like scalar `-x`. The differential suite (`rust/tests/simd_kernels.rs`)
+//! asserts **bit equality** against the scalar paths, not a tolerance.
+//!
+//! Tails: vector bodies step two complexes (or four f64 bins) at a time;
+//! every kernel finishes ragged remainders with the scalar statements
+//! inline, so any length is accepted and the tail is bit-exact trivially.
+//!
+//! # Safety
+//!
+//! Every function is `#[target_feature(enable = "avx2")]` and must only
+//! be called when [`crate::simd::active`] returned true (which implies
+//! runtime AVX2 detection succeeded). All pointer arithmetic stays inside
+//! the passed slices; unaligned loads/stores are used throughout.
+
+use super::C64;
+use std::arch::x86_64::*;
+
+/// Complex multiply of two lanes: per complex, `a·w` with [`C64`]'s exact
+/// term order — `re = ar·wr − ai·wi`, `im = ai·wr + ar·wi` (the scalar
+/// `ar·wi + ai·wr` commuted, which IEEE addition makes bit-identical).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn cmul(a: __m256d, w: __m256d) -> __m256d {
+    let wr = _mm256_unpacklo_pd(w, w); // [wr0, wr0, wr1, wr1]
+    let wi = _mm256_unpackhi_pd(w, w); // [wi0, wi0, wi1, wi1]
+    let t1 = _mm256_mul_pd(a, wr); // [ar·wr, ai·wr, …]
+    let swapped = _mm256_permute_pd::<0b0101>(a); // [ai, ar, …]
+    let t2 = _mm256_mul_pd(swapped, wi); // [ai·wi, ar·wi, …]
+    _mm256_addsub_pd(t1, t2) // [ar·wr − ai·wi, ai·wr + ar·wi, …]
+}
+
+/// Sign mask flipping each lane's imaginary part (conjugation / the
+/// second half of a ±i rotation): XOR with −0.0 is exact negation.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn conj_mask() -> __m256d {
+    _mm256_setr_pd(0.0, -0.0, 0.0, -0.0)
+}
+
+/// All butterfly stages of the radix-2 FFT (after bit-reversal), n ≥ 4.
+/// The first stage (`len == 2`, twiddle `W⁰ = 1`) runs the scalar
+/// butterfly statements; every later stage has an even `half ≥ 2` and
+/// processes two butterflies per vector — no intra-stage tail exists.
+/// Twiddles are gathered as two 128-bit loads at the strided indices, so
+/// arbitrary stage strides reuse the one top-level table exactly like
+/// the scalar loop.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn fft_stages(buf: &mut [C64], twiddles: &[C64]) {
+    let n = buf.len();
+    debug_assert!(n >= 4 && n.is_power_of_two());
+    debug_assert_eq!(twiddles.len(), n / 2);
+    let w0 = twiddles[0];
+    let mut i = 0usize;
+    while i < n {
+        let a = buf[i];
+        let b = buf[i + 1] * w0;
+        buf[i] = a + b;
+        buf[i + 1] = a - b;
+        i += 2;
+    }
+    let base = buf.as_mut_ptr() as *mut f64;
+    let tw = twiddles.as_ptr() as *const f64;
+    let mut len = 4usize;
+    while len <= n {
+        let half = len / 2; // power of two ≥ 2: the k-loop never tails
+        let stride = n / len;
+        let mut start = 0usize;
+        while start < n {
+            let lo = base.add(2 * start);
+            let hi = base.add(2 * (start + half));
+            let mut k = 0usize;
+            while k < half {
+                let w_lo = _mm_loadu_pd(tw.add(2 * (k * stride)));
+                let w_hi = _mm_loadu_pd(tw.add(2 * ((k + 1) * stride)));
+                let w = _mm256_set_m128d(w_hi, w_lo);
+                let a = _mm256_loadu_pd(lo.add(2 * k));
+                let b = cmul(_mm256_loadu_pd(hi.add(2 * k)), w);
+                _mm256_storeu_pd(lo.add(2 * k), _mm256_add_pd(a, b));
+                _mm256_storeu_pd(hi.add(2 * k), _mm256_sub_pd(a, b));
+                k += 2;
+            }
+            start += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Pointwise in-place complex product `a[i] ← a[i]·b[i]` (the Bluestein
+/// convolution and circulant spectral-multiply step).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn cmul_in_place(a: &mut [C64], b: &[C64]) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_mut_ptr() as *mut f64;
+    let bp = b.as_ptr() as *const f64;
+    let mut k = 0usize;
+    while k + 2 <= n {
+        let va = _mm256_loadu_pd(ap.add(2 * k));
+        let vb = _mm256_loadu_pd(bp.add(2 * k));
+        _mm256_storeu_pd(ap.add(2 * k), cmul(va, vb));
+        k += 2;
+    }
+    while k < n {
+        a[k] = a[k] * b[k];
+        k += 1;
+    }
+}
+
+/// Pointwise out-of-place complex product `out[i] = a[i]·b[i]`
+/// ([`super::realpack::spectral_mul`]'s vector body).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn cmul_into(a: &[C64], b: &[C64], out: &mut [C64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let n = a.len();
+    let ap = a.as_ptr() as *const f64;
+    let bp = b.as_ptr() as *const f64;
+    let op = out.as_mut_ptr() as *mut f64;
+    let mut k = 0usize;
+    while k + 2 <= n {
+        let va = _mm256_loadu_pd(ap.add(2 * k));
+        let vb = _mm256_loadu_pd(bp.add(2 * k));
+        _mm256_storeu_pd(op.add(2 * k), cmul(va, vb));
+        k += 2;
+    }
+    while k < n {
+        out[k] = a[k] * b[k];
+        k += 1;
+    }
+}
+
+/// The k ∈ [1, h) untangle loop of the packed real FFT: reads the
+/// half-size spectrum `z` (len h) and the forward twiddles `w_fwd`
+/// (len h+1), writes `out[1..h]`. The self-conjugate bins `out[0]` /
+/// `out[h]` stay with the caller. Mirrored bins are fetched with one
+/// 256-bit load at `h−k−1` and a 128-bit-half swap, so the vector body
+/// touches the same elements as two scalar iterations.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn untangle(z: &[C64], w_fwd: &[C64], out: &mut [C64]) {
+    let h = z.len();
+    debug_assert_eq!(out.len(), h + 1);
+    debug_assert_eq!(w_fwd.len(), h + 1);
+    let zp = z.as_ptr() as *const f64;
+    let wp = w_fwd.as_ptr() as *const f64;
+    let op = out.as_mut_ptr() as *mut f64;
+    let half = _mm256_set1_pd(0.5);
+    let cm = conj_mask();
+    let mut k = 1usize;
+    while k + 2 <= h {
+        let a = _mm256_loadu_pd(zp.add(2 * k)); // z[k], z[k+1]
+        let brev = _mm256_loadu_pd(zp.add(2 * (h - k - 1))); // z[h−k−1], z[h−k]
+        let b = _mm256_xor_pd(_mm256_permute2f128_pd::<0x01>(brev, brev), cm);
+        let fe = _mm256_mul_pd(_mm256_add_pd(a, b), half);
+        let fo = _mm256_mul_pd(_mm256_sub_pd(a, b), half);
+        // ×(−i): (re, im) → (im, −re) = pair swap + imag sign flip.
+        let fo = _mm256_xor_pd(_mm256_permute_pd::<0b0101>(fo), cm);
+        let wfo = cmul(fo, _mm256_loadu_pd(wp.add(2 * k)));
+        _mm256_storeu_pd(op.add(2 * k), _mm256_add_pd(fe, wfo));
+        k += 2;
+    }
+    while k < h {
+        let a = z[k];
+        let b = z[h - k].conj();
+        let fe = (a + b).scale(0.5);
+        let fo = (a - b).scale(0.5);
+        let fo = C64::new(fo.im, -fo.re);
+        out[k] = fe + w_fwd[k] * fo;
+        k += 1;
+    }
+}
+
+/// The k ∈ [0, h) retangle loop of the packed real inverse FFT: reads
+/// the half spectrum `spec` (len h+1) and the inverse twiddles `w_inv`,
+/// writes the packed buffer `z` (len h).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn retangle(spec: &[C64], w_inv: &[C64], z: &mut [C64]) {
+    let h = z.len();
+    debug_assert_eq!(spec.len(), h + 1);
+    debug_assert_eq!(w_inv.len(), h + 1);
+    let sp = spec.as_ptr() as *const f64;
+    let wp = w_inv.as_ptr() as *const f64;
+    let zp = z.as_mut_ptr() as *mut f64;
+    let half = _mm256_set1_pd(0.5);
+    let cm = conj_mask();
+    // Mask negating each lane's *real* part: the ×i rotation.
+    let im = _mm256_setr_pd(-0.0, 0.0, -0.0, 0.0);
+    let mut k = 0usize;
+    while k + 2 <= h {
+        let a = _mm256_loadu_pd(sp.add(2 * k)); // spec[k], spec[k+1]
+        let brev = _mm256_loadu_pd(sp.add(2 * (h - k - 1))); // spec[h−k−1], spec[h−k]
+        let b = _mm256_xor_pd(_mm256_permute2f128_pd::<0x01>(brev, brev), cm);
+        let fe = _mm256_mul_pd(_mm256_add_pd(a, b), half);
+        let w = _mm256_loadu_pd(wp.add(2 * k));
+        let fo = _mm256_mul_pd(cmul(_mm256_sub_pd(a, b), w), half);
+        // ×i: (re, im) → (−im, re) = pair swap + real sign flip.
+        let ifo = _mm256_xor_pd(_mm256_permute_pd::<0b0101>(fo), im);
+        _mm256_storeu_pd(zp.add(2 * k), _mm256_add_pd(fe, ifo));
+        k += 2;
+    }
+    while k < h {
+        let a = spec[k];
+        let b = spec[h - k].conj();
+        let fe = (a + b).scale(0.5);
+        let fo = (w_inv[k] * (a - b)).scale(0.5);
+        let ifo = C64::new(-fo.im, fo.re);
+        z[k] = fe + ifo;
+        k += 1;
+    }
+}
+
+/// The rfft input pack: `z[k] = (x[2k]·s[2k], x[2k+1]·s[2k+1])` widened
+/// to f64 (four f32 loads + one `cvtps_pd` per vector step; the f32
+/// multiply and the widening are both exact-match with the scalar cast).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn pack_real(x: &[f32], pre_scale: Option<&[f32]>, z: &mut [C64]) {
+    let h = z.len();
+    debug_assert_eq!(x.len(), 2 * h);
+    let xp = x.as_ptr();
+    let zp = z.as_mut_ptr() as *mut f64;
+    match pre_scale {
+        Some(s) => {
+            debug_assert_eq!(s.len(), 2 * h);
+            let sp = s.as_ptr();
+            let mut k = 0usize;
+            while k + 2 <= h {
+                let v = _mm_mul_ps(_mm_loadu_ps(xp.add(2 * k)), _mm_loadu_ps(sp.add(2 * k)));
+                _mm256_storeu_pd(zp.add(2 * k), _mm256_cvtps_pd(v));
+                k += 2;
+            }
+            while k < h {
+                z[k] = C64::new(
+                    (x[2 * k] * s[2 * k]) as f64,
+                    (x[2 * k + 1] * s[2 * k + 1]) as f64,
+                );
+                k += 1;
+            }
+        }
+        None => {
+            let mut k = 0usize;
+            while k + 2 <= h {
+                _mm256_storeu_pd(zp.add(2 * k), _mm256_cvtps_pd(_mm_loadu_ps(xp.add(2 * k))));
+                k += 2;
+            }
+            while k < h {
+                z[k] = C64::new(x[2 * k] as f64, x[2 * k + 1] as f64);
+                k += 1;
+            }
+        }
+    }
+}
+
+/// The irfft output unpack: `out[2k], out[2k+1] = z[k].re, z[k].im` as
+/// f32 (`cvtpd_ps` rounds to nearest-even — the same rounding `as f32`
+/// performs).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn unpack_f32(z: &[C64], out: &mut [f32]) {
+    let h = z.len();
+    debug_assert_eq!(out.len(), 2 * h);
+    let zp = z.as_ptr() as *const f64;
+    let op = out.as_mut_ptr();
+    let mut k = 0usize;
+    while k + 2 <= h {
+        _mm_storeu_ps(op.add(2 * k), _mm256_cvtpd_ps(_mm256_loadu_pd(zp.add(2 * k))));
+        k += 2;
+    }
+    while k < h {
+        out[2 * k] = z[k].re as f32;
+        out[2 * k + 1] = z[k].im as f32;
+        k += 1;
+    }
+}
+
+/// `acc[l] += |s[l]|²`, four bins per step: square both spectrum lanes,
+/// horizontal-add pairs, restore bin order with one 4×64 permute.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn energy_accum(s: &[C64], acc: &mut [f64]) {
+    let n = s.len();
+    debug_assert_eq!(acc.len(), n);
+    let sp = s.as_ptr() as *const f64;
+    let ap = acc.as_mut_ptr();
+    let mut l = 0usize;
+    while l + 4 <= n {
+        let v0 = _mm256_loadu_pd(sp.add(2 * l)); // bins l, l+1
+        let v1 = _mm256_loadu_pd(sp.add(2 * l + 4)); // bins l+2, l+3
+        // hadd → [n_l, n_{l+2}, n_{l+1}, n_{l+3}]; 0xD8 restores order.
+        let t = _mm256_hadd_pd(_mm256_mul_pd(v0, v0), _mm256_mul_pd(v1, v1));
+        let norms = _mm256_permute4x64_pd::<0b1101_1000>(t);
+        let a = _mm256_loadu_pd(ap.add(l));
+        _mm256_storeu_pd(ap.add(l), _mm256_add_pd(a, norms));
+        l += 4;
+    }
+    while l < n {
+        acc[l] += s[l].norm_sqr();
+        l += 1;
+    }
+}
+
+/// The eq. 17 correlation accumulators, four bins per step:
+/// `h[l] −= 2·Re(x·conj(b))`, `g[l] += 2·Im(x·conj(b))`. The complex
+/// products land interleaved `[p, q, …]`; unpack + permute deinterleaves
+/// them into bin-ordered `p` and `q` vectors.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn corr_accum(x: &[C64], b: &[C64], hacc: &mut [f64], gacc: &mut [f64]) {
+    let n = x.len();
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(hacc.len(), n);
+    debug_assert_eq!(gacc.len(), n);
+    let xp = x.as_ptr() as *const f64;
+    let bp = b.as_ptr() as *const f64;
+    let hp = hacc.as_mut_ptr();
+    let gp = gacc.as_mut_ptr();
+    let cm = conj_mask();
+    let two = _mm256_set1_pd(2.0);
+    let mut l = 0usize;
+    while l + 4 <= n {
+        let x0 = _mm256_loadu_pd(xp.add(2 * l));
+        let x1 = _mm256_loadu_pd(xp.add(2 * l + 4));
+        let b0 = _mm256_xor_pd(_mm256_loadu_pd(bp.add(2 * l)), cm);
+        let b1 = _mm256_xor_pd(_mm256_loadu_pd(bp.add(2 * l + 4)), cm);
+        let c0 = cmul(x0, b0); // [p_l, q_l, p_{l+1}, q_{l+1}]
+        let c1 = cmul(x1, b1); // [p_{l+2}, q_{l+2}, p_{l+3}, q_{l+3}]
+        let p = _mm256_permute4x64_pd::<0b1101_1000>(_mm256_unpacklo_pd(c0, c1));
+        let q = _mm256_permute4x64_pd::<0b1101_1000>(_mm256_unpackhi_pd(c0, c1));
+        let hv = _mm256_loadu_pd(hp.add(l));
+        _mm256_storeu_pd(hp.add(l), _mm256_sub_pd(hv, _mm256_mul_pd(two, p)));
+        let gv = _mm256_loadu_pd(gp.add(l));
+        _mm256_storeu_pd(gp.add(l), _mm256_add_pd(gv, _mm256_mul_pd(two, q)));
+        l += 4;
+    }
+    while l < n {
+        hacc[l] -= 2.0 * (x[l].re * b[l].re + x[l].im * b[l].im);
+        gacc[l] += 2.0 * (x[l].im * b[l].re - x[l].re * b[l].im);
+        l += 1;
+    }
+}

@@ -19,6 +19,14 @@
 //!   pools `u32` stamp buffers behind a mutex and bumps a generation
 //!   counter instead, so the per-query dedup cost is O(candidates), not
 //!   O(n) — while `search(&self)` stays `Sync` for the sharded fan-out.
+//!
+//! Re-ranking rides the [`crate::bits::hamming::hamming_words`] dispatch:
+//! per-candidate distances take the AVX2 popcount kernel at ≥ 8 words per
+//! code (512-bit and up), while the ≤ 4-word windows the paper's serving
+//! shapes mostly probe stay on the scalar unroll, where the in-register
+//! table setup would dominate a single short window. Either way the
+//! distances are bit-identical (strict tier of the SIMD contract), so the
+//! exactness guarantee above is unaffected by the gate.
 
 use super::substring::{
     for_each_key_at_radius, sampled_positions, substring_spans, BuildFastHash, KeySource,

@@ -22,6 +22,7 @@ pub mod util;
 pub mod proptest_lite;
 pub mod tune;
 pub mod obs;
+pub mod simd;
 pub mod fft;
 pub mod linalg;
 pub mod bits;

@@ -191,9 +191,7 @@ impl CirculantProjection {
             let EncodeScratch { spec, rp, .. } = scratch;
             spec.resize(self.d / 2 + 1, C64::ZERO);
             h.plan.rfft(x, Some(&self.signs), spec, rp);
-            for (s, rs) in spec.iter_mut().zip(&h.r_half) {
-                *s = *s * *rs;
-            }
+            crate::fft::cmul_in_place(spec, &h.r_half);
             h.plan.irfft(spec, out, rp);
             return;
         }
@@ -370,9 +368,7 @@ impl CirculantProjection {
         let rp = &mut scratch.rp;
         spec.resize(self.d / 2 + 1, C64::ZERO);
         h.plan.rfft(x, Some(&self.signs), spec, rp);
-        for (s, rs) in spec.iter_mut().zip(&h.r_half) {
-            *s = *s * *rs;
-        }
+        crate::fft::cmul_in_place(spec, &h.r_half);
         vals.resize(self.d, 0.0);
         h.plan.irfft(spec, vals, rp);
         vals
@@ -389,9 +385,7 @@ impl CirculantProjection {
                 .map(|(v, s)| C64::new((*v * *s) as f64, 0.0)),
         );
         self.full_plan.transform_with(cplx, Dir::Forward, fft);
-        for (b, rs) in cplx.iter_mut().zip(&self.r_spec) {
-            *b = *b * *rs;
-        }
+        crate::fft::cmul_in_place(cplx, &self.r_spec);
         self.full_plan.transform_with(cplx, Dir::Inverse, fft);
     }
 

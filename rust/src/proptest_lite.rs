@@ -11,6 +11,15 @@
 //!     assert_eq!(a + b, b + a);
 //! });
 //! ```
+//!
+//! # Replaying failures
+//!
+//! Every failure prints the failing case number and seed, plus a ready-made
+//! `CBE_PROPTEST_SEED=<seed>` replay hint. Setting that variable makes every
+//! [`forall`] in the process run **exactly one case** with that seed instead
+//! of its full sweep — a failing property reproduces instantly, and
+//! unrelated properties in the same test binary degrade to a harmless
+//! single case (the variable is a debugging tool, not a CI mode).
 
 use crate::util::rng::Pcg64;
 
@@ -27,6 +36,14 @@ impl Gen {
     }
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.rng.next_f32() * (hi - lo)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+    /// n uniform f64 draws in [lo, hi] — the raw-buffer generator the SIMD
+    /// differential properties feed the FFT kernels with.
+    pub fn f64_slice(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
     }
     pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
         self.rng.normal_vec(n)
@@ -49,18 +66,55 @@ impl Gen {
 }
 
 /// Run `cases` random cases of the property; panics (with the failing case
-/// number and seed) on the first failure so `cargo test` reports it.
-pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+/// number, seed, and a `CBE_PROPTEST_SEED` replay hint) on the first
+/// failure so `cargo test` reports it. When `CBE_PROPTEST_SEED` is set,
+/// runs exactly one case with that seed instead (see the module docs).
+pub fn forall(name: &str, cases: usize, prop: impl FnMut(&mut Gen)) {
+    let override_seed = resolve_seed(std::env::var("CBE_PROPTEST_SEED").ok().as_deref());
+    forall_with_seed(name, cases, override_seed, prop);
+}
+
+/// Parse a `CBE_PROPTEST_SEED` value. `None`/unparsable → no override
+/// (full sweep); unparsable additionally warns on stderr, since the
+/// operator was clearly trying to replay something. (Pure, unit-tested.)
+pub fn resolve_seed(v: Option<&str>) -> Option<u64> {
+    let v = v?;
+    match v.trim().parse::<u64>() {
+        Ok(seed) => Some(seed),
+        Err(_) => {
+            eprintln!("cbe: CBE_PROPTEST_SEED='{v}' is not a u64; running the full sweep");
+            None
+        }
+    }
+}
+
+/// [`forall`] with the seed override made explicit (the testable core:
+/// no environment reads). `Some(seed)` runs a single case with exactly
+/// that seed; `None` runs the deterministic `cases`-long sweep.
+pub fn forall_with_seed(
+    name: &str,
+    cases: usize,
+    override_seed: Option<u64>,
+    mut prop: impl FnMut(&mut Gen),
+) {
     let base_seed = 0xcbe0_0000u64;
-    for case in 0..cases {
-        let seed = base_seed.wrapping_add(case as u64);
+    let plan: Vec<(usize, u64)> = match override_seed {
+        Some(seed) => vec![(0, seed)],
+        None => (0..cases)
+            .map(|case| (case, base_seed.wrapping_add(case as u64)))
+            .collect(),
+    };
+    for (case, seed) in plan {
         let mut g = Gen {
             rng: Pcg64::new(seed),
             case,
         };
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
         if let Err(e) = result {
-            eprintln!("property '{name}' failed at case {case} (seed {seed})");
+            eprintln!(
+                "property '{name}' failed at case {case} (seed {seed}); \
+                 replay with CBE_PROPTEST_SEED={seed}"
+            );
             std::panic::resume_unwind(e);
         }
     }
@@ -93,6 +147,42 @@ mod tests {
             let p = g.pow2_in(4, 256);
             assert!(p.is_power_of_two());
             assert!(p >= 4 && p <= 256);
+        });
+    }
+
+    #[test]
+    fn resolve_seed_parses_and_rejects() {
+        assert_eq!(resolve_seed(None), None);
+        assert_eq!(resolve_seed(Some("42")), Some(42));
+        assert_eq!(resolve_seed(Some(" 42 ")), Some(42));
+        assert_eq!(resolve_seed(Some("18446744073709551615")), Some(u64::MAX));
+        // Unparsable values warn and fall back to the full sweep.
+        assert_eq!(resolve_seed(Some("0xcbe")), None);
+        assert_eq!(resolve_seed(Some("")), None);
+        assert_eq!(resolve_seed(Some("-1")), None);
+    }
+
+    #[test]
+    fn seed_override_replays_exact_seed() {
+        // With an override the property runs exactly once, seeded with
+        // exactly the requested value (same first draw as a raw Pcg64).
+        let mut draws = Vec::new();
+        forall_with_seed("replay", 50, Some(42), |g| {
+            assert_eq!(g.case, 0);
+            draws.push(g.rng().next_u64());
+        });
+        assert_eq!(draws, vec![Pcg64::new(42).next_u64()]);
+    }
+
+    #[test]
+    fn f64_slice_len_and_bounds() {
+        forall("f64_slice", 50, |g| {
+            let n = g.usize_in(0, 64);
+            let v = g.f64_slice(n, -3.0, 5.0);
+            assert_eq!(v.len(), n);
+            // Closed-interval bounds (hi is reachable when next_f64
+            // returns a value rounding the product up to hi - lo).
+            assert!(v.iter().all(|x| (-3.0..=5.0).contains(x)));
         });
     }
 }

@@ -1,0 +1,128 @@
+//! Runtime gate for the SIMD kernel layer.
+//!
+//! The AVX2 kernels under [`crate::fft`] and [`crate::bits`] are selected
+//! per call through one predicate, [`active`], which ANDs four layers
+//! (the gating matrix — see ARCHITECTURE.md §SIMD kernels):
+//!
+//! 1. **`simd` cargo feature** — compiled in by default; building with
+//!    `--no-default-features` removes every kernel and turns [`active`]
+//!    into a constant `false`, so dispatch sites fold to the scalar path.
+//! 2. **target architecture** — the kernels are `x86_64` only; other
+//!    targets compile the scalar paths and nothing else.
+//! 3. **CPU detection** — `is_x86_feature_detected!("avx2")`, probed once
+//!    per process and cached. No AVX2, no dispatch: the binary runs
+//!    everywhere the scalar code runs.
+//! 4. **runtime switch** — `CBE_SIMD=0` (or `false`/`off`) in the
+//!    environment, or [`set_enabled`] in-process (the bench A/B arms and
+//!    the differential test suite flip it), mirrors the `obs` gating
+//!    pattern: [`set_enabled`] wins over the environment once called.
+//!
+//! The exactness contract the gate guards is two-tier and test-enforced
+//! (`rust/tests/simd_kernels.rs`): integer popcount paths are bit-exact
+//! vs scalar by construction; the FFT-side kernels are written to perform
+//! the *identical* IEEE-754 operations in the same order as the scalar
+//! loops (two complex lanes per `__m256d`, no FMA contraction), so they
+//! are bit-exact too, and the packed sign bits of an encode are
+//! code-identical whichever side of the gate runs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+/// Runtime toggle (defaults to on; the env layer may lower it once).
+static ENABLED: AtomicBool = AtomicBool::new(true);
+/// One-shot `CBE_SIMD` read. [`set_enabled`] consumes it first so an
+/// explicit in-process choice is never overridden by a late env read.
+static ENV_INIT: Once = Once::new();
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn detect() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn detect() -> bool {
+    false
+}
+
+/// Could the SIMD kernels run here at all? True iff the `simd` feature is
+/// compiled in, the target is x86-64 and the CPU reports AVX2. Detection
+/// is probed once and cached; this never changes within a process.
+#[inline]
+pub fn available() -> bool {
+    detect()
+}
+
+/// Does `CBE_SIMD=<v>` disable the kernels? (Pure, for unit tests.)
+fn env_disables(v: Option<&str>) -> bool {
+    matches!(v, Some("0") | Some("false") | Some("off"))
+}
+
+/// Should a dispatch site take the SIMD kernel *now*? [`available`] AND
+/// the runtime switch (env-initialized, [`set_enabled`]-overridable).
+/// One relaxed atomic load on the hot path.
+#[inline]
+pub fn active() -> bool {
+    if !available() {
+        return false;
+    }
+    ENV_INIT.call_once(|| {
+        if env_disables(std::env::var("CBE_SIMD").ok().as_deref()) {
+            ENABLED.store(false, Ordering::Relaxed);
+        }
+    });
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip the runtime switch in-process (bench A/B arms, differential
+/// tests). Takes precedence over `CBE_SIMD` from this point on. A no-op
+/// in effect when [`available`] is false — [`active`] stays false.
+pub fn set_enabled(on: bool) {
+    // Claim the env read so a later `active()` can't override this call.
+    ENV_INIT.call_once(|| {});
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Name of the kernel set a dispatch site would pick right now — for
+/// bench JSON and logs.
+pub fn kernel_name() -> &'static str {
+    if active() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_values_that_disable() {
+        assert!(env_disables(Some("0")));
+        assert!(env_disables(Some("false")));
+        assert!(env_disables(Some("off")));
+        assert!(!env_disables(Some("1")));
+        assert!(!env_disables(Some("")));
+        assert!(!env_disables(None));
+    }
+
+    #[test]
+    fn availability_is_stable_and_bounds_active() {
+        // Detection is one-shot: two reads agree, and `active` can never
+        // exceed `available`. (No `set_enabled` here — unit tests share
+        // this process with every other lib test.)
+        assert_eq!(available(), available());
+        if !available() {
+            assert!(!active());
+            assert_eq!(kernel_name(), "scalar");
+        }
+    }
+
+    #[cfg(not(feature = "simd"))]
+    #[test]
+    fn scalar_build_is_constant_false() {
+        assert!(!available());
+        assert!(!active());
+    }
+}

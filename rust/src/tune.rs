@@ -25,6 +25,13 @@
 //! against their serial paths at any thread count, so a per-host
 //! threshold only moves the speed cliff, never the output.
 //!
+//! The probe measures the **active kernel**: its transform runs through
+//! [`Plan::transform_with`] and therefore the same [`crate::simd`]
+//! dispatch as the hot loops, so a host where the AVX2 butterflies engage
+//! calibrates against AVX2 timings (and a `CBE_SIMD=0` run calibrates
+//! against scalar ones) — the threshold always reflects the kernel the
+//! fan-outs will actually execute.
+//!
 //! Env knobs:
 //! * `CBE_MIN_PARALLEL_WORK=N` — skip probing, use N (clamp still
 //!   applies; useful for benches and deterministic CI timing). An
@@ -144,7 +151,9 @@ fn probe_spawn(cores: usize) -> Duration {
 
 /// Amortized per-element seconds of a warm radix-2 transform. The encode
 /// and train hot loops both run ~2–3 transforms per row, so scale by 2.5
-/// to approximate per-element *row* cost.
+/// to approximate per-element *row* cost. Runs through the dispatched
+/// [`Plan::transform_with`], so it times whichever kernel set (AVX2 or
+/// scalar) [`crate::simd::active`] selects for the real workload.
 fn probe_fft_per_elem() -> f64 {
     let plan = Plan::new(PROBE_N);
     let mut scratch = FftScratch::new();

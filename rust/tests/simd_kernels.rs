@@ -1,0 +1,331 @@
+//! Differential suite for the SIMD kernel layer: every vectorized path
+//! against its scalar oracle, then end-to-end.
+//!
+//! The contract under test is two-tier (ARCHITECTURE.md §SIMD kernels):
+//! integer popcount paths are **bit-exact** by construction, and the
+//! FFT-side kernels are written to preserve the scalar operation order —
+//! so *both* tiers assert `assert_eq!` here, not a tolerance, and the
+//! final packed sign bits are code-identical end-to-end.
+//!
+//! On hosts without AVX2 (or under `--no-default-features`) the gate
+//! never opens, both arms of every A/B run the scalar path, and the
+//! properties hold trivially — CI runs this suite in both build flavors.
+//!
+//! Tests that flip the kernel switch serialize behind one mutex
+//! ([`with_kernel`]): `cbe::simd::set_enabled` is process-global state
+//! and the test harness runs threads in parallel. The explicit
+//! `*_scalar` oracles need no gating, so each A/B holds the lock only
+//! around its dispatched arm.
+
+use cbe::bits::hamming::{
+    hamming_to_all, hamming_to_all_scalar, hamming_words, hamming_words_scalar,
+};
+use cbe::bits::BitCode;
+use cbe::fft::radix2::{fft_inplace_tw, fft_inplace_tw_scalar, make_twiddles, make_twiddles_inv};
+use cbe::fft::realpack::{
+    spectral_corr_accum, spectral_energy_accum, spectral_mul, RealPackPlan, RealPackScratch,
+};
+use cbe::fft::{cmul_in_place, C64, Dir, FftScratch, Plan, Planner, RealFft};
+use cbe::index::{build_index, IndexBackend};
+use cbe::projections::{CirculantProjection, EncodeScratch, ScratchPool};
+use cbe::proptest_lite::forall;
+use cbe::util::rng::Pcg64;
+use std::sync::Mutex;
+
+/// Serializes every test that touches the process-global kernel switch.
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the kernel switch forced to `on`, restoring the default
+/// (enabled) afterwards even if `f` panics. Holds [`GATE`] throughout so
+/// parallel test threads can't observe each other's switch state.
+fn with_kernel<R>(on: bool, f: impl FnOnce() -> R) -> R {
+    let _guard = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            cbe::simd::set_enabled(true);
+        }
+    }
+    let _restore = Restore;
+    cbe::simd::set_enabled(on);
+    f()
+}
+
+fn complex_buf(vals: &[f64]) -> Vec<C64> {
+    vals.chunks_exact(2).map(|p| C64::new(p[0], p[1])).collect()
+}
+
+#[test]
+fn gate_switch_controls_active() {
+    with_kernel(false, || assert!(!cbe::simd::active()));
+    with_kernel(true, || {
+        assert_eq!(cbe::simd::active(), cbe::simd::available());
+        let want = if cbe::simd::available() { "avx2" } else { "scalar" };
+        assert_eq!(cbe::simd::kernel_name(), want);
+    });
+}
+
+#[test]
+fn radix2_butterflies_bit_exact() {
+    forall("radix2 simd == scalar (bit-exact)", 40, |g| {
+        let n = g.pow2_in(2, 2048);
+        let buf = complex_buf(&g.f64_slice(2 * n, -4.0, 4.0));
+        for tw in [make_twiddles(n), make_twiddles_inv(n)] {
+            let mut simd = buf.clone();
+            with_kernel(true, || fft_inplace_tw(&mut simd, &tw));
+            let mut scalar = buf.clone();
+            fft_inplace_tw_scalar(&mut scalar, &tw);
+            assert_eq!(simd, scalar, "n={n}");
+        }
+    });
+}
+
+#[test]
+fn plan_transforms_bit_exact_both_directions() {
+    // Radix-2 and Bluestein sizes, forward and inverse; the Bluestein
+    // chain (chirp pre/post scalar, convolution FFTs dispatched) stays
+    // exact because each dispatched stage is.
+    let mut rng = Pcg64::new(907);
+    for n in [4usize, 8, 33, 64, 100, 256, 777, 1000] {
+        let plan = Plan::new(n);
+        let buf: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        for dir in [Dir::Forward, Dir::Inverse] {
+            let simd = with_kernel(true, || {
+                let mut b = buf.clone();
+                plan.transform_with(&mut b, dir, &mut FftScratch::new());
+                b
+            });
+            let scalar = with_kernel(false, || {
+                let mut b = buf.clone();
+                plan.transform_with(&mut b, dir, &mut FftScratch::new());
+                b
+            });
+            assert_eq!(simd, scalar, "n={n} dir={dir:?}");
+        }
+        // Forward→inverse round-trip: compositions of bit-exact stages
+        // are bit-exact too.
+        let round = |on: bool| {
+            with_kernel(on, || {
+                let mut b = buf.clone();
+                let mut s = FftScratch::new();
+                plan.transform_with(&mut b, Dir::Forward, &mut s);
+                plan.transform_with(&mut b, Dir::Inverse, &mut s);
+                b
+            })
+        };
+        assert_eq!(round(true), round(false), "round-trip n={n}");
+    }
+}
+
+#[test]
+fn realpack_pipeline_bit_exact() {
+    forall("realpack rfft/irfft simd == scalar", 25, |g| {
+        let d = 2 * g.usize_in(1, 200); // even: the packed fast path
+        let planner = Planner::new();
+        let plan = RealPackPlan::new(d, &planner);
+        let x = g.normal_vec(d);
+        let pre = g.sign_vec(d);
+        let run = |on: bool| {
+            with_kernel(on, || {
+                let mut scratch = RealPackScratch::new();
+                let mut half = vec![C64::ZERO; d / 2 + 1];
+                plan.rfft(&x, Some(&pre), &mut half, &mut scratch);
+                let mut back32 = vec![0f32; d];
+                plan.irfft(&half, &mut back32, &mut scratch);
+                let mut back64 = vec![0f64; d];
+                plan.irfft_f64(&half, &mut back64, &mut scratch);
+                (half, back32, back64)
+            })
+        };
+        assert_eq!(run(true), run(false), "d={d}");
+    });
+}
+
+#[test]
+fn realfft_any_length_bit_exact() {
+    // Odd lengths route through the full-complex (possibly Bluestein)
+    // arm; even through the packed arm — both must be kernel-invariant.
+    let mut rng = Pcg64::new(911);
+    for d in [2usize, 7, 16, 21, 64, 100, 135, 777] {
+        let planner = Planner::new();
+        let rf = RealFft::new(d, &planner);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let run = |on: bool| {
+            with_kernel(on, || {
+                let mut scratch = RealPackScratch::new();
+                let mut half = vec![C64::ZERO; rf.half_len()];
+                rf.rfft(&x, &mut half, &mut scratch);
+                let mut back = vec![0f32; d];
+                rf.irfft(&half, &mut back, &mut scratch);
+                (half, back)
+            })
+        };
+        assert_eq!(run(true), run(false), "d={d}");
+    }
+}
+
+#[test]
+fn spectral_kernels_bit_exact() {
+    forall("spectral kernels simd == scalar", 30, |g| {
+        let n = g.usize_in(0, 130);
+        let a = complex_buf(&g.f64_slice(2 * n, -3.0, 3.0));
+        let b = complex_buf(&g.f64_slice(2 * n, -3.0, 3.0));
+        let h0 = g.f64_slice(n, -1.0, 1.0);
+        let g0 = g.f64_slice(n, -1.0, 1.0);
+        let run = |on: bool| {
+            with_kernel(on, || {
+                let mut prod = vec![C64::ZERO; n];
+                spectral_mul(&a, &b, &mut prod);
+                let mut inplace = a.clone();
+                cmul_in_place(&mut inplace, &b);
+                let mut energy = h0.clone();
+                spectral_energy_accum(&a, &mut energy);
+                let mut hacc = h0.clone();
+                let mut gacc = g0.clone();
+                spectral_corr_accum(&a, &b, &mut hacc, &mut gacc);
+                (prod, inplace, energy, hacc, gacc)
+            })
+        };
+        let simd = run(true);
+        let scalar = run(false);
+        assert_eq!(simd, scalar, "n={n}");
+        // The in-place and out-of-place products agree with each other.
+        assert_eq!(simd.0, simd.1, "n={n}");
+    });
+}
+
+#[test]
+fn hamming_kernels_bit_exact() {
+    forall("hamming simd == scalar", 60, |g| {
+        let wpc = g.usize_in(1, 9);
+        // Ragged widths hit the tail-word masking; exact multiples the
+        // no-padding case. Both must agree with the scalar oracle.
+        let bits = if g.bool() {
+            g.usize_in((wpc - 1) * 64 + 1, wpc * 64 - 1)
+        } else {
+            wpc * 64
+        };
+        let n = g.usize_in(0, 33);
+        let db = BitCode::from_signs(&g.sign_vec(n * bits), n, bits);
+        let qc = BitCode::from_signs(&g.sign_vec(bits), 1, bits);
+        let q = qc.code(0);
+        let mut scalar_out = vec![0u32; n];
+        hamming_to_all_scalar(q, &db, &mut scalar_out);
+        with_kernel(true, || {
+            let mut out = vec![0u32; n];
+            hamming_to_all(q, &db, &mut out);
+            assert_eq!(out, scalar_out, "wpc={wpc} bits={bits} n={n}");
+            for i in 0..n {
+                assert_eq!(
+                    hamming_words(q, db.code(i)),
+                    hamming_words_scalar(q, db.code(i)),
+                    "wpc={wpc} bits={bits} row={i}"
+                );
+            }
+        });
+    });
+}
+
+#[test]
+fn padding_bits_stay_zero_under_churn() {
+    // The invariant the popcount kernels count whole words against:
+    // every BitCode writer leaves tail-word padding bits zero.
+    forall("padding stays zero", 15, |g| {
+        let d = 2 * g.usize_in(8, 60);
+        let k = g.usize_in(1, d);
+        let n = g.usize_in(1, 10);
+        let planner = Planner::new();
+        let proj = CirculantProjection::random(d, g.rng(), planner);
+        let flat: Vec<Vec<f32>> = (0..n).map(|_| g.normal_vec(d)).collect();
+        let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+
+        let mut bc = BitCode::from_signs(&g.sign_vec(n * k), n, k);
+        assert!(bc.padding_is_zero(), "after from_signs k={k}");
+        // Dirty the buffer via a smaller reshape, then grow back: reset
+        // must rezero everything including padding.
+        bc.reset(n.div_ceil(2));
+        bc.reset(n);
+        assert!(bc.padding_is_zero(), "after reset churn k={k}");
+
+        let mut scratch = EncodeScratch::new();
+        for (i, row) in rows.iter().enumerate() {
+            let base = i * bc.words_per_code;
+            let window = &mut bc.data[base..base + bc.words_per_code];
+            proj.encode_bits_into(row, k, window, &mut scratch);
+        }
+        assert!(bc.padding_is_zero(), "after encode_bits_into k={k}");
+
+        let mut batch = BitCode::new(n, k);
+        proj.encode_batch_into(&rows, k, &mut batch, &mut ScratchPool::new());
+        assert!(batch.padding_is_zero(), "after encode_batch_into k={k}");
+        assert_eq!(batch.data, bc.data, "batch == per-row d={d} k={k}");
+    });
+}
+
+#[test]
+fn distances_unaffected_by_masked_padding() {
+    // Bit-level oracle: the popcount kernels (either side of the gate)
+    // must count exactly the logical bits — zero padding contributes
+    // nothing regardless of word math.
+    forall("padding-masked distances", 30, |g| {
+        let bits = g.usize_in(1, 300);
+        let n = g.usize_in(1, 12);
+        let db = BitCode::from_signs(&g.sign_vec(n * bits), n, bits);
+        let qc = BitCode::from_signs(&g.sign_vec(bits), 1, bits);
+        assert!(db.padding_is_zero() && qc.padding_is_zero());
+        let bit = |c: &BitCode, i: usize, b: usize| c.code(i)[b / 64] >> (b % 64) & 1;
+        let oracle: Vec<u32> = (0..n)
+            .map(|i| (0..bits).filter(|&b| bit(&db, i, b) != bit(&qc, 0, b)).count() as u32)
+            .collect();
+        for on in [false, true] {
+            with_kernel(on, || {
+                let mut out = vec![0u32; n];
+                hamming_to_all(qc.code(0), &db, &mut out);
+                assert_eq!(out, oracle, "bits={bits} n={n} simd={on}");
+            });
+        }
+    });
+}
+
+#[test]
+fn end_to_end_codes_and_hits_identical() {
+    // The acceptance property: encode → index → search produces
+    // code-identical packed bits and hit-identical results whichever
+    // kernel set runs. d covers the packed-even, pow2, and odd/Bluestein
+    // encode paths.
+    for d in [256usize, 512, 777] {
+        let k = d.min(256);
+        let n = 300;
+        let n_q = 32;
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(4242 + d as u64);
+        let proj = CirculantProjection::random(d, &mut rng, planner);
+        let corpus: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+        // Queries near corpus rows so searches have neighbor structure.
+        let queries: Vec<Vec<f32>> = (0..n_q)
+            .map(|qi| {
+                let base = &corpus[qi * 7 % n];
+                base.iter().map(|v| v + 0.1 * rng.normal() as f32).collect()
+            })
+            .collect();
+        let run = |on: bool| {
+            with_kernel(on, || {
+                let mut pool = ScratchPool::new();
+                let rows: Vec<&[f32]> = corpus.iter().map(|r| r.as_slice()).collect();
+                let mut codes = BitCode::new(n, k);
+                proj.encode_batch_into(&rows, k, &mut codes, &mut pool);
+                let qrows: Vec<&[f32]> = queries.iter().map(|r| r.as_slice()).collect();
+                let mut qcodes = BitCode::new(n_q, k);
+                proj.encode_batch_into(&qrows, k, &mut qcodes, &mut pool);
+                let index = build_index(codes.clone(), &IndexBackend::Mih { m: None });
+                let hits = index.search_batch(&qcodes, 10);
+                (codes, qcodes, hits)
+            })
+        };
+        let (codes_s, qcodes_s, hits_s) = run(true);
+        let (codes_c, qcodes_c, hits_c) = run(false);
+        assert_eq!(codes_s, codes_c, "corpus codes differ at d={d}");
+        assert_eq!(qcodes_s, qcodes_c, "query codes differ at d={d}");
+        assert_eq!(hits_s, hits_c, "search hits differ at d={d}");
+    }
+}
