@@ -81,6 +81,8 @@ fn main() -> anyhow::Result<()> {
                 cache_budget: tf_cache_budget,
                 ..RetrainConfig::default()
             },
+            // 0 → CBE_QUEUE_DEPTH env, else the 1024 default.
+            queue_depth: 0,
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),

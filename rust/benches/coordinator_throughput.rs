@@ -386,6 +386,7 @@ fn bench_service_encode() {
                 },
                 index: IndexBackend::Auto,
                 retrain: cbe::coordinator::RetrainConfig::default(),
+                queue_depth: 0,
             },
             rng.normal_vec(d),
             rng.sign_vec(d),
@@ -441,6 +442,7 @@ fn bench_obs() {
             // whatever the auto router would pick at this corpus size.
             index: IndexBackend::Mih { m: None },
             retrain: cbe::coordinator::RetrainConfig::default(),
+            queue_depth: 0,
         },
         rng.normal_vec(d),
         rng.sign_vec(d),

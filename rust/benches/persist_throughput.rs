@@ -1,0 +1,184 @@
+//! Bench: the persistence tier — snapshot save/load bandwidth, WAL
+//! append and replay rates, and the claim that justifies the tier's
+//! existence: loading a checksummed snapshot must beat re-encoding the
+//! corpus and rebuilding the index from raw vectors. Emits
+//! `BENCH_persist.json`.
+//!
+//! Arms, all over the same n×256-bit MIH index:
+//! * `rebuild` — projection batch-encode of the raw vectors + index
+//!   build (what a process without a snapshot has to do at startup);
+//! * `save` — checksummed snapshot write (temp + fsync + rename);
+//! * `load` — snapshot read, CRC validation, and index reconstruction;
+//! * `wal` — insert appends through the write-ahead log (fsync
+//!   batched to the end, so the rate is the encode/append path, not the
+//!   disk's fsync latency), then a reopen that replays every record.
+//!
+//! Env knobs:
+//! * `CBE_BENCH_MAX_N=10000` shrinks the corpus (CI-sized machines);
+//! * `CBE_BENCH_ENFORCE=1` hard-fails if load is not strictly faster
+//!   than rebuild (left off on shared runners; the recovery smoke turns
+//!   it on because the gap is an order of magnitude, not a few percent).
+
+use cbe::bits::BitCode;
+use cbe::fft::Planner;
+use cbe::index::persist::faults::FaultPlan;
+use cbe::index::persist::{self, PersistOptions, PersistentIndex, SnapshotStamp};
+use cbe::index::{build_index_with_ids, IndexBackend};
+use cbe::projections::{CirculantProjection, ScratchPool};
+use cbe::util::json::Json;
+use cbe::util::rng::Pcg64;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn dir_bytes(dir: &std::path::Path) -> u64 {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter_map(|e| e.metadata().ok())
+                .map(|m| m.len())
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+fn main() {
+    let n = 100_000usize.min(env_usize("CBE_BENCH_MAX_N", 100_000));
+    let d = 256usize;
+    let bits = 256usize;
+    let dir = std::env::temp_dir().join(format!("cbe_bench_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("== persistence tier: snapshot load vs rebuild at n={n}, {bits} bits ==");
+
+    let mut rng = Pcg64::new(0x9e51);
+    let proj = CirculantProjection::random(d, &mut rng, Planner::new());
+    let flat: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+    let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+
+    // Rebuild arm: what startup costs without a snapshot. Warm the plan
+    // caches and thread pool on a small slice first so the measured run
+    // is the steady state, mirroring the encode bench.
+    let mut pool = ScratchPool::new();
+    let warm = 64.min(n);
+    let mut warm_codes = BitCode::new(warm, bits);
+    proj.encode_batch_into(&rows[..warm], bits, &mut warm_codes, &mut pool);
+    let t0 = Instant::now();
+    let mut codes = BitCode::new(n, bits);
+    proj.encode_batch_into(&rows, bits, &mut codes, &mut pool);
+    let index = build_index_with_ids(
+        codes,
+        (0..n as u32).collect(),
+        &IndexBackend::Mih { m: None },
+    );
+    let rebuild_s = t0.elapsed().as_secs_f64();
+    println!(
+        "rebuild: encode+build {n} rows in {:.1} ms ({:.0} rows/s)",
+        rebuild_s * 1e3,
+        n as f64 / rebuild_s
+    );
+
+    // Save arm.
+    let t0 = Instant::now();
+    persist::save(&dir, &index, &SnapshotStamp::none()).expect("save snapshot");
+    let save_s = t0.elapsed().as_secs_f64();
+    let snapshot_bytes = dir_bytes(&dir);
+    let mb = snapshot_bytes as f64 / (1 << 20) as f64;
+    println!(
+        "save:    {mb:.1} MiB in {:.1} ms ({:.0} MiB/s)",
+        save_s * 1e3,
+        mb / save_s
+    );
+
+    // Load arm: read + CRC-validate + reconstruct.
+    let t0 = Instant::now();
+    let (loaded, _report) = persist::load(&dir).expect("load snapshot");
+    let load_s = t0.elapsed().as_secs_f64();
+    assert_eq!(loaded.len(), n, "load dropped rows");
+    let speedup = rebuild_s / load_s;
+    println!(
+        "load:    {mb:.1} MiB in {:.1} ms ({:.0} MiB/s) — {speedup:.1}x faster than rebuild",
+        load_s * 1e3,
+        mb / load_s
+    );
+    if load_s >= rebuild_s {
+        println!(
+            "WARNING: loading the snapshot was not faster than rebuilding \
+             (load {:.1} ms vs rebuild {:.1} ms)",
+            load_s * 1e3,
+            rebuild_s * 1e3
+        );
+        let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
+        assert!(!enforce, "snapshot load regressed vs rebuild (CBE_BENCH_ENFORCE=1)");
+    }
+
+    // WAL arm: append churn through the log (fsync deferred to the final
+    // flush so the measured rate is the append path), then replay it all
+    // on a reopen.
+    let wal_n = 20_000usize.min(n.max(1));
+    let opts = PersistOptions {
+        sync_on_append: false,
+        compact_threshold: 0,
+        faults: FaultPlan::none(),
+    };
+    let (mut pidx, _) = PersistentIndex::open(&dir, opts.clone()).expect("open for churn");
+    let mut wal_rng = Pcg64::new(0x3a1);
+    let churn: Vec<[u64; 4]> = (0..wal_n)
+        .map(|_| {
+            [
+                wal_rng.next_u64(),
+                wal_rng.next_u64(),
+                wal_rng.next_u64(),
+                wal_rng.next_u64(),
+            ]
+        })
+        .collect();
+    let t0 = Instant::now();
+    for (i, code) in churn.iter().enumerate() {
+        pidx.insert((n + i) as u32, code).expect("wal insert");
+    }
+    pidx.flush().expect("wal flush");
+    let append_s = t0.elapsed().as_secs_f64();
+    drop(pidx);
+    println!(
+        "wal:     {wal_n} appends in {:.1} ms ({:.0} appends/s, one deferred fsync)",
+        append_s * 1e3,
+        wal_n as f64 / append_s
+    );
+    let t0 = Instant::now();
+    let (replayed, report) = PersistentIndex::open(&dir, opts).expect("replay wal");
+    let replay_s = t0.elapsed().as_secs_f64();
+    assert_eq!(report.wal_records_replayed, wal_n as u64, "replay lost records");
+    assert_eq!(replayed.len(), n + wal_n);
+    drop(replayed);
+    println!(
+        "replay:  {wal_n} records in {:.1} ms ({:.0} records/s, snapshot load included)",
+        replay_s * 1e3,
+        wal_n as f64 / replay_s
+    );
+
+    let doc = Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("bits", Json::num(bits as f64)),
+        ("backend", Json::str(index.backend_name())),
+        ("snapshot_bytes", Json::num(snapshot_bytes as f64)),
+        ("rebuild_s", Json::num(rebuild_s)),
+        ("save_s", Json::num(save_s)),
+        ("save_mib_s", Json::num(mb / save_s)),
+        ("load_s", Json::num(load_s)),
+        ("load_mib_s", Json::num(mb / load_s)),
+        ("load_speedup_vs_rebuild", Json::num(speedup)),
+        ("wal_appends", Json::num(wal_n as f64)),
+        ("wal_append_s", Json::num(append_s)),
+        ("wal_appends_per_s", Json::num(wal_n as f64 / append_s)),
+        ("wal_replay_s", Json::num(replay_s)),
+        ("wal_replays_per_s", Json::num(wal_n as f64 / replay_s)),
+    ]);
+    std::fs::write("BENCH_persist.json", format!("{doc}\n")).expect("write BENCH_persist.json");
+    println!("wrote BENCH_persist.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}

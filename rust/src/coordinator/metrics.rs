@@ -22,6 +22,9 @@ pub struct Metrics {
     pub retrains: AtomicU64,
     /// Searches refused with [`crate::error::CbeError::StaleIndex`].
     pub stale_rejections: AtomicU64,
+    /// Requests rejected at admission with
+    /// [`crate::error::CbeError::Overloaded`] (bounded queue full).
+    pub overloads: AtomicU64,
     latency_us: Histogram,
 }
 
@@ -47,6 +50,10 @@ impl Metrics {
         self.stale_rejections.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_overload(&self) {
+        self.overloads.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn request_count(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -61,6 +68,10 @@ impl Metrics {
 
     pub fn stale_rejection_count(&self) -> u64 {
         self.stale_rejections.load(Ordering::Relaxed)
+    }
+
+    pub fn overload_count(&self) -> u64 {
+        self.overloads.load(Ordering::Relaxed)
     }
 
     /// The full end-to-end request-latency histogram (µs buckets).
@@ -111,6 +122,7 @@ impl Metrics {
             batch_occupancy: self.batch_occupancy(capacity),
             retrains: self.retrain_count(),
             stale_rejections: self.stale_rejection_count(),
+            overloads: self.overload_count(),
             latency: StageStats::from_histogram(&self.latency_us),
             ..Default::default()
         }
@@ -146,11 +158,16 @@ mod tests {
         m.record_retrain();
         m.record_stale_rejection();
         m.record_stale_rejection();
+        m.record_overload();
+        m.record_overload();
+        m.record_overload();
         assert_eq!(m.retrain_count(), 1);
         assert_eq!(m.stale_rejection_count(), 2);
+        assert_eq!(m.overload_count(), 3);
         let snap = m.snapshot(4, 3);
         assert_eq!(snap.retrains, 1);
         assert_eq!(snap.stale_rejections, 2);
+        assert_eq!(snap.overloads, 3);
         assert_eq!(snap.model_version, 3);
     }
 

@@ -16,6 +16,15 @@
 //! [`EmbeddingService::stats`] returns a structured
 //! [`StatsSnapshot`] over the control plane.
 //!
+//! Admission is bounded: the request channel holds at most
+//! [`ServiceConfig::queue_depth`] waiting requests, and a submission
+//! against a full queue fails fast with [`CbeError::Overloaded`]
+//! (counted in `StatsSnapshot::overloads`) instead of growing the queue
+//! without limit. Indexes persist crash-safely through
+//! [`EmbeddingService::save_index`] / [`EmbeddingService::load_index`],
+//! which stamp and verify model identity — see [`crate::index::persist`]
+//! for the snapshot/WAL/recovery contract.
+//!
 //! # Online retraining
 //!
 //! The service can re-learn its circulant model without a restart:
@@ -56,6 +65,7 @@ use crate::bits::BitCode;
 use crate::encoders::CbeTrainer;
 use crate::error::CbeError;
 use crate::fft::Planner;
+use crate::index::persist::{self, LoadReport, SnapshotStamp};
 use crate::index::{build_index, AnyIndex, IndexAny, IndexBackend};
 use crate::linalg::Mat;
 use crate::obs::{self, Stage, StatsSnapshot};
@@ -125,6 +135,26 @@ pub struct ServiceConfig {
     /// Online-retraining knobs (the CLI exposes `--retrain*`, the
     /// embedding_server example `CBE_RETRAIN`).
     pub retrain: RetrainConfig,
+    /// Admission-control bound on the request queue. When this many
+    /// requests are already waiting, [`EmbeddingService::encode_async`]
+    /// fails fast with [`CbeError::Overloaded`] instead of queueing
+    /// without limit (unbounded queues turn overload into latency
+    /// collapse and OOM). 0 = read `CBE_QUEUE_DEPTH`, defaulting to
+    /// 1024.
+    pub queue_depth: usize,
+}
+
+/// Resolve the configured queue depth: explicit config wins, then the
+/// `CBE_QUEUE_DEPTH` environment variable, then the 1024 default.
+fn resolve_queue_depth(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    std::env::var("CBE_QUEUE_DEPTH")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(1024)
 }
 
 /// Seeded reservoir sample (Algorithm R) over the rows streamed through
@@ -167,10 +197,12 @@ impl Reservoir {
 /// bulk-index with [`EmbeddingService::build_index`], re-learn the model
 /// with [`EmbeddingService::retrain`], stop by dropping.
 pub struct EmbeddingService {
-    tx: mpsc::Sender<EncodeRequest>,
+    tx: mpsc::SyncSender<EncodeRequest>,
     ctl: mpsc::Sender<ControlRequest>,
     pub metrics: Arc<Metrics>,
     cfg: ServiceConfig,
+    /// Resolved admission bound (see [`ServiceConfig::queue_depth`]).
+    queue_depth: usize,
     /// The hot-swappable model slot, shared with the worker thread, the
     /// retrain threads and any caller that wants zero-copy bulk encoding.
     registry: Arc<ModelRegistry>,
@@ -218,7 +250,12 @@ impl EmbeddingService {
             })
             .unwrap_or(cfg.batcher.max_batch);
 
-        let (tx, rx) = mpsc::channel::<EncodeRequest>();
+        // Bounded request channel: the queue (plus at most one forming
+        // batch in the worker) is the entire in-flight set, so memory
+        // under overload is `queue_depth` requests, not "whatever the
+        // clients managed to pour in".
+        let queue_depth = resolve_queue_depth(cfg.queue_depth);
+        let (tx, rx) = mpsc::sync_channel::<EncodeRequest>(queue_depth);
         let (ctl, ctl_rx) = mpsc::channel::<ControlRequest>();
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
@@ -247,6 +284,7 @@ impl EmbeddingService {
             ctl,
             metrics,
             cfg,
+            queue_depth,
             registry,
             sample,
             artifact_batch,
@@ -278,24 +316,47 @@ impl EmbeddingService {
         self.sample.lock().expect("sample lock poisoned").rows.len()
     }
 
-    /// Fire-and-forget submit; returns the response receiver.
-    pub fn encode_async(&self, features: Vec<f32>) -> Result<mpsc::Receiver<EncodeResponse>> {
+    /// The configured admission bound (requests beyond it are rejected
+    /// with [`CbeError::Overloaded`]).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Fire-and-forget submit; returns the response receiver. Fails
+    /// typed: [`CbeError::Overloaded`] when the bounded request queue is
+    /// full (back off and retry — the rejection is also counted in
+    /// [`Metrics::record_overload`] / `StatsSnapshot::overloads`),
+    /// [`CbeError::Service`] for dimension mismatches or a stopped
+    /// service.
+    pub fn encode_async(&self, features: Vec<f32>) -> Result<mpsc::Receiver<EncodeResponse>, CbeError> {
         if features.len() != self.cfg.d {
-            return Err(anyhow!(
+            return Err(CbeError::Service(format!(
                 "feature dim {} != service dim {}",
                 features.len(),
                 self.cfg.d
-            ));
+            )));
         }
         let (req, rx) = EncodeRequest::new(features, self.cfg.bits);
-        self.tx.send(req).map_err(|_| anyhow!("service stopped"))?;
-        Ok(rx)
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.record_overload();
+                Err(CbeError::Overloaded {
+                    depth: self.queue_depth,
+                })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(CbeError::Service("service stopped".to_string()))
+            }
+        }
     }
 
-    /// Blocking encode.
-    pub fn encode(&self, features: Vec<f32>) -> Result<EncodeResponse> {
+    /// Blocking encode. Same typed failures as
+    /// [`EmbeddingService::encode_async`].
+    pub fn encode(&self, features: Vec<f32>) -> Result<EncodeResponse, CbeError> {
         let rx = self.encode_async(features)?;
-        rx.recv().map_err(|_| anyhow!("service dropped reply"))
+        rx.recv()
+            .map_err(|_| CbeError::Service("service dropped reply".to_string()))
     }
 
     /// Request a retrain: train CBE-opt on the corpus reservoir in a
@@ -463,12 +524,72 @@ impl EmbeddingService {
             Ok(())
         };
         guard()?;
-        let resp = self
-            .encode(query)
-            .map_err(|e| CbeError::Service(e.to_string()))?;
+        // `encode` already fails typed (Overloaded propagates to the
+        // caller as itself, not stringified).
+        let resp = self.encode(query)?;
         guard()?;
         let qc = BitCode::from_signs(&resp.signs, 1, self.cfg.bits);
         Ok(index.search(qc.code(0), topk))
+    }
+
+    /// Content fingerprint of the live projection's parameters. Unlike
+    /// [`EmbeddingService::model_version`] (a per-process counter), the
+    /// fingerprint survives restarts: two processes that trained the same
+    /// deterministic model agree on it, which is what lets
+    /// [`EmbeddingService::load_index`] accept a snapshot from an earlier
+    /// run of the same model and reject one from a different model.
+    pub fn model_fingerprint(&self) -> u64 {
+        let proj = self.registry.current();
+        persist::model_fingerprint(&proj.r, &proj.signs)
+    }
+
+    /// Persist `index` into `dir` as a checksummed snapshot (plus a
+    /// fresh, empty WAL), stamped with the live model's version and
+    /// parameter fingerprint so a later load can verify model identity.
+    /// Atomic: a crash mid-save leaves the directory's previous contents
+    /// intact. A versioned index whose stamp trails the live model is
+    /// refused with [`CbeError::StaleIndex`] — persisting it would pin
+    /// retired codes under a current-model fingerprint.
+    pub fn save_index(&self, dir: &Path, index: &IndexAny) -> Result<(), CbeError> {
+        let current = self.model_version();
+        let stamp = match index.model_version() {
+            Some(built) if built != current => {
+                return Err(CbeError::StaleIndex { built, current });
+            }
+            Some(built) => SnapshotStamp {
+                model_version: Some(built),
+                fingerprint: self.model_fingerprint(),
+            },
+            // Unversioned (built outside the service): persist without a
+            // model stamp; staleness stays the caller's contract.
+            None => SnapshotStamp::none(),
+        };
+        persist::save(dir, index, &stamp)
+    }
+
+    /// Load (and if necessary recover) the index persisted in `dir`,
+    /// verifying its model stamp: a fingerprinted snapshot whose
+    /// parameters differ from the live model is refused with
+    /// [`CbeError::StaleIndex`] (counted like any stale rejection); a
+    /// matching one is re-stamped at the live registry version so
+    /// [`EmbeddingService::search`] accepts it even though version
+    /// counters restart with the process. See
+    /// [`crate::index::persist`] for the recovery classification in the
+    /// returned [`LoadReport`].
+    pub fn load_index(&self, dir: &Path) -> Result<(IndexAny, LoadReport), CbeError> {
+        let (index, report) = persist::load(dir)?;
+        if report.stamp.fingerprint == 0 {
+            return Ok((index, report));
+        }
+        let current = self.model_version();
+        if report.stamp.fingerprint != self.model_fingerprint() {
+            self.metrics.record_stale_rejection();
+            return Err(CbeError::StaleIndex {
+                built: report.stamp.model_version.unwrap_or(0),
+                current,
+            });
+        }
+        Ok((index.with_model_version(current), report))
     }
 }
 

@@ -23,6 +23,19 @@ pub enum CbeError {
     /// it — rebuild the index with `EmbeddingService::build_index` and
     /// retry.
     StaleIndex { built: u64, current: u64 },
+    /// An on-disk snapshot (or its WAL) failed validation on load:
+    /// wrong magic, unsupported format version, a section CRC mismatch,
+    /// truncation inside the snapshot body, or a WAL that cannot be
+    /// paired with its snapshot generation. The `reason` names the exact
+    /// check that failed. Recovery never guesses: a snapshot that fails
+    /// any check is rejected whole rather than partially applied.
+    CorruptSnapshot { reason: String },
+    /// The service's bounded request queue was full: the caller was
+    /// rejected at admission instead of growing the queue without limit.
+    /// `depth` is the configured queue capacity (`ServiceConfig::
+    /// queue_depth` / `CBE_QUEUE_DEPTH`). Back off and retry; rejections
+    /// are counted in `StatsSnapshot::overloads`.
+    Overloaded { depth: usize },
     /// Any other serving failure (encode path, service stopped, …),
     /// carried as its display string.
     Service(String),
@@ -35,6 +48,13 @@ impl fmt::Display for CbeError {
                 f,
                 "stale index: built at model version {built}, but the service is at \
                  version {current} — rebuild the index after a retrain"
+            ),
+            CbeError::CorruptSnapshot { reason } => {
+                write!(f, "corrupt snapshot: {reason}")
+            }
+            CbeError::Overloaded { depth } => write!(
+                f,
+                "service overloaded: request queue full at depth {depth} — back off and retry"
             ),
             CbeError::Service(msg) => write!(f, "{msg}"),
         }
@@ -53,6 +73,24 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("stale index"), "{s}");
         assert!(s.contains('2') && s.contains('5'), "{s}");
+    }
+
+    #[test]
+    fn corrupt_snapshot_display_carries_the_reason() {
+        let e = CbeError::CorruptSnapshot {
+            reason: "section 2 crc mismatch".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("corrupt snapshot"), "{s}");
+        assert!(s.contains("section 2 crc mismatch"), "{s}");
+    }
+
+    #[test]
+    fn overloaded_display_names_the_depth() {
+        let e = CbeError::Overloaded { depth: 256 };
+        let s = e.to_string();
+        assert!(s.contains("overloaded"), "{s}");
+        assert!(s.contains("256"), "{s}");
     }
 
     #[test]

@@ -323,6 +323,44 @@ impl MihIndex {
         self.codes.n
     }
 
+    /// Raw storage views for the snapshot writer: packed codes, external
+    /// ids and the alive mask (all indexed by storage slot, tombstones
+    /// included), plus the live tables. The writer compacts tombstones
+    /// out on its way to disk, so dead slots never reach a snapshot.
+    pub(crate) fn storage_parts(&self) -> (&BitCode, &[u32], &[bool], &[SubstringTable]) {
+        (&self.codes, &self.ids, &self.alive, &self.tables)
+    }
+
+    /// Reassemble an index from snapshot parts. Every row is live (the
+    /// writer compacted tombstones out), ids are unique and tables were
+    /// rebuilt over the same slot numbering — all pre-validated by the
+    /// snapshot loader, which is the only caller.
+    pub(crate) fn from_parts(
+        codes: BitCode,
+        ids: Vec<u32>,
+        tables: Vec<SubstringTable>,
+        scheme: SubstringScheme,
+    ) -> MihIndex {
+        debug_assert_eq!(codes.n, ids.len());
+        let mut slot_of = HashMap::with_capacity_and_hasher(codes.n, BuildFastHash::default());
+        for (slot, &id) in ids.iter().enumerate() {
+            let prev = slot_of.insert(id, slot as u32);
+            debug_assert!(prev.is_none(), "duplicate id {id}");
+        }
+        let live = codes.n;
+        let alive = vec![true; codes.n];
+        MihIndex {
+            codes,
+            ids,
+            alive,
+            live,
+            slot_of,
+            tables,
+            scheme,
+            scratch: ScratchPool::default(),
+        }
+    }
+
     /// Rebuild storage and tables over the live rows only, preserving the
     /// substring scheme (the sampling permutation is seed-deterministic,
     /// so a rebuilt index buckets exactly like the original).

@@ -61,10 +61,12 @@
 //! talks [`AnyIndex`].
 
 pub mod mih;
+pub mod persist;
 pub mod sharded;
 pub mod substring;
 
 pub use mih::{MihIndex, SubstringScheme};
+pub use persist::{LoadReport, PersistOptions, PersistentIndex, RecoveryState, SnapshotStamp};
 pub use sharded::ShardedIndex;
 
 use crate::bits::bitcode::BitCode;
@@ -385,6 +387,17 @@ impl IndexAny {
             IndexKind::Linear(_) => "linear",
             IndexKind::Mih(i) => AnyIndex::backend_name(i),
             IndexKind::Sharded(_) => "sharded-mih",
+        }
+    }
+
+    /// Whether an external id is currently indexed. O(1)-ish on the MIH
+    /// backends; an O(n) id scan on the linear backend (used by WAL
+    /// replay validation, never on the query path).
+    pub fn contains(&self, id: u32) -> bool {
+        match &self.kind {
+            IndexKind::Linear(i) => i.ids.contains(&id),
+            IndexKind::Mih(i) => i.contains(id),
+            IndexKind::Sharded(i) => i.contains(id),
         }
     }
 

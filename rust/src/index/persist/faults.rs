@@ -1,0 +1,286 @@
+//! Deterministic fault injection for the persistence tier.
+//!
+//! Every durability-relevant syscall the snapshot and WAL writers make —
+//! each `write_all`, each `fsync`, each `rename`, each directory fsync —
+//! is one *op* on a shared [`FaultClock`]. A [`FaultPlan`] names an op
+//! index at which the world ends: the op either fails with an injected
+//! `io::Error` (optionally after landing a torn prefix of the write), or
+//! aborts the whole process (`kill -9` semantics for the CI smoke test).
+//! Because the op sequence of a given save/append is deterministic,
+//! tests can dry-run once to count ops, then replay the exact same
+//! workload crashing at every boundary `0..n` — the recovery matrix.
+//!
+//! The clock is plumbed by `&mut` through the writers rather than
+//! stored in a thread-local so concurrent indexes don't interleave op
+//! counts, and so the zero-fault fast path is one branch per syscall.
+//!
+//! A plan can also come from the environment (`CBE_FAULT=crash:<n>` or
+//! `CBE_FAULT=abort:<n>`), which is how the CI recovery smoke kills a
+//! real `cbe save-index` process mid-snapshot from outside.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// What to do to the write stream, and when. The default plan does
+/// nothing and costs one branch + one increment per syscall.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Op index at which to inject the failure (None = never).
+    pub crash_at: Option<u64>,
+    /// If the crashing op is a write, how many bytes still reach the
+    /// file before the failure — models a torn sector.
+    pub torn_bytes: usize,
+    /// `(op, bit)`: flip one bit of that op's write buffer (bit index
+    /// taken modulo the buffer length). The op itself succeeds — this
+    /// models silent media corruption that checksums must catch.
+    pub flip: Option<(u64, u64)>,
+    /// Crash via `std::process::abort()` instead of an `io::Error` —
+    /// nothing unwinds, no `Drop` runs; the real `kill -9`.
+    pub abort: bool,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Fail op `op` cleanly (no bytes of it land).
+    pub fn crash_at(op: u64) -> FaultPlan {
+        FaultPlan {
+            crash_at: Some(op),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Fail op `op` after writing only its first `bytes` bytes.
+    pub fn torn_at(op: u64, bytes: usize) -> FaultPlan {
+        FaultPlan {
+            crash_at: Some(op),
+            torn_bytes: bytes,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Flip bit `bit` of op `op`'s buffer and keep going.
+    pub fn flip_at(op: u64, bit: u64) -> FaultPlan {
+        FaultPlan {
+            flip: Some((op, bit)),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Parse `CBE_FAULT` (`crash:<n>` | `abort:<n>` | `torn:<n>:<bytes>`).
+    /// Unset or unparsable → no faults; a typo must not brick a writer.
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("CBE_FAULT") {
+            Ok(spec) => FaultPlan::parse(&spec).unwrap_or_default(),
+            Err(_) => FaultPlan::default(),
+        }
+    }
+
+    fn parse(spec: &str) -> Option<FaultPlan> {
+        let mut parts = spec.split(':');
+        let kind = parts.next()?;
+        let op: u64 = parts.next()?.parse().ok()?;
+        match kind {
+            "crash" => Some(FaultPlan::crash_at(op)),
+            "abort" => Some(FaultPlan {
+                abort: true,
+                ..FaultPlan::crash_at(op)
+            }),
+            "torn" => {
+                let bytes: usize = parts.next()?.parse().ok()?;
+                Some(FaultPlan::torn_at(op, bytes))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.crash_at.is_none() && self.flip.is_none()
+    }
+}
+
+/// What the current op should do, as decided by the clock.
+pub(crate) enum Step {
+    Proceed,
+    /// Proceed, but flip this bit of the write buffer first.
+    Flip(u64),
+    /// Fail; if a write, land only `torn` bytes first.
+    Crash { torn: usize },
+}
+
+/// Op counter + plan. One clock per logical writer (a `PersistentIndex`
+/// owns one for its whole life, so op indices span snapshot writes, WAL
+/// appends, and checkpoints in order).
+#[derive(Debug)]
+pub struct FaultClock {
+    plan: FaultPlan,
+    ops: u64,
+    /// Once a fault has fired the writer is dead: every later op fails
+    /// too, so a `Drop`-time flush can't resurrect a crashed file.
+    dead: bool,
+}
+
+impl FaultClock {
+    pub fn new(plan: FaultPlan) -> FaultClock {
+        FaultClock {
+            plan,
+            ops: 0,
+            dead: false,
+        }
+    }
+
+    pub fn none() -> FaultClock {
+        FaultClock::new(FaultPlan::none())
+    }
+
+    pub fn from_env() -> FaultClock {
+        FaultClock::new(FaultPlan::from_env())
+    }
+
+    /// Ops consumed so far (a completed dry run's count bounds the crash
+    /// points the recovery-matrix test needs to cover).
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    pub(crate) fn step(&mut self) -> Step {
+        if self.dead {
+            return Step::Crash { torn: 0 };
+        }
+        let op = self.ops;
+        self.ops += 1;
+        if self.plan.crash_at == Some(op) {
+            if self.plan.abort {
+                eprintln!("CBE_FAULT: aborting at persistence op {op}");
+                std::process::abort();
+            }
+            self.dead = true;
+            return Step::Crash {
+                torn: self.plan.torn_bytes,
+            };
+        }
+        if let Some((fop, bit)) = self.plan.flip {
+            if fop == op {
+                return Step::Flip(bit);
+            }
+        }
+        Step::Proceed
+    }
+}
+
+pub(crate) fn injected_err(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::Other, format!("injected fault during {what}"))
+}
+
+/// Fault-aware file writer: each `write_all`/`sync` is one clock op.
+pub(crate) struct Sink<'a> {
+    pub file: &'a mut File,
+    pub clock: &'a mut FaultClock,
+}
+
+impl Sink<'_> {
+    pub fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        match self.clock.step() {
+            Step::Proceed => self.file.write_all(buf),
+            Step::Flip(bit) => {
+                let mut flipped = buf.to_vec();
+                if !flipped.is_empty() {
+                    let b = (bit as usize) % (flipped.len() * 8);
+                    flipped[b / 8] ^= 1 << (b % 8);
+                }
+                self.file.write_all(&flipped)
+            }
+            Step::Crash { torn } => {
+                let torn = torn.min(buf.len());
+                if torn > 0 {
+                    self.file.write_all(&buf[..torn])?;
+                    // The torn prefix must be *durable* to model the
+                    // worst case: sector hit the platter, then power cut.
+                    let _ = self.file.sync_all();
+                }
+                Err(injected_err("write"))
+            }
+        }
+    }
+
+    pub fn sync(&mut self) -> io::Result<()> {
+        match self.clock.step() {
+            Step::Crash { .. } => Err(injected_err("fsync")),
+            _ => self.file.sync_all(),
+        }
+    }
+}
+
+/// Fault-aware atomic rename (one op).
+pub(crate) fn rename(clock: &mut FaultClock, from: &Path, to: &Path) -> io::Result<()> {
+    match clock.step() {
+        Step::Crash { .. } => Err(injected_err("rename")),
+        _ => fs::rename(from, to),
+    }
+}
+
+/// Fault-aware directory fsync (one op) — makes the rename itself
+/// durable. Best-effort on filesystems that refuse to open a directory;
+/// the injected crash is still honored so op counts stay deterministic.
+pub(crate) fn sync_dir(clock: &mut FaultClock, dir: &Path) -> io::Result<()> {
+    match clock.step() {
+        Step::Crash { .. } => Err(injected_err("directory fsync")),
+        _ => {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_env_grammar() {
+        assert_eq!(FaultPlan::parse("crash:7"), Some(FaultPlan::crash_at(7)));
+        assert_eq!(
+            FaultPlan::parse("torn:3:12"),
+            Some(FaultPlan::torn_at(3, 12))
+        );
+        let abort = FaultPlan::parse("abort:2").unwrap();
+        assert!(abort.abort);
+        assert_eq!(abort.crash_at, Some(2));
+        assert_eq!(FaultPlan::parse("nonsense"), None);
+        assert_eq!(FaultPlan::parse("crash:x"), None);
+    }
+
+    #[test]
+    fn clock_crashes_exactly_once_then_stays_dead() {
+        let mut clock = FaultClock::new(FaultPlan::crash_at(2));
+        assert!(matches!(clock.step(), Step::Proceed));
+        assert!(matches!(clock.step(), Step::Proceed));
+        assert!(matches!(clock.step(), Step::Crash { torn: 0 }));
+        // Dead forever after — Drop-time flushes can't write post-crash.
+        assert!(matches!(clock.step(), Step::Crash { torn: 0 }));
+        assert!(matches!(clock.step(), Step::Crash { torn: 0 }));
+    }
+
+    #[test]
+    fn sink_lands_the_torn_prefix() {
+        let dir = std::env::temp_dir().join(format!("cbe_faults_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.bin");
+        let mut f = File::create(&path).unwrap();
+        let mut clock = FaultClock::new(FaultPlan::torn_at(0, 3));
+        let mut sink = Sink {
+            file: &mut f,
+            clock: &mut clock,
+        };
+        let err = sink.write_all(b"abcdef").unwrap_err();
+        assert!(err.to_string().contains("injected"));
+        drop(f);
+        assert_eq!(std::fs::read(&path).unwrap(), b"abc");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

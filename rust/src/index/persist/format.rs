@@ -1,0 +1,132 @@
+//! On-disk encoding primitives shared by the snapshot and WAL writers:
+//! a table-driven CRC-32 (IEEE, reflected — the zlib/PNG polynomial) and
+//! little-endian put/take helpers with typed bounds errors.
+//!
+//! Everything persisted by this tier goes through these helpers so the
+//! byte layout has exactly one definition: fixed-width little-endian
+//! integers, no varints, no alignment-dependent structs. A reader error
+//! is a `String` reason; callers wrap it in
+//! [`crate::error::CbeError::CorruptSnapshot`] so a damaged file can
+//! never surface as a panic or an index silently missing rows.
+
+/// CRC-32 lookup table for the reflected IEEE polynomial `0xEDB88320`,
+/// built at compile time.
+static CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Standard CRC-32 (matches zlib's `crc32`): init `!0`, reflected
+/// table updates, final xor `!0`.
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over a byte slice. Every `take_*`
+/// names what it was reading so corruption reports say *which* field was
+/// truncated, not just "unexpected EOF".
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, at: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.at == self.buf.len()
+    }
+
+    pub fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated reading {what}: need {n} bytes at offset {}, have {}",
+                self.at,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn take_u32(&mut self, what: &str) -> Result<u32, String> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes(s.try_into().expect("4-byte slice")))
+    }
+
+    pub fn take_u64(&mut self, what: &str) -> Result<u64, String> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes(s.try_into().expect("8-byte slice")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_standard_check_value() {
+        // The universal CRC-32 test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_detects_a_single_bit_flip() {
+        let mut buf: Vec<u8> = (0u8..=255).collect();
+        let clean = crc32(&buf);
+        buf[100] ^= 0x10;
+        assert_ne!(crc32(&buf), clean);
+    }
+
+    #[test]
+    fn reader_roundtrips_and_names_truncated_fields() {
+        let mut buf = Vec::new();
+        buf.push(7u8);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.take_u8("tag").unwrap(), 7);
+        assert_eq!(r.take_u32("len").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_u64("gen").unwrap(), u64::MAX - 1);
+        assert!(r.is_done());
+        let err = r.take_u32("trailer").unwrap_err();
+        assert!(err.contains("trailer"), "error names the field: {err}");
+    }
+}

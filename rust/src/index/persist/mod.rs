@@ -1,0 +1,621 @@
+//! Crash-safe persistence for the index tier: checksummed snapshots, a
+//! write-ahead log for churn, and recovery that classifies every load.
+//!
+//! An index directory holds two files:
+//!
+//! ```text
+//! <dir>/current.snap   sectioned snapshot (see [`snapshot`] grammar)
+//! <dir>/wal.log        churn since that snapshot (see [`wal`] grammar)
+//! ```
+//!
+//! Both are replaced atomically (write to `snap.tmp`/`wal.tmp`, fsync,
+//! rename, fsync the directory) and paired by a *generation* number: a
+//! checkpoint writes snapshot generation `g+1`, then a fresh WAL stamped
+//! `g+1`. Whatever instant a crash lands on, the directory decodes to
+//! exactly one of:
+//!
+//! * [`RecoveryState::Loaded`] — snapshot plus a cleanly-ending WAL
+//!   (a WAL generation *behind* the snapshot is a checkpoint that died
+//!   between the two renames; its records are already folded into the
+//!   snapshot, so it is ignored and reset);
+//! * [`RecoveryState::LoadedWithTruncatedWalTail`] — the WAL's last
+//!   record was torn mid-write; the tail is dropped, *reported*, and
+//!   physically truncated so the log is clean again;
+//! * a typed [`CbeError::CorruptSnapshot`] — anything that cannot be
+//!   explained by tearing the tail of an append-only file (bad magic or
+//!   CRC, structural invariant failures, a WAL generation *ahead* of its
+//!   snapshot). Never a panic, never silently wrong neighbors.
+//!
+//! Durability contract: [`PersistentIndex::insert`]/[`remove`] append to
+//! the WAL (fsync'd by default) *before* touching the in-memory index,
+//! so an acknowledged operation survives any later crash, and a crashed
+//! operation is at worst a reported torn tail. After
+//! [`PersistOptions::compact_threshold`] appends the log is folded into
+//! a fresh snapshot automatically.
+//!
+//! Every syscall in the write paths is a crash point on a deterministic
+//! [`faults::FaultClock`], which is how the recovery-matrix tests (and
+//! the CI smoke's `CBE_FAULT=abort:<n>`) prove the claims above by
+//! dying at every single boundary.
+
+pub mod faults;
+mod format;
+mod snapshot;
+mod wal;
+
+use crate::error::CbeError;
+use crate::index::IndexAny;
+use crate::index::substring::splitmix64;
+use crate::obs::{self, Counter, Stage};
+use faults::{FaultClock, FaultPlan, Sink};
+use snapshot::{SNAP_FILE, SNAP_TMP};
+use std::fs::{self, File};
+use std::io;
+use std::path::{Path, PathBuf};
+use wal::{Replay, WalOp, WalWriter};
+
+/// Model-identity stamp carried inside a snapshot so a load can refuse
+/// codes that were encoded by a different projection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotStamp {
+    /// Registry version the index was built at (None = unversioned).
+    pub model_version: Option<u64>,
+    /// Content fingerprint of the projection parameters, from
+    /// [`model_fingerprint`] (0 = not stamped). Unlike the version
+    /// counter, this survives process restarts: two runs that train the
+    /// same deterministic model agree on it.
+    pub fingerprint: u64,
+}
+
+impl SnapshotStamp {
+    pub fn none() -> SnapshotStamp {
+        SnapshotStamp {
+            model_version: None,
+            fingerprint: 0,
+        }
+    }
+}
+
+/// Knobs for a [`PersistentIndex`].
+#[derive(Clone, Debug)]
+pub struct PersistOptions {
+    /// Fsync the WAL after every append (default). Turning this off
+    /// trades the durability of the last few acknowledged operations
+    /// for append throughput; crash consistency is unaffected.
+    pub sync_on_append: bool,
+    /// Fold the WAL into a fresh snapshot once it holds this many
+    /// records (0 = never checkpoint automatically).
+    pub compact_threshold: u64,
+    /// Deterministic fault plan for the writers (tests/CI; the default
+    /// comes from `CBE_FAULT`, which is empty in production).
+    pub faults: FaultPlan,
+}
+
+impl Default for PersistOptions {
+    fn default() -> PersistOptions {
+        PersistOptions {
+            sync_on_append: true,
+            compact_threshold: 8192,
+            faults: FaultPlan::from_env(),
+        }
+    }
+}
+
+/// How a successful load classified the directory it found.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RecoveryState {
+    /// Snapshot (plus a cleanly-ending or absent WAL) loaded verbatim.
+    Loaded,
+    /// The WAL's last record was torn by a crash mid-append; `dropped_bytes`
+    /// of tail were discarded and the file truncated back to its last
+    /// valid record. Everything before the tear was replayed.
+    LoadedWithTruncatedWalTail { dropped_bytes: u64 },
+}
+
+/// What a load found and did.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub state: RecoveryState,
+    /// Snapshot generation the directory was at.
+    pub generation: u64,
+    /// WAL records folded into the loaded index.
+    pub wal_records_replayed: u64,
+    /// Model identity the snapshot was saved under.
+    pub stamp: SnapshotStamp,
+}
+
+/// Content fingerprint of a circulant projection's parameters (`r` and
+/// the sign flips), for cross-process staleness detection: a snapshot
+/// stamped with one fingerprint must only serve queries encoded by a
+/// projection with the same one. Never returns 0 (0 = "not stamped").
+pub fn model_fingerprint(r: &[f32], signs: &[f32]) -> u64 {
+    let mut h = 0x5bd1_e995_0000_0001_u64 ^ ((r.len() as u64) << 32) ^ signs.len() as u64;
+    for &v in r.iter().chain(signs.iter()) {
+        h = splitmix64(h ^ u64::from(v.to_bits()));
+    }
+    h | 1
+}
+
+fn io_cbe(ctx: &str, e: &io::Error) -> CbeError {
+    CbeError::Service(format!("{ctx}: {e}"))
+}
+
+fn corrupt(reason: String) -> CbeError {
+    CbeError::CorruptSnapshot { reason }
+}
+
+/// Write `index` as `<dir>/current.snap` atomically: every byte goes to
+/// `snap.tmp`, which is fsync'd and renamed over the live file, then the
+/// directory is fsync'd so the rename itself is durable.
+fn write_snapshot(
+    dir: &Path,
+    index: &IndexAny,
+    stamp: &SnapshotStamp,
+    generation: u64,
+    clock: &mut FaultClock,
+) -> Result<(), CbeError> {
+    fs::create_dir_all(dir).map_err(|e| io_cbe("create index dir", &e))?;
+    let tmp = dir.join(SNAP_TMP);
+    let ops = snapshot::encode_snapshot(index, stamp, generation);
+    let mut f = File::create(&tmp).map_err(|e| io_cbe("create snap.tmp", &e))?;
+    {
+        let mut sink = Sink {
+            file: &mut f,
+            clock,
+        };
+        for buf in &ops {
+            sink.write_all(buf)
+                .map_err(|e| io_cbe("write snapshot", &e))?;
+        }
+        sink.sync().map_err(|e| io_cbe("fsync snapshot", &e))?;
+    }
+    drop(f);
+    faults::rename(clock, &tmp, &dir.join(SNAP_FILE))
+        .map_err(|e| io_cbe("rename snapshot into place", &e))?;
+    faults::sync_dir(clock, dir).map_err(|e| io_cbe("fsync index dir", &e))?;
+    Ok(())
+}
+
+/// Save `index` to `dir` at generation 1 with a fresh, empty WAL,
+/// honoring any `CBE_FAULT` plan in the environment. Overwrites whatever
+/// the directory held (atomically — a crash leaves the old state).
+pub fn save(dir: &Path, index: &IndexAny, stamp: &SnapshotStamp) -> Result<(), CbeError> {
+    let mut clock = FaultClock::from_env();
+    write_snapshot(dir, index, stamp, 1, &mut clock)?;
+    WalWriter::create(dir, 1, &mut clock).map_err(|e| io_cbe("create wal", &e))?;
+    Ok(())
+}
+
+/// Whether the WAL should be continued or replaced after a load.
+enum WalDisposition {
+    /// Current-generation log, tail already repaired: append to it.
+    Continue { records: u64 },
+    /// Absent or stale (pre-checkpoint) log: write a fresh one.
+    Reset,
+}
+
+fn apply_replay(index: &mut IndexAny, rec: Replay, wpc: usize, bits: usize) -> Result<(), CbeError> {
+    match rec {
+        Replay::Insert { id, code } => {
+            if index.contains(id) {
+                return Err(corrupt(format!("wal inserts id {id} already in the snapshot")));
+            }
+            debug_assert_eq!(code.len(), wpc, "scan_wal sized the record");
+            let pad = wpc * 64 - bits;
+            if pad > 0 && code[wpc - 1] >> (64 - pad) != 0 {
+                return Err(corrupt(format!("wal insert of id {id} has nonzero padding bits")));
+            }
+            index
+                .insert(id, &code)
+                .map_err(|e| corrupt(format!("wal insert rejected: {e}")))?;
+        }
+        Replay::Remove { id } => {
+            let removed = index
+                .remove(id)
+                .map_err(|e| corrupt(format!("wal remove rejected: {e}")))?;
+            if !removed {
+                return Err(corrupt(format!("wal removes id {id} absent from the snapshot")));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn load_inner(dir: &Path) -> Result<(IndexAny, LoadReport, WalDisposition), CbeError> {
+    let snap_path = dir.join(SNAP_FILE);
+    let bytes = fs::read(&snap_path)
+        .map_err(|e| corrupt(format!("cannot read {}: {e}", snap_path.display())))?;
+    let (mut index, meta) = snapshot::decode_snapshot(&bytes).map_err(corrupt)?;
+    let bits = index.bits();
+    let wpc = bits.div_ceil(64);
+
+    let mut state = RecoveryState::Loaded;
+    let mut replayed = 0u64;
+    let mut disposition = WalDisposition::Reset;
+    match fs::read(dir.join(wal::WAL_FILE)) {
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+        Err(e) => return Err(corrupt(format!("cannot read wal.log: {e}"))),
+        Ok(wal_bytes) => {
+            let scan = wal::scan_wal(&wal_bytes, wpc).map_err(corrupt)?;
+            if scan.generation > meta.generation {
+                return Err(corrupt(format!(
+                    "wal generation {} is ahead of snapshot generation {}",
+                    scan.generation, meta.generation
+                )));
+            }
+            if scan.generation == meta.generation {
+                for rec in scan.records {
+                    apply_replay(&mut index, rec, wpc, bits)?;
+                    replayed += 1;
+                }
+                obs::add(Counter::WalReplay, replayed);
+                if scan.truncated_bytes > 0 {
+                    wal::repair_tail(dir, scan.good_end)
+                        .map_err(|e| io_cbe("truncate torn wal tail", &e))?;
+                    state = RecoveryState::LoadedWithTruncatedWalTail {
+                        dropped_bytes: scan.truncated_bytes,
+                    };
+                }
+                disposition = WalDisposition::Continue { records: replayed };
+            }
+            // generation < snapshot: a checkpoint died between the
+            // snapshot rename and the wal rename. Those records are
+            // already folded into the snapshot — reset the log.
+        }
+    }
+    if let Some(v) = meta.model_version {
+        index = index.with_model_version(v);
+    }
+    let report = LoadReport {
+        state,
+        generation: meta.generation,
+        wal_records_replayed: replayed,
+        stamp: SnapshotStamp {
+            model_version: meta.model_version,
+            fingerprint: meta.fingerprint,
+        },
+    };
+    Ok((index, report, disposition))
+}
+
+/// Load the index saved in `dir`, replaying (and if need be repairing)
+/// its WAL. Every outcome is classified: see the module docs.
+pub fn load(dir: &Path) -> Result<(IndexAny, LoadReport), CbeError> {
+    let _span = obs::span(Stage::SnapshotLoad);
+    let out = load_inner(dir);
+    obs::add(Counter::Recovery, 1);
+    out.map(|(index, report, _)| (index, report))
+}
+
+/// An [`IndexAny`] bound to an on-disk directory: every mutation is
+/// write-ahead logged before it is applied, and the log is folded into
+/// a fresh checksummed snapshot past a churn threshold.
+pub struct PersistentIndex {
+    dir: PathBuf,
+    index: IndexAny,
+    stamp: SnapshotStamp,
+    generation: u64,
+    wal: WalWriter,
+    opts: PersistOptions,
+    clock: FaultClock,
+    /// Set when a WAL append failed mid-write: the tail may be torn, so
+    /// further appends would bury records behind garbage. A checkpoint
+    /// (fresh snapshot + fresh log) clears it.
+    poisoned: bool,
+}
+
+impl PersistentIndex {
+    /// Persist `index` into `dir` (generation 1, empty WAL) and return
+    /// the bound handle.
+    pub fn create(
+        dir: &Path,
+        index: IndexAny,
+        stamp: SnapshotStamp,
+        opts: PersistOptions,
+    ) -> Result<PersistentIndex, CbeError> {
+        let mut clock = FaultClock::new(opts.faults.clone());
+        write_snapshot(dir, &index, &stamp, 1, &mut clock)?;
+        let wal = WalWriter::create(dir, 1, &mut clock).map_err(|e| io_cbe("create wal", &e))?;
+        Ok(PersistentIndex {
+            dir: dir.to_path_buf(),
+            index,
+            stamp,
+            generation: 1,
+            wal,
+            opts,
+            clock,
+            poisoned: false,
+        })
+    }
+
+    /// Load (and recover) the index in `dir` and bind to it for further
+    /// churn.
+    pub fn open(dir: &Path, opts: PersistOptions) -> Result<(PersistentIndex, LoadReport), CbeError> {
+        let _span = obs::span(Stage::SnapshotLoad);
+        let loaded = load_inner(dir);
+        obs::add(Counter::Recovery, 1);
+        let (index, report, disposition) = loaded?;
+        let mut clock = FaultClock::new(opts.faults.clone());
+        let wal = match disposition {
+            WalDisposition::Continue { records } => {
+                WalWriter::open(dir, records).map_err(|e| io_cbe("reopen wal", &e))?
+            }
+            WalDisposition::Reset => WalWriter::create(dir, report.generation, &mut clock)
+                .map_err(|e| io_cbe("reset stale wal", &e))?,
+        };
+        Ok((
+            PersistentIndex {
+                dir: dir.to_path_buf(),
+                index,
+                stamp: report.stamp.clone(),
+                generation: report.generation,
+                wal,
+                opts,
+                clock,
+                poisoned: false,
+            },
+            report,
+        ))
+    }
+
+    pub fn index(&self) -> &IndexAny {
+        &self.index
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Records currently in the WAL (replayed + appended since open).
+    pub fn wal_records(&self) -> u64 {
+        self.wal.records
+    }
+
+    /// Fault-injection ops consumed so far (the recovery-matrix tests
+    /// dry-run a workload with no faults to enumerate its crash points).
+    pub fn fault_ops(&self) -> u64 {
+        self.clock.ops()
+    }
+
+    pub fn search(&self, q: &[u64], k: usize) -> Vec<crate::bits::index::Hit> {
+        self.index.search(q, k)
+    }
+
+    fn guard_poisoned(&self) -> Result<(), CbeError> {
+        if self.poisoned {
+            return Err(CbeError::Service(
+                "wal tail may be torn after a failed append; checkpoint() to recover".to_string(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Durably log, then apply, one insert. The operation is fully
+    /// validated *before* it is logged, so a logged record can always be
+    /// replayed.
+    pub fn insert(&mut self, id: u32, code: &[u64]) -> Result<(), CbeError> {
+        self.guard_poisoned()?;
+        let bits = self.index.bits();
+        let wpc = bits.div_ceil(64);
+        if code.len() != wpc {
+            return Err(CbeError::Service(format!(
+                "insert of id {id}: {} code words, index uses {wpc}",
+                code.len()
+            )));
+        }
+        let pad = wpc * 64 - bits;
+        if pad > 0 && code[wpc - 1] >> (64 - pad) != 0 {
+            return Err(CbeError::Service(format!(
+                "insert of id {id}: padding bits beyond {bits} must be zero"
+            )));
+        }
+        if self.index.contains(id) {
+            return Err(CbeError::Service(format!("insert of duplicate id {id}")));
+        }
+        if matches!(self.index.kind(), crate::index::IndexKind::Linear(_)) {
+            return Err(CbeError::Service(
+                "linear index is immutable; use mih or sharded for live corpora".to_string(),
+            ));
+        }
+        if let Err(e) = self.wal.append(
+            &WalOp::Insert { id, code },
+            self.opts.sync_on_append,
+            &mut self.clock,
+        ) {
+            self.poisoned = true;
+            return Err(io_cbe("wal append", &e));
+        }
+        self.index.insert(id, code).expect("pre-validated insert");
+        self.maybe_checkpoint()
+    }
+
+    /// Durably log, then apply, one removal. Removing an absent id is a
+    /// no-op `Ok(false)` and is not logged.
+    pub fn remove(&mut self, id: u32) -> Result<bool, CbeError> {
+        self.guard_poisoned()?;
+        if matches!(self.index.kind(), crate::index::IndexKind::Linear(_)) {
+            return Err(CbeError::Service(
+                "linear index is immutable; use mih or sharded for live corpora".to_string(),
+            ));
+        }
+        if !self.index.contains(id) {
+            return Ok(false);
+        }
+        if let Err(e) = self.wal.append(
+            &WalOp::Remove { id },
+            self.opts.sync_on_append,
+            &mut self.clock,
+        ) {
+            self.poisoned = true;
+            return Err(io_cbe("wal append", &e));
+        }
+        let removed = self.index.remove(id).expect("mutable backend");
+        debug_assert!(removed, "contains() said the id was present");
+        self.maybe_checkpoint()?;
+        Ok(true)
+    }
+
+    fn maybe_checkpoint(&mut self) -> Result<(), CbeError> {
+        if self.opts.compact_threshold > 0 && self.wal.records >= self.opts.compact_threshold {
+            self.checkpoint()?;
+            obs::add(Counter::WalCompaction, 1);
+        }
+        Ok(())
+    }
+
+    /// Fold the WAL into a fresh snapshot at generation + 1. Crash-safe
+    /// at every instant: until the snapshot rename lands, the old
+    /// snapshot + full WAL are intact; between the two renames, the new
+    /// snapshot already contains every logged record and the stale-
+    /// generation WAL is ignored on load.
+    pub fn checkpoint(&mut self) -> Result<(), CbeError> {
+        let next = self.generation + 1;
+        write_snapshot(&self.dir, &self.index, &self.stamp, next, &mut self.clock)?;
+        self.wal = WalWriter::create(&self.dir, next, &mut self.clock)
+            .map_err(|e| io_cbe("create wal", &e))?;
+        self.generation = next;
+        self.poisoned = false;
+        Ok(())
+    }
+
+    /// Fsync the WAL tail (shutdown drain).
+    pub fn flush(&mut self) -> Result<(), CbeError> {
+        self.wal.flush().map_err(|e| io_cbe("fsync wal", &e))
+    }
+}
+
+impl Drop for PersistentIndex {
+    fn drop(&mut self) {
+        // Best-effort: with sync_on_append off, push the tail to disk.
+        let _ = self.wal.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::bitcode::BitCode;
+    use crate::index::{build_index_with_ids, IndexBackend};
+    use crate::util::rng::Pcg64;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cbe_persist_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_index(n: usize, bits: usize, seed: u64) -> IndexAny {
+        let mut rng = Pcg64::new(seed);
+        let codes = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+        build_index_with_ids(
+            codes,
+            (0..n as u32).collect(),
+            &IndexBackend::Mih { m: Some(2) },
+        )
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_stamp() {
+        let dir = temp_dir("roundtrip");
+        let index = small_index(40, 64, 1).with_model_version(3);
+        let stamp = SnapshotStamp {
+            model_version: Some(3),
+            fingerprint: 0xF00D,
+        };
+        save(&dir, &index, &stamp).unwrap();
+        let (loaded, report) = load(&dir).unwrap();
+        assert_eq!(report.state, RecoveryState::Loaded);
+        assert_eq!(report.generation, 1);
+        assert_eq!(report.wal_records_replayed, 0);
+        assert_eq!(report.stamp, stamp);
+        assert_eq!(loaded.model_version(), Some(3));
+        assert_eq!(loaded.len(), 40);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn churn_survives_a_reopen_via_the_wal() {
+        let dir = temp_dir("churn");
+        let index = small_index(10, 64, 2);
+        let opts = PersistOptions {
+            compact_threshold: 0,
+            ..PersistOptions::default()
+        };
+        let mut p =
+            PersistentIndex::create(&dir, index, SnapshotStamp::none(), opts.clone()).unwrap();
+        p.insert(100, &[0xAA55]).unwrap();
+        p.insert(101, &[0x1234]).unwrap();
+        assert!(p.remove(3).unwrap());
+        assert!(!p.remove(999).unwrap(), "absent id is Ok(false), not logged");
+        assert_eq!(p.wal_records(), 3);
+        drop(p);
+        let (p2, report) = PersistentIndex::open(&dir, opts).unwrap();
+        assert_eq!(report.wal_records_replayed, 3);
+        assert_eq!(report.state, RecoveryState::Loaded);
+        assert_eq!(p2.len(), 11);
+        assert!(p2.index().contains(100) && p2.index().contains(101));
+        assert!(!p2.index().contains(3));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_bumps_generation_and_empties_the_wal() {
+        let dir = temp_dir("checkpoint");
+        let opts = PersistOptions {
+            compact_threshold: 4,
+            ..PersistOptions::default()
+        };
+        let mut p =
+            PersistentIndex::create(&dir, small_index(8, 64, 3), SnapshotStamp::none(), opts.clone())
+                .unwrap();
+        for id in 100..104u32 {
+            p.insert(id, &[u64::from(id)]).unwrap();
+        }
+        // The 4th append crossed the threshold: auto-checkpoint.
+        assert_eq!(p.generation(), 2);
+        assert_eq!(p.wal_records(), 0);
+        drop(p);
+        let (p2, report) = PersistentIndex::open(&dir, opts).unwrap();
+        assert_eq!(report.generation, 2);
+        assert_eq!(report.wal_records_replayed, 0);
+        assert_eq!(p2.len(), 12);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_is_deterministic_nonzero_and_sensitive() {
+        let r = [0.5f32, -1.25, 3.0];
+        let signs = [1.0f32, -1.0, 1.0];
+        let a = model_fingerprint(&r, &signs);
+        assert_eq!(a, model_fingerprint(&r, &signs));
+        assert_ne!(a, 0);
+        let mut r2 = r;
+        r2[1] += 1e-6;
+        assert_ne!(a, model_fingerprint(&r2, &signs));
+        assert_ne!(a, model_fingerprint(&signs, &r));
+    }
+
+    #[test]
+    fn loading_an_empty_dir_is_a_typed_error() {
+        let dir = temp_dir("empty");
+        fs::create_dir_all(&dir).unwrap();
+        match load(&dir) {
+            Err(CbeError::CorruptSnapshot { reason }) => {
+                assert!(reason.contains("current.snap"), "reason: {reason}")
+            }
+            other => panic!("expected CorruptSnapshot, got {other:?}"),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

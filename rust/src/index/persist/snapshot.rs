@@ -1,0 +1,735 @@
+//! Sectioned, checksummed snapshot encoding for every index backend.
+//!
+//! File grammar (all integers little-endian, every section 8-aligned):
+//!
+//! ```text
+//! prelude (24 B):
+//!   magic          8 B  = "CBEIDX01"
+//!   format_version u32  = 1
+//!   section_count  u32
+//!   crc            u32    CRC-32 of bytes [0, 16)
+//!   reserved       u32  = 0
+//! section (repeated section_count times):
+//!   id        u32    1 = META, 2 = CODES, 3 = IDS, 4 = TABLES
+//!   reserved  u32  = 0
+//!   len       u64    payload bytes (pre-padding)
+//!   crc       u32    CRC-32 of the payload (pre-padding)
+//!   pad       u32  = 0
+//!   payload   len bytes, zero-padded to a multiple of 8
+//! ```
+//!
+//! META is always first; then per backend: linear → one CODES + IDS
+//! pair; MIH → CODES + IDS + TABLES; sharded → one CODES + IDS + TABLES
+//! group *per shard*, in shard order (shard membership is part of the
+//! snapshot, so a reload reproduces the exact partition and therefore
+//! the exact WAL-replay insert routing).
+//!
+//! The writer **compacts on the way out**: tombstoned storage slots are
+//! skipped and table postings are remapped through an old→new slot map,
+//! so dead rows never reach disk and a loaded index is always in
+//! canonical compacted form. The payload layout is fixed-width LE with
+//! 8-byte-aligned sections — deliberately mmap-ready — but today the
+//! loader does one bulk `fs::read` and a single copy per section, which
+//! keeps the `KeySource`/arena adoption seams identical to an mmap
+//! follow-up.
+//!
+//! Decoding trusts nothing: beyond the per-section CRCs, every
+//! structural invariant the in-memory types assume (unique ids, zero
+//! padding bits, postings in range and distinct, bucket keys within the
+//! key width, tables partitioning the code bits) is re-verified so a
+//! CRC-valid-but-wrong file from a future format drift turns into a
+//! typed error instead of a panic or a silently wrong search.
+
+use super::format::{crc32, put_u32, put_u64, Reader};
+use super::SnapshotStamp;
+use crate::bits::bitcode::BitCode;
+use crate::bits::BinaryIndex;
+use crate::index::mih::{MihIndex, SubstringScheme};
+use crate::index::sharded::ShardedIndex;
+use crate::index::substring::{BuildFastHash, KeySource, SubstringTable};
+use crate::index::{IndexAny, IndexKind};
+use std::collections::HashSet;
+
+pub(crate) const SNAP_MAGIC: [u8; 8] = *b"CBEIDX01";
+pub(crate) const SNAP_FORMAT: u32 = 1;
+pub(crate) const SNAP_FILE: &str = "current.snap";
+pub(crate) const SNAP_TMP: &str = "snap.tmp";
+
+const SEC_META: u32 = 1;
+const SEC_CODES: u32 = 2;
+const SEC_IDS: u32 = 3;
+const SEC_TABLES: u32 = 4;
+
+const BACKEND_LINEAR: u8 = 0;
+const BACKEND_MIH: u8 = 1;
+const BACKEND_SHARDED: u8 = 2;
+
+/// Largest code width / shard count / section count we will believe
+/// from a header. A snapshot this size cannot be produced by this
+/// writer, so larger values are corruption, and rejecting them early
+/// keeps allocation sizes sane while decoding hostile bytes.
+const MAX_BITS: u64 = 1 << 24;
+const MAX_SHARDS: u32 = 1 << 16;
+
+/// Identity facts decoded from the META section.
+pub(crate) struct SnapshotMeta {
+    pub generation: u64,
+    pub model_version: Option<u64>,
+    pub fingerprint: u64,
+}
+
+// ---------------------------------------------------------------- encode
+
+fn encode_codes_rows(codes: &BitCode, alive: Option<&[bool]>, n_live: usize) -> Vec<u8> {
+    let wpc = codes.words_per_code;
+    let mut p = Vec::with_capacity(8 + n_live * wpc * 8);
+    put_u64(&mut p, n_live as u64);
+    for slot in 0..codes.n {
+        if alive.map_or(true, |a| a[slot]) {
+            for &w in codes.code(slot) {
+                put_u64(&mut p, w);
+            }
+        }
+    }
+    p
+}
+
+fn encode_ids_rows(ids: &[u32], alive: Option<&[bool]>, n_live: usize) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + n_live * 4);
+    put_u64(&mut p, n_live as u64);
+    for (slot, &id) in ids.iter().enumerate() {
+        if alive.map_or(true, |a| a[slot]) {
+            put_u32(&mut p, id);
+        }
+    }
+    p
+}
+
+/// One MIH body (CODES + IDS + TABLES), tombstones compacted out.
+fn mih_sections(mih: &MihIndex, sections: &mut Vec<(u32, Vec<u8>)>) {
+    let (codes, ids, alive, tables) = mih.storage_parts();
+    let n_live = mih.len();
+    let identity = n_live == codes.n;
+    // Old→new slot map over live rows (only built when tombstones exist).
+    let remap: Vec<u32> = if identity {
+        Vec::new()
+    } else {
+        let mut map = vec![u32::MAX; codes.n];
+        let mut next = 0u32;
+        for (slot, &a) in alive.iter().enumerate() {
+            if a {
+                map[slot] = next;
+                next += 1;
+            }
+        }
+        map
+    };
+    let live_mask = (!identity).then_some(alive);
+    sections.push((SEC_CODES, encode_codes_rows(codes, live_mask, n_live)));
+    sections.push((SEC_IDS, encode_ids_rows(ids, live_mask, n_live)));
+
+    let mut tp = Vec::new();
+    put_u32(&mut tp, tables.len() as u32);
+    for t in tables {
+        match t.source() {
+            KeySource::Span { start, len } => {
+                tp.push(0u8);
+                put_u64(&mut tp, *start as u64);
+                put_u64(&mut tp, *len as u64);
+            }
+            KeySource::Sampled { positions } => {
+                tp.push(1u8);
+                put_u32(&mut tp, positions.len() as u32);
+                for &p in positions.iter() {
+                    put_u32(&mut tp, p);
+                }
+            }
+        }
+        // Tables only ever hold live slots (removal drops postings
+        // eagerly), so remapping never hits a dead slot.
+        let mut dir: Vec<(u64, u32)> = Vec::with_capacity(t.bucket_count());
+        let mut postings: Vec<u32> = Vec::with_capacity(t.postings_len());
+        t.for_each_bucket(|key, slots| {
+            if slots.is_empty() {
+                return;
+            }
+            dir.push((key, slots.len() as u32));
+            for &s in slots {
+                postings.push(if identity { s } else { remap[s as usize] });
+            }
+        });
+        put_u64(&mut tp, dir.len() as u64);
+        put_u64(&mut tp, postings.len() as u64);
+        for &(key, len) in &dir {
+            put_u64(&mut tp, key);
+            put_u32(&mut tp, len);
+        }
+        for &p in &postings {
+            put_u32(&mut tp, p);
+        }
+    }
+    sections.push((SEC_TABLES, tp));
+}
+
+/// Encode a full snapshot as the ordered list of write-op buffers
+/// (prelude, then header/payload per section). Keeping each buffer a
+/// separate op gives the fault injector a crash point at every syscall
+/// boundary of the writer.
+pub(crate) fn encode_snapshot(
+    index: &IndexAny,
+    stamp: &SnapshotStamp,
+    generation: u64,
+) -> Vec<Vec<u8>> {
+    let (backend, scheme, shard_count) = match index.kind() {
+        IndexKind::Linear(_) => (BACKEND_LINEAR, SubstringScheme::Contiguous, 1u32),
+        IndexKind::Mih(ix) => (BACKEND_MIH, ix.scheme(), 1u32),
+        IndexKind::Sharded(ix) => {
+            let scheme = ix
+                .shards()
+                .first()
+                .map(|s| s.scheme())
+                .unwrap_or(SubstringScheme::Contiguous);
+            (BACKEND_SHARDED, scheme, ix.shard_count() as u32)
+        }
+    };
+    let mut meta = Vec::with_capacity(46);
+    meta.push(backend);
+    meta.push(match scheme {
+        SubstringScheme::Contiguous => 0u8,
+        SubstringScheme::Sampled => 1u8,
+    });
+    put_u64(&mut meta, index.bits() as u64);
+    put_u64(&mut meta, index.len() as u64);
+    put_u32(&mut meta, shard_count);
+    put_u64(&mut meta, generation);
+    // u64::MAX is the "no model stamp" sentinel (registry versions are
+    // small integers, so the collision is theoretical).
+    put_u64(&mut meta, stamp.model_version.unwrap_or(u64::MAX));
+    put_u64(&mut meta, stamp.fingerprint);
+
+    let mut sections: Vec<(u32, Vec<u8>)> = vec![(SEC_META, meta)];
+    match index.kind() {
+        IndexKind::Linear(ix) => {
+            sections.push((SEC_CODES, encode_codes_rows(&ix.codes, None, ix.codes.n)));
+            sections.push((SEC_IDS, encode_ids_rows(&ix.ids, None, ix.ids.len())));
+        }
+        IndexKind::Mih(ix) => mih_sections(ix, &mut sections),
+        IndexKind::Sharded(ix) => {
+            for shard in ix.shards() {
+                mih_sections(shard, &mut sections);
+            }
+        }
+    }
+
+    let mut ops = Vec::with_capacity(1 + sections.len() * 2);
+    let mut prelude = Vec::with_capacity(24);
+    prelude.extend_from_slice(&SNAP_MAGIC);
+    put_u32(&mut prelude, SNAP_FORMAT);
+    put_u32(&mut prelude, sections.len() as u32);
+    let crc = crc32(&prelude);
+    put_u32(&mut prelude, crc);
+    put_u32(&mut prelude, 0);
+    ops.push(prelude);
+    for (id, mut payload) in sections {
+        let mut header = Vec::with_capacity(24);
+        put_u32(&mut header, id);
+        put_u32(&mut header, 0);
+        put_u64(&mut header, payload.len() as u64);
+        put_u32(&mut header, crc32(&payload));
+        put_u32(&mut header, 0);
+        ops.push(header);
+        let pad = (8 - payload.len() % 8) % 8;
+        payload.resize(payload.len() + pad, 0);
+        ops.push(payload);
+    }
+    ops
+}
+
+// ---------------------------------------------------------------- decode
+
+fn decode_codes(payload: &[u8], bits: usize) -> Result<BitCode, String> {
+    let mut r = Reader::new(payload);
+    let n = r.take_u64("codes row count")?;
+    if n > u32::MAX as u64 {
+        return Err(format!("codes row count {n} exceeds u32 id space"));
+    }
+    let n = n as usize;
+    let wpc = bits.div_ceil(64);
+    let need = n
+        .checked_mul(wpc)
+        .and_then(|w| w.checked_mul(8))
+        .ok_or_else(|| "codes section size overflows".to_string())?;
+    if r.remaining() != need {
+        return Err(format!(
+            "codes payload is {} bytes, expected {need} for {n} rows of {wpc} words",
+            r.remaining()
+        ));
+    }
+    let data: Vec<u64> = r
+        .take(need, "code words")?
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
+        .collect();
+    let codes = BitCode {
+        n,
+        bits,
+        words_per_code: wpc,
+        data,
+    };
+    if !codes.padding_is_zero() {
+        return Err("nonzero padding bits in stored codes".to_string());
+    }
+    Ok(codes)
+}
+
+fn decode_ids(payload: &[u8]) -> Result<Vec<u32>, String> {
+    let mut r = Reader::new(payload);
+    let n = r.take_u64("id count")?;
+    if n > u32::MAX as u64 {
+        return Err(format!("id count {n} exceeds u32 id space"));
+    }
+    let n = n as usize;
+    if r.remaining() != n * 4 {
+        return Err(format!(
+            "ids payload is {} bytes, expected {} for {n} ids",
+            r.remaining(),
+            n * 4
+        ));
+    }
+    Ok(r.take(n * 4, "ids")?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().expect("4 bytes")))
+        .collect())
+}
+
+fn decode_tables(payload: &[u8], bits: usize, n_rows: usize) -> Result<Vec<SubstringTable>, String> {
+    let mut r = Reader::new(payload);
+    let count = r.take_u32("table count")? as usize;
+    if count == 0 || count > bits {
+        return Err(format!("table count {count} out of range for {bits} bits"));
+    }
+    // Exactness (the pigeonhole probe bound) requires the tables to
+    // partition the code bits: every bit in exactly one table.
+    let mut coverage = vec![false; bits];
+    let mut cover = |bit: usize| -> Result<(), String> {
+        if bit >= bits {
+            return Err(format!("table bit {bit} out of range for {bits} bits"));
+        }
+        if coverage[bit] {
+            return Err(format!("code bit {bit} claimed by two tables"));
+        }
+        coverage[bit] = true;
+        Ok(())
+    };
+    let mut tables = Vec::with_capacity(count);
+    for ti in 0..count {
+        let source = match r.take_u8("table source tag")? {
+            0 => {
+                let start = r.take_u64("span start")?;
+                let len = r.take_u64("span len")?;
+                if len == 0 || len > 64 || start.checked_add(len).map_or(true, |e| e > bits as u64) {
+                    return Err(format!("table {ti}: span {start}+{len} invalid for {bits} bits"));
+                }
+                for b in start..start + len {
+                    cover(b as usize)?;
+                }
+                KeySource::Span {
+                    start: start as usize,
+                    len: len as usize,
+                }
+            }
+            1 => {
+                let cnt = r.take_u32("sampled position count")? as usize;
+                if cnt == 0 || cnt > 64 {
+                    return Err(format!("table {ti}: {cnt} sampled positions out of range"));
+                }
+                let mut positions = Vec::with_capacity(cnt);
+                let mut prev: i64 = -1;
+                for _ in 0..cnt {
+                    let p = r.take_u32("sampled position")?;
+                    if i64::from(p) <= prev {
+                        return Err(format!(
+                            "table {ti}: sampled positions not strictly increasing"
+                        ));
+                    }
+                    prev = i64::from(p);
+                    cover(p as usize)?;
+                    positions.push(p);
+                }
+                KeySource::Sampled {
+                    positions: positions.into_boxed_slice(),
+                }
+            }
+            tag => return Err(format!("table {ti}: unknown source tag {tag}")),
+        };
+        let key_bits = source.key_bits();
+        let bucket_count = r.take_u64("bucket count")? as usize;
+        let postings_total = r.take_u64("postings total")? as usize;
+        // Every live row keys into exactly one bucket per table.
+        if postings_total != n_rows {
+            return Err(format!(
+                "table {ti}: {postings_total} postings for {n_rows} rows"
+            ));
+        }
+        if bucket_count > n_rows {
+            return Err(format!(
+                "table {ti}: {bucket_count} buckets exceed {n_rows} rows"
+            ));
+        }
+        let mut dir: Vec<(u64, u32)> = Vec::with_capacity(bucket_count);
+        let mut keys: HashSet<u64, BuildFastHash> =
+            HashSet::with_capacity_and_hasher(bucket_count, BuildFastHash::default());
+        let mut sum = 0usize;
+        for _ in 0..bucket_count {
+            let key = r.take_u64("bucket key")?;
+            let len = r.take_u32("bucket len")?;
+            if key_bits < 64 && key >> key_bits != 0 {
+                return Err(format!("table {ti}: key {key:#x} wider than {key_bits} bits"));
+            }
+            if len == 0 {
+                return Err(format!("table {ti}: empty bucket"));
+            }
+            if !keys.insert(key) {
+                return Err(format!("table {ti}: duplicate bucket key {key:#x}"));
+            }
+            sum += len as usize;
+            dir.push((key, len));
+        }
+        if sum != postings_total {
+            return Err(format!(
+                "table {ti}: bucket lengths sum to {sum}, postings total says {postings_total}"
+            ));
+        }
+        let mut arena = Vec::with_capacity(postings_total);
+        let mut seen = vec![false; n_rows];
+        for _ in 0..postings_total {
+            let p = r.take_u32("posting")?;
+            if p as usize >= n_rows || seen[p as usize] {
+                return Err(format!("table {ti}: posting {p} out of range or repeated"));
+            }
+            seen[p as usize] = true;
+            arena.push(p);
+        }
+        tables.push(SubstringTable::from_buckets(source, &dir, arena));
+    }
+    if !r.is_done() {
+        return Err("trailing bytes in tables section".to_string());
+    }
+    if let Some(bit) = coverage.iter().position(|c| !*c) {
+        return Err(format!("code bit {bit} not covered by any table"));
+    }
+    Ok(tables)
+}
+
+fn expect_section<'a>(
+    secs: &[(u32, &'a [u8])],
+    at: usize,
+    want: u32,
+    what: &str,
+) -> Result<&'a [u8], String> {
+    match secs.get(at) {
+        Some(&(id, payload)) if id == want => Ok(payload),
+        Some(&(id, _)) => Err(format!("section {at} is id {id}, expected {what}")),
+        None => Err(format!("missing section {at} ({what})")),
+    }
+}
+
+fn decode_mih_body(
+    secs: &[(u32, &[u8])],
+    at: usize,
+    bits: usize,
+    scheme: SubstringScheme,
+    id_set: &mut HashSet<u32, BuildFastHash>,
+) -> Result<MihIndex, String> {
+    let codes = decode_codes(expect_section(secs, at, SEC_CODES, "CODES")?, bits)?;
+    let ids = decode_ids(expect_section(secs, at + 1, SEC_IDS, "IDS")?)?;
+    if codes.n != ids.len() {
+        return Err(format!("{} codes but {} ids", codes.n, ids.len()));
+    }
+    for &id in &ids {
+        if !id_set.insert(id) {
+            return Err(format!("duplicate id {id}"));
+        }
+    }
+    let tables = decode_tables(
+        expect_section(secs, at + 2, SEC_TABLES, "TABLES")?,
+        bits,
+        codes.n,
+    )?;
+    Ok(MihIndex::from_parts(codes, ids, tables, scheme))
+}
+
+/// Decode and fully validate a snapshot image.
+pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<(IndexAny, SnapshotMeta), String> {
+    if bytes.len() < 24 {
+        return Err(format!("snapshot is {} bytes, shorter than the prelude", bytes.len()));
+    }
+    if bytes[..8] != SNAP_MAGIC {
+        return Err("snapshot magic mismatch".to_string());
+    }
+    let mut r = Reader::new(&bytes[8..24]);
+    let format = r.take_u32("format version")?;
+    if format != SNAP_FORMAT {
+        return Err(format!("unsupported snapshot format version {format}"));
+    }
+    let section_count = r.take_u32("section count")?;
+    let crc = r.take_u32("prelude crc")?;
+    if crc != crc32(&bytes[..16]) {
+        return Err("prelude crc mismatch".to_string());
+    }
+    if section_count == 0 || section_count > 3 * MAX_SHARDS + 1 {
+        return Err(format!("implausible section count {section_count}"));
+    }
+
+    let mut secs: Vec<(u32, &[u8])> = Vec::with_capacity(section_count as usize);
+    let mut at = 24usize;
+    for si in 0..section_count {
+        if bytes.len() - at < 24 {
+            return Err(format!("truncated header of section {si}"));
+        }
+        let h = &bytes[at..at + 24];
+        let id = u32::from_le_bytes(h[0..4].try_into().expect("4 bytes"));
+        let len = u64::from_le_bytes(h[8..16].try_into().expect("8 bytes"));
+        let sec_crc = u32::from_le_bytes(h[16..20].try_into().expect("4 bytes"));
+        at += 24;
+        if len > (bytes.len() - at) as u64 {
+            return Err(format!("truncated payload of section {si} (id {id})"));
+        }
+        let len = len as usize;
+        let payload = &bytes[at..at + len];
+        if crc32(payload) != sec_crc {
+            return Err(format!("crc mismatch in section {si} (id {id})"));
+        }
+        let padded = len + (8 - len % 8) % 8;
+        if padded > bytes.len() - at {
+            return Err(format!("truncated padding of section {si}"));
+        }
+        at += padded;
+        secs.push((id, payload));
+    }
+    if at != bytes.len() {
+        return Err(format!("{} trailing bytes after the last section", bytes.len() - at));
+    }
+
+    let mut m = Reader::new(expect_section(&secs, 0, SEC_META, "META")?);
+    let backend = m.take_u8("backend tag")?;
+    let scheme = match m.take_u8("scheme tag")? {
+        0 => SubstringScheme::Contiguous,
+        1 => SubstringScheme::Sampled,
+        tag => return Err(format!("unknown substring scheme tag {tag}")),
+    };
+    let bits = m.take_u64("code bits")?;
+    if bits == 0 || bits > MAX_BITS {
+        return Err(format!("implausible code width {bits}"));
+    }
+    let bits = bits as usize;
+    let n_live = m.take_u64("live row count")?;
+    if n_live > u32::MAX as u64 {
+        return Err(format!("live row count {n_live} exceeds u32 id space"));
+    }
+    let shard_count = m.take_u32("shard count")?;
+    let generation = m.take_u64("generation")?;
+    let model_version = match m.take_u64("model version")? {
+        u64::MAX => None,
+        v => Some(v),
+    };
+    let fingerprint = m.take_u64("model fingerprint")?;
+    if !m.is_done() {
+        return Err("trailing bytes in META".to_string());
+    }
+    let meta = SnapshotMeta {
+        generation,
+        model_version,
+        fingerprint,
+    };
+
+    let mut id_set: HashSet<u32, BuildFastHash> =
+        HashSet::with_capacity_and_hasher(n_live as usize, BuildFastHash::default());
+    let kind = match backend {
+        BACKEND_LINEAR => {
+            if shard_count != 1 || secs.len() != 3 {
+                return Err("linear snapshot must be exactly META+CODES+IDS".to_string());
+            }
+            let codes = decode_codes(expect_section(&secs, 1, SEC_CODES, "CODES")?, bits)?;
+            let ids = decode_ids(expect_section(&secs, 2, SEC_IDS, "IDS")?)?;
+            if codes.n != ids.len() || codes.n as u64 != n_live {
+                return Err(format!(
+                    "linear row counts disagree: {} codes, {} ids, META says {n_live}",
+                    codes.n,
+                    ids.len()
+                ));
+            }
+            IndexKind::Linear(BinaryIndex::with_ids(codes, ids))
+        }
+        BACKEND_MIH => {
+            if shard_count != 1 || secs.len() != 4 {
+                return Err("mih snapshot must be exactly META+CODES+IDS+TABLES".to_string());
+            }
+            let ix = decode_mih_body(&secs, 1, bits, scheme, &mut id_set)?;
+            if ix.len() as u64 != n_live {
+                return Err(format!("mih has {} rows, META says {n_live}", ix.len()));
+            }
+            IndexKind::Mih(ix)
+        }
+        BACKEND_SHARDED => {
+            if shard_count == 0 || shard_count > MAX_SHARDS {
+                return Err(format!("implausible shard count {shard_count}"));
+            }
+            if secs.len() != 1 + 3 * shard_count as usize {
+                return Err(format!(
+                    "sharded snapshot has {} sections, expected {} for {shard_count} shards",
+                    secs.len(),
+                    1 + 3 * shard_count as usize
+                ));
+            }
+            let mut shards = Vec::with_capacity(shard_count as usize);
+            for s in 0..shard_count as usize {
+                shards.push(
+                    decode_mih_body(&secs, 1 + 3 * s, bits, scheme, &mut id_set)
+                        .map_err(|e| format!("shard {s}: {e}"))?,
+                );
+            }
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            if total as u64 != n_live {
+                return Err(format!("shards hold {total} rows, META says {n_live}"));
+            }
+            IndexKind::Sharded(ShardedIndex::from_shards(shards, bits))
+        }
+        tag => return Err(format!("unknown backend tag {tag}")),
+    };
+    Ok((IndexAny::from(kind), meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::{build_index_with_ids, IndexBackend};
+    use crate::util::rng::Pcg64;
+
+    fn image(index: &IndexAny, generation: u64) -> Vec<u8> {
+        encode_snapshot(
+            index,
+            &SnapshotStamp {
+                model_version: Some(7),
+                fingerprint: 0x5EED,
+            },
+            generation,
+        )
+        .concat()
+    }
+
+    fn random_index(n: usize, bits: usize, backend: &IndexBackend, seed: u64) -> IndexAny {
+        let mut rng = Pcg64::new(seed);
+        let codes = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+        let ids = (0..n as u32).map(|i| i * 3 + 1).collect();
+        build_index_with_ids(codes, ids, backend)
+    }
+
+    fn assert_same_results(a: &IndexAny, b: &IndexAny, bits: usize, seed: u64) {
+        let mut rng = Pcg64::new(seed);
+        let queries = BitCode::from_signs(&rng.sign_vec(8 * bits), 8, bits);
+        for qi in 0..queries.n {
+            assert_eq!(
+                a.search(queries.code(qi), 10),
+                b.search(queries.code(qi), 10),
+                "query {qi} diverged after a snapshot roundtrip"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrips_every_backend_including_odd_word_counts() {
+        // bits=160 → words_per_code=3 (odd, with 32 padding bits);
+        // bits=64 → exactly one word, no padding.
+        for (backend, bits, n) in [
+            (IndexBackend::Linear, 160, 50),
+            (IndexBackend::Mih { m: Some(4) }, 160, 120),
+            (IndexBackend::MihSampled { m: Some(4) }, 96, 80),
+            (
+                IndexBackend::ShardedMih {
+                    shards: 3,
+                    m: Some(2),
+                },
+                64,
+                90,
+            ),
+        ] {
+            let index = random_index(n, bits, &backend, 42 + bits as u64);
+            let img = image(&index, 9);
+            let (loaded, meta) = decode_snapshot(&img).unwrap();
+            assert_eq!(meta.generation, 9);
+            assert_eq!(meta.model_version, Some(7));
+            assert_eq!(meta.fingerprint, 0x5EED);
+            assert_eq!(loaded.len(), index.len());
+            assert_eq!(loaded.backend_name(), index.backend_name());
+            assert_same_results(&index, &loaded, bits, 1000 + bits as u64);
+        }
+    }
+
+    #[test]
+    fn roundtrips_an_empty_index() {
+        let index = random_index(0, 128, &IndexBackend::Mih { m: Some(2) }, 5);
+        let (loaded, _) = decode_snapshot(&image(&index, 1)).unwrap();
+        assert_eq!(loaded.len(), 0);
+        assert!(loaded.search(&[0u64, 0], 3).is_empty());
+    }
+
+    #[test]
+    fn save_compacts_tombstones_out() {
+        // 60 storage slots ≤ the auto-compaction floor (64), so removals
+        // leave tombstones in memory — the writer must drop them.
+        let mut index = random_index(60, 128, &IndexBackend::Mih { m: Some(4) }, 11);
+        for id in (0..60u32).map(|i| i * 3 + 1).take(35) {
+            assert_eq!(index.remove(id), Ok(true));
+        }
+        let storage = match index.kind() {
+            IndexKind::Mih(ix) => ix.storage_slots(),
+            _ => unreachable!(),
+        };
+        assert_eq!(storage, 60, "tombstones still occupy storage in memory");
+        let (loaded, _) = decode_snapshot(&image(&index, 2)).unwrap();
+        assert_eq!(loaded.len(), 25);
+        match loaded.kind() {
+            IndexKind::Mih(ix) => assert_eq!(
+                ix.storage_slots(),
+                25,
+                "a loaded snapshot is in canonical compacted form"
+            ),
+            _ => unreachable!(),
+        }
+        assert_same_results(&index, &loaded, 128, 12);
+    }
+
+    #[test]
+    fn every_single_byte_is_load_bearing_or_ignored_safely() {
+        // Flip one bit in each byte of a small snapshot: the result must
+        // be a typed error or a bit-identical index — never a panic and
+        // never different search results.
+        let index = random_index(30, 96, &IndexBackend::Mih { m: Some(3) }, 21);
+        let img = image(&index, 1);
+        for byte in 0..img.len() {
+            let mut bad = img.clone();
+            bad[byte] ^= 0x04;
+            match decode_snapshot(&bad) {
+                Err(_) => {}
+                Ok((loaded, _)) => {
+                    // Only section padding escapes a CRC; results must
+                    // still be exact.
+                    assert_same_results(&index, &loaded, 96, 22);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_at_any_length_is_a_typed_error() {
+        let index = random_index(20, 64, &IndexBackend::Mih { m: Some(2) }, 31);
+        let img = image(&index, 1);
+        for cut in 0..img.len() {
+            assert!(
+                decode_snapshot(&img[..cut]).is_err(),
+                "truncation to {cut} bytes must not decode"
+            );
+        }
+    }
+}

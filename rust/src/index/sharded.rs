@@ -184,6 +184,25 @@ impl ShardedIndex {
     pub fn search_batch(&self, queries: &BitCode, k: usize) -> Vec<Vec<Hit>> {
         par_map_queries(queries.n, |i| self.search_sequential(queries.code(i), k))
     }
+
+    /// The per-shard indexes, for the snapshot writer (each shard is
+    /// serialized as an independent MIH body; shard membership is part of
+    /// the snapshot, so a reload reproduces the exact same partition).
+    pub(crate) fn shards(&self) -> &[MihIndex] {
+        &self.shards
+    }
+
+    /// Reassemble from per-shard indexes (snapshot loader only; the
+    /// loader has validated a uniform `bits` across shards and globally
+    /// unique ids).
+    pub(crate) fn from_shards(shards: Vec<MihIndex>, bits: usize) -> ShardedIndex {
+        debug_assert!(!shards.is_empty());
+        ShardedIndex {
+            shards,
+            bits,
+            words_per_code: bits.div_ceil(64),
+        }
+    }
 }
 
 #[cfg(test)]

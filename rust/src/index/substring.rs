@@ -401,6 +401,51 @@ impl SubstringTable {
         self.dead
     }
 
+    /// Visit every live bucket as `(key, postings)`, in table-slot order.
+    /// The snapshot writer serializes tables through this seam; the order
+    /// is deterministic for a fixed build/churn history but is not part
+    /// of the on-disk contract (buckets are keyed, not positional).
+    pub(crate) fn for_each_bucket(&self, mut f: impl FnMut(u64, &[u32])) {
+        for i in 0..self.ctrl.len() {
+            if self.ctrl[i] != FULL {
+                continue;
+            }
+            let Bucket { key, off, len, .. } = self.buckets[i];
+            f(key, &self.arena[off as usize..(off + len) as usize]);
+        }
+    }
+
+    /// Live postings across all buckets (arena entries minus dead ranges).
+    pub(crate) fn postings_len(&self) -> usize {
+        self.arena.len() - self.dead
+    }
+
+    /// Reassemble a table from snapshot parts: `buckets` is `(key, len)`
+    /// per bucket and `arena` holds their postings concatenated in the
+    /// same order (exactly [`SubstringTable::for_each_bucket`]'s output).
+    /// The arena is adopted whole — one contiguous allocation, zero dead
+    /// capacity, same footprint as a fresh bulk build. The caller (the
+    /// snapshot loader) has already validated distinct in-range keys and
+    /// that the bucket lengths sum to `arena.len()`; those invariants are
+    /// re-checked here as debug assertions only.
+    pub(crate) fn from_buckets(
+        source: KeySource,
+        buckets: &[(u64, u32)],
+        arena: Vec<u32>,
+    ) -> SubstringTable {
+        let mut t = SubstringTable::with_source(source);
+        let mut off = 0u32;
+        for &(key, len) in buckets {
+            let bi = t.slot_for_insert(key);
+            debug_assert_eq!(t.buckets[bi].len, 0, "duplicate bucket key {key}");
+            t.buckets[bi] = Bucket { key, off, len, cap: len };
+            off += len;
+        }
+        debug_assert_eq!(off as usize, arena.len());
+        t.arena = arena;
+        t
+    }
+
     /// Find the table slot holding `key`, skipping tombstones.
     fn find(&self, key: u64) -> Option<usize> {
         let mask = self.ctrl.len() - 1;
@@ -731,6 +776,51 @@ mod tests {
             "arena must compact once everything is dead: {} vs peak {peak}",
             t.arena_capacity()
         );
+    }
+
+    /// from_buckets(for_each_bucket(t)) must reproduce every bucket — on
+    /// a fresh bulk build and on a churned, tombstone-carrying table
+    /// (the snapshot writer walks live buckets only, so dead arena
+    /// ranges and key-slot tombstones never reach disk).
+    #[test]
+    fn bucket_roundtrip_survives_churn_and_drops_dead_capacity() {
+        let mut rng = Pcg64::new(61);
+        let mut t = SubstringTable::new(0, 8);
+        for slot in 0..500u32 {
+            t.insert(rng.below(64), slot);
+        }
+        // Churn: remove ~half (some buckets empty out → tombstones).
+        for slot in 0..500u32 {
+            if slot % 2 == 0 {
+                for key in 0..64u64 {
+                    if t.remove(key, slot) {
+                        break;
+                    }
+                }
+            }
+        }
+        let mut buckets = Vec::new();
+        let mut arena = Vec::new();
+        t.for_each_bucket(|key, postings| {
+            buckets.push((key, postings.len() as u32));
+            arena.extend_from_slice(postings);
+        });
+        assert_eq!(arena.len(), t.postings_len());
+        let r = SubstringTable::from_buckets(t.source().clone(), &buckets, arena);
+        assert_eq!(r.bucket_count(), t.bucket_count());
+        assert_eq!(r.arena_dead(), 0, "reassembled arena starts fully live");
+        assert_eq!(r.arena_capacity(), t.postings_len());
+        for key in 0..64u64 {
+            let mut a = t.bucket(key).map(<[u32]>::to_vec).unwrap_or_default();
+            let mut b = r.bucket(key).map(<[u32]>::to_vec).unwrap_or_default();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "key={key}");
+        }
+        // The reassembled table keeps serving churn.
+        let mut r = r;
+        r.insert(5, 9000);
+        assert!(r.bucket(5).unwrap().contains(&9000));
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //!               fig4 fig5 table3 sec6 | all
 //!   artifacts   list compiled artifacts
 
+use cbe::bits::BitCode;
 use cbe::coordinator::{BatcherConfig, EmbeddingService, RetrainConfig, ServiceConfig};
 use cbe::data::{generate, SynthConfig};
 use cbe::encoders::CbeTrainer;
 use cbe::experiments as exp;
-use cbe::index::IndexBackend;
+use cbe::index::persist::{LoadReport, PersistOptions, PersistentIndex};
+use cbe::index::{IndexBackend, IndexKind, RecoveryState};
 use cbe::fft::Planner;
 use cbe::opt::TimeFreqConfig;
 use cbe::runtime::Manifest;
@@ -50,6 +52,8 @@ fn main() -> anyhow::Result<()> {
         "serve" => cmd_serve(&args),
         "train" => cmd_train(&args),
         "encode" => cmd_encode(&args),
+        "save-index" => cmd_save_index(&args),
+        "load-index" => cmd_load_index(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
@@ -74,6 +78,9 @@ fn print_usage() {
          \x20 serve      run the embedding service demo (parallel batch encode)\n\
          \x20 train      train CBE-opt on synthetic data (native optimizer)\n\
          \x20 encode     batch-encode random vectors through the service\n\
+         \x20 save-index build an index over a seeded corpus and persist it\n\
+         \x20            (checksummed snapshot + write-ahead log)\n\
+         \x20 load-index load/recover a persisted index and verify it serves\n\
          \x20 exp <id>   reproduce a paper artifact: fig1 table2 fig2 fig3\n\
          \x20            fig4 fig5 table3 sec6 all\n\
          \x20 artifacts  list compiled artifacts\n\
@@ -81,10 +88,17 @@ fn print_usage() {
          common flags: --artifacts DIR --d N --bits K --seed S\n\
          \x20             --index SPEC (auto | linear | mih[:m] | mih-sampled[:m] |\n\
          \x20                           sharded:<shards>[:m])\n\
+         \x20             --queue-depth N (admission bound; 0 = CBE_QUEUE_DEPTH\n\
+         \x20                              env, default 1024)\n\
          serve flags:  --retrain (train from the corpus reservoir and hot-swap\n\
          \x20             the model live) --retrain-sample N --retrain-iters N\n\
+         \x20             --index-path DIR (load the index from a persisted\n\
+         \x20             snapshot+wal, or build+save it, and demo wal churn)\n\
          \x20             --stats (print the stats snapshot as JSON on exit)\n\
          \x20             --stats-every SECS (stream snapshots to stderr)\n\
+         persist flags: --index-path DIR (for save-index / load-index; the\n\
+         \x20             fault plan env CBE_FAULT=crash:<n>|abort:<n> kills the\n\
+         \x20             writer at persistence op <n> for recovery drills)\n\
          train flags:  --threads N (0 = auto) --deterministic BOOL\n\
          \x20             --cache-budget BYTES (trainer spectrum-cache budget,\n\
          \x20             also env CBE_CACHE_BUDGET; 0 = unlimited)\n\
@@ -153,6 +167,7 @@ fn cmd_encode(args: &Args) -> anyhow::Result<()> {
             },
             index: IndexBackend::Auto,
             retrain: RetrainConfig::default(),
+            queue_depth: args.usize("queue-depth", 0),
         },
         rng.normal_vec(d),
         rng.sign_vec(d),
@@ -174,6 +189,126 @@ fn cmd_encode(args: &Args) -> anyhow::Result<()> {
         ones as f64 / (count * bits) as f64
     );
     println!("metrics: {}", service.metrics.summary(32));
+    Ok(())
+}
+
+fn index_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("index-path", "index_dir"))
+}
+
+/// Start a service over the *seeded* random projection (no training):
+/// `save-index` and `load-index` runs in separate processes derive the
+/// same parameters from the same `--seed`, so the snapshot's model
+/// fingerprint verifies across them.
+fn seeded_service(
+    args: &Args,
+    d: usize,
+    bits: usize,
+    seed: u64,
+    backend: IndexBackend,
+) -> anyhow::Result<EmbeddingService> {
+    let mut rng = Pcg64::new(seed);
+    EmbeddingService::start(
+        &artifacts_dir(args),
+        ServiceConfig {
+            d,
+            bits,
+            batcher: BatcherConfig::default(),
+            index: backend,
+            retrain: RetrainConfig::default(),
+            queue_depth: args.usize("queue-depth", 0),
+        },
+        rng.normal_vec(d),
+        rng.sign_vec(d),
+    )
+}
+
+fn dir_bytes(dir: &std::path::Path) -> anyhow::Result<u64> {
+    let mut total = 0;
+    for entry in std::fs::read_dir(dir)? {
+        total += entry?.metadata()?.len();
+    }
+    Ok(total)
+}
+
+fn print_load_report(report: &LoadReport) {
+    match &report.state {
+        RecoveryState::Loaded => println!(
+            "recovery: clean load (generation {}, {} wal records replayed)",
+            report.generation, report.wal_records_replayed
+        ),
+        RecoveryState::LoadedWithTruncatedWalTail { dropped_bytes } => println!(
+            "recovery: dropped {dropped_bytes} torn wal tail bytes \
+             (generation {}, {} wal records replayed)",
+            report.generation, report.wal_records_replayed
+        ),
+    }
+}
+
+fn cmd_save_index(args: &Args) -> anyhow::Result<()> {
+    let d = args.usize("d", 256);
+    let bits = args.usize("bits", d.min(128));
+    let n_db = args.usize("db", 2000);
+    let seed = args.u64("seed", 5);
+    let dir = index_dir(args);
+    let backend = IndexBackend::from_spec(&args.str("index", "mih"))
+        .map_err(|e| anyhow::anyhow!("--index: {e}"))?;
+    let service = seeded_service(args, d, bits, seed, backend)?;
+    let ds = generate(&SynthConfig::flickr(n_db, d, seed ^ 0xC0FFEE));
+    let rows: Vec<Vec<f32>> = (0..n_db).map(|i| ds.x.row(i).to_vec()).collect();
+    let (index, build_ms) = cbe::util::timer::time_ms(|| service.build_index(&rows).unwrap());
+    let (saved, save_ms) = cbe::util::timer::time_ms(|| service.save_index(&dir, &index));
+    saved.map_err(|e| anyhow::anyhow!("save-index: {e}"))?;
+    println!(
+        "saved {} rows ({} bits, backend: {}) to {}: {} bytes in {save_ms:.1} ms \
+         (index built in {build_ms:.1} ms); model fingerprint {:#018x}",
+        index.len(),
+        bits,
+        index.backend_name(),
+        dir.display(),
+        dir_bytes(&dir)?,
+        service.model_fingerprint()
+    );
+    Ok(())
+}
+
+fn cmd_load_index(args: &Args) -> anyhow::Result<()> {
+    let d = args.usize("d", 256);
+    let bits = args.usize("bits", d.min(128));
+    let n_db = args.usize("db", 2000);
+    let topk = args.usize("topk", 10);
+    let seed = args.u64("seed", 5);
+    let dir = index_dir(args);
+    let service = seeded_service(args, d, bits, seed, IndexBackend::Auto)?;
+    let (loaded, load_ms) = cbe::util::timer::time_ms(|| service.load_index(&dir));
+    let (index, report) = loaded.map_err(|e| anyhow::anyhow!("load-index: {e}"))?;
+    print_load_report(&report);
+    println!(
+        "loaded {} rows (backend: {}) from {} in {load_ms:.1} ms",
+        index.len(),
+        index.backend_name(),
+        dir.display()
+    );
+    // Verify the recovered index actually serves: with the same --d,
+    // --bits, --db, and --seed as the save, every corpus row must find
+    // itself at Hamming distance 0.
+    let ds = generate(&SynthConfig::flickr(n_db, d, seed ^ 0xC0FFEE));
+    let checks = 20.min(index.len()).min(n_db);
+    let mut hits_self = 0usize;
+    for qi in 0..checks {
+        let hits = service
+            .search(&index, ds.x.row(qi).to_vec(), topk)
+            .map_err(|e| anyhow::anyhow!("search: {e}"))?;
+        if hits.iter().any(|h| h.id == qi as u32) {
+            hits_self += 1;
+        }
+    }
+    anyhow::ensure!(
+        hits_self == checks,
+        "recovered index lost rows: {hits_self}/{checks} self-queries hit \
+         (were --d/--bits/--db/--seed the same as at save time?)"
+    );
+    println!("verified: {checks}/{checks} self-queries hit their own id");
     Ok(())
 }
 
@@ -212,6 +347,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             batcher: BatcherConfig::default(),
             index: backend,
             retrain,
+            queue_depth: args.usize("queue-depth", 0),
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),
@@ -266,11 +402,42 @@ fn serve_demo(
     topk: usize,
 ) -> anyhow::Result<()> {
     let rows: Vec<Vec<f32>> = (0..n_db).map(|i| ds.x.row(i).to_vec()).collect();
-    let (index, ms) = cbe::util::timer::time_ms(|| service.build_index(&rows).unwrap());
-    println!(
-        "indexed {n_db} vectors in {ms:.1} ms (backend: {})",
-        index.backend_name()
-    );
+    let build = || {
+        let (index, ms) = cbe::util::timer::time_ms(|| service.build_index(&rows).unwrap());
+        println!(
+            "indexed {n_db} vectors in {ms:.1} ms (backend: {})",
+            index.backend_name()
+        );
+        index
+    };
+    // --index-path: load (and recover) the persisted index if the
+    // directory holds a usable one for the live model; otherwise build
+    // fresh and save it for the next run.
+    let index_path = args.has("index-path").then(|| index_dir(args));
+    let index = match &index_path {
+        Some(dir) => match service.load_index(dir) {
+            Ok((index, report)) => {
+                print_load_report(&report);
+                println!(
+                    "loaded {} vectors from {} (backend: {})",
+                    index.len(),
+                    dir.display(),
+                    index.backend_name()
+                );
+                index
+            }
+            Err(e) => {
+                println!("no usable index at {} ({e}); building fresh", dir.display());
+                let index = build();
+                service
+                    .save_index(dir, &index)
+                    .map_err(|e| anyhow::anyhow!("save index: {e}"))?;
+                println!("saved snapshot to {}", dir.display());
+                index
+            }
+        },
+        None => build(),
+    };
 
     let mut hits_self = 0usize;
     let queries = 50usize;
@@ -289,6 +456,14 @@ fn serve_demo(
         qms / queries as f64,
         hits_self as f64 / queries as f64
     );
+
+    // --index-path churn demo: run live insert/remove traffic through
+    // the write-ahead log (linear indexes are immutable, so skip them).
+    if let Some(dir) = &index_path {
+        if !matches!(index.kind(), IndexKind::Linear(_)) {
+            churn_demo(service, dir, ds, n_db)?;
+        }
+    }
 
     // --retrain: re-learn the model from the corpus reservoir and
     // hot-swap it in with the service still running, then serve again.
@@ -325,6 +500,56 @@ fn serve_demo(
             hits_self as f64 / queries as f64
         );
     }
+    Ok(())
+}
+
+/// WAL churn demo: log inserts for corpus rows past the indexed cut,
+/// prove they serve, then log their removal — the directory ends in the
+/// same logical state it began in, so repeated `serve --index-path`
+/// runs are idempotent while the wal genuinely grows and replays.
+fn churn_demo(
+    service: &EmbeddingService,
+    dir: &std::path::Path,
+    ds: &cbe::data::Dataset,
+    n_db: usize,
+) -> anyhow::Result<()> {
+    let (mut pidx, _) = PersistentIndex::open(dir, PersistOptions::default())
+        .map_err(|e| anyhow::anyhow!("reopen index for churn: {e}"))?;
+    let bits = pidx.index().bits();
+    let extra = 8usize;
+    let encode_row = |i: usize| -> anyhow::Result<BitCode> {
+        let resp = service
+            .encode(ds.x.row(i).to_vec())
+            .map_err(|e| anyhow::anyhow!("encode: {e}"))?;
+        Ok(BitCode::from_signs(&resp.signs, 1, bits))
+    };
+    for i in 0..extra {
+        let id = (n_db + i) as u32;
+        // A prior crashed run may have logged this insert without its
+        // matching remove; clear it so the insert cannot collide.
+        pidx.remove(id).map_err(|e| anyhow::anyhow!("wal remove: {e}"))?;
+        let code = encode_row(n_db + i)?;
+        pidx.insert(id, code.code(0))
+            .map_err(|e| anyhow::anyhow!("wal insert: {e}"))?;
+    }
+    // The logged rows must be live: the first insert finds itself.
+    let probe = encode_row(n_db)?;
+    let top = pidx.search(probe.code(0), 1).first().map(|h| h.id);
+    anyhow::ensure!(
+        top == Some(n_db as u32),
+        "wal-inserted row {n_db} not searchable (top hit: {top:?})"
+    );
+    for i in 0..extra {
+        pidx.remove((n_db + i) as u32)
+            .map_err(|e| anyhow::anyhow!("wal remove: {e}"))?;
+    }
+    pidx.flush().map_err(|e| anyhow::anyhow!("wal flush: {e}"))?;
+    println!(
+        "wal churn: {extra} inserts + {extra} removes logged and fsync'd \
+         (generation {}, {} wal records)",
+        pidx.generation(),
+        pidx.wal_records()
+    );
     Ok(())
 }
 

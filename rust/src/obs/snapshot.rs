@@ -67,6 +67,17 @@ pub struct StatsSnapshot {
     pub retrains: u64,
     /// Searches refused with `CbeError::StaleIndex`.
     pub stale_rejections: u64,
+    /// Requests rejected at admission with `CbeError::Overloaded`
+    /// (bounded queue full).
+    pub overloads: u64,
+    /// WAL records durably appended (process-wide).
+    pub wal_appends: u64,
+    /// WAL records replayed onto snapshots during loads (process-wide).
+    pub wal_replays: u64,
+    /// WAL compactions into fresh snapshots (process-wide).
+    pub wal_compactions: u64,
+    /// Completed recovery loads (process-wide).
+    pub recoveries: u64,
     /// Process-wide MIH bucket lookups.
     pub probes: u64,
     /// Process-wide postings touched before dedup.
@@ -93,6 +104,10 @@ impl StatsSnapshot {
         self.reranked = rec.counter(Counter::Reranked);
         self.plan_cache_hits = rec.counter(Counter::PlanHit);
         self.plan_cache_misses = rec.counter(Counter::PlanMiss);
+        self.wal_appends = rec.counter(Counter::WalAppend);
+        self.wal_replays = rec.counter(Counter::WalReplay);
+        self.wal_compactions = rec.counter(Counter::WalCompaction);
+        self.recoveries = rec.counter(Counter::Recovery);
         self.stages = Stage::ALL
             .iter()
             .map(|&s| (s.name(), StageStats::from_histogram(rec.histogram(s))))
@@ -121,6 +136,16 @@ impl StatsSnapshot {
             ("batch_occupancy", Json::num(self.batch_occupancy)),
             ("retrains", Json::num(self.retrains as f64)),
             ("stale_rejections", Json::num(self.stale_rejections as f64)),
+            ("overloads", Json::num(self.overloads as f64)),
+            (
+                "persist",
+                Json::obj(vec![
+                    ("wal_appends", Json::num(self.wal_appends as f64)),
+                    ("wal_replays", Json::num(self.wal_replays as f64)),
+                    ("wal_compactions", Json::num(self.wal_compactions as f64)),
+                    ("recoveries", Json::num(self.recoveries as f64)),
+                ]),
+            ),
             (
                 "index",
                 Json::obj(vec![
@@ -152,6 +177,8 @@ mod tests {
         rec.record_us(Stage::Encode, 120);
         rec.record_us(Stage::Probe, 40);
         rec.add(Counter::Probes, 6);
+        rec.add(Counter::WalAppend, 2);
+        rec.add(Counter::Recovery, 1);
         let hist = Histogram::new();
         hist.record(500);
         let snap = StatsSnapshot {
@@ -181,6 +208,16 @@ mod tests {
                 .and_then(Json::as_f64),
             Some(6.0)
         );
+        assert_eq!(snap.wal_appends, 2);
+        assert_eq!(snap.recoveries, 1);
+        assert_eq!(
+            parsed
+                .get("persist")
+                .and_then(|p| p.get("wal_appends"))
+                .and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(parsed.get("overloads").and_then(Json::as_f64), Some(0.0));
         let enc = parsed.get("stages").and_then(|s| s.get("encode")).unwrap();
         assert_eq!(enc.get("count").and_then(Json::as_f64), Some(1.0));
         assert_eq!(

@@ -46,10 +46,13 @@ pub enum Stage {
     Sweep,
     /// Trainer: closed-form per-bin solve + inverse FFT.
     BinSolve,
+    /// Persist: reading + validating a snapshot and replaying its WAL
+    /// (the whole `persist::load` path, per load).
+    SnapshotLoad,
 }
 
 impl Stage {
-    pub const COUNT: usize = 10;
+    pub const COUNT: usize = 11;
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::QueueWait,
         Stage::ModelResolve,
@@ -61,6 +64,7 @@ impl Stage {
         Stage::CacheBuild,
         Stage::Sweep,
         Stage::BinSolve,
+        Stage::SnapshotLoad,
     ];
 
     /// Stable snake_case name — the key used in the stats snapshot JSON.
@@ -76,6 +80,7 @@ impl Stage {
             Stage::CacheBuild => "cache_build",
             Stage::Sweep => "sweep",
             Stage::BinSolve => "bin_solve",
+            Stage::SnapshotLoad => "snapshot_load",
         }
     }
 
@@ -98,16 +103,28 @@ pub enum Counter {
     PlanHit,
     /// FFT plan-cache write-path entries (first build of a length).
     PlanMiss,
+    /// WAL records durably appended (insert/remove churn).
+    WalAppend,
+    /// WAL records replayed onto a snapshot during load.
+    WalReplay,
+    /// WAL compactions: churn folded into a fresh snapshot, log reset.
+    WalCompaction,
+    /// Recovery loads completed (any terminal classification).
+    Recovery,
 }
 
 impl Counter {
-    pub const COUNT: usize = 5;
+    pub const COUNT: usize = 9;
     pub const ALL: [Counter; Counter::COUNT] = [
         Counter::Probes,
         Counter::Candidates,
         Counter::Reranked,
         Counter::PlanHit,
         Counter::PlanMiss,
+        Counter::WalAppend,
+        Counter::WalReplay,
+        Counter::WalCompaction,
+        Counter::Recovery,
     ];
 
     pub fn name(self) -> &'static str {
@@ -117,6 +134,10 @@ impl Counter {
             Counter::Reranked => "reranked",
             Counter::PlanHit => "plan_hits",
             Counter::PlanMiss => "plan_misses",
+            Counter::WalAppend => "wal_appends",
+            Counter::WalReplay => "wal_replays",
+            Counter::WalCompaction => "wal_compactions",
+            Counter::Recovery => "recoveries",
         }
     }
 

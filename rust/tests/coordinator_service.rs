@@ -32,6 +32,7 @@ fn service(d: usize, bits: usize, seed: u64) -> (EmbeddingService, Vec<f32>, Vec
             },
             index: IndexBackend::Auto,
             retrain: RetrainConfig::default(),
+            queue_depth: 0,
         },
         r.clone(),
         signs.clone(),
@@ -272,6 +273,7 @@ fn stats_snapshot_reflects_served_workload() {
             // backend, which would leave the probe histogram empty.
             index: IndexBackend::Mih { m: None },
             retrain: RetrainConfig::default(),
+            queue_depth: 0,
         },
         rng.normal_vec(64),
         rng.sign_vec(64),
@@ -330,6 +332,71 @@ fn stats_snapshot_reflects_served_workload() {
         encode.get("count").and_then(cbe::util::json::Json::as_f64),
         Some(snap.stage("encode").unwrap().count as f64)
     );
+}
+
+#[test]
+fn overload_sheds_with_typed_error_instead_of_buffering_forever() {
+    // Admission control: the request channel is bounded, and a full
+    // queue rejects with CbeError::Overloaded instead of growing without
+    // limit. Depth 1 + single-request batches + a non-trivial encode
+    // keep the event loop busy while a burst of async submits arrives,
+    // so some of them must hit the bound.
+    let d = 1024;
+    let mut rng = Pcg64::new(51);
+    let svc = EmbeddingService::start(
+        &artifacts_dir(),
+        ServiceConfig {
+            d,
+            bits: 256,
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+            },
+            index: IndexBackend::Auto,
+            retrain: RetrainConfig::default(),
+            queue_depth: 1,
+        },
+        rng.normal_vec(d),
+        rng.sign_vec(d),
+    )
+    .unwrap();
+    assert_eq!(svc.queue_depth(), 1);
+
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..256 {
+        match svc.encode_async(rng.normal_vec(d)) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                assert_eq!(e, cbe::CbeError::Overloaded { depth: 1 });
+                assert!(e.to_string().contains("overloaded"), "{e}");
+                shed += 1;
+            }
+        }
+    }
+    assert!(shed > 0, "256 burst submits never overflowed a depth-1 queue");
+    assert!(!accepted.is_empty(), "admission control rejected everything");
+    // Every accepted request is still served to completion.
+    for rx in accepted {
+        let resp = rx.recv().expect("accepted request was dropped");
+        assert_eq!(resp.signs.len(), 256);
+    }
+    assert_eq!(svc.metrics.overload_count(), shed as u64);
+    let snap = svc.stats().unwrap();
+    assert_eq!(snap.overloads, shed as u64);
+    // The blocking path surfaces the same typed error when it loses the
+    // race (cannot force it deterministically here, so just check the
+    // queue drained and the service still serves).
+    let resp = svc.encode(rng.normal_vec(d)).unwrap();
+    assert_eq!(resp.signs.len(), 256);
+}
+
+#[test]
+fn queue_depth_resolution_prefers_config() {
+    // queue_depth = 0 defers to CBE_QUEUE_DEPTH (unset here) → 1024
+    // default; explicit config wins outright.
+    let (svc, _, _) = service(64, 32, 52);
+    assert_eq!(svc.queue_depth(), 1024);
 }
 
 // ---------------------------------------------------------- properties

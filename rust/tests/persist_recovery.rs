@@ -1,0 +1,517 @@
+//! Integration: the crash-safe persistence tier under fault injection.
+//!
+//! The central property is the *recovery matrix*: a churn workload is
+//! dry-run once with no faults to enumerate every durability syscall it
+//! makes (each write, fsync, rename, and directory fsync is one op on
+//! the deterministic `FaultClock`), then the exact same workload is
+//! replayed killing the writer at every single op `0..n`. Whatever
+//! boundary the crash lands on, reopening the directory must yield
+//! either the precise pre-crash index (acknowledged ops only, plus at
+//! most the one in-flight op whose log record became durable before the
+//! crash) or a typed `CbeError` — never a panic, never silently wrong
+//! results. Torn-write and bit-flip variants cover the two ways real
+//! storage lies beyond clean crashes.
+
+use cbe::bits::BitCode;
+use cbe::coordinator::{BatcherConfig, EmbeddingService, RetrainConfig, ServiceConfig};
+use cbe::index::persist::faults::FaultPlan;
+use cbe::index::persist::{self, PersistOptions, PersistentIndex, RecoveryState, SnapshotStamp};
+use cbe::index::{build_index_with_ids, IndexAny, IndexBackend};
+use cbe::proptest_lite::forall;
+use cbe::util::rng::Pcg64;
+use cbe::CbeError;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "cbe_recovery_{tag}_{}_{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// 96 bits → 2 words per code with 32 padding bits, so the padding-zero
+/// invariant is actually load-bearing through the WAL roundtrip.
+const BITS: usize = 96;
+const BASE_N: usize = 12;
+
+fn base_index(seed: u64) -> IndexAny {
+    let mut rng = Pcg64::new(seed);
+    let codes = BitCode::from_signs(&rng.sign_vec(BASE_N * BITS), BASE_N, BITS);
+    build_index_with_ids(
+        codes,
+        (0..BASE_N as u32).collect(),
+        &IndexBackend::Mih { m: Some(2) },
+    )
+}
+
+/// Deterministic code for a churned id; word 1 keeps its top 32 bits
+/// zero (the padding contract for 96-bit codes).
+fn code_for(id: u32) -> [u64; 2] {
+    [
+        u64::from(id).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1,
+        u64::from(id) & 0xFFFF_FFFF,
+    ]
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Insert(u32),
+    Remove(u32),
+    Checkpoint,
+}
+
+/// Live-id set after the first `acked` ops, starting from the base corpus.
+fn expected_ids(ops: &[Op], acked: usize) -> BTreeSet<u32> {
+    let mut live: BTreeSet<u32> = (0..BASE_N as u32).collect();
+    for op in &ops[..acked] {
+        match op {
+            Op::Insert(id) => {
+                live.insert(*id);
+            }
+            Op::Remove(id) => {
+                live.remove(id);
+            }
+            Op::Checkpoint => {}
+        }
+    }
+    live
+}
+
+/// Ids the index actually holds, over the universe this workload touches.
+fn live_ids(index: &IndexAny, ops: &[Op]) -> BTreeSet<u32> {
+    let mut universe: BTreeSet<u32> = (0..BASE_N as u32).collect();
+    for op in ops {
+        if let Op::Insert(id) | Op::Remove(id) = op {
+            universe.insert(*id);
+        }
+    }
+    universe.into_iter().filter(|id| index.contains(*id)).collect()
+}
+
+struct RunOutcome {
+    /// Ops acknowledged (returned Ok) before the first failure.
+    acked: usize,
+    /// Whether `PersistentIndex::create` itself got to return Ok.
+    created: bool,
+    result: Result<(), CbeError>,
+    /// Fault-clock ops consumed — on a clean dry run, the crash-point
+    /// count the matrix must cover.
+    total_fault_ops: u64,
+}
+
+fn run_workload(dir: &Path, ops: &[Op], plan: FaultPlan, seed: u64) -> RunOutcome {
+    let popts = PersistOptions {
+        sync_on_append: true,
+        compact_threshold: 0,
+        faults: plan,
+    };
+    let mut p = match PersistentIndex::create(dir, base_index(seed), SnapshotStamp::none(), popts) {
+        Ok(p) => p,
+        Err(e) => {
+            return RunOutcome {
+                acked: 0,
+                created: false,
+                result: Err(e),
+                total_fault_ops: 0,
+            }
+        }
+    };
+    let mut acked = 0usize;
+    for op in ops {
+        let step = match op {
+            Op::Insert(id) => p.insert(*id, &code_for(*id)),
+            Op::Remove(id) => p.remove(*id).map(|_| ()),
+            Op::Checkpoint => p.checkpoint(),
+        };
+        match step {
+            Ok(()) => acked += 1,
+            Err(e) => {
+                let ops_used = p.fault_ops();
+                return RunOutcome {
+                    acked,
+                    created: true,
+                    result: Err(e),
+                    total_fault_ops: ops_used,
+                };
+            }
+        }
+    }
+    let total_fault_ops = p.fault_ops();
+    RunOutcome {
+        acked,
+        created: true,
+        result: Ok(()),
+        total_fault_ops,
+    }
+}
+
+fn clean_opts() -> PersistOptions {
+    PersistOptions {
+        sync_on_append: true,
+        compact_threshold: 0,
+        faults: FaultPlan::none(),
+    }
+}
+
+/// The matrix proper: dry-run to count crash points, then crash (per
+/// `make_plan`) at each one and check recovery against the oracle.
+fn assert_recovery_matrix(ops: &[Op], seed: u64, tag: &str, make_plan: impl Fn(u64) -> FaultPlan) {
+    let dry_dir = temp_dir(&format!("{tag}_dry"));
+    let dry = run_workload(&dry_dir, ops, FaultPlan::none(), seed);
+    let _ = std::fs::remove_dir_all(&dry_dir);
+    assert!(dry.result.is_ok(), "dry run failed: {:?}", dry.result);
+    assert_eq!(dry.acked, ops.len());
+    assert!(dry.total_fault_ops > 0, "workload consumed no fault ops");
+
+    for crash_op in 0..dry.total_fault_ops {
+        let dir = temp_dir(&format!("{tag}_{crash_op}"));
+        let run = run_workload(&dir, ops, make_plan(crash_op), seed);
+        assert!(
+            run.result.is_err(),
+            "plan at op {crash_op} never fired (dry run counted {} ops)",
+            dry.total_fault_ops
+        );
+        match PersistentIndex::open(&dir, clean_opts()) {
+            Ok((recovered, _report)) => {
+                let got = live_ids(recovered.index(), ops);
+                let at_ack = expected_ids(ops, run.acked);
+                let with_inflight = expected_ids(ops, (run.acked + 1).min(ops.len()));
+                assert!(
+                    got == at_ack || got == with_inflight,
+                    "crash at op {crash_op}: recovered ids {got:?} match neither the \
+                     acked state {at_ack:?} nor acked+in-flight {with_inflight:?}"
+                );
+                drop(recovered);
+                // Recovery must be idempotent: the second open finds a
+                // clean directory (tail repairs stuck) and the same rows.
+                let (again, report) = PersistentIndex::open(&dir, clean_opts())
+                    .unwrap_or_else(|e| panic!("re-open after recovery at op {crash_op}: {e}"));
+                assert_eq!(
+                    report.state,
+                    RecoveryState::Loaded,
+                    "tail repair did not persist after crash at op {crash_op}"
+                );
+                assert_eq!(live_ids(again.index(), ops), got);
+            }
+            Err(CbeError::CorruptSnapshot { reason }) => {
+                // Only legitimate before the very first snapshot landed:
+                // once create() returned Ok, every later crash leaves a
+                // loadable directory.
+                assert!(
+                    !run.created,
+                    "crash at op {crash_op} corrupted an already-created index: {reason}"
+                );
+            }
+            Err(other) => panic!("crash at op {crash_op}: unexpected error kind {other}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn fixed_workload() -> Vec<Op> {
+    vec![
+        Op::Insert(100),
+        Op::Insert(101),
+        Op::Remove(3),
+        Op::Checkpoint,
+        Op::Insert(102),
+        Op::Remove(100),
+    ]
+}
+
+#[test]
+fn recovery_matrix_clean_crash_at_every_syscall() {
+    assert_recovery_matrix(&fixed_workload(), 71, "crash", FaultPlan::crash_at);
+}
+
+#[test]
+fn recovery_matrix_torn_writes_at_every_syscall() {
+    // 7 bytes is shorter than any WAL record (13 B minimum) and any
+    // snapshot section, so every torn write leaves a detectable stub.
+    assert_recovery_matrix(&fixed_workload(), 72, "torn", |op| FaultPlan::torn_at(op, 7));
+}
+
+#[test]
+fn prop_recovery_matrix_random_churn() {
+    forall("recovery matrix over random churn", 4, |g| {
+        let mut ops = Vec::new();
+        let mut next_id = 200u32;
+        let mut live: Vec<u32> = (0..BASE_N as u32).collect();
+        let n_ops = g.usize_in(3, 8);
+        for _ in 0..n_ops {
+            match g.usize_in(0, 5) {
+                0 | 1 | 2 => {
+                    ops.push(Op::Insert(next_id));
+                    live.push(next_id);
+                    next_id += 1;
+                }
+                3 | 4 => {
+                    let victim = live[g.usize_in(0, live.len() - 1)];
+                    live.retain(|&id| id != victim);
+                    ops.push(Op::Remove(victim));
+                }
+                _ => ops.push(Op::Checkpoint),
+            }
+        }
+        let seed = 80 + g.case as u64;
+        assert_recovery_matrix(&ops, seed, &format!("prop{}", g.case), FaultPlan::crash_at);
+    });
+}
+
+#[test]
+fn flipped_bits_are_detected_never_believed() {
+    // Silent media corruption: flip one bit of each write the workload
+    // makes (the op still succeeds). A later open must end in a typed
+    // CorruptSnapshot or in a state equal to some acknowledged prefix
+    // with the damage *reported* (a flipped WAL record is
+    // indistinguishable from a torn tail, and is dropped as one) —
+    // never a panic, never unreported garbage.
+    let ops = fixed_workload();
+    let dry_dir = temp_dir("flip_dry");
+    let dry = run_workload(&dry_dir, &ops, FaultPlan::none(), 73);
+    let _ = std::fs::remove_dir_all(&dry_dir);
+    assert!(dry.result.is_ok());
+    let prefix_states: Vec<BTreeSet<u32>> =
+        (0..=ops.len()).map(|k| expected_ids(&ops, k)).collect();
+
+    for flip_op in 0..dry.total_fault_ops {
+        for bit in [0u64, 13, 101] {
+            let dir = temp_dir(&format!("flip_{flip_op}_{bit}"));
+            let run = run_workload(&dir, &ops, FaultPlan::flip_at(flip_op, bit), 73);
+            assert!(run.result.is_ok(), "a flip must not fail the writer");
+            match PersistentIndex::open(&dir, clean_opts()) {
+                Ok((recovered, _report)) => {
+                    let got = live_ids(recovered.index(), &ops);
+                    assert!(
+                        prefix_states.iter().any(|s| *s == got),
+                        "flip at op {flip_op} bit {bit}: ids {got:?} match no acked prefix"
+                    );
+                }
+                Err(CbeError::CorruptSnapshot { .. }) => {}
+                Err(other) => panic!("flip at op {flip_op} bit {bit}: unexpected {other}"),
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn torn_tail_is_repaired_and_appendable() {
+    // Tear a WAL append mid-record, recover (tail reported + truncated),
+    // then keep appending through the recovered handle: the log must be
+    // clean again, with no garbage burying the new records.
+    let dir = temp_dir("tail_repair");
+    let ops = [Op::Insert(100), Op::Insert(101)];
+    // Dry-run an identical prefix to find the op index of the *second*
+    // insert's write, then tear it.
+    let probe = temp_dir("tail_repair_probe");
+    let mut p = PersistentIndex::create(
+        &probe,
+        base_index(74),
+        SnapshotStamp::none(),
+        clean_opts(),
+    )
+    .unwrap();
+    let before_second = {
+        p.insert(100, &code_for(100)).unwrap();
+        p.fault_ops()
+    };
+    drop(p);
+    let _ = std::fs::remove_dir_all(&probe);
+
+    let run = run_workload(&dir, &ops, FaultPlan::torn_at(before_second, 7), 74);
+    assert_eq!(run.acked, 1);
+    assert!(run.result.is_err());
+
+    let (mut recovered, report) = PersistentIndex::open(&dir, clean_opts()).unwrap();
+    match report.state {
+        RecoveryState::LoadedWithTruncatedWalTail { dropped_bytes } => {
+            assert_eq!(dropped_bytes, 7, "exactly the torn stub is dropped")
+        }
+        RecoveryState::Loaded => panic!("torn tail was not reported"),
+    }
+    assert!(recovered.index().contains(100));
+    assert!(!recovered.index().contains(101));
+
+    recovered.insert(101, &code_for(101)).unwrap();
+    recovered.insert(102, &code_for(102)).unwrap();
+    drop(recovered);
+    let (p3, report3) = PersistentIndex::open(&dir, clean_opts()).unwrap();
+    assert_eq!(report3.state, RecoveryState::Loaded);
+    assert_eq!(report3.wal_records_replayed, 3);
+    for id in [100u32, 101, 102] {
+        assert!(p3.index().contains(id), "id {id} lost after tail repair");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_snapshot_fuzz_truncations_and_header_damage() {
+    let dir = temp_dir("fuzz");
+    let index = base_index(75);
+    persist::save(&dir, &index, &SnapshotStamp::none()).unwrap();
+    let snap_path = dir.join("current.snap");
+    let pristine = std::fs::read(&snap_path).unwrap();
+
+    // Every proper prefix must be rejected typed — a snapshot is never
+    // partially applied.
+    let cuts: Vec<usize> = (0..pristine.len()).step_by(7).chain([pristine.len() - 1]).collect();
+    for cut in cuts {
+        std::fs::write(&snap_path, &pristine[..cut]).unwrap();
+        match persist::load(&dir) {
+            Err(CbeError::CorruptSnapshot { .. }) => {}
+            other => panic!("truncation to {cut} bytes: expected CorruptSnapshot, got {other:?}"),
+        }
+    }
+    // Header-region damage: wrong magic, version, counts, CRCs. (The
+    // prelude's trailing reserved word at bytes 20..24 sits outside the
+    // CRC and is deliberately ignorable — forward compatibility — so
+    // only the validated 20 bytes are fuzzed.)
+    for byte in 0..20.min(pristine.len()) {
+        for mask in [0x01u8, 0x80] {
+            let mut bad = pristine.clone();
+            bad[byte] ^= mask;
+            std::fs::write(&snap_path, &bad).unwrap();
+            match persist::load(&dir) {
+                Err(CbeError::CorruptSnapshot { .. }) => {}
+                other => panic!("header byte {byte} flipped: expected CorruptSnapshot, got {other:?}"),
+            }
+        }
+    }
+    // Restored bytes load cleanly again.
+    std::fs::write(&snap_path, &pristine).unwrap();
+    let (loaded, report) = persist::load(&dir).unwrap();
+    assert_eq!(report.state, RecoveryState::Loaded);
+    assert_eq!(loaded.len(), BASE_N);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn roundtrip_every_backend_odd_wpc_and_tombstones() {
+    // 160 bits → 3 words per code (odd, with padding); remove more than
+    // half the rows first so the snapshot writer's compaction-on-save
+    // path (tombstone filtering + posting remap) is exercised.
+    let bits = 160;
+    let n = 60;
+    for (tag, backend) in [
+        ("linear", IndexBackend::Linear),
+        ("mih", IndexBackend::Mih { m: Some(2) }),
+        ("mih_sampled", IndexBackend::MihSampled { m: Some(2) }),
+        ("sharded", IndexBackend::ShardedMih { shards: 3, m: Some(2) }),
+    ] {
+        let mut rng = Pcg64::new(76);
+        let codes = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+        let mut index = build_index_with_ids(codes, (0..n as u32).collect(), &backend);
+        if !matches!(backend, IndexBackend::Linear) {
+            for id in 0..35u32 {
+                assert!(index.remove(id).unwrap(), "{tag}: remove {id}");
+            }
+        }
+        let dir = temp_dir(&format!("roundtrip_{tag}"));
+        persist::save(&dir, &index, &SnapshotStamp::none()).unwrap();
+        let (loaded, _) = persist::load(&dir).unwrap();
+        assert_eq!(loaded.len(), index.len(), "{tag}: row count changed");
+        let queries = BitCode::from_signs(&rng.sign_vec(10 * bits), 10, bits);
+        for qi in 0..queries.n {
+            assert_eq!(
+                loaded.search(queries.code(qi), 5),
+                index.search(queries.code(qi), 5),
+                "{tag}: query {qi} diverged after the roundtrip"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn stale_model_fingerprint_rejected_across_services() {
+    // Two services with different projections simulate two processes.
+    // The snapshot carries the saving model's parameter fingerprint, so
+    // the wrong service refuses it typed instead of serving neighbors
+    // from a foreign embedding; an identically-seeded service accepts it
+    // and re-stamps it at its own live registry version.
+    fn start(seed: u64) -> EmbeddingService {
+        let d = 64;
+        let mut rng = Pcg64::new(seed);
+        EmbeddingService::start(
+            &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            ServiceConfig {
+                d,
+                bits: 32,
+                batcher: BatcherConfig {
+                    max_batch: 32,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+                index: IndexBackend::Mih { m: Some(2) },
+                retrain: RetrainConfig::default(),
+                queue_depth: 0,
+            },
+            rng.normal_vec(d),
+            rng.sign_vec(d),
+        )
+        .unwrap()
+    }
+    let mut rng = Pcg64::new(77);
+    let rows: Vec<Vec<f32>> = (0..40).map(|_| rng.normal_vec(64)).collect();
+
+    let saver = start(61);
+    let index = saver.build_index(&rows).unwrap();
+    let dir = temp_dir("fingerprint");
+    saver.save_index(&dir, &index).unwrap();
+
+    let wrong = start(62);
+    assert_ne!(wrong.model_fingerprint(), saver.model_fingerprint());
+    match wrong.load_index(&dir) {
+        Err(CbeError::StaleIndex { .. }) => {}
+        other => panic!("foreign-model snapshot accepted: {other:?}"),
+    }
+
+    let twin = start(61);
+    assert_eq!(twin.model_fingerprint(), saver.model_fingerprint());
+    let (loaded, report) = twin.load_index(&dir).unwrap();
+    assert_eq!(report.state, RecoveryState::Loaded);
+    assert_eq!(loaded.len(), 40);
+    // Re-stamped at the twin's live version: searches are accepted and
+    // every row still finds itself.
+    for qi in [0usize, 17, 39] {
+        let hits = twin.search(&loaded, rows[qi].clone(), 3).unwrap();
+        assert_eq!(hits[0].id, qi as u32);
+        assert_eq!(hits[0].dist, 0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn auto_compaction_folds_the_wal_and_drops_tombstones_from_disk() {
+    cbe::obs::set_enabled(true);
+    let dir = temp_dir("compaction");
+    let opts = PersistOptions {
+        sync_on_append: true,
+        compact_threshold: 6,
+        faults: FaultPlan::none(),
+    };
+    let mut p =
+        PersistentIndex::create(&dir, base_index(78), SnapshotStamp::none(), opts.clone()).unwrap();
+    for id in 100..105u32 {
+        p.insert(id, &code_for(id)).unwrap();
+    }
+    assert_eq!(p.generation(), 1);
+    assert_eq!(p.wal_records(), 5);
+    assert!(p.remove(2).unwrap(), "6th record crosses the threshold");
+    assert_eq!(p.generation(), 2, "auto-checkpoint did not fire");
+    assert_eq!(p.wal_records(), 0);
+    drop(p);
+    let (p2, report) = PersistentIndex::open(&dir, opts).unwrap();
+    assert_eq!(report.generation, 2);
+    assert_eq!(report.wal_records_replayed, 0, "checkpoint folded the log");
+    assert_eq!(p2.len(), BASE_N + 5 - 1);
+    assert!(!p2.index().contains(2));
+    let _ = std::fs::remove_dir_all(&dir);
+}
