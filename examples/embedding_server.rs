@@ -83,6 +83,8 @@ fn main() -> anyhow::Result<()> {
             },
             // 0 → CBE_QUEUE_DEPTH env, else the 1024 default.
             queue_depth: 0,
+            // Auto → CBE_MMAP env, else mapped where supported.
+            load_mode: cbe::index::LoadMode::Auto,
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),

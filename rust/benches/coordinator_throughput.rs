@@ -387,6 +387,7 @@ fn bench_service_encode() {
                 index: IndexBackend::Auto,
                 retrain: cbe::coordinator::RetrainConfig::default(),
                 queue_depth: 0,
+                load_mode: cbe::index::LoadMode::Auto,
             },
             rng.normal_vec(d),
             rng.sign_vec(d),
@@ -443,6 +444,7 @@ fn bench_obs() {
             index: IndexBackend::Mih { m: None },
             retrain: cbe::coordinator::RetrainConfig::default(),
             queue_depth: 0,
+            load_mode: cbe::index::LoadMode::Auto,
         },
         rng.normal_vec(d),
         rng.sign_vec(d),

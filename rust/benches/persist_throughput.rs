@@ -8,7 +8,13 @@
 //! * `rebuild` — projection batch-encode of the raw vectors + index
 //!   build (what a process without a snapshot has to do at startup);
 //! * `save` — checksummed snapshot write (temp + fsync + rename);
-//! * `load` — snapshot read, CRC validation, and index reconstruction;
+//! * `load` — the same snapshot through both backings, heap
+//!   (read+copy) and zero-copy mmap, each timed to *first query*
+//!   (open + one search — the cold-start number the mapped tier exists
+//!   to shrink), with the hit lists asserted identical;
+//! * `crc` — the slicing-by-8 checksum kernel A/B'd against the
+//!   byte-wise reference over the real snapshot bytes (the verify pass
+//!   dominates a mapped load);
 //! * `wal` — insert appends through the write-ahead log (fsync
 //!   batched to the end, so the rate is the encode/append path, not the
 //!   disk's fsync latency), then a reopen that replays every record.
@@ -16,8 +22,9 @@
 //! Env knobs:
 //! * `CBE_BENCH_MAX_N=10000` shrinks the corpus (CI-sized machines);
 //! * `CBE_BENCH_ENFORCE=1` hard-fails if load is not strictly faster
-//!   than rebuild (left off on shared runners; the recovery smoke turns
-//!   it on because the gap is an order of magnitude, not a few percent).
+//!   than rebuild, or if the mapped load does not beat the heap load to
+//!   first query (left off on shared runners; the recovery smoke turns
+//!   it on because the gaps are structural, not a few percent).
 
 use cbe::bits::BitCode;
 use cbe::fft::Planner;
@@ -94,16 +101,50 @@ fn main() {
         mb / save_s
     );
 
-    // Load arm: read + CRC-validate + reconstruct.
+    let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
+
+    // Load arms: read + CRC-validate + reconstruct, through both
+    // backings. The save above just wrote the file, so both arms run
+    // against a warm page cache — the measured delta is the copy and
+    // allocation the heap path pays, which is exactly the cost the
+    // mapped path deletes. Each arm is timed to first query, and the
+    // hit lists must match: the backing is invisible to results.
+    let q: Vec<u64> = (0..bits / 64).map(|_| rng.next_u64()).collect();
     let t0 = Instant::now();
-    let (loaded, _report) = persist::load(&dir).expect("load snapshot");
+    let (heap_idx, heap_report) =
+        persist::load_with_mode(&dir, persist::LoadMode::Heap).expect("heap load");
+    let heap_load_s = t0.elapsed().as_secs_f64();
+    let heap_hits = heap_idx.search(&q, 10);
+    let heap_ttfq_s = t0.elapsed().as_secs_f64();
+    assert_eq!(heap_idx.len(), n, "heap load dropped rows");
+    assert_eq!(heap_report.path.name(), "heap");
+    drop(heap_idx);
+    println!(
+        "load:    heap {mb:.1} MiB in {:.1} ms ({:.0} MiB/s); first query at {:.1} ms",
+        heap_load_s * 1e3,
+        mb / heap_load_s,
+        heap_ttfq_s * 1e3
+    );
+
+    let t0 = Instant::now();
+    let (loaded, mmap_report) =
+        persist::load_with_mode(&dir, persist::LoadMode::Mmap).expect("mmap load");
     let load_s = t0.elapsed().as_secs_f64();
-    assert_eq!(loaded.len(), n, "load dropped rows");
+    let mmap_hits = loaded.search(&q, 10);
+    let ttfq_s = t0.elapsed().as_secs_f64();
+    assert_eq!(loaded.len(), n, "mmap load dropped rows");
+    assert_eq!(mmap_hits, heap_hits, "hit lists differ between mmap and heap loads");
     let speedup = rebuild_s / load_s;
     println!(
-        "load:    {mb:.1} MiB in {:.1} ms ({:.0} MiB/s) — {speedup:.1}x faster than rebuild",
+        "load:    {} {mb:.1} MiB in {:.1} ms ({:.0} MiB/s, {} bytes mapped); \
+         first query at {:.1} ms — {speedup:.1}x faster than rebuild, \
+         {:.1}x faster than heap to first query",
+        mmap_report.path.name(),
         load_s * 1e3,
-        mb / load_s
+        mb / load_s,
+        mmap_report.mapped_bytes,
+        ttfq_s * 1e3,
+        heap_ttfq_s / ttfq_s
     );
     if load_s >= rebuild_s {
         println!(
@@ -112,9 +153,35 @@ fn main() {
             load_s * 1e3,
             rebuild_s * 1e3
         );
-        let enforce = std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1");
         assert!(!enforce, "snapshot load regressed vs rebuild (CBE_BENCH_ENFORCE=1)");
     }
+    if mmap_report.path.name() == "mmap" && ttfq_s >= heap_ttfq_s {
+        println!(
+            "WARNING: mapped load did not beat heap to first query \
+             ({:.1} ms vs {:.1} ms)",
+            ttfq_s * 1e3,
+            heap_ttfq_s * 1e3
+        );
+        assert!(!enforce, "mmap time-to-first-query regressed vs heap (CBE_BENCH_ENFORCE=1)");
+    }
+
+    // CRC A/B: the sliced kernel vs the byte-wise reference, over the
+    // actual snapshot bytes it checksums in production.
+    let snap_bytes = std::fs::read(dir.join("current.snap")).expect("read snapshot file");
+    let t0 = Instant::now();
+    let sliced = persist::crc32_sliced(std::hint::black_box(&snap_bytes));
+    let crc_sliced_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let bytewise = persist::crc32_bytewise(std::hint::black_box(&snap_bytes));
+    let crc_bytewise_s = t0.elapsed().as_secs_f64();
+    assert_eq!(sliced, bytewise, "CRC kernels disagree");
+    let smb = snap_bytes.len() as f64 / (1 << 20) as f64;
+    println!(
+        "crc:     slicing-by-8 {:.0} MiB/s vs byte-wise {:.0} MiB/s ({:.1}x)",
+        smb / crc_sliced_s,
+        smb / crc_bytewise_s,
+        crc_bytewise_s / crc_sliced_s
+    );
 
     // WAL arm: append churn through the log (fsync deferred to the final
     // flush so the measured rate is the append path), then replay it all
@@ -124,6 +191,7 @@ fn main() {
         sync_on_append: false,
         compact_threshold: 0,
         faults: FaultPlan::none(),
+        load_mode: persist::LoadMode::Auto,
     };
     let (mut pidx, _) = PersistentIndex::open(&dir, opts.clone()).expect("open for churn");
     let mut wal_rng = Pcg64::new(0x3a1);
@@ -172,6 +240,14 @@ fn main() {
         ("load_s", Json::num(load_s)),
         ("load_mib_s", Json::num(mb / load_s)),
         ("load_speedup_vs_rebuild", Json::num(speedup)),
+        ("load_path", Json::str(mmap_report.path.name())),
+        ("mapped_bytes", Json::num(mmap_report.mapped_bytes as f64)),
+        ("load_heap_s", Json::num(heap_load_s)),
+        ("ttfq_mmap_s", Json::num(ttfq_s)),
+        ("ttfq_heap_s", Json::num(heap_ttfq_s)),
+        ("ttfq_speedup_mmap_vs_heap", Json::num(heap_ttfq_s / ttfq_s)),
+        ("crc_sliced_mib_s", Json::num(smb / crc_sliced_s)),
+        ("crc_bytewise_mib_s", Json::num(smb / crc_bytewise_s)),
         ("wal_appends", Json::num(wal_n as f64)),
         ("wal_append_s", Json::num(append_s)),
         ("wal_appends_per_s", Json::num(wal_n as f64 / append_s)),

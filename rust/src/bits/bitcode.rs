@@ -1,12 +1,20 @@
 //! Packed binary codes: sign(+) → 1-bit, 64 bits per u64 word.
 
+use crate::index::persist::mmap::Words;
+
 /// A set of n fixed-length binary codes, bit-packed row-major.
+///
+/// The word store is a [`Words`] (`Store<u64>`): owned for anything
+/// built in memory, or a zero-copy window into a mapped snapshot after
+/// an mmap load. It derefs to `[u64]`, so indexing and slicing read it
+/// either way; the first mutation of a mapped store promotes it to an
+/// owned copy (see [`crate::index::persist::mmap`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitCode {
     pub n: usize,
     pub bits: usize,
     pub words_per_code: usize,
-    pub data: Vec<u64>,
+    pub data: Words,
 }
 
 impl BitCode {
@@ -16,7 +24,7 @@ impl BitCode {
             n,
             bits,
             words_per_code: wpc,
-            data: vec![0u64; n * wpc],
+            data: Words::owned(vec![0u64; n * wpc]),
         }
     }
 
@@ -25,8 +33,9 @@ impl BitCode {
     /// batch-encode loop recycles one `BitCode` across batches with this.
     pub fn reset(&mut self, n: usize) {
         self.n = n;
-        self.data.clear();
-        self.data.resize(n * self.words_per_code, 0);
+        let data = self.data.to_mut();
+        data.clear();
+        data.resize(n * self.words_per_code, 0);
     }
 
     /// Pack rows of ±1 (or arbitrary-sign f32) values; v ≥ 0 → bit set.

@@ -142,6 +142,10 @@ pub struct ServiceConfig {
     /// collapse and OOM). 0 = read `CBE_QUEUE_DEPTH`, defaulting to
     /// 1024.
     pub queue_depth: usize,
+    /// Snapshot-load backing for [`EmbeddingService::load_index`]:
+    /// zero-copy mmap vs portable heap copy. `Auto` (the default)
+    /// consults `CBE_MMAP`, then maps wherever the platform supports it.
+    pub load_mode: persist::LoadMode,
 }
 
 /// Resolve the configured queue depth: explicit config wins, then the
@@ -577,7 +581,7 @@ impl EmbeddingService {
     /// [`crate::index::persist`] for the recovery classification in the
     /// returned [`LoadReport`].
     pub fn load_index(&self, dir: &Path) -> Result<(IndexAny, LoadReport), CbeError> {
-        let (index, report) = persist::load(dir)?;
+        let (index, report) = persist::load_with_mode(dir, self.cfg.load_mode)?;
         if report.stamp.fingerprint == 0 {
             return Ok((index, report));
         }

@@ -7,14 +7,26 @@
 use super::{radix2, C64, Dir};
 
 /// Chirp table w_k = exp(-iπ k²/n), k in [0, n).
+///
+/// Built over half the range and mirrored: (n−k)² ≡ k² + n² (mod 2n),
+/// and n² mod 2n is 0 for even n and n for odd n, so the upper half is
+/// the lower half exactly (even n) or negated (odd n — the extra n in
+/// the reduced square contributes exp(−iπ) = −1). That halves the
+/// sin/cos calls, which dominate chirp construction at the paper's
+/// non-power-of-two dims (25,600 / 51,200) where this table is rebuilt
+/// per plan.
 pub fn make_chirp(n: usize) -> Vec<C64> {
-    (0..n)
-        .map(|k| {
-            // k² mod 2n avoids catastrophic angle growth for large k.
-            let kk = (k * k) % (2 * n);
-            C64::cis(-std::f64::consts::PI * kk as f64 / n as f64)
-        })
-        .collect()
+    let mut chirp = vec![C64::ZERO; n];
+    for (k, w) in chirp.iter_mut().enumerate().take(n / 2 + 1) {
+        // k² mod 2n avoids catastrophic angle growth for large k.
+        let kk = (k * k) % (2 * n);
+        *w = C64::cis(-std::f64::consts::PI * kk as f64 / n as f64);
+    }
+    for k in n / 2 + 1..n {
+        let m = chirp[n - k];
+        chirp[k] = if n % 2 == 0 { m } else { C64::new(-m.re, -m.im) };
+    }
+    chirp
 }
 
 /// FFT_m of the Bluestein filter b_k = conj(chirp)_|k| (wrapped support).
@@ -122,6 +134,23 @@ mod tests {
         let chirp = make_chirp(n);
         for k in 0..n {
             assert!((chirp[k].abs() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mirrored_chirp_matches_the_per_k_formula() {
+        // The mirrored build must agree with evaluating
+        // exp(-iπ (k² mod 2n)/n) independently at every k — both
+        // parities, including the degenerate n=1,2 (no mirrored tail)
+        // and sizes the serving dims actually hit.
+        for n in [1usize, 2, 3, 4, 5, 12, 13, 100, 101, 255, 256] {
+            let got = make_chirp(n);
+            for k in 0..n {
+                let kk = (k * k) % (2 * n);
+                let want = C64::cis(-std::f64::consts::PI * kk as f64 / n as f64);
+                let err = (got[k] - want).abs();
+                assert!(err < 1e-12, "n={n} k={k} err={err}");
+            }
         }
     }
 }

@@ -279,7 +279,7 @@ impl MihIndex {
         }
         assert!(!self.slot_of.contains_key(&id), "duplicate id {id}");
         let slot = self.codes.n as u32;
-        self.codes.data.extend_from_slice(code);
+        self.codes.data.to_mut().extend_from_slice(code);
         self.codes.n += 1;
         self.ids.push(id);
         self.alive.push(true);
@@ -367,11 +367,11 @@ impl MihIndex {
     fn compact(&mut self) {
         let wpc = self.codes.words_per_code;
         let mut codes = BitCode::new(0, self.codes.bits);
-        codes.data.reserve(self.live * wpc);
+        codes.data.to_mut().reserve(self.live * wpc);
         let mut ids = Vec::with_capacity(self.live);
         for slot in 0..self.codes.n {
             if self.alive[slot] {
-                codes.data.extend_from_slice(self.codes.code(slot));
+                codes.data.to_mut().extend_from_slice(self.codes.code(slot));
                 codes.n += 1;
                 ids.push(self.ids[slot]);
             }

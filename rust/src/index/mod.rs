@@ -66,7 +66,9 @@ pub mod sharded;
 pub mod substring;
 
 pub use mih::{MihIndex, SubstringScheme};
-pub use persist::{LoadReport, PersistOptions, PersistentIndex, RecoveryState, SnapshotStamp};
+pub use persist::{
+    LoadMode, LoadPath, LoadReport, PersistOptions, PersistentIndex, RecoveryState, SnapshotStamp,
+};
 pub use sharded::ShardedIndex;
 
 use crate::bits::bitcode::BitCode;

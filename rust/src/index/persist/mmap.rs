@@ -1,0 +1,434 @@
+//! Zero-copy snapshot storage: a minimal [`Mmap`] over the libc that
+//! std already links, and the [`Store`] seam that lets the index's two
+//! big flat structures — the packed `BitCode` word store and
+//! `SubstringTable`'s postings arena — read straight out of a mapped
+//! snapshot instead of a heap copy.
+//!
+//! The design rule is that *storage representation is invisible at
+//! every call site*: `Store<T>` derefs to `[T]`, so reads and in-place
+//! slice mutation (`store[i] = x`, `store.swap(a, b)`) compile
+//! unchanged whether the words live in an owned `Vec` or a shared
+//! [`Arc<Mmap>`] window. The first mutation of a mapped store promotes
+//! it to an owned copy (copy-on-write — counted in
+//! `Counter::PromoteOwned`), so a pure-read load copies nothing and a
+//! churned index pays exactly one copy, at first churn. `Vec`-only
+//! growth methods go through [`Store::to_mut`], which performs the same
+//! promotion explicitly.
+//!
+//! Platform gating: the mapped representation needs `unix` (for
+//! `mmap`/`munmap`/`madvise`) and a little-endian target (the snapshot
+//! bytes are LE words reinterpreted in place). Everywhere else
+//! [`Mmap::map`] returns `ErrorKind::Unsupported` and the loader falls
+//! back to the portable heap path — same bytes, same typed-corruption
+//! guarantees, one extra copy.
+
+use std::ffi::c_void;
+use std::io;
+use std::sync::Arc;
+
+#[cfg(all(unix, target_endian = "little"))]
+mod sys {
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+
+    // Identical values on Linux and macOS, the two unix targets this
+    // repo builds on.
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MADV_SEQUENTIAL: c_int = 2;
+    pub const MADV_WILLNEED: c_int = 3;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+}
+
+/// A read-only, private memory mapping of a whole file.
+///
+/// Read-only and `MAP_PRIVATE`, so concurrent readers are safe
+/// (`Send + Sync` below) and a later snapshot checkpoint — which
+/// replaces the file by atomic rename, never in-place writes — cannot
+/// change the bytes under a live map: the old inode stays alive until
+/// the last map drops.
+pub struct Mmap {
+    /// Null iff `len == 0` (mapping an empty file is `EINVAL`, so empty
+    /// snapshot sections get an empty slice without a syscall).
+    ptr: *mut c_void,
+    len: usize,
+}
+
+// Safety: the mapping is PROT_READ and never handed out mutably; the
+// pointer is owned by this struct and unmapped exactly once, on drop.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Does this target support the mapped representation at all?
+    pub fn supported() -> bool {
+        cfg!(all(unix, target_endian = "little"))
+    }
+
+    /// Map `file` read-only in its entirety. On unsupported targets
+    /// (non-unix or big-endian) fails with `ErrorKind::Unsupported`;
+    /// callers fall back to the heap loader.
+    pub fn map(file: &std::fs::File) -> io::Result<Mmap> {
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "file too large to map",
+            ));
+        }
+        let len = len as usize;
+        if len == 0 {
+            return Ok(Mmap {
+                ptr: std::ptr::null_mut(),
+                len: 0,
+            });
+        }
+        #[cfg(all(unix, target_endian = "little"))]
+        {
+            use std::os::unix::io::AsRawFd;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::MAP_FAILED {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr, len })
+        }
+        #[cfg(not(all(unix, target_endian = "little")))]
+        {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "mmap is unix + little-endian only; use the heap loader",
+            ))
+        }
+    }
+
+    /// The mapped bytes (empty slice for an empty file).
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // Safety: ptr is a live PROT_READ mapping of exactly `len`
+        // bytes, unmapped only in Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    /// Total mapped bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Hint the kernel that the map is about to be read front to back
+    /// (the CRC + structural verify pass): prefetch aggressively,
+    /// recycle pages behind the cursor.
+    pub fn advise_sequential(&self) {
+        #[cfg(all(unix, target_endian = "little"))]
+        if self.len > 0 {
+            // Advice is best-effort; a failure changes nothing but speed.
+            unsafe { sys::madvise(self.ptr, self.len, sys::MADV_SEQUENTIAL) };
+        }
+    }
+
+    /// Hint the kernel the map will be randomly accessed soon (the
+    /// serving phase after verification): keep/bring pages resident.
+    pub fn advise_willneed(&self) {
+        #[cfg(all(unix, target_endian = "little"))]
+        if self.len > 0 {
+            unsafe { sys::madvise(self.ptr, self.len, sys::MADV_WILLNEED) };
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_endian = "little"))]
+        if self.len > 0 {
+            // Safety: ptr/len came from a successful mmap; this is the
+            // sole owner and the only munmap.
+            unsafe { sys::munmap(self.ptr, self.len) };
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).finish()
+    }
+}
+
+/// The packed `BitCode` word store.
+pub type Words = Store<u64>;
+/// `SubstringTable`'s postings arena.
+pub type Postings = Store<u32>;
+
+/// A flat `[T]` that is either owned (a `Vec`, the portable default and
+/// the representation of anything built in memory) or a typed window
+/// into a shared snapshot mapping. See the module docs for the
+/// copy-on-write contract.
+pub struct Store<T> {
+    repr: Repr<T>,
+}
+
+enum Repr<T> {
+    Owned(Vec<T>),
+    Mapped {
+        map: Arc<Mmap>,
+        /// Byte offset of element 0 within the mapping. Validated
+        /// aligned for `T` at construction.
+        off: usize,
+        /// Length in elements.
+        len: usize,
+    },
+}
+
+impl<T> Store<T> {
+    /// An owned store (the representation every builder produces).
+    pub fn owned(v: Vec<T>) -> Store<T> {
+        Store {
+            repr: Repr::Owned(v),
+        }
+    }
+
+    /// A zero-copy window of `len` elements at byte offset `off` into
+    /// `map`. Returns `None` when the window is out of bounds or
+    /// misaligned for `T` — callers fall back to copying.
+    pub(crate) fn mapped(map: &Arc<Mmap>, off: usize, len: usize) -> Option<Store<T>> {
+        let bytes = map.as_slice();
+        let nbytes = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = off.checked_add(nbytes)?;
+        if end > bytes.len() {
+            return None;
+        }
+        if (bytes.as_ptr() as usize + off) % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(Store {
+            repr: Repr::Mapped {
+                map: Arc::clone(map),
+                off,
+                len,
+            },
+        })
+    }
+
+    /// Is this store still backed by the snapshot mapping (i.e. has no
+    /// mutation promoted it yet)?
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.repr, Repr::Mapped { .. })
+    }
+}
+
+impl<T: Clone> Store<T> {
+    /// The owned `Vec`, promoting a mapped store by copying first (the
+    /// copy-on-write step; counted in `Counter::PromoteOwned`). All
+    /// growth/shrink mutation funnels through here — slice-shaped
+    /// mutation goes through `DerefMut`, which calls this too.
+    pub fn to_mut(&mut self) -> &mut Vec<T> {
+        if self.is_mapped() {
+            let copied: Vec<T> = (**self).to_vec();
+            crate::obs::add(crate::obs::Counter::PromoteOwned, 1);
+            self.repr = Repr::Owned(copied);
+        }
+        match &mut self.repr {
+            Repr::Owned(v) => v,
+            Repr::Mapped { .. } => unreachable!("just promoted"),
+        }
+    }
+}
+
+impl<T> std::ops::Deref for Store<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match &self.repr {
+            Repr::Owned(v) => v,
+            Repr::Mapped { map, off, len } => {
+                // Safety: bounds and alignment were validated in
+                // `mapped()`; the mapping is immutable and outlives the
+                // borrow via the Arc.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        map.as_slice().as_ptr().add(*off) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl<T: Clone> std::ops::DerefMut for Store<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.to_mut().as_mut_slice()
+    }
+}
+
+impl<T> From<Vec<T>> for Store<T> {
+    fn from(v: Vec<T>) -> Store<T> {
+        Store::owned(v)
+    }
+}
+
+impl<T> Default for Store<T> {
+    fn default() -> Store<T> {
+        Store::owned(Vec::new())
+    }
+}
+
+impl<T: Clone> Clone for Store<T> {
+    fn clone(&self) -> Store<T> {
+        match &self.repr {
+            Repr::Owned(v) => Store::owned(v.clone()),
+            // Cloning a mapped store clones the window, not the pages.
+            Repr::Mapped { map, off, len } => Store {
+                repr: Repr::Mapped {
+                    map: Arc::clone(map),
+                    off: *off,
+                    len: *len,
+                },
+            },
+        }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Store<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+impl<T: PartialEq> PartialEq for Store<T> {
+    fn eq(&self, other: &Store<T>) -> bool {
+        **self == **other
+    }
+}
+
+// Lets tests keep writing `store == vec![...]`.
+impl<T: PartialEq> PartialEq<Vec<T>> for Store<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        **self == other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn temp_file(bytes: &[u8]) -> (std::path::PathBuf, std::fs::File) {
+        let path = std::env::temp_dir().join(format!(
+            "cbe_mmap_test_{}_{}",
+            std::process::id(),
+            bytes.len()
+        ));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        f.sync_all().unwrap();
+        (path.clone(), std::fs::File::open(&path).unwrap())
+    }
+
+    #[test]
+    fn map_reads_back_exact_bytes() {
+        if !Mmap::supported() {
+            return;
+        }
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let (path, f) = temp_file(&bytes);
+        let map = Mmap::map(&f).unwrap();
+        assert_eq!(map.as_slice(), &bytes[..]);
+        map.advise_sequential();
+        map.advise_willneed();
+        drop(map);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let (path, f) = temp_file(&[]);
+        let map = Mmap::map(&f).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.as_slice(), &[] as &[u8]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn store_cow_promotes_on_first_write_only() {
+        if !Mmap::supported() {
+            return;
+        }
+        let words: Vec<u64> = (0..64u64).collect();
+        let mut bytes = Vec::new();
+        for w in &words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        let (path, f) = temp_file(&bytes);
+        let map = Arc::new(Mmap::map(&f).unwrap());
+        let mut store: Store<u64> = Store::mapped(&map, 0, 64).unwrap();
+        assert!(store.is_mapped());
+        assert_eq!(store, words); // reads never promote
+        assert_eq!(store[17], 17);
+        assert!(store.is_mapped());
+        store[17] = 999; // first write promotes…
+        assert!(!store.is_mapped());
+        assert_eq!(store[17], 999);
+        assert_eq!(store[16], 16); // …and carried the old contents over
+        store.to_mut().push(1000); // growth works post-promotion
+        assert_eq!(store.len(), 65);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn mapped_rejects_misaligned_and_oob_windows() {
+        if !Mmap::supported() {
+            return;
+        }
+        let (path, f) = temp_file(&[0u8; 64]);
+        let map = Arc::new(Mmap::map(&f).unwrap());
+        // Offset 3 cannot be 8-aligned (mmap base is page-aligned).
+        assert!(Store::<u64>::mapped(&map, 3, 4).is_none());
+        // Window past the end of the file.
+        assert!(Store::<u64>::mapped(&map, 0, 9).is_none());
+        assert!(Store::<u64>::mapped(&map, 0, 8).is_some());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn snapshot_rename_keeps_live_map_valid() {
+        if !Mmap::supported() {
+            return;
+        }
+        let (path, f) = temp_file(b"generation-one");
+        let map = Mmap::map(&f).unwrap();
+        // Replace the file the way a checkpoint does: write a temp,
+        // rename over the live name. The old inode must stay readable
+        // through the existing map.
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, b"generation-two").unwrap();
+        std::fs::rename(&tmp, &path).unwrap();
+        assert_eq!(map.as_slice(), b"generation-one");
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -40,6 +40,7 @@
 
 pub mod faults;
 mod format;
+pub mod mmap;
 mod snapshot;
 mod wal;
 
@@ -48,10 +49,13 @@ use crate::index::IndexAny;
 use crate::index::substring::splitmix64;
 use crate::obs::{self, Counter, Stage};
 use faults::{FaultClock, FaultPlan, Sink};
+use mmap::Mmap;
 use snapshot::{SNAP_FILE, SNAP_TMP};
 use std::fs::{self, File};
 use std::io;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
 use wal::{Replay, WalOp, WalWriter};
 
 /// Model-identity stamp carried inside a snapshot so a load can refuse
@@ -76,6 +80,60 @@ impl SnapshotStamp {
     }
 }
 
+/// How a load should back the index's big flat arrays.
+///
+/// Resolution order is explicit config > `CBE_MMAP` env > platform
+/// default: `Auto` consults `CBE_MMAP` (`1`/`true`/`on` forces the
+/// mapped path, `0`/`false`/`off` the heap path) and otherwise maps
+/// wherever [`Mmap::supported`] (unix + little-endian). Either way a
+/// failed `mmap` syscall silently falls back to the heap loader — the
+/// mode picks a fast path, never a new failure mode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LoadMode {
+    /// `CBE_MMAP` if set, else mapped wherever supported.
+    #[default]
+    Auto,
+    /// Always the portable read + copy path.
+    Heap,
+    /// The zero-copy mapped path (still heap on unsupported targets).
+    Mmap,
+}
+
+impl LoadMode {
+    /// Should this load attempt the mapped path?
+    fn try_mmap(self) -> bool {
+        match self {
+            LoadMode::Heap => false,
+            LoadMode::Mmap => Mmap::supported(),
+            LoadMode::Auto => match std::env::var("CBE_MMAP") {
+                Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+                    "0" | "false" | "off" => false,
+                    "1" | "true" | "on" => Mmap::supported(),
+                    _ => Mmap::supported(),
+                },
+                Err(_) => Mmap::supported(),
+            },
+        }
+    }
+}
+
+/// Which path a load actually took (post-fallback).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadPath {
+    Mmap,
+    Heap,
+}
+
+impl LoadPath {
+    /// Stable name — the `load.mode` value in the stats snapshot JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadPath::Mmap => "mmap",
+            LoadPath::Heap => "heap",
+        }
+    }
+}
+
 /// Knobs for a [`PersistentIndex`].
 #[derive(Clone, Debug)]
 pub struct PersistOptions {
@@ -89,6 +147,8 @@ pub struct PersistOptions {
     /// Deterministic fault plan for the writers (tests/CI; the default
     /// comes from `CBE_FAULT`, which is empty in production).
     pub faults: FaultPlan,
+    /// Snapshot-load backing: zero-copy mmap vs portable heap copy.
+    pub load_mode: LoadMode,
 }
 
 impl Default for PersistOptions {
@@ -97,6 +157,7 @@ impl Default for PersistOptions {
             sync_on_append: true,
             compact_threshold: 8192,
             faults: FaultPlan::from_env(),
+            load_mode: LoadMode::Auto,
         }
     }
 }
@@ -122,6 +183,11 @@ pub struct LoadReport {
     pub wal_records_replayed: u64,
     /// Model identity the snapshot was saved under.
     pub stamp: SnapshotStamp,
+    /// Which backing the load actually used (post-fallback).
+    pub path: LoadPath,
+    /// Snapshot bytes served straight from the mapping (0 on the heap
+    /// path).
+    pub mapped_bytes: u64,
 }
 
 /// Content fingerprint of a circulant projection's parameters (`r` and
@@ -221,11 +287,44 @@ fn apply_replay(index: &mut IndexAny, rec: Replay, wpc: usize, bits: usize) -> R
     Ok(())
 }
 
-fn load_inner(dir: &Path) -> Result<(IndexAny, LoadReport, WalDisposition), CbeError> {
+/// Decode the snapshot file, preferring the zero-copy mapped path when
+/// `mode` allows it. The verify pass (CRCs + structural re-validation)
+/// is one streaming front-to-back read either way — on the mapped path
+/// it runs under `madvise(SEQUENTIAL)` and the map is flipped to
+/// `WILLNEED` once verified, so first-query latency overlaps page-in.
+fn decode_snapshot_file(
+    snap_path: &Path,
+    mode: LoadMode,
+) -> Result<(IndexAny, snapshot::SnapshotMeta, LoadPath, u64), CbeError> {
+    let cannot = |e: &dyn std::fmt::Display| corrupt(format!("cannot read {}: {e}", snap_path.display()));
+    let t0 = Instant::now();
+    if mode.try_mmap() {
+        let file = File::open(snap_path).map_err(|e| cannot(&e))?;
+        if let Ok(map) = Mmap::map(&file) {
+            let map = Arc::new(map);
+            map.advise_sequential();
+            let (index, meta) =
+                snapshot::decode_snapshot(map.as_slice(), Some(&map)).map_err(corrupt)?;
+            map.advise_willneed();
+            let mapped_bytes = map.len() as u64;
+            obs::add(Counter::MmapLoad, 1);
+            obs::add(Counter::MappedBytes, mapped_bytes);
+            obs::add(Counter::LoadVerifyUs, t0.elapsed().as_micros() as u64);
+            return Ok((index, meta, LoadPath::Mmap, mapped_bytes));
+        }
+        // Map failed (unsupported target, exotic filesystem): fall
+        // through to the portable path with the file already open.
+    }
+    let bytes = fs::read(snap_path).map_err(|e| cannot(&e))?;
+    let (index, meta) = snapshot::decode_snapshot(&bytes, None).map_err(corrupt)?;
+    obs::add(Counter::HeapLoad, 1);
+    obs::add(Counter::LoadVerifyUs, t0.elapsed().as_micros() as u64);
+    Ok((index, meta, LoadPath::Heap, 0))
+}
+
+fn load_inner(dir: &Path, mode: LoadMode) -> Result<(IndexAny, LoadReport, WalDisposition), CbeError> {
     let snap_path = dir.join(SNAP_FILE);
-    let bytes = fs::read(&snap_path)
-        .map_err(|e| corrupt(format!("cannot read {}: {e}", snap_path.display())))?;
-    let (mut index, meta) = snapshot::decode_snapshot(&bytes).map_err(corrupt)?;
+    let (mut index, meta, path, mapped_bytes) = decode_snapshot_file(&snap_path, mode)?;
     let bits = index.bits();
     let wpc = bits.div_ceil(64);
 
@@ -274,17 +373,40 @@ fn load_inner(dir: &Path) -> Result<(IndexAny, LoadReport, WalDisposition), CbeE
             model_version: meta.model_version,
             fingerprint: meta.fingerprint,
         },
+        path,
+        mapped_bytes,
     };
     Ok((index, report, disposition))
 }
 
 /// Load the index saved in `dir`, replaying (and if need be repairing)
-/// its WAL. Every outcome is classified: see the module docs.
+/// its WAL. Every outcome is classified: see the module docs. Uses
+/// [`LoadMode::Auto`] backing (`CBE_MMAP`, else mapped where
+/// supported).
 pub fn load(dir: &Path) -> Result<(IndexAny, LoadReport), CbeError> {
+    load_with_mode(dir, LoadMode::Auto)
+}
+
+/// [`load`] with an explicit [`LoadMode`] (service config beats the
+/// environment).
+pub fn load_with_mode(dir: &Path, mode: LoadMode) -> Result<(IndexAny, LoadReport), CbeError> {
     let _span = obs::span(Stage::SnapshotLoad);
-    let out = load_inner(dir);
+    let out = load_inner(dir, mode);
     obs::add(Counter::Recovery, 1);
     out.map(|(index, report, _)| (index, report))
+}
+
+/// The slicing-by-8 CRC-32 every snapshot section and WAL record is
+/// checksummed with. Public so the persist bench can A/B it against
+/// [`crc32_bytewise`] on real snapshot bytes.
+pub fn crc32_sliced(bytes: &[u8]) -> u32 {
+    format::crc32(bytes)
+}
+
+/// The classic byte-at-a-time CRC-32 reference kernel (bit-identical to
+/// [`crc32_sliced`], roughly 4–6x slower on long buffers).
+pub fn crc32_bytewise(bytes: &[u8]) -> u32 {
+    format::crc32_bytewise(bytes)
 }
 
 /// An [`IndexAny`] bound to an on-disk directory: every mutation is
@@ -332,7 +454,7 @@ impl PersistentIndex {
     /// churn.
     pub fn open(dir: &Path, opts: PersistOptions) -> Result<(PersistentIndex, LoadReport), CbeError> {
         let _span = obs::span(Stage::SnapshotLoad);
-        let loaded = load_inner(dir);
+        let loaded = load_inner(dir, opts.load_mode);
         obs::add(Counter::Recovery, 1);
         let (index, report, disposition) = loaded?;
         let mut clock = FaultClock::new(opts.faults.clone());
@@ -604,6 +726,27 @@ mod tests {
         r2[1] += 1e-6;
         assert_ne!(a, model_fingerprint(&r2, &signs));
         assert_ne!(a, model_fingerprint(&signs, &r));
+    }
+
+    #[test]
+    fn load_mode_forces_the_backing_path() {
+        let dir = temp_dir("loadmode");
+        let index = small_index(20, 64, 9);
+        save(&dir, &index, &SnapshotStamp::none()).unwrap();
+        let (a, ra) = load_with_mode(&dir, LoadMode::Heap).unwrap();
+        assert_eq!(ra.path, LoadPath::Heap);
+        assert_eq!(ra.mapped_bytes, 0);
+        let (b, rb) = load_with_mode(&dir, LoadMode::Mmap).unwrap();
+        if Mmap::supported() {
+            assert_eq!(rb.path, LoadPath::Mmap);
+            assert!(rb.mapped_bytes > 0, "whole snapshot should be mapped");
+        } else {
+            assert_eq!(rb.path, LoadPath::Heap);
+        }
+        assert_eq!(a.len(), b.len());
+        let q = [0x0Fu64];
+        assert_eq!(a.search(&q, 5), b.search(&q, 5));
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! ```text
 //! prelude (24 B):
 //!   magic          8 B  = "CBEIDX01"
-//!   format_version u32  = 1
+//!   format_version u32  = 2
 //!   section_count  u32
 //!   crc            u32    CRC-32 of bytes [0, 16)
 //!   reserved       u32  = 0
@@ -18,6 +18,14 @@
 //!   payload   len bytes, zero-padded to a multiple of 8
 //! ```
 //!
+//! Format v2 (over v1): inside each TABLES payload the postings array of
+//! every table is preceded by 0–3 zero bytes so it starts 4-aligned
+//! within the payload — and, because payloads start 8-aligned in the
+//! file, 4-aligned absolutely. The pad is covered by the section CRC and
+//! the decoder requires it to be zero. Together with CODES word arrays
+//! (which start at payload offset 8, hence 8-aligned absolutely) this
+//! makes both big flat structures adoptable in place by the mmap loader.
+//!
 //! META is always first; then per backend: linear → one CODES + IDS
 //! pair; MIH → CODES + IDS + TABLES; sharded → one CODES + IDS + TABLES
 //! group *per shard*, in shard order (shard membership is part of the
@@ -28,10 +36,12 @@
 //! skipped and table postings are remapped through an old→new slot map,
 //! so dead rows never reach disk and a loaded index is always in
 //! canonical compacted form. The payload layout is fixed-width LE with
-//! 8-byte-aligned sections — deliberately mmap-ready — but today the
-//! loader does one bulk `fs::read` and a single copy per section, which
-//! keeps the `KeySource`/arena adoption seams identical to an mmap
-//! follow-up.
+//! 8-byte-aligned sections, and the decoder adopts the two big flat
+//! arrays — CODES words and TABLES postings — **in place** when handed a
+//! snapshot mapping (see [`super::mmap`]): the returned index's stores
+//! are zero-copy windows into the map. Without a mapping (the portable
+//! heap path) the same decode does one copy per array instead; every
+//! validation below runs identically on both paths.
 //!
 //! Decoding trusts nothing: beyond the per-section CRCs, every
 //! structural invariant the in-memory types assume (unique ids, zero
@@ -41,6 +51,7 @@
 //! typed error instead of a panic or a silently wrong search.
 
 use super::format::{crc32, put_u32, put_u64, Reader};
+use super::mmap::{Mmap, Postings, Words};
 use super::SnapshotStamp;
 use crate::bits::bitcode::BitCode;
 use crate::bits::BinaryIndex;
@@ -49,9 +60,10 @@ use crate::index::sharded::ShardedIndex;
 use crate::index::substring::{BuildFastHash, KeySource, SubstringTable};
 use crate::index::{IndexAny, IndexKind};
 use std::collections::HashSet;
+use std::sync::Arc;
 
 pub(crate) const SNAP_MAGIC: [u8; 8] = *b"CBEIDX01";
-pub(crate) const SNAP_FORMAT: u32 = 1;
+pub(crate) const SNAP_FORMAT: u32 = 2;
 pub(crate) const SNAP_FILE: &str = "current.snap";
 pub(crate) const SNAP_TMP: &str = "snap.tmp";
 
@@ -164,6 +176,13 @@ fn mih_sections(mih: &MihIndex, sections: &mut Vec<(u32, Vec<u8>)>) {
             put_u64(&mut tp, key);
             put_u32(&mut tp, len);
         }
+        // Format v2: 4-align the postings array within the payload
+        // (payloads start 8-aligned in the file), so a mapped load can
+        // adopt it in place. The pad is inside the section CRC and the
+        // decoder requires it to be zero.
+        while tp.len() % 4 != 0 {
+            tp.push(0);
+        }
         for &p in &postings {
             put_u32(&mut tp, p);
         }
@@ -247,7 +266,51 @@ pub(crate) fn encode_snapshot(
 
 // ---------------------------------------------------------------- decode
 
-fn decode_codes(payload: &[u8], bits: usize) -> Result<BitCode, String> {
+/// Byte offset of `slice` within the mapping — defined only when the
+/// decoder is actually reading off `map.as_slice()`, which is how every
+/// mapped decode is invoked.
+fn offset_in(map: &Arc<Mmap>, slice: &[u8]) -> Option<usize> {
+    let base = map.as_slice().as_ptr() as usize;
+    (slice.as_ptr() as usize)
+        .checked_sub(base)
+        .filter(|off| off + slice.len() <= map.len())
+}
+
+/// Adopt a CRC-verified LE u64 array in place when a mapping is
+/// available (and the window is in bounds + aligned); copy otherwise.
+/// On the little-endian targets that can map, the two are bit-identical.
+fn adopt_u64s(bytes: &[u8], len: usize, map: Option<&Arc<Mmap>>) -> Words {
+    debug_assert_eq!(bytes.len(), len * 8);
+    if let Some(m) = map {
+        if let Some(store) = offset_in(m, bytes).and_then(|off| Words::mapped(m, off, len)) {
+            return store;
+        }
+    }
+    Words::owned(
+        bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect(),
+    )
+}
+
+/// Adopt a CRC-verified LE u32 array in place; copy otherwise.
+fn adopt_u32s(bytes: &[u8], len: usize, map: Option<&Arc<Mmap>>) -> Postings {
+    debug_assert_eq!(bytes.len(), len * 4);
+    if let Some(m) = map {
+        if let Some(store) = offset_in(m, bytes).and_then(|off| Postings::mapped(m, off, len)) {
+            return store;
+        }
+    }
+    Postings::owned(
+        bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect(),
+    )
+}
+
+fn decode_codes(payload: &[u8], bits: usize, map: Option<&Arc<Mmap>>) -> Result<BitCode, String> {
     let mut r = Reader::new(payload);
     let n = r.take_u64("codes row count")?;
     if n > u32::MAX as u64 {
@@ -265,11 +328,7 @@ fn decode_codes(payload: &[u8], bits: usize) -> Result<BitCode, String> {
             r.remaining()
         ));
     }
-    let data: Vec<u64> = r
-        .take(need, "code words")?
-        .chunks_exact(8)
-        .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
-        .collect();
+    let data = adopt_u64s(r.take(need, "code words")?, n * wpc, map);
     let codes = BitCode {
         n,
         bits,
@@ -302,7 +361,12 @@ fn decode_ids(payload: &[u8]) -> Result<Vec<u32>, String> {
         .collect())
 }
 
-fn decode_tables(payload: &[u8], bits: usize, n_rows: usize) -> Result<Vec<SubstringTable>, String> {
+fn decode_tables(
+    payload: &[u8],
+    bits: usize,
+    n_rows: usize,
+    map: Option<&Arc<Mmap>>,
+) -> Result<Vec<SubstringTable>, String> {
     let mut r = Reader::new(payload);
     let count = r.take_u32("table count")? as usize;
     if count == 0 || count > bits {
@@ -400,15 +464,22 @@ fn decode_tables(payload: &[u8], bits: usize, n_rows: usize) -> Result<Vec<Subst
                 "table {ti}: bucket lengths sum to {sum}, postings total says {postings_total}"
             ));
         }
-        let mut arena = Vec::with_capacity(postings_total);
+        // Format v2 alignment pad before the postings array (see the
+        // module grammar): 0–3 bytes, required zero.
+        let pad = (4 - r.pos() % 4) % 4;
+        if r.take(pad, "postings alignment pad")?.iter().any(|&b| b != 0) {
+            return Err(format!("table {ti}: nonzero postings alignment pad"));
+        }
+        let need = postings_total
+            .checked_mul(4)
+            .ok_or_else(|| format!("table {ti}: postings size overflows"))?;
+        let arena = adopt_u32s(r.take(need, "postings")?, postings_total, map);
         let mut seen = vec![false; n_rows];
-        for _ in 0..postings_total {
-            let p = r.take_u32("posting")?;
+        for &p in arena.iter() {
             if p as usize >= n_rows || seen[p as usize] {
                 return Err(format!("table {ti}: posting {p} out of range or repeated"));
             }
             seen[p as usize] = true;
-            arena.push(p);
         }
         tables.push(SubstringTable::from_buckets(source, &dir, arena));
     }
@@ -440,8 +511,9 @@ fn decode_mih_body(
     bits: usize,
     scheme: SubstringScheme,
     id_set: &mut HashSet<u32, BuildFastHash>,
+    map: Option<&Arc<Mmap>>,
 ) -> Result<MihIndex, String> {
-    let codes = decode_codes(expect_section(secs, at, SEC_CODES, "CODES")?, bits)?;
+    let codes = decode_codes(expect_section(secs, at, SEC_CODES, "CODES")?, bits, map)?;
     let ids = decode_ids(expect_section(secs, at + 1, SEC_IDS, "IDS")?)?;
     if codes.n != ids.len() {
         return Err(format!("{} codes but {} ids", codes.n, ids.len()));
@@ -455,12 +527,20 @@ fn decode_mih_body(
         expect_section(secs, at + 2, SEC_TABLES, "TABLES")?,
         bits,
         codes.n,
+        map,
     )?;
     Ok(MihIndex::from_parts(codes, ids, tables, scheme))
 }
 
-/// Decode and fully validate a snapshot image.
-pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<(IndexAny, SnapshotMeta), String> {
+/// Decode and fully validate a snapshot image. When `map` is given,
+/// `bytes` must be `map.as_slice()`: every validation still runs over
+/// the bytes (a single streaming pass, CRC first), but the big flat
+/// arrays are adopted as zero-copy windows into the map instead of
+/// copied to the heap.
+pub(crate) fn decode_snapshot(
+    bytes: &[u8],
+    map: Option<&Arc<Mmap>>,
+) -> Result<(IndexAny, SnapshotMeta), String> {
     if bytes.len() < 24 {
         return Err(format!("snapshot is {} bytes, shorter than the prelude", bytes.len()));
     }
@@ -550,7 +630,7 @@ pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<(IndexAny, SnapshotMeta), 
             if shard_count != 1 || secs.len() != 3 {
                 return Err("linear snapshot must be exactly META+CODES+IDS".to_string());
             }
-            let codes = decode_codes(expect_section(&secs, 1, SEC_CODES, "CODES")?, bits)?;
+            let codes = decode_codes(expect_section(&secs, 1, SEC_CODES, "CODES")?, bits, map)?;
             let ids = decode_ids(expect_section(&secs, 2, SEC_IDS, "IDS")?)?;
             if codes.n != ids.len() || codes.n as u64 != n_live {
                 return Err(format!(
@@ -565,7 +645,7 @@ pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<(IndexAny, SnapshotMeta), 
             if shard_count != 1 || secs.len() != 4 {
                 return Err("mih snapshot must be exactly META+CODES+IDS+TABLES".to_string());
             }
-            let ix = decode_mih_body(&secs, 1, bits, scheme, &mut id_set)?;
+            let ix = decode_mih_body(&secs, 1, bits, scheme, &mut id_set, map)?;
             if ix.len() as u64 != n_live {
                 return Err(format!("mih has {} rows, META says {n_live}", ix.len()));
             }
@@ -585,7 +665,7 @@ pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<(IndexAny, SnapshotMeta), 
             let mut shards = Vec::with_capacity(shard_count as usize);
             for s in 0..shard_count as usize {
                 shards.push(
-                    decode_mih_body(&secs, 1 + 3 * s, bits, scheme, &mut id_set)
+                    decode_mih_body(&secs, 1 + 3 * s, bits, scheme, &mut id_set, map)
                         .map_err(|e| format!("shard {s}: {e}"))?,
                 );
             }
@@ -656,7 +736,7 @@ mod tests {
         ] {
             let index = random_index(n, bits, &backend, 42 + bits as u64);
             let img = image(&index, 9);
-            let (loaded, meta) = decode_snapshot(&img).unwrap();
+            let (loaded, meta) = decode_snapshot(&img, None).unwrap();
             assert_eq!(meta.generation, 9);
             assert_eq!(meta.model_version, Some(7));
             assert_eq!(meta.fingerprint, 0x5EED);
@@ -669,7 +749,7 @@ mod tests {
     #[test]
     fn roundtrips_an_empty_index() {
         let index = random_index(0, 128, &IndexBackend::Mih { m: Some(2) }, 5);
-        let (loaded, _) = decode_snapshot(&image(&index, 1)).unwrap();
+        let (loaded, _) = decode_snapshot(&image(&index, 1), None).unwrap();
         assert_eq!(loaded.len(), 0);
         assert!(loaded.search(&[0u64, 0], 3).is_empty());
     }
@@ -687,7 +767,7 @@ mod tests {
             _ => unreachable!(),
         };
         assert_eq!(storage, 60, "tombstones still occupy storage in memory");
-        let (loaded, _) = decode_snapshot(&image(&index, 2)).unwrap();
+        let (loaded, _) = decode_snapshot(&image(&index, 2), None).unwrap();
         assert_eq!(loaded.len(), 25);
         match loaded.kind() {
             IndexKind::Mih(ix) => assert_eq!(
@@ -710,7 +790,7 @@ mod tests {
         for byte in 0..img.len() {
             let mut bad = img.clone();
             bad[byte] ^= 0x04;
-            match decode_snapshot(&bad) {
+            match decode_snapshot(&bad, None) {
                 Err(_) => {}
                 Ok((loaded, _)) => {
                     // Only section padding escapes a CRC; results must
@@ -727,9 +807,56 @@ mod tests {
         let img = image(&index, 1);
         for cut in 0..img.len() {
             assert!(
-                decode_snapshot(&img[..cut]).is_err(),
+                decode_snapshot(&img[..cut], None).is_err(),
                 "truncation to {cut} bytes must not decode"
             );
+        }
+    }
+
+    #[test]
+    fn mapped_decode_is_zero_copy_and_exact() {
+        if !Mmap::supported() {
+            return;
+        }
+        for (backend, bits, n) in [
+            (IndexBackend::Mih { m: Some(4) }, 160, 120),
+            (
+                IndexBackend::ShardedMih {
+                    shards: 3,
+                    m: Some(2),
+                },
+                64,
+                90,
+            ),
+        ] {
+            let index = random_index(n, bits, &backend, 77 + bits as u64);
+            let img = image(&index, 3);
+            let path = std::env::temp_dir().join(format!(
+                "cbe_snap_mapped_{}_{bits}",
+                std::process::id()
+            ));
+            std::fs::write(&path, &img).unwrap();
+            let map = Arc::new(Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap());
+            let (loaded, meta) = decode_snapshot(map.as_slice(), Some(&map)).unwrap();
+            assert_eq!(meta.generation, 3);
+            assert_eq!(loaded.len(), index.len());
+            // The big flat arrays must actually be windows into the map,
+            // not copies — for every shard of the loaded index.
+            let shards: Vec<&MihIndex> = match loaded.kind() {
+                IndexKind::Mih(ix) => vec![ix],
+                IndexKind::Sharded(ix) => ix.shards().iter().collect(),
+                IndexKind::Linear(_) => unreachable!(),
+            };
+            for mih in shards {
+                let (codes, _, _, tables) = mih.storage_parts();
+                assert!(codes.data.is_mapped(), "codes adopted in place");
+                for t in tables {
+                    assert!(t.arena_is_mapped(), "postings adopted in place");
+                }
+            }
+            assert_same_results(&index, &loaded, bits, 78 + bits as u64);
+            drop(loaded);
+            let _ = std::fs::remove_file(path);
         }
     }
 }

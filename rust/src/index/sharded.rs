@@ -71,7 +71,7 @@ impl ShardedIndex {
             .collect();
         for slot in 0..codes.n {
             let (part_codes, part_ids) = &mut parts[slot % s_count];
-            part_codes.data.extend_from_slice(codes.code(slot));
+            part_codes.data.to_mut().extend_from_slice(codes.code(slot));
             part_codes.n += 1;
             part_ids.push(ids[slot]);
         }

@@ -29,6 +29,7 @@
 //!   rehash).
 
 use crate::bits::bitcode::BitCode;
+use crate::index::persist::mmap::Postings;
 use std::hash::{BuildHasherDefault, Hasher};
 
 /// splitmix64 finalizer: the avalanche permutation behind both [`FastHash`]
@@ -231,8 +232,11 @@ pub struct SubstringTable {
     buckets: Vec<Bucket>,
     n_full: usize,
     n_tomb: usize,
-    /// All postings, one contiguous allocation.
-    arena: Vec<u32>,
+    /// All postings, one contiguous run: an owned allocation, or — after
+    /// a zero-copy snapshot load — a window into the mapped snapshot
+    /// (promoted to owned on first mutation; see
+    /// [`crate::index::persist::mmap`]).
+    arena: Postings,
     /// Arena capacity abandoned by bucket relocation / emptied buckets;
     /// compacted away once it exceeds half the arena.
     dead: usize,
@@ -259,7 +263,7 @@ impl SubstringTable {
             buckets: vec![Bucket::default(); INITIAL_SLOTS],
             n_full: 0,
             n_tomb: 0,
-            arena: Vec::new(),
+            arena: Postings::default(),
             dead: 0,
         }
     }
@@ -287,7 +291,7 @@ impl SubstringTable {
                 total += count as usize;
             }
         }
-        t.arena = vec![0u32; total];
+        t.arena = Postings::owned(vec![0u32; total]);
         // Pass 2: fill postings in slot order.
         for row in 0..codes.n {
             let key = t.key_of(codes.code(row));
@@ -339,10 +343,12 @@ impl SubstringTable {
             new_off + new_cap as usize <= u32::MAX as usize,
             "postings arena exceeds u32 addressing"
         );
-        self.arena
-            .extend_from_within(off as usize..(off + len) as usize);
-        self.arena.push(slot);
-        self.arena.resize(new_off + new_cap as usize, 0);
+        {
+            let arena = self.arena.to_mut();
+            arena.extend_from_within(off as usize..(off + len) as usize);
+            arena.push(slot);
+            arena.resize(new_off + new_cap as usize, 0);
+        }
         self.dead += cap as usize;
         let b = &mut self.buckets[bi];
         b.off = new_off as u32;
@@ -431,7 +437,7 @@ impl SubstringTable {
     pub(crate) fn from_buckets(
         source: KeySource,
         buckets: &[(u64, u32)],
-        arena: Vec<u32>,
+        arena: impl Into<Postings>,
     ) -> SubstringTable {
         let mut t = SubstringTable::with_source(source);
         let mut off = 0u32;
@@ -441,9 +447,16 @@ impl SubstringTable {
             t.buckets[bi] = Bucket { key, off, len, cap: len };
             off += len;
         }
+        let arena = arena.into();
         debug_assert_eq!(off as usize, arena.len());
         t.arena = arena;
         t
+    }
+
+    /// Is the postings arena still a zero-copy window into a mapped
+    /// snapshot (i.e. has no churn promoted it to owned yet)?
+    pub(crate) fn arena_is_mapped(&self) -> bool {
+        self.arena.is_mapped()
     }
 
     /// Find the table slot holding `key`, skipping tombstones.
@@ -536,7 +549,7 @@ impl SubstringTable {
             self.buckets[i].off = new_off;
             self.buckets[i].cap = len;
         }
-        self.arena = packed;
+        self.arena = Postings::owned(packed);
         self.dead = 0;
     }
 }

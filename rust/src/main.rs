@@ -13,7 +13,7 @@ use cbe::coordinator::{BatcherConfig, EmbeddingService, RetrainConfig, ServiceCo
 use cbe::data::{generate, SynthConfig};
 use cbe::encoders::CbeTrainer;
 use cbe::experiments as exp;
-use cbe::index::persist::{LoadReport, PersistOptions, PersistentIndex};
+use cbe::index::persist::{LoadMode, LoadReport, PersistOptions, PersistentIndex};
 use cbe::index::{IndexBackend, IndexKind, RecoveryState};
 use cbe::fft::Planner;
 use cbe::opt::TimeFreqConfig;
@@ -99,6 +99,9 @@ fn print_usage() {
          persist flags: --index-path DIR (for save-index / load-index; the\n\
          \x20             fault plan env CBE_FAULT=crash:<n>|abort:<n> kills the\n\
          \x20             writer at persistence op <n> for recovery drills)\n\
+         \x20             --mmap auto|1|0 (snapshot-load backing: zero-copy\n\
+         \x20             mmap vs heap copy; auto reads CBE_MMAP, then maps\n\
+         \x20             wherever the platform supports it)\n\
          train flags:  --threads N (0 = auto) --deterministic BOOL\n\
          \x20             --cache-budget BYTES (trainer spectrum-cache budget,\n\
          \x20             also env CBE_CACHE_BUDGET; 0 = unlimited)\n\
@@ -168,6 +171,7 @@ fn cmd_encode(args: &Args) -> anyhow::Result<()> {
             index: IndexBackend::Auto,
             retrain: RetrainConfig::default(),
             queue_depth: args.usize("queue-depth", 0),
+            load_mode: load_mode_arg(args),
         },
         rng.normal_vec(d),
         rng.sign_vec(d),
@@ -217,6 +221,7 @@ fn seeded_service(
             index: backend,
             retrain: RetrainConfig::default(),
             queue_depth: args.usize("queue-depth", 0),
+            load_mode: load_mode_arg(args),
         },
         rng.normal_vec(d),
         rng.sign_vec(d),
@@ -231,6 +236,16 @@ fn dir_bytes(dir: &std::path::Path) -> anyhow::Result<u64> {
     Ok(total)
 }
 
+/// `--mmap auto|1|0` → snapshot-load backing (explicit flag beats the
+/// `CBE_MMAP` env, which `auto` consults).
+fn load_mode_arg(args: &Args) -> LoadMode {
+    match args.str("mmap", "auto").as_str() {
+        "0" | "heap" | "off" | "false" => LoadMode::Heap,
+        "1" | "mmap" | "on" | "true" => LoadMode::Mmap,
+        _ => LoadMode::Auto,
+    }
+}
+
 fn print_load_report(report: &LoadReport) {
     match &report.state {
         RecoveryState::Loaded => println!(
@@ -243,6 +258,11 @@ fn print_load_report(report: &LoadReport) {
             report.generation, report.wal_records_replayed
         ),
     }
+    println!(
+        "load path: {} ({} snapshot bytes mapped)",
+        report.path.name(),
+        report.mapped_bytes
+    );
 }
 
 fn cmd_save_index(args: &Args) -> anyhow::Result<()> {
@@ -348,6 +368,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             index: backend,
             retrain,
             queue_depth: args.usize("queue-depth", 0),
+            load_mode: load_mode_arg(args),
         },
         enc.proj.r.clone(),
         enc.proj.signs.clone(),

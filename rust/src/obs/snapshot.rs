@@ -78,6 +78,19 @@ pub struct StatsSnapshot {
     pub wal_compactions: u64,
     /// Completed recovery loads (process-wide).
     pub recoveries: u64,
+    /// Snapshot loads through the zero-copy mmap path (process-wide).
+    pub mmap_loads: u64,
+    /// Snapshot loads through the portable heap path (process-wide).
+    pub heap_loads: u64,
+    /// Snapshot bytes served straight from mapped sections, summed
+    /// across loads (process-wide).
+    pub mapped_bytes: u64,
+    /// Mapped stores promoted to owned heap copies on first mutation
+    /// (process-wide).
+    pub promoted_to_owned: u64,
+    /// Microseconds spent in the streaming verify pass of snapshot
+    /// loads, summed (process-wide).
+    pub load_verify_us: u64,
     /// Process-wide MIH bucket lookups.
     pub probes: u64,
     /// Process-wide postings touched before dedup.
@@ -108,6 +121,11 @@ impl StatsSnapshot {
         self.wal_replays = rec.counter(Counter::WalReplay);
         self.wal_compactions = rec.counter(Counter::WalCompaction);
         self.recoveries = rec.counter(Counter::Recovery);
+        self.mmap_loads = rec.counter(Counter::MmapLoad);
+        self.heap_loads = rec.counter(Counter::HeapLoad);
+        self.mapped_bytes = rec.counter(Counter::MappedBytes);
+        self.promoted_to_owned = rec.counter(Counter::PromoteOwned);
+        self.load_verify_us = rec.counter(Counter::LoadVerifyUs);
         self.stages = Stage::ALL
             .iter()
             .map(|&s| (s.name(), StageStats::from_histogram(rec.histogram(s))))
@@ -147,6 +165,26 @@ impl StatsSnapshot {
                 ]),
             ),
             (
+                "load",
+                Json::obj(vec![
+                    // Which path the most recent loads took: counts of
+                    // each, not a single enum, because one process can
+                    // load several indexes.
+                    (
+                        "mode",
+                        Json::str(if self.mmap_loads > 0 { "mmap" } else { "heap" }),
+                    ),
+                    ("mmap_loads", Json::num(self.mmap_loads as f64)),
+                    ("heap_loads", Json::num(self.heap_loads as f64)),
+                    ("mapped_bytes", Json::num(self.mapped_bytes as f64)),
+                    ("verify_ms", Json::num(self.load_verify_us as f64 / 1e3)),
+                    (
+                        "promoted_to_owned",
+                        Json::num(self.promoted_to_owned as f64),
+                    ),
+                ]),
+            ),
+            (
                 "index",
                 Json::obj(vec![
                     ("probes", Json::num(self.probes as f64)),
@@ -179,6 +217,10 @@ mod tests {
         rec.add(Counter::Probes, 6);
         rec.add(Counter::WalAppend, 2);
         rec.add(Counter::Recovery, 1);
+        rec.add(Counter::MmapLoad, 1);
+        rec.add(Counter::MappedBytes, 4096);
+        rec.add(Counter::PromoteOwned, 3);
+        rec.add(Counter::LoadVerifyUs, 1500);
         let hist = Histogram::new();
         hist.record(500);
         let snap = StatsSnapshot {
@@ -218,6 +260,16 @@ mod tests {
             Some(2.0)
         );
         assert_eq!(parsed.get("overloads").and_then(Json::as_f64), Some(0.0));
+        let load = parsed.get("load").expect("load block present");
+        assert_eq!(load.get("mode").and_then(Json::as_str), Some("mmap"));
+        assert_eq!(load.get("mmap_loads").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(load.get("heap_loads").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(load.get("mapped_bytes").and_then(Json::as_f64), Some(4096.0));
+        assert_eq!(load.get("verify_ms").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(
+            load.get("promoted_to_owned").and_then(Json::as_f64),
+            Some(3.0)
+        );
         let enc = parsed.get("stages").and_then(|s| s.get("encode")).unwrap();
         assert_eq!(enc.get("count").and_then(Json::as_f64), Some(1.0));
         assert_eq!(

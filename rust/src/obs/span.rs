@@ -111,10 +111,22 @@ pub enum Counter {
     WalCompaction,
     /// Recovery loads completed (any terminal classification).
     Recovery,
+    /// Snapshot loads that went through the zero-copy mmap path.
+    MmapLoad,
+    /// Snapshot loads that took the portable heap (read + copy) path.
+    HeapLoad,
+    /// Bytes currently served straight from mapped snapshot sections
+    /// (accumulated across loads; a gauge in spirit, counter in shape).
+    MappedBytes,
+    /// Mapped stores promoted to owned heap copies on first mutation.
+    PromoteOwned,
+    /// Microseconds spent in the streaming CRC/structure verify pass of
+    /// snapshot loads (accumulated).
+    LoadVerifyUs,
 }
 
 impl Counter {
-    pub const COUNT: usize = 9;
+    pub const COUNT: usize = 14;
     pub const ALL: [Counter; Counter::COUNT] = [
         Counter::Probes,
         Counter::Candidates,
@@ -125,6 +137,11 @@ impl Counter {
         Counter::WalReplay,
         Counter::WalCompaction,
         Counter::Recovery,
+        Counter::MmapLoad,
+        Counter::HeapLoad,
+        Counter::MappedBytes,
+        Counter::PromoteOwned,
+        Counter::LoadVerifyUs,
     ];
 
     pub fn name(self) -> &'static str {
@@ -138,6 +155,11 @@ impl Counter {
             Counter::WalReplay => "wal_replays",
             Counter::WalCompaction => "wal_compactions",
             Counter::Recovery => "recoveries",
+            Counter::MmapLoad => "mmap_loads",
+            Counter::HeapLoad => "heap_loads",
+            Counter::MappedBytes => "mapped_bytes",
+            Counter::PromoteOwned => "promoted_to_owned",
+            Counter::LoadVerifyUs => "load_verify_us",
         }
     }
 

@@ -33,6 +33,7 @@ fn service(d: usize, bits: usize, seed: u64) -> (EmbeddingService, Vec<f32>, Vec
             index: IndexBackend::Auto,
             retrain: RetrainConfig::default(),
             queue_depth: 0,
+            load_mode: cbe::index::LoadMode::Auto,
         },
         r.clone(),
         signs.clone(),
@@ -274,6 +275,7 @@ fn stats_snapshot_reflects_served_workload() {
             index: IndexBackend::Mih { m: None },
             retrain: RetrainConfig::default(),
             queue_depth: 0,
+            load_mode: cbe::index::LoadMode::Auto,
         },
         rng.normal_vec(64),
         rng.sign_vec(64),
@@ -355,6 +357,7 @@ fn overload_sheds_with_typed_error_instead_of_buffering_forever() {
             index: IndexBackend::Auto,
             retrain: RetrainConfig::default(),
             queue_depth: 1,
+            load_mode: cbe::index::LoadMode::Auto,
         },
         rng.normal_vec(d),
         rng.sign_vec(d),

@@ -1,0 +1,200 @@
+//! Integration: the zero-copy (mmap) snapshot backing is *invisible* —
+//! an index loaded through the mapped path must answer every query
+//! identically to one loaded through the portable heap path, across
+//! every backend, word-per-code parity, and tombstone density; and
+//! churn after a mapped load must promote the mapped stores to owned
+//! copies without changing a single result.
+//!
+//! (On targets without mmap support `LoadMode::Mmap` silently degrades
+//! to the heap path, so these tests still run — the differential just
+//! becomes heap-vs-heap and the mapped-specific assertions are gated on
+//! `Mmap::supported()`.)
+
+use cbe::bits::BitCode;
+use cbe::index::persist::mmap::Mmap;
+use cbe::index::persist::{self, LoadMode, SnapshotStamp};
+use cbe::index::{build_index_with_ids, IndexAny, IndexBackend};
+use cbe::obs::{self, Counter};
+use cbe::util::rng::Pcg64;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "cbe_mmap_load_{tag}_{}_{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn backends() -> Vec<(&'static str, IndexBackend)> {
+    vec![
+        ("linear", IndexBackend::Linear),
+        ("mih", IndexBackend::Mih { m: Some(2) }),
+        ("mih_sampled", IndexBackend::MihSampled { m: Some(2) }),
+        ("sharded", IndexBackend::ShardedMih { shards: 3, m: Some(2) }),
+    ]
+}
+
+fn build(backend: &IndexBackend, n: usize, bits: usize, seed: u64) -> IndexAny {
+    let mut rng = Pcg64::new(seed);
+    let codes = BitCode::from_signs(&rng.sign_vec(n * bits), n, bits);
+    build_index_with_ids(codes, (0..n as u32).collect(), backend)
+}
+
+/// Load `dir` through both backings and assert they are byte-for-byte
+/// equivalent to a caller: same row count, same hits for every query.
+fn assert_backings_agree(dir: &Path, queries: &BitCode, k: usize, tag: &str) -> IndexAny {
+    let (heap, heap_report) = persist::load_with_mode(dir, LoadMode::Heap)
+        .unwrap_or_else(|e| panic!("{tag}: heap load: {e}"));
+    assert_eq!(heap_report.path.name(), "heap", "{tag}");
+    assert_eq!(heap_report.mapped_bytes, 0, "{tag}: heap load mapped bytes");
+    let (mapped, mmap_report) = persist::load_with_mode(dir, LoadMode::Mmap)
+        .unwrap_or_else(|e| panic!("{tag}: mmap load: {e}"));
+    if Mmap::supported() {
+        assert_eq!(mmap_report.path.name(), "mmap", "{tag}: expected the mapped path");
+        assert!(mmap_report.mapped_bytes > 0, "{tag}: nothing was mapped");
+    }
+    assert_eq!(heap.len(), mapped.len(), "{tag}: row counts diverge");
+    for qi in 0..queries.n {
+        assert_eq!(
+            heap.search(queries.code(qi), k),
+            mapped.search(queries.code(qi), k),
+            "{tag}: query {qi} diverged between heap and mmap loads"
+        );
+    }
+    assert_eq!(
+        heap.search_batch(queries, k),
+        mapped.search_batch(queries, k),
+        "{tag}: batch search diverged"
+    );
+    mapped
+}
+
+#[test]
+fn mapped_and_heap_loads_agree_across_backends_and_widths() {
+    // 128 bits → 2 words per code (even, no padding); 160 bits → 3
+    // words with 32 padding bits (odd, padding load-bearing).
+    for bits in [128usize, 160] {
+        for (tag, backend) in backends() {
+            let n = 80;
+            let index = build(&backend, n, bits, 0xA11C + bits as u64);
+            let dir = temp_dir(&format!("agree_{tag}_{bits}"));
+            persist::save(&dir, &index, &SnapshotStamp::none()).unwrap();
+            let mut rng = Pcg64::new(0xBEEF);
+            let queries = BitCode::from_signs(&rng.sign_vec(12 * bits), 12, bits);
+            let mapped = assert_backings_agree(&dir, &queries, 5, &format!("{tag}/{bits}"));
+            // And both agree with the in-memory original.
+            for qi in 0..queries.n {
+                assert_eq!(
+                    mapped.search(queries.code(qi), 5),
+                    index.search(queries.code(qi), 5),
+                    "{tag}/{bits}: mapped load diverged from the saved index"
+                );
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn tombstone_heavy_snapshots_agree_after_compacting_save() {
+    // Remove two thirds of the rows before saving: the snapshot writer
+    // compacts tombstones and remaps postings, so the mapped arena the
+    // loader adopts has a very different shape from the live index's.
+    let bits = 160;
+    let n = 90;
+    for (tag, backend) in backends() {
+        if matches!(backend, IndexBackend::Linear) {
+            continue; // linear has no tombstones
+        }
+        let mut index = build(&backend, n, bits, 0xD00D);
+        for id in 0..60u32 {
+            assert!(index.remove(id).unwrap(), "{tag}: remove {id}");
+        }
+        let dir = temp_dir(&format!("tomb_{tag}"));
+        persist::save(&dir, &index, &SnapshotStamp::none()).unwrap();
+        let mut rng = Pcg64::new(0xCAFE);
+        let queries = BitCode::from_signs(&rng.sign_vec(10 * bits), 10, bits);
+        let mapped = assert_backings_agree(&dir, &queries, 7, tag);
+        assert_eq!(mapped.len(), 30, "{tag}: compaction changed the row count");
+        for qi in 0..queries.n {
+            assert_eq!(
+                mapped.search(queries.code(qi), 7),
+                index.search(queries.code(qi), 7),
+                "{tag}: query {qi} diverged from the pre-save index"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Deterministic churn code for 160-bit rows: word 2 keeps its top 32
+/// bits zero (the padding contract).
+fn code_for(id: u32) -> [u64; 3] {
+    [
+        u64::from(id).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1,
+        u64::from(id).rotate_left(17) ^ 0x5555_5555_5555_5555,
+        u64::from(id) & 0xFFFF_FFFF,
+    ]
+}
+
+#[test]
+fn churn_after_mapped_load_promotes_and_matches_heap_churn() {
+    obs::set_enabled(true);
+    let bits = 160;
+    let n = 40;
+    for (tag, backend) in [
+        ("mih", IndexBackend::Mih { m: Some(2) }),
+        ("sharded", IndexBackend::ShardedMih { shards: 3, m: Some(2) }),
+    ] {
+        let index = build(&backend, n, bits, 0xF00D);
+        let dir = temp_dir(&format!("churn_{tag}"));
+        persist::save(&dir, &index, &SnapshotStamp::none()).unwrap();
+
+        let (mut heap, _) = persist::load_with_mode(&dir, LoadMode::Heap).unwrap();
+        let (mut mapped, _) = persist::load_with_mode(&dir, LoadMode::Mmap).unwrap();
+
+        // Identical churn through both handles. The first mutation of
+        // the mapped index must promote its stores (copy-on-write) —
+        // visible as a bump of the PromoteOwned counter — and from
+        // there on the two must stay indistinguishable.
+        let before = obs::global().counter(Counter::PromoteOwned);
+        for id in 100..120u32 {
+            heap.insert(id, &code_for(id)).unwrap();
+            mapped.insert(id, &code_for(id)).unwrap();
+        }
+        for id in [3u32, 7, 11, 102] {
+            assert_eq!(heap.remove(id).unwrap(), mapped.remove(id).unwrap(), "{tag}");
+        }
+        if Mmap::supported() {
+            assert!(
+                obs::global().counter(Counter::PromoteOwned) > before,
+                "{tag}: churn on a mapped index never promoted to owned"
+            );
+        }
+
+        assert_eq!(heap.len(), mapped.len(), "{tag}: row counts diverge after churn");
+        let mut rng = Pcg64::new(0x1DEA);
+        let queries = BitCode::from_signs(&rng.sign_vec(10 * bits), 10, bits);
+        for qi in 0..queries.n {
+            assert_eq!(
+                heap.search(queries.code(qi), 6),
+                mapped.search(queries.code(qi), 6),
+                "{tag}: query {qi} diverged after post-load churn"
+            );
+        }
+
+        // A promoted index must survive a fresh save/load roundtrip.
+        let dir2 = temp_dir(&format!("churn_resave_{tag}"));
+        persist::save(&dir2, &mapped, &SnapshotStamp::none()).unwrap();
+        let remapped = assert_backings_agree(&dir2, &queries, 6, &format!("{tag}/resave"));
+        assert_eq!(remapped.len(), mapped.len(), "{tag}: resave lost rows");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+}

@@ -111,6 +111,7 @@ fn run_workload(dir: &Path, ops: &[Op], plan: FaultPlan, seed: u64) -> RunOutcom
         sync_on_append: true,
         compact_threshold: 0,
         faults: plan,
+        load_mode: persist::LoadMode::Auto,
     };
     let mut p = match PersistentIndex::create(dir, base_index(seed), SnapshotStamp::none(), popts) {
         Ok(p) => p,
@@ -153,10 +154,19 @@ fn run_workload(dir: &Path, ops: &[Op], plan: FaultPlan, seed: u64) -> RunOutcom
 }
 
 fn clean_opts() -> PersistOptions {
+    clean_opts_with(persist::LoadMode::Auto)
+}
+
+/// Fault-free options pinned to one snapshot backing, so the matrix can
+/// interrogate the mapped and heap loaders independently over the same
+/// damaged directory. (On targets without mmap support `Mmap` quietly
+/// degrades to the heap path — the comparison is then trivially true.)
+fn clean_opts_with(load_mode: persist::LoadMode) -> PersistOptions {
     PersistOptions {
         sync_on_append: true,
         compact_threshold: 0,
         faults: FaultPlan::none(),
+        load_mode,
     }
 }
 
@@ -178,9 +188,24 @@ fn assert_recovery_matrix(ops: &[Op], seed: u64, tag: &str, make_plan: impl Fn(u
             "plan at op {crash_op} never fired (dry run counted {} ops)",
             dry.total_fault_ops
         );
-        match PersistentIndex::open(&dir, clean_opts()) {
+        // The heap loader sees every crash point first (its open also
+        // performs any tail repair); the mapped loader must then agree
+        // byte-for-byte — same rows or the same typed error. This runs
+        // the whole fault matrix against the zero-copy path, not just
+        // the happy roundtrip.
+        let heap_ids = match PersistentIndex::open(&dir, clean_opts_with(persist::LoadMode::Heap)) {
+            Ok((heap_rec, _)) => Some(live_ids(heap_rec.index(), ops)),
+            Err(CbeError::CorruptSnapshot { .. }) => None,
+            Err(other) => panic!("crash at op {crash_op}: heap loader: unexpected {other}"),
+        };
+        match PersistentIndex::open(&dir, clean_opts_with(persist::LoadMode::Mmap)) {
             Ok((recovered, _report)) => {
                 let got = live_ids(recovered.index(), ops);
+                assert_eq!(
+                    Some(&got),
+                    heap_ids.as_ref(),
+                    "crash at op {crash_op}: mapped and heap loaders disagree"
+                );
                 let at_ack = expected_ids(ops, run.acked);
                 let with_inflight = expected_ids(ops, (run.acked + 1).min(ops.len()));
                 assert!(
@@ -207,6 +232,10 @@ fn assert_recovery_matrix(ops: &[Op], seed: u64, tag: &str, make_plan: impl Fn(u
                 assert!(
                     !run.created,
                     "crash at op {crash_op} corrupted an already-created index: {reason}"
+                );
+                assert!(
+                    heap_ids.is_none(),
+                    "crash at op {crash_op}: heap loader accepted what the mapped loader rejected"
                 );
             }
             Err(other) => panic!("crash at op {crash_op}: unexpected error kind {other}"),
@@ -286,16 +315,21 @@ fn flipped_bits_are_detected_never_believed() {
             let dir = temp_dir(&format!("flip_{flip_op}_{bit}"));
             let run = run_workload(&dir, &ops, FaultPlan::flip_at(flip_op, bit), 73);
             assert!(run.result.is_ok(), "a flip must not fail the writer");
-            match PersistentIndex::open(&dir, clean_opts()) {
-                Ok((recovered, _report)) => {
-                    let got = live_ids(recovered.index(), &ops);
-                    assert!(
-                        prefix_states.iter().any(|s| *s == got),
-                        "flip at op {flip_op} bit {bit}: ids {got:?} match no acked prefix"
-                    );
+            for mode in [persist::LoadMode::Mmap, persist::LoadMode::Heap] {
+                match PersistentIndex::open(&dir, clean_opts_with(mode)) {
+                    Ok((recovered, _report)) => {
+                        let got = live_ids(recovered.index(), &ops);
+                        assert!(
+                            prefix_states.iter().any(|s| *s == got),
+                            "flip at op {flip_op} bit {bit} ({mode:?}): ids {got:?} \
+                             match no acked prefix"
+                        );
+                    }
+                    Err(CbeError::CorruptSnapshot { .. }) => {}
+                    Err(other) => {
+                        panic!("flip at op {flip_op} bit {bit} ({mode:?}): unexpected {other}")
+                    }
                 }
-                Err(CbeError::CorruptSnapshot { .. }) => {}
-                Err(other) => panic!("flip at op {flip_op} bit {bit}: unexpected {other}"),
             }
             let _ = std::fs::remove_dir_all(&dir);
         }
@@ -365,9 +399,13 @@ fn corrupt_snapshot_fuzz_truncations_and_header_damage() {
     let cuts: Vec<usize> = (0..pristine.len()).step_by(7).chain([pristine.len() - 1]).collect();
     for cut in cuts {
         std::fs::write(&snap_path, &pristine[..cut]).unwrap();
-        match persist::load(&dir) {
-            Err(CbeError::CorruptSnapshot { .. }) => {}
-            other => panic!("truncation to {cut} bytes: expected CorruptSnapshot, got {other:?}"),
+        for mode in [persist::LoadMode::Mmap, persist::LoadMode::Heap] {
+            match persist::load_with_mode(&dir, mode) {
+                Err(CbeError::CorruptSnapshot { .. }) => {}
+                other => panic!(
+                    "truncation to {cut} bytes ({mode:?}): expected CorruptSnapshot, got {other:?}"
+                ),
+            }
         }
     }
     // Header-region damage: wrong magic, version, counts, CRCs. (The
@@ -379,9 +417,14 @@ fn corrupt_snapshot_fuzz_truncations_and_header_damage() {
             let mut bad = pristine.clone();
             bad[byte] ^= mask;
             std::fs::write(&snap_path, &bad).unwrap();
-            match persist::load(&dir) {
-                Err(CbeError::CorruptSnapshot { .. }) => {}
-                other => panic!("header byte {byte} flipped: expected CorruptSnapshot, got {other:?}"),
+            for mode in [persist::LoadMode::Mmap, persist::LoadMode::Heap] {
+                match persist::load_with_mode(&dir, mode) {
+                    Err(CbeError::CorruptSnapshot { .. }) => {}
+                    other => panic!(
+                        "header byte {byte} flipped ({mode:?}): expected CorruptSnapshot, \
+                         got {other:?}"
+                    ),
+                }
             }
         }
     }
@@ -452,6 +495,7 @@ fn stale_model_fingerprint_rejected_across_services() {
                 index: IndexBackend::Mih { m: Some(2) },
                 retrain: RetrainConfig::default(),
                 queue_depth: 0,
+                load_mode: persist::LoadMode::Auto,
             },
             rng.normal_vec(d),
             rng.sign_vec(d),
@@ -496,6 +540,7 @@ fn auto_compaction_folds_the_wal_and_drops_tombstones_from_disk() {
         sync_on_append: true,
         compact_threshold: 6,
         faults: FaultPlan::none(),
+        load_mode: persist::LoadMode::Auto,
     };
     let mut p =
         PersistentIndex::create(&dir, base_index(78), SnapshotStamp::none(), opts.clone()).unwrap();
