@@ -18,6 +18,7 @@ use cbe::fft::Planner;
 use cbe::groundtruth::exact_knn;
 use cbe::index::IndexBackend;
 use cbe::opt::TimeFreqConfig;
+use cbe::projections::ProjectionSpec;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -35,10 +36,19 @@ fn main() -> anyhow::Result<()> {
         &std::env::var("CBE_INDEX").unwrap_or_else(|_| "auto".to_string()),
     )
     .map_err(|e| anyhow::anyhow!("CBE_INDEX: {e}"))?;
+    // Projection variant is config too:
+    //   CBE_PROJ=circ|stacked[:B]|downsampled
+    // (stacked serves bits > d across B circulant blocks; downsampled
+    // decorrelates bits < d via sparse row selection).
+    let proj = ProjectionSpec::from_spec(
+        &std::env::var("CBE_PROJ").unwrap_or_else(|_| "circ".to_string()),
+    )
+    .map_err(|e| anyhow::anyhow!("CBE_PROJ: {e}"))?;
 
     println!(
-        "== embedding server e2e: d={d} bits={bits} db={n_db} index={} ==",
-        backend.spec()
+        "== embedding server e2e: d={d} bits={bits} db={n_db} index={} proj={} ==",
+        backend.spec(),
+        proj.spec()
     );
 
     // Data + training (build phase; python is NOT involved at runtime).
@@ -58,7 +68,11 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(0);
     tf.cache_budget = tf_cache_budget;
-    let enc = CbeTrainer::new(tf).seed(13).planner(Planner::new()).train(&train);
+    let enc = CbeTrainer::new(tf)
+        .seed(13)
+        .planner(Planner::new())
+        .train_model(&proj, &train, None)
+        .map_err(|e| anyhow::anyhow!("train: {e}"))?;
     println!(
         "CBE-opt trained in {:.1}s ({} threads, spectrum cache {:.1} MiB)",
         enc.report.total_ms / 1e3,
@@ -66,8 +80,8 @@ fn main() -> anyhow::Result<()> {
         enc.report.cache_bytes as f64 / (1 << 20) as f64
     );
 
-    // Start the service over the registered native projection.
-    let svc = EmbeddingService::start(
+    // Start the service over the registered native model.
+    let svc = EmbeddingService::start_with_model(
         &artifacts,
         ServiceConfig {
             d,
@@ -85,9 +99,9 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 0,
             // Auto → CBE_MMAP env, else mapped where supported.
             load_mode: cbe::index::LoadMode::Auto,
+            proj,
         },
-        enc.proj.r.clone(),
-        enc.proj.signs.clone(),
+        enc.model,
     )?;
 
     // Index the corpus through the bulk path (borrowed rows, parallel

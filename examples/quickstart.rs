@@ -9,6 +9,7 @@ use cbe::eval::{recall_auc, recall_curve};
 use cbe::fft::Planner;
 use cbe::groundtruth::exact_knn;
 use cbe::opt::TimeFreqConfig;
+use cbe::projections::ProjectionSpec;
 
 fn main() -> anyhow::Result<()> {
     let d = 1024; // feature dimension
@@ -52,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 5. Compare with CBE-rand (no training, same speed).
-    let rand = CbeRand::new(d, k, 4, planner);
+    let rand = CbeRand::new(d, k, 4, planner.clone())?;
     let curve_r = recall_curve(
         &BinaryIndex::new(rand.encode_batch(&db)),
         &rand.encode_batch(&queries),
@@ -64,6 +65,25 @@ fn main() -> anyhow::Result<()> {
         curve_r[9],
         curve_r[99],
         recall_auc(&curve_r)
+    );
+
+    // 6. Long codes: k > d via stacked circulant blocks (spec grammar
+    //    `circ | stacked[:B] | downsampled`; one FFT per block).
+    let k_long = 2 * d;
+    let long = CbeRand::with_spec(&ProjectionSpec::Stacked { blocks: None }, d, k_long, 4, planner)?;
+    let curve_l = recall_curve(
+        &BinaryIndex::new(long.encode_batch(&db)),
+        &long.encode_batch(&queries),
+        &gt,
+        100,
+    );
+    println!(
+        "{} (k={k_long}, {} blocks): recall@10={:.3} recall@100={:.3} AUC={:.3}",
+        long.name(),
+        long.model.block_count(),
+        curve_l[9],
+        curve_l[99],
+        recall_auc(&curve_l)
     );
     Ok(())
 }

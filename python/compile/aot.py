@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from compile import model
+from compile.spec import canonical_spec, parse_proj_spec
 
 
 def to_hlo_text(fn, *specs):
@@ -96,12 +97,26 @@ def main():
     ap.add_argument("--dims", default="512,2048",
                     help="comma-separated feature dims to compile")
     ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--proj", default=os.environ.get("CBE_PROJ", "circ"),
+                    help="projection spec (circ | stacked[:B] | downsampled); "
+                         "defaults to $CBE_PROJ")
     args = ap.parse_args()
+
+    # Validate the spec before any compiler work so a typo fails fast
+    # with the grammar in the message (the rust CLI parses identically).
+    variant, blocks = parse_proj_spec(args.proj)
 
     dims = [int(t) for t in args.dims.split(",") if t]
     os.makedirs(args.out_dir, exist_ok=True)
 
-    manifest = {"artifacts": []}
+    manifest = {
+        "artifacts": [],
+        "projection": {
+            "spec": canonical_spec(variant, blocks),
+            "variant": variant,
+            "blocks": blocks,
+        },
+    }
     for e in build_entries(dims, args.batch):
         text = to_hlo_text(e["fn"], *e["specs"])
         path = f"{e['name']}.hlo.txt"

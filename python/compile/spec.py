@@ -1,0 +1,52 @@
+"""Projection-spec grammar shared with the rust CLI.
+
+Mirrors ``ProjectionSpec::from_spec`` in ``rust/src/projections/mod.rs``:
+``circ | stacked[:B] | downsampled`` (aliases ``circulant``, ``ds``).
+Kept free of jax imports so argument validation never needs the heavy
+runtime — the AOT bridge parses specs before touching the compiler.
+"""
+
+
+def parse_proj_spec(spec):
+    """Parse a projection spec into ``(variant, blocks)``.
+
+    ``variant`` is one of ``"circ" | "stacked" | "downsampled"``;
+    ``blocks`` is the stacked block count, or ``None`` when the spec
+    leaves it to be auto-sized as ceil(k/d) (plain ``stacked``). Raises
+    ``ValueError`` on anything outside the grammar, naming the grammar
+    in the message like the rust parser does.
+    """
+    parts = str(spec).strip().split(":")
+    head = parts[0]
+    if head in ("circ", "circulant"):
+        if len(parts) != 1:
+            raise ValueError(f"wrong arity in projection spec '{spec}'")
+        return ("circ", 1)
+    if head == "stacked":
+        if len(parts) == 1:
+            return ("stacked", None)
+        if len(parts) != 2:
+            raise ValueError(f"wrong arity in projection spec '{spec}'")
+        try:
+            blocks = int(parts[1], 10)
+        except ValueError:
+            raise ValueError(
+                f"bad number '{parts[1]}' in projection spec '{spec}'"
+            ) from None
+        if blocks < 1:
+            raise ValueError(f"block count must be >= 1 in '{spec}'")
+        return ("stacked", blocks)
+    if head in ("downsampled", "ds"):
+        if len(parts) != 1:
+            raise ValueError(f"wrong arity in projection spec '{spec}'")
+        return ("downsampled", 1)
+    raise ValueError(
+        f"unknown projection '{head}' (want circ | stacked[:B] | downsampled)"
+    )
+
+
+def canonical_spec(variant, blocks):
+    """Round-trip partner of :func:`parse_proj_spec`."""
+    if variant == "stacked":
+        return "stacked" if blocks is None else f"stacked:{blocks}"
+    return variant

@@ -1,0 +1,36 @@
+"""Projection-spec grammar: parity with the rust parser, clear rejects."""
+
+import pytest
+
+from compile.spec import canonical_spec, parse_proj_spec
+
+
+def test_accepts_the_grammar():
+    assert parse_proj_spec("circ") == ("circ", 1)
+    assert parse_proj_spec("circulant") == ("circ", 1)
+    assert parse_proj_spec("stacked") == ("stacked", None)
+    assert parse_proj_spec("stacked:3") == ("stacked", 3)
+    assert parse_proj_spec("downsampled") == ("downsampled", 1)
+    assert parse_proj_spec("ds") == ("downsampled", 1)
+    assert parse_proj_spec("  circ  ") == ("circ", 1)
+
+
+def test_canonical_round_trip():
+    for spec in ["circ", "stacked", "stacked:4", "downsampled"]:
+        assert canonical_spec(*parse_proj_spec(spec)) == spec
+
+
+@pytest.mark.parametrize("bad", [
+    "", "bogus", "circ:2", "stacked:", "stacked:0", "stacked:x",
+    "stacked:2:3", "downsampled:4", "stacked:-1",
+])
+def test_rejects_malformed_with_a_clear_message(bad):
+    with pytest.raises(ValueError) as exc:
+        parse_proj_spec(bad)
+    msg = str(exc.value)
+    assert "projection" in msg or "block count" in msg, msg
+
+
+def test_unknown_spec_names_the_grammar():
+    with pytest.raises(ValueError, match=r"circ \| stacked\[:B\] \| downsampled"):
+        parse_proj_spec("butterfly")

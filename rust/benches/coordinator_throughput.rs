@@ -388,6 +388,7 @@ fn bench_service_encode() {
                 retrain: cbe::coordinator::RetrainConfig::default(),
                 queue_depth: 0,
                 load_mode: cbe::index::LoadMode::Auto,
+                proj: cbe::projections::ProjectionSpec::Circ,
             },
             rng.normal_vec(d),
             rng.sign_vec(d),
@@ -445,6 +446,7 @@ fn bench_obs() {
             retrain: cbe::coordinator::RetrainConfig::default(),
             queue_depth: 0,
             load_mode: cbe::index::LoadMode::Auto,
+            proj: cbe::projections::ProjectionSpec::Circ,
         },
         rng.normal_vec(d),
         rng.sign_vec(d),

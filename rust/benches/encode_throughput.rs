@@ -21,11 +21,15 @@
 //! * `CBE_BENCH_ENCODE_ROWS=64` overrides rows per measured round;
 //! * `CBE_BENCH_ENFORCE=1` turns the batch-slower-than-serial warning
 //!   into a hard failure, and likewise simd-slower-than-scalar (left off
-//!   in CI: shared runners are too noisy for perf asserts).
+//!   in CI: shared runners are too noisy for perf asserts). It also arms
+//!   the projection-variant gates: stacked k=2d must encode in < 2.2× the
+//!   k=d circulant time (two blocks ≈ two FFTs, the rest is shared), and
+//!   downsampled k=d/4 must beat the full circulant (it prunes the
+//!   binarization, never adds work).
 
 use cbe::bits::BitCode;
 use cbe::fft::Planner;
-use cbe::projections::{CirculantProjection, EncodeScratch, ScratchPool};
+use cbe::projections::{CbeModel, CirculantProjection, EncodeScratch, ProjectionSpec, ScratchPool};
 use cbe::util::json::Json;
 use cbe::util::rng::Pcg64;
 use std::time::Instant;
@@ -170,6 +174,65 @@ fn main() {
                 ("qps", Json::num(qps)),
                 ("speedup_vs_serial", Json::num(qps / serial_qps)),
             ]));
+        }
+    }
+
+    // ---- projection-variant arms: stacked k=2d and downsampled k=d/4 ----
+    // One mid-size dimension (CI friendly); best-of-3 per arm so the
+    // ratio gates compare like with like.
+    {
+        let d = 1024usize.min(max_d).max(64);
+        let n = env_usize("CBE_BENCH_ENCODE_ROWS", 512);
+        let mut rng = Pcg64::new(0xface);
+        let flat: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+        let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+        let arms: [(&str, ProjectionSpec, usize); 3] = [
+            ("variant-circ", ProjectionSpec::Circ, d),
+            ("variant-stacked-2d", ProjectionSpec::Stacked { blocks: Some(2) }, 2 * d),
+            ("variant-downsampled-d4", ProjectionSpec::Downsampled, d / 4),
+        ];
+        let mut timings = Vec::new();
+        for (mode, spec, k) in arms {
+            let model = CbeModel::random(&spec, d, k, 0xe2c, Planner::new())
+                .expect("variant arm shapes are valid");
+            let mut codes = BitCode::new(n, k);
+            let mut pool = ScratchPool::new();
+            model.encode_batch_into(&rows, k, &mut codes, &mut pool); // warm
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                model.encode_batch_into(&rows, k, &mut codes, &mut pool);
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            let qps = n as f64 / best;
+            println!("d={d:<6} k={k:<4} mode={mode:<22} {qps:>9.0} qps");
+            results.push(Json::obj(vec![
+                ("d", Json::num(d as f64)),
+                ("k", Json::num(k as f64)),
+                ("rows", Json::num(n as f64)),
+                ("mode", Json::str(mode)),
+                ("threads", Json::num(cores as f64)),
+                ("batch_s", Json::num(best)),
+                ("qps", Json::num(qps)),
+            ]));
+            timings.push(best);
+        }
+        let (circ_s, stacked_s, ds_s) = (timings[0], timings[1], timings[2]);
+        println!(
+            "variants: stacked-2d/circ={:.2}x (gate < 2.2x), downsampled/circ={:.2}x (gate <= 1x)",
+            stacked_s / circ_s,
+            ds_s / circ_s
+        );
+        if std::env::var("CBE_BENCH_ENFORCE").is_ok_and(|v| v == "1") {
+            assert!(
+                stacked_s < 2.2 * circ_s,
+                "stacked k=2d encode took {:.2}x the k=d circulant (gate 2.2x)",
+                stacked_s / circ_s
+            );
+            assert!(
+                ds_s <= circ_s,
+                "downsampled k=d/4 ({ds_s:.4}s) should beat the full circulant ({circ_s:.4}s)"
+            );
         }
     }
 

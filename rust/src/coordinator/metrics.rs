@@ -9,7 +9,7 @@
 //! this per-service record with the process-global stage recorder into a
 //! [`StatsSnapshot`] for the `ControlRequest::Stats` control plane.
 
-use crate::obs::{self, Histogram, StageStats, StatsSnapshot};
+use crate::obs::{self, Histogram, ProjectionInfo, StageStats, StatsSnapshot};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Per-service counters + end-to-end request-latency histogram (µs).
@@ -114,9 +114,18 @@ impl Metrics {
 
     /// Build a [`StatsSnapshot`]: this service's counters and latency
     /// histogram, plus the process-global per-stage recorder.
-    pub fn snapshot(&self, capacity: usize, model_version: u64) -> StatsSnapshot {
+    /// `projection` identifies the live model (spec/variant/blocks/bits —
+    /// the event loop resolves it from the registry per scrape, so a
+    /// hot-swap shows up in the very next snapshot).
+    pub fn snapshot(
+        &self,
+        capacity: usize,
+        model_version: u64,
+        projection: ProjectionInfo,
+    ) -> StatsSnapshot {
         StatsSnapshot {
             model_version,
+            projection,
             requests: self.request_count(),
             batches: self.batch_count(),
             batch_occupancy: self.batch_occupancy(capacity),
@@ -164,11 +173,19 @@ mod tests {
         assert_eq!(m.retrain_count(), 1);
         assert_eq!(m.stale_rejection_count(), 2);
         assert_eq!(m.overload_count(), 3);
-        let snap = m.snapshot(4, 3);
+        let info = ProjectionInfo {
+            spec: "circ".to_string(),
+            variant: "circ",
+            blocks: 1,
+            bits: 32,
+        };
+        let snap = m.snapshot(4, 3, info);
         assert_eq!(snap.retrains, 1);
         assert_eq!(snap.stale_rejections, 2);
         assert_eq!(snap.overloads, 3);
         assert_eq!(snap.model_version, 3);
+        assert_eq!(snap.projection.spec, "circ");
+        assert_eq!(snap.projection.bits, 32);
     }
 
     #[test]
@@ -177,7 +194,7 @@ mod tests {
         for us in [10u64, 20, 5000] {
             m.record_request(us);
         }
-        let snap = m.snapshot(8, 0);
+        let snap = m.snapshot(8, 0, ProjectionInfo::default());
         assert_eq!(snap.requests, 3);
         assert_eq!(snap.latency.count, 3);
         assert_eq!(snap.latency.max_us, 5000);

@@ -4,7 +4,9 @@
 //! The event loop used to hold the `Arc<CirculantProjection>` directly,
 //! which froze the model for the service's lifetime — swapping in a
 //! freshly trained projection meant a restart. The registry decouples
-//! model *identity* from model *lifetime*:
+//! model *identity* from model *lifetime* (and, since the projection
+//! layer generalized, holds a [`CbeModel`] so stacked and downsampled
+//! variants hot-swap exactly like the single-block circulant):
 //!
 //! * [`ModelRegistry::current`] hands out a clone of the active `Arc` —
 //!   a read-lock held only for the refcount bump (no allocation, no
@@ -22,22 +24,22 @@
 //! worst case is a reply computed against the model that was active
 //! when its batch formed.
 
-use crate::projections::CirculantProjection;
+use crate::projections::CbeModel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-/// A versioned, atomically swappable slot holding the active circulant
+/// A versioned, atomically swappable slot holding the active projection
 /// model. `Send + Sync`; share behind an `Arc`.
 pub struct ModelRegistry {
-    active: RwLock<Arc<CirculantProjection>>,
+    active: RwLock<Arc<CbeModel>>,
     version: AtomicU64,
 }
 
 impl ModelRegistry {
     /// Register the initial model as version 0.
-    pub fn new(proj: CirculantProjection) -> ModelRegistry {
+    pub fn new(model: CbeModel) -> ModelRegistry {
         ModelRegistry {
-            active: RwLock::new(Arc::new(proj)),
+            active: RwLock::new(Arc::new(model)),
             version: AtomicU64::new(0),
         }
     }
@@ -45,7 +47,7 @@ impl ModelRegistry {
     /// The active model. Cheap (one refcount bump under a read lock);
     /// callers that encode a batch resolve this once and hold the `Arc`
     /// for the whole batch.
-    pub fn current(&self) -> Arc<CirculantProjection> {
+    pub fn current(&self) -> Arc<CbeModel> {
         Arc::clone(&self.active.read().expect("model registry poisoned"))
     }
 
@@ -55,22 +57,28 @@ impl ModelRegistry {
     /// stamp: resolving `current()` and `version()` separately could
     /// race a swap and stamp a new version onto codes encoded by the
     /// old model.
-    pub fn current_versioned(&self) -> (Arc<CirculantProjection>, u64) {
+    pub fn current_versioned(&self) -> (Arc<CbeModel>, u64) {
         let slot = self.active.read().expect("model registry poisoned");
         (Arc::clone(&slot), self.version.load(Ordering::SeqCst))
     }
 
-    /// Atomically install a new model and return its version. The
-    /// dimension is pinned at registration: a model of a different d
-    /// would silently break every queued request, so that's a panic, not
-    /// a swap.
-    pub fn swap(&self, proj: CirculantProjection) -> u64 {
+    /// Atomically install a new model and return its version. The model
+    /// *shape* — variant, input dimension, code-length cap — is pinned at
+    /// registration: a model of a different shape would silently break
+    /// every queued request, so that's a panic, not a swap.
+    pub fn swap(&self, model: CbeModel) -> u64 {
         let mut slot = self.active.write().expect("model registry poisoned");
-        assert_eq!(
-            proj.d, slot.d,
-            "hot-swap must preserve the model dimension"
+        assert!(
+            model.shape_matches(&slot),
+            "hot-swap must preserve the model shape: {} d={} max_bits={} -> {} d={} max_bits={}",
+            slot.variant(),
+            slot.d(),
+            slot.max_bits(),
+            model.variant(),
+            model.d(),
+            model.max_bits(),
         );
-        *slot = Arc::new(proj);
+        *slot = Arc::new(model);
         // Publish the bump while still holding the write lock so
         // version() can never run ahead of current().
         self.version.fetch_add(1, Ordering::SeqCst) + 1
@@ -97,11 +105,12 @@ const _: () = {
 mod tests {
     use super::*;
     use crate::fft::Planner;
+    use crate::projections::{CirculantProjection, ProjectionSpec};
     use crate::util::rng::Pcg64;
 
-    fn proj(d: usize, seed: u64) -> CirculantProjection {
+    fn proj(d: usize, seed: u64) -> CbeModel {
         let mut rng = Pcg64::new(seed);
-        CirculantProjection::random(d, &mut rng, Planner::new())
+        CbeModel::Circ(CirculantProjection::random(d, &mut rng, Planner::new()))
     }
 
     #[test]
@@ -130,6 +139,31 @@ mod tests {
     fn swap_rejects_dimension_change() {
         let reg = ModelRegistry::new(proj(16, 1));
         reg.swap(proj(32, 2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn swap_rejects_variant_change() {
+        let reg = ModelRegistry::new(proj(16, 1));
+        let st = CbeModel::random(
+            &ProjectionSpec::Stacked { blocks: Some(1) },
+            16,
+            16,
+            2,
+            Planner::new(),
+        )
+        .unwrap();
+        reg.swap(st);
+    }
+
+    #[test]
+    fn stacked_models_hot_swap_too() {
+        let spec = ProjectionSpec::Stacked { blocks: Some(2) };
+        let mk = |seed| CbeModel::random(&spec, 16, 32, seed, Planner::new()).unwrap();
+        let reg = ModelRegistry::new(mk(1));
+        let before = reg.current().fingerprint();
+        assert_eq!(reg.swap(mk(2)), 1);
+        assert_ne!(reg.current().fingerprint(), before);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! [`EmbeddingService`]: the public serving facade.
 //!
 //! Owns the model slot (a hot-swappable
-//! [`ModelRegistry`] of `Send + Sync` [`CirculantProjection`]s), the
+//! [`ModelRegistry`] of `Send + Sync` [`CbeModel`]s — any projection
+//! variant of the `circ | stacked[:B] | downsampled` grammar), the
 //! dynamic batcher and the retrieval index. A background worker thread
 //! runs the event loop: drain requests → form batch → one parallel
 //! batch-encode (scoped-thread fan-out across cores, signs packed
@@ -68,9 +69,9 @@ use crate::fft::Planner;
 use crate::index::persist::{self, LoadReport, SnapshotStamp};
 use crate::index::{build_index, AnyIndex, IndexAny, IndexBackend};
 use crate::linalg::Mat;
-use crate::obs::{self, Stage, StatsSnapshot};
+use crate::obs::{self, ProjectionInfo, Stage, StatsSnapshot};
 use crate::opt::TimeFreqConfig;
-use crate::projections::{CirculantProjection, ScratchPool};
+use crate::projections::{CbeModel, ProjectionSpec, ScratchPool};
 use crate::runtime::Manifest;
 use crate::util::rng::Pcg64;
 use anyhow::{anyhow, Result};
@@ -121,8 +122,19 @@ impl Default for RetrainConfig {
 pub struct ServiceConfig {
     /// Feature dimension.
     pub d: usize,
-    /// Bits returned per code (k ≤ d).
+    /// Bits returned per code. Capped by the projection: k ≤ d for
+    /// `circ`/`downsampled`, k ≤ B·d for `stacked:B`; a request past the
+    /// cap fails [`EmbeddingService::start`] with
+    /// [`CbeError::BadCodeLength`].
     pub bits: usize,
+    /// Projection variant serving the codes. Parse from config with
+    /// [`ProjectionSpec::from_spec`] (`circ | stacked[:B] | downsampled`;
+    /// the embedding_server example reads the spec from `CBE_PROJ`, the
+    /// CLI from `--proj`). [`EmbeddingService::start`] only accepts
+    /// `circ` (its `r`/`signs` arguments describe exactly one block) —
+    /// other variants enter through
+    /// [`EmbeddingService::start_with_model`].
+    pub proj: ProjectionSpec,
     /// Batching policy.
     pub batcher: BatcherConfig,
     /// Retrieval backend built by [`EmbeddingService::build_index`].
@@ -218,9 +230,12 @@ pub struct EmbeddingService {
 }
 
 impl EmbeddingService {
-    /// Start the service: register the initial projection, spawn the
-    /// batching event loop. `r` and `signs` are the circulant model
-    /// parameters (e.g. from CBE-opt training or random for CBE-rand).
+    /// Start the service from bare single-block parameters: register the
+    /// initial projection, spawn the batching event loop. `r` and `signs`
+    /// are the circulant model parameters (e.g. from CBE-opt training or
+    /// random for CBE-rand); accordingly [`ServiceConfig::proj`] must be
+    /// `circ`. Stacked/downsampled services start through
+    /// [`EmbeddingService::start_with_model`].
     pub fn start(
         artifacts_dir: &Path,
         cfg: ServiceConfig,
@@ -229,14 +244,38 @@ impl EmbeddingService {
     ) -> Result<EmbeddingService> {
         assert_eq!(r.len(), cfg.d);
         assert_eq!(signs.len(), cfg.d);
-        assert!(cfg.bits <= cfg.d);
+        if cfg.proj != ProjectionSpec::Circ {
+            return Err(anyhow!(
+                "EmbeddingService::start takes one circulant block (r, signs) and \
+                 cannot build a '{}' model — use start_with_model",
+                cfg.proj.spec()
+            ));
+        }
+        let model = CbeModel::circulant(r, signs, Planner::new());
+        EmbeddingService::start_with_model(artifacts_dir, cfg, model)
+    }
+
+    /// Start the service around an already-built model of any projection
+    /// variant (the general entry point; [`EmbeddingService::start`] is
+    /// the single-block convenience wrapper). The configured `bits` are
+    /// validated against the model's cap — a typed
+    /// [`CbeError::BadCodeLength`] instead of the old `assert!`.
+    pub fn start_with_model(
+        artifacts_dir: &Path,
+        cfg: ServiceConfig,
+        model: CbeModel,
+    ) -> Result<EmbeddingService> {
+        if model.d() != cfg.d {
+            return Err(anyhow!(
+                "model dimension {} != configured dimension {}",
+                model.d(),
+                cfg.d
+            ));
+        }
+        model.check_code_length(cfg.bits)?;
 
         let planner = Planner::new();
-        let registry = Arc::new(ModelRegistry::new(CirculantProjection::new(
-            r,
-            signs,
-            planner.clone(),
-        )));
+        let registry = Arc::new(ModelRegistry::new(model));
         let sample = Arc::new(Mutex::new(Reservoir::new(
             cfg.retrain.sample,
             cfg.retrain.seed ^ 0x7e5e,
@@ -297,10 +336,10 @@ impl EmbeddingService {
         })
     }
 
-    /// The currently active circulant model (the same instance the
+    /// The currently active projection model (the same instance the
     /// worker will encode the *next* batch with — `Send + Sync`, hold
     /// the `Arc` as long as you like; a later hot-swap won't touch it).
-    pub fn projection(&self) -> Arc<CirculantProjection> {
+    pub fn projection(&self) -> Arc<CbeModel> {
         self.registry.current()
     }
 
@@ -541,10 +580,12 @@ impl EmbeddingService {
     /// fingerprint survives restarts: two processes that trained the same
     /// deterministic model agree on it, which is what lets
     /// [`EmbeddingService::load_index`] accept a snapshot from an earlier
-    /// run of the same model and reject one from a different model.
+    /// run of the same model and reject one from a different model. The
+    /// hash covers **all** blocks plus any bit-selection plan (see
+    /// [`CbeModel::fingerprint`]); a one-block stacked model fingerprints
+    /// identically to the equivalent plain circulant.
     pub fn model_fingerprint(&self) -> u64 {
-        let proj = self.registry.current();
-        persist::model_fingerprint(&proj.r, &proj.signs)
+        self.registry.current().fingerprint()
     }
 
     /// Persist `index` into `dir` as a checksummed snapshot (plus a
@@ -619,11 +660,15 @@ fn spawn_retrain(
 ) -> std::thread::JoinHandle<()> {
     let rc = cfg.retrain.clone();
     let d = cfg.d;
-    let bits = cfg.bits.clamp(1, d);
     let planner = planner.clone();
     let registry = Arc::clone(registry);
     let sample = Arc::clone(sample);
     let metrics = Arc::clone(metrics);
+    // Retrain what is actually serving: the live model's canonical spec
+    // (not the config's) decides the variant and block count, so a
+    // stacked service retrains per-block and the swap keeps the shape.
+    let spec = registry.current().spec();
+    let bits = cfg.bits.clamp(1, registry.current().max_bits());
     std::thread::spawn(move || {
         let rows = {
             let res = sample.lock().expect("sample lock poisoned");
@@ -646,9 +691,16 @@ fn spawn_retrain(
         tf.threads = rc.threads;
         tf.deterministic = rc.deterministic;
         tf.cache_budget = rc.cache_budget;
-        let enc = CbeTrainer::new(tf).seed(rc.seed).planner(planner).train(&x);
+        let trainer = CbeTrainer::new(tf).seed(rc.seed).planner(planner);
+        let enc = match trainer.train_model(&spec, &x, None) {
+            Ok(enc) => enc,
+            Err(e) => {
+                let _ = reply.send(Err(format!("retrain failed: {e}")));
+                return;
+            }
+        };
         let report = enc.report.clone();
-        let version = registry.swap(enc.proj);
+        let version = registry.swap(enc.model);
         metrics.record_retrain();
         let _ = reply.send(Ok(RetrainOutcome {
             version,
@@ -658,11 +710,23 @@ fn spawn_retrain(
     })
 }
 
+/// Identity block for stats scrapes, resolved from the live model so a
+/// hot-swap shows up in the very next snapshot (satellite of the
+/// generalized projection layer: scrapes tell *what* is serving).
+fn proj_info(model: &CbeModel, bits: usize) -> ProjectionInfo {
+    ProjectionInfo {
+        spec: model.spec_string(),
+        variant: model.variant(),
+        blocks: model.block_count(),
+        bits,
+    }
+}
+
 /// Encode one formed batch through the given projection (parallel
 /// fan-out, signs packed directly into the reused `codes` buffer) and
 /// scatter the replies.
 fn run_batch(
-    proj: &CirculantProjection,
+    proj: &CbeModel,
     bits: usize,
     artifact_batch: usize,
     batch: Vec<EncodeRequest>,
@@ -763,7 +827,12 @@ fn event_loop(
                     ));
                 }
                 ControlRequest::Stats { reply } => {
-                    let _ = reply.send(metrics.snapshot(artifact_batch, registry.version()));
+                    let (model, version) = registry.current_versioned();
+                    let _ = reply.send(metrics.snapshot(
+                        artifact_batch,
+                        version,
+                        proj_info(&model, cfg.bits),
+                    ));
                 }
             }
         }
@@ -811,7 +880,12 @@ fn event_loop(
             // A final scrape is still answerable — the counters outlive
             // the loop; refusing would turn clean shutdowns into races.
             ControlRequest::Stats { reply } => {
-                let _ = reply.send(metrics.snapshot(artifact_batch, registry.version()));
+                let (model, version) = registry.current_versioned();
+                let _ = reply.send(metrics.snapshot(
+                    artifact_batch,
+                    version,
+                    proj_info(&model, cfg.bits),
+                ));
             }
         }
     }

@@ -1,62 +1,97 @@
 //! CBE-rand and CBE-opt — the paper's methods.
 //!
-//! Both override [`BinaryEncoder::encode_batch`] with the parallel
+//! Both are thin configs over a [`CbeModel`]: the [`ProjectionSpec`]
+//! grammar (`circ | stacked[:B] | downsampled`) decides whether the
+//! model is the paper's single circulant block, a stack of B blocks for
+//! k > d codes, or a sparsely row-selected block for k ≪ d. Both
+//! override [`BinaryEncoder::encode_batch`] with the parallel
 //! batch-encode engine (scoped-thread fan-out, direct sign→bit packing),
 //! which is bit-exactly equivalent to the serial per-vector default.
 //!
 //! Training goes through [`CbeTrainer`]: it owns the run configuration
 //! (λ, iterations, thread count, determinism, spectrum-memory budget),
 //! drives the half-spectrum-cached parallel [`TimeFreqOptimizer`], and
-//! hands back a [`CbeOpt`] carrying both the learned projection and the
+//! hands back a [`CbeOpt`] carrying both the learned model and the
 //! [`TrainReport`] of the run (per-iteration objective, wall time,
-//! thread count, resident cache bytes / tile size).
+//! thread count, resident cache bytes / tile size). For stacked models
+//! each block trains independently on its own slice of the bit budget
+//! ([`CbeTrainer::train_model`]); the downsampled variant is
+//! data-independent and needs no trainer at all.
 
 use super::BinaryEncoder;
 use crate::bits::BitCode;
 use crate::fft::Planner;
 use crate::linalg::Mat;
 use crate::opt::{PairSet, TimeFreqConfig, TimeFreqOptimizer, TrainReport};
-use crate::projections::{CirculantProjection, ScratchPool};
+use crate::projections::{CbeModel, CirculantProjection, ProjectionSpec, ScratchPool, StackedCirculant};
 use crate::util::rng::Pcg64;
+use crate::CbeError;
 
 /// Shared batch-path override: fan the rows of `x` out across cores and
 /// pack the k-bit codes directly.
-fn batch_encode(proj: &CirculantProjection, k: usize, x: &Mat) -> BitCode {
+fn batch_encode(model: &CbeModel, k: usize, x: &Mat) -> BitCode {
     let rows: Vec<&[f32]> = (0..x.rows).map(|i| x.row(i)).collect();
     let mut bc = BitCode::new(x.rows, k);
-    proj.encode_batch_into(&rows, k, &mut bc, &mut ScratchPool::new());
+    model.encode_batch_into(&rows, k, &mut bc, &mut ScratchPool::new());
     bc
 }
 
-/// Randomized CBE (§3): r ~ N(0,1), D random ±1 diagonal.
+/// Encoder display name for a variant — kept `CBE`-prefixed so harness
+/// logic keying on the family (e.g. the fixed-time recall sweep) still
+/// groups all variants together.
+fn variant_name(model: &CbeModel, opt: bool) -> &'static str {
+    match (model, opt) {
+        (CbeModel::Circ(_), false) => "CBE-rand",
+        (CbeModel::Circ(_), true) => "CBE-opt",
+        (CbeModel::Stacked(_), false) => "CBE-rand-stacked",
+        (CbeModel::Stacked(_), true) => "CBE-opt-stacked",
+        (CbeModel::Downsampled(_), false) => "CBE-rand-ds",
+        (CbeModel::Downsampled(_), true) => "CBE-opt-ds",
+    }
+}
+
+/// Randomized CBE (§3): r ~ N(0,1), D random ±1 diagonal — generalized
+/// over the projection variants via [`ProjectionSpec`].
 pub struct CbeRand {
-    pub proj: CirculantProjection,
+    pub model: CbeModel,
     pub k: usize,
 }
 
 impl CbeRand {
-    pub fn new(d: usize, k: usize, seed: u64, planner: Planner) -> CbeRand {
-        assert!(k <= d, "CBE produces at most d bits");
-        let mut rng = Pcg64::new(seed);
-        CbeRand {
-            proj: CirculantProjection::random(d, &mut rng, planner),
+    /// The paper's single-block encoder (`circ` spec). k > d is a typed
+    /// [`CbeError::BadCodeLength`], not a panic — use
+    /// [`CbeRand::with_spec`] and `stacked[:B]` for longer codes.
+    pub fn new(d: usize, k: usize, seed: u64, planner: Planner) -> Result<CbeRand, CbeError> {
+        CbeRand::with_spec(&ProjectionSpec::Circ, d, k, seed, planner)
+    }
+
+    /// Seeded random encoder for any projection spec.
+    pub fn with_spec(
+        spec: &ProjectionSpec,
+        d: usize,
+        k: usize,
+        seed: u64,
+        planner: Planner,
+    ) -> Result<CbeRand, CbeError> {
+        Ok(CbeRand {
+            model: CbeModel::random(spec, d, k, seed, planner)?,
             k,
-        }
+        })
     }
 }
 
 impl BinaryEncoder for CbeRand {
     fn name(&self) -> &'static str {
-        "CBE-rand"
+        variant_name(&self.model, false)
     }
     fn bits(&self) -> usize {
         self.k
     }
     fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
-        self.proj.encode(x, self.k)
+        self.model.encode(x, self.k)
     }
     fn encode_batch(&self, x: &Mat) -> BitCode {
-        batch_encode(&self.proj, self.k, x)
+        batch_encode(&self.model, self.k, x)
     }
 }
 
@@ -119,9 +154,92 @@ impl CbeTrainer {
 
     /// Train with optional §6 similar/dissimilar pair supervision.
     pub fn train_with_pairs(&self, x: &Mat, pairs: Option<&PairSet>) -> CbeOpt {
+        let (proj, trace, report) = self.train_block(x, pairs, self.cfg.clone(), self.seed);
+        CbeOpt {
+            model: CbeModel::Circ(proj),
+            k: self.cfg.k,
+            objective_trace: trace,
+            block_reports: vec![report.clone()],
+            report,
+        }
+    }
+
+    /// Train a model for any projection spec, with `self.cfg.k` as the
+    /// *total* code length:
+    ///
+    /// * `circ` — the classic path, identical to
+    ///   [`CbeTrainer::train_with_pairs`].
+    /// * `stacked[:B]` — each block trains independently on its own bit
+    ///   window (block b owns `min(d, k − b·d)` bits); block 0 uses
+    ///   `self.seed` so a trained `stacked:1` is bit-identical to a
+    ///   trained `circ`, later blocks derive their seeds
+    ///   deterministically from it.
+    /// * `downsampled` — data-independent (arXiv:1601.06342): returns
+    ///   the seeded random model with an empty objective trace.
+    pub fn train_model(
+        &self,
+        spec: &ProjectionSpec,
+        x: &Mat,
+        pairs: Option<&PairSet>,
+    ) -> Result<CbeOpt, CbeError> {
         let d = x.cols;
         let k = self.cfg.k;
-        let mut rng = Pcg64::new(self.seed);
+        spec.validate(k, d)?;
+        match spec {
+            ProjectionSpec::Circ => Ok(self.train_with_pairs(x, pairs)),
+            ProjectionSpec::Downsampled => {
+                let model =
+                    CbeModel::random(spec, d, k, self.seed, self.planner.clone())?;
+                Ok(CbeOpt {
+                    model,
+                    k,
+                    objective_trace: Vec::new(),
+                    block_reports: Vec::new(),
+                    report: TrainReport::default(),
+                })
+            }
+            ProjectionSpec::Stacked { .. } => {
+                let blocks = spec.blocks_for(k, d);
+                let mut trained = Vec::with_capacity(blocks);
+                let mut reports = Vec::with_capacity(blocks);
+                for b in 0..blocks {
+                    let mut cfg = self.cfg.clone();
+                    cfg.k = d.min(k - b * d);
+                    // Block 0 trains exactly like the plain circulant run
+                    // (same cfg.k, same seed); extra blocks get distinct
+                    // deterministic seed offsets so their D diagonals and
+                    // r₀ inits are independent draws.
+                    let seed = self
+                        .seed
+                        .wrapping_add((b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    let (proj, _trace, report) = self.train_block(x, pairs, cfg, seed);
+                    reports.push(report);
+                    trained.push(proj);
+                }
+                let model = CbeModel::Stacked(StackedCirculant::new(trained)?);
+                let report = reports[0].clone();
+                Ok(CbeOpt {
+                    model,
+                    k,
+                    objective_trace: report.objective_trace.clone(),
+                    block_reports: reports,
+                    report,
+                })
+            }
+        }
+    }
+
+    /// One circulant block's training run — the shared core of the
+    /// single-block and stacked paths.
+    fn train_block(
+        &self,
+        x: &Mat,
+        pairs: Option<&PairSet>,
+        cfg: TimeFreqConfig,
+        seed: u64,
+    ) -> (CirculantProjection, Vec<f64>, TrainReport) {
+        let d = x.cols;
+        let mut rng = Pcg64::new(seed);
         let signs = rng.sign_vec(d);
         let r0 = rng.normal_vec(d);
 
@@ -133,27 +251,34 @@ impl CbeTrainer {
             }
         }
 
-        let mut opt = TimeFreqOptimizer::new(d, self.cfg.clone(), self.planner.clone());
+        let mut opt = TimeFreqOptimizer::new(d, cfg, self.planner.clone());
         let r = opt.run(&xflip, &r0, pairs);
-        CbeOpt {
-            proj: CirculantProjection::new(r, signs, self.planner.clone()),
-            k,
-            objective_trace: opt.objective_trace.clone(),
-            report: opt.report,
-        }
+        let trace = opt.objective_trace.clone();
+        (
+            CirculantProjection::new(r, signs, self.planner.clone()),
+            trace,
+            opt.report,
+        )
     }
 }
 
 /// Learned CBE (§4): r optimized by the time–frequency alternating
 /// optimization on training data.
 pub struct CbeOpt {
-    pub proj: CirculantProjection,
+    pub model: CbeModel,
     pub k: usize,
     /// Objective trace of the training run (diagnostics; same values as
-    /// `report.objective_trace`).
+    /// `report.objective_trace`). For stacked models this is block 0's
+    /// trace — see [`CbeOpt::block_reports`] for the rest.
     pub objective_trace: Vec<f64>,
-    /// Full convergence + performance record of the training run.
+    /// Full convergence + performance record of the training run. For
+    /// stacked models, block 0's report (the others ride in
+    /// [`CbeOpt::block_reports`]); empty-default for the training-free
+    /// downsampled variant.
     pub report: TrainReport,
+    /// Per-block reports, one per trained circulant block (empty for
+    /// downsampled).
+    pub block_reports: Vec<TrainReport>,
 }
 
 impl CbeOpt {
@@ -176,16 +301,16 @@ impl CbeOpt {
 
 impl BinaryEncoder for CbeOpt {
     fn name(&self) -> &'static str {
-        "CBE-opt"
+        variant_name(&self.model, true)
     }
     fn bits(&self) -> usize {
         self.k
     }
     fn encode_signs(&self, x: &[f32]) -> Vec<f32> {
-        self.proj.encode(x, self.k)
+        self.model.encode(x, self.k)
     }
     fn encode_batch(&self, x: &Mat) -> BitCode {
-        batch_encode(&self.proj, self.k, x)
+        batch_encode(&self.model, self.k, x)
     }
 }
 
@@ -204,7 +329,7 @@ mod tests {
         let trials = 60;
         let mut errs = 0f64;
         for t in 0..trials {
-            let enc = CbeRand::new(d, d, 5000 + t, planner.clone());
+            let enc = CbeRand::new(d, d, 5000 + t, planner.clone()).unwrap();
             let mut a = rng.normal_vec(d);
             let mut b: Vec<f32> = a
                 .iter()
@@ -259,10 +384,100 @@ mod tests {
         let planner = Planner::new();
         let a = CbeOpt::train(&x, cfg.clone(), 9, planner.clone(), None);
         let b = CbeTrainer::new(cfg).seed(9).planner(planner).train(&x);
-        assert_eq!(a.proj.signs, b.proj.signs);
-        for (x, y) in a.proj.r.iter().zip(&b.proj.r) {
+        let (pa, pb) = (
+            a.model.as_circulant().unwrap(),
+            b.model.as_circulant().unwrap(),
+        );
+        assert_eq!(pa.signs, pb.signs);
+        for (x, y) in pa.r.iter().zip(&pb.r) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn trained_stacked_1_is_the_trained_circulant() {
+        // The k == d compatibility contract holds through training, not
+        // just random draws: one stacked block learns the exact same
+        // model as the classic path (same seed stream, same cfg.k).
+        let d = 20;
+        let n = 30;
+        let mut rng = Pcg64::new(11);
+        let x = Mat::randn(n, d, &mut rng);
+        let mut cfg = TimeFreqConfig::new(d);
+        cfg.iters = 3;
+        let trainer = CbeTrainer::new(cfg).seed(6);
+        let circ = trainer.train(&x);
+        let st1 = trainer
+            .train_model(&ProjectionSpec::Stacked { blocks: Some(1) }, &x, None)
+            .unwrap();
+        let pc = circ.model.as_circulant().unwrap();
+        let CbeModel::Stacked(ref s) = st1.model else {
+            panic!("expected a stacked model");
+        };
+        let ps = &s.blocks()[0];
+        assert_eq!(pc.signs, ps.signs);
+        for (a, b) in pc.r.iter().zip(&ps.r) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(circ.model.fingerprint(), st1.model.fingerprint());
+        assert_eq!(circ.objective_trace, st1.objective_trace);
+    }
+
+    #[test]
+    fn stacked_training_partitions_the_bit_budget() {
+        let d = 16;
+        let n = 25;
+        let k = 2 * d + 5; // 3 blocks: 16 + 16 + 5 bits
+        let mut rng = Pcg64::new(21);
+        let x = Mat::randn(n, d, &mut rng);
+        let mut cfg = TimeFreqConfig::new(k);
+        cfg.iters = 2;
+        let enc = CbeTrainer::new(cfg)
+            .seed(3)
+            .train_model(&ProjectionSpec::Stacked { blocks: None }, &x, None)
+            .unwrap();
+        assert_eq!(enc.bits(), k);
+        assert_eq!(enc.model.block_count(), 3);
+        assert_eq!(enc.block_reports.len(), 3);
+        for r in &enc.block_reports {
+            assert!(!r.objective_trace.is_empty());
+        }
+        // Blocks are independent draws: their D diagonals differ.
+        let CbeModel::Stacked(ref s) = enc.model else {
+            panic!("expected a stacked model");
+        };
+        assert_ne!(s.blocks()[0].signs, s.blocks()[1].signs);
+        // Serving shape: a full-length encode really yields k bits.
+        let q = Pcg64::new(1).normal_vec(d);
+        assert_eq!(enc.encode_signs(&q).len(), k);
+        assert_eq!(enc.name(), "CBE-opt-stacked");
+    }
+
+    #[test]
+    fn downsampled_training_is_free_and_deterministic() {
+        let d = 32;
+        let k = 8;
+        let n = 20;
+        let mut rng = Pcg64::new(41);
+        let x = Mat::randn(n, d, &mut rng);
+        let mut cfg = TimeFreqConfig::new(k);
+        cfg.iters = 2;
+        let trainer = CbeTrainer::new(cfg).seed(13);
+        let a = trainer
+            .train_model(&ProjectionSpec::Downsampled, &x, None)
+            .unwrap();
+        let b = trainer
+            .train_model(&ProjectionSpec::Downsampled, &x, None)
+            .unwrap();
+        assert!(a.objective_trace.is_empty(), "downsampled has no trainer");
+        assert!(a.block_reports.is_empty());
+        assert_eq!(a.model.fingerprint(), b.model.fingerprint());
+        // ...and equals the pure random draw from the same seed: the
+        // "trained" downsampled model IS the seeded model.
+        let r = CbeRand::with_spec(&ProjectionSpec::Downsampled, d, k, 13, Planner::new())
+            .unwrap();
+        assert_eq!(a.model.fingerprint(), r.model.fingerprint());
+        assert_eq!(a.name(), "CBE-opt-ds");
     }
 
     #[test]
@@ -282,8 +497,12 @@ mod tests {
             .train(&x);
         assert!(tiled.report.tile_rows > 0, "budget did not trigger tiling");
         assert!(tiled.report.cache_bytes < full.report.cache_bytes);
-        assert_eq!(full.proj.signs, tiled.proj.signs);
-        for (a, b) in full.proj.r.iter().zip(&tiled.proj.r) {
+        let (pf, pt) = (
+            full.model.as_circulant().unwrap(),
+            tiled.model.as_circulant().unwrap(),
+        );
+        assert_eq!(pf.signs, pt.signs);
+        for (a, b) in pf.r.iter().zip(&pt.r) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }
@@ -293,32 +512,60 @@ mod tests {
         let d = 48;
         let n = 33;
         let planner = Planner::new();
-        let enc = CbeRand::new(d, 20, 8, planner);
-        let mut rng = Pcg64::new(9);
-        let x = Mat::randn(n, d, &mut rng);
-        let batch = enc.encode_batch(&x);
-        let mut serial = BitCode::new(n, enc.bits());
-        for i in 0..n {
-            serial.set_row_from_signs(i, &enc.encode_signs(x.row(i)));
+        for spec in [
+            ProjectionSpec::Circ,
+            ProjectionSpec::Stacked { blocks: Some(2) },
+            ProjectionSpec::Downsampled,
+        ] {
+            let k = if matches!(spec, ProjectionSpec::Stacked { .. }) {
+                2 * d - 7
+            } else {
+                20
+            };
+            let enc = CbeRand::with_spec(&spec, d, k, 8, planner.clone()).unwrap();
+            let mut rng = Pcg64::new(9);
+            let x = Mat::randn(n, d, &mut rng);
+            let batch = enc.encode_batch(&x);
+            let mut serial = BitCode::new(n, enc.bits());
+            for i in 0..n {
+                serial.set_row_from_signs(i, &enc.encode_signs(x.row(i)));
+            }
+            assert_eq!(batch, serial, "spec={}", spec.spec());
         }
-        assert_eq!(batch, serial);
     }
 
     #[test]
     fn k_bits_are_prefix() {
         let d = 64;
         let planner = Planner::new();
-        let full = CbeRand::new(d, d, 3, planner.clone());
+        let full = CbeRand::new(d, d, 3, planner.clone()).unwrap();
+        let fp = full.model.as_circulant().unwrap();
         let part = CbeRand {
-            proj: CirculantProjection::new(
-                full.proj.r.clone(),
-                full.proj.signs.clone(),
-                planner,
-            ),
+            model: CbeModel::circulant(fp.r.clone(), fp.signs.clone(), planner),
             k: 16,
         };
         let mut rng = Pcg64::new(4);
         let x = rng.normal_vec(d);
         assert_eq!(part.encode_signs(&x), full.encode_signs(&x)[..16].to_vec());
+    }
+
+    #[test]
+    fn bad_code_lengths_are_typed_errors() {
+        let planner = Planner::new();
+        assert_eq!(
+            CbeRand::new(16, 17, 1, planner.clone()).unwrap_err(),
+            CbeError::BadCodeLength { k: 17, d: 16, max: 16 }
+        );
+        assert_eq!(
+            CbeRand::with_spec(
+                &ProjectionSpec::Stacked { blocks: Some(2) },
+                16,
+                33,
+                1,
+                planner
+            )
+            .unwrap_err(),
+            CbeError::BadCodeLength { k: 33, d: 16, max: 32 }
+        );
     }
 }

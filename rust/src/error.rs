@@ -36,6 +36,14 @@ pub enum CbeError {
     /// queue_depth` / `CBE_QUEUE_DEPTH`). Back off and retry; rejections
     /// are counted in `StatsSnapshot::overloads`.
     Overloaded { depth: usize },
+    /// A requested code length `k` is outside what the configured
+    /// projection can produce from `d`-dimensional inputs: a plain
+    /// circulant (and a downsampled one) caps at `max = d`, a stacked
+    /// model at `max = blocks · d`. Raised at the config seams (spec
+    /// parsing, encoder construction, `EmbeddingService::start`) so a
+    /// bad `--bits`/`CBE_PROJ` combination is a recoverable error the
+    /// operator sees at startup, not an assert abort mid-serve.
+    BadCodeLength { k: usize, d: usize, max: usize },
     /// Any other serving failure (encode path, service stopped, …),
     /// carried as its display string.
     Service(String),
@@ -55,6 +63,12 @@ impl fmt::Display for CbeError {
             CbeError::Overloaded { depth } => write!(
                 f,
                 "service overloaded: request queue full at depth {depth} — back off and retry"
+            ),
+            CbeError::BadCodeLength { k, d, max } => write!(
+                f,
+                "bad code length: k={k} bits requested from a d={d} projection that \
+                 produces at most {max} — lower --bits or widen the projection \
+                 (e.g. stacked:<B> for k > d)"
             ),
             CbeError::Service(msg) => write!(f, "{msg}"),
         }
@@ -91,6 +105,14 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("overloaded"), "{s}");
         assert!(s.contains("256"), "{s}");
+    }
+
+    #[test]
+    fn bad_code_length_display_names_all_three_numbers() {
+        let e = CbeError::BadCodeLength { k: 300, d: 128, max: 256 };
+        let s = e.to_string();
+        assert!(s.contains("bad code length"), "{s}");
+        assert!(s.contains("300") && s.contains("128") && s.contains("256"), "{s}");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use crate::bits::hamming::normalized_hamming;
 use crate::fft::Planner;
 use crate::linalg::qr::random_orthonormal;
 use crate::linalg::Mat;
-use crate::projections::CirculantProjection;
+use crate::projections::{CbeModel, ProjectionSpec};
 use crate::util::rng::Pcg64;
 use crate::util::table::Table;
 
@@ -56,7 +56,14 @@ pub fn run(
 
     for &theta in thetas {
         for &k in ks {
-            assert!(k <= d);
+            // k ≤ d uses the paper's single circulant block; k > d rides
+            // stacked blocks. The analytical curve θ(π−θ)/kπ² assumes
+            // independent bits either way (blocks draw independent r, D).
+            let spec = if k <= d {
+                ProjectionSpec::Circ
+            } else {
+                ProjectionSpec::Stacked { blocks: None }
+            };
             let analytical = theta * (std::f64::consts::PI - theta)
                 / (k as f64 * std::f64::consts::PI * std::f64::consts::PI);
             // Sample variance of H_k over random (pair, projection) draws.
@@ -66,8 +73,8 @@ pub fn run(
             for _ in 0..pairs {
                 let (a, b) = pair_at_angle(d, theta, &mut rng);
                 for _ in 0..projections_per_pair {
-                    let proj =
-                        CirculantProjection::random(d, &mut rng, planner.clone());
+                    let proj = CbeModel::random_with(&spec, d, k, &mut rng, planner.clone())
+                        .expect("fig1 grid is pre-validated");
                     let ha = proj.encode(&a, k);
                     let hb = proj.encode(&b, k);
                     let h = normalized_hamming(&ha, &hb);
@@ -128,6 +135,19 @@ mod tests {
         let v16: f64 = r.rows.iter().filter(|r| r.1 == 16).map(|r| r.3).sum();
         let v64: f64 = r.rows.iter().filter(|r| r.1 == 64).map(|r| r.3).sum();
         assert!(v64 < v16);
+    }
+
+    #[test]
+    fn stacked_variance_tracks_analytical_beyond_d() {
+        // k > d: eq. 14's independent-bit variance still holds because
+        // stacked blocks draw independent (r, D) pairs.
+        let r = run(32, &[64], &[std::f64::consts::FRAC_PI_2], 6, 40, 7);
+        for (theta, k, ana, var) in &r.rows {
+            assert!(
+                (var - ana).abs() < 3.0 * ana.max(1e-4),
+                "θ={theta} k={k}: analytical {ana} vs stacked {var}"
+            );
+        }
     }
 
     #[test]

@@ -69,7 +69,8 @@ pub fn run(cfg: &Fig5Config) -> Fig5Result {
             .seed(cfg.seed + 2)
             .planner(planner.clone())
             .train(&train);
-        let cbe_rand = CbeRand::new(cfg.d, k, cfg.seed + 3, planner.clone());
+        let cbe_rand = CbeRand::new(cfg.d, k, cfg.seed + 3, planner.clone())
+            .expect("fig5 keeps k <= d");
         let lsh = Lsh::new(cfg.d, k, cfg.seed + 4);
         let bil_opt = BilinearOpt::train(&train, k, 3, cfg.seed + 5);
         let itq = Itq::train(&train, k.min(train.cols), 8, cfg.seed + 6);

@@ -1,5 +1,7 @@
 //! Table 2: projection time (ms) vs dimensionality for full (LSH-style),
-//! bilinear and circulant projections, single core, k = d bits.
+//! bilinear and circulant projections, single core, k = d bits — plus a
+//! stacked-circulant column at k = 2d (two blocks, two FFTs) showing the
+//! long-code regime stays in the O(B·d log d) family.
 //!
 //! The paper's machine shows ~d² : d√d : 5·d·log d. Absolute numbers differ
 //! on this testbed; the *shape* (who wins, the growing gap, the memory
@@ -9,7 +11,9 @@
 
 use crate::bench::Bench;
 use crate::fft::Planner;
-use crate::projections::{BilinearProjection, CirculantProjection, FullProjection};
+use crate::projections::{
+    BilinearProjection, CbeModel, CirculantProjection, FullProjection, ProjectionSpec,
+};
 use crate::util::rng::Pcg64;
 use crate::util::table::{fmt_ms, Table};
 
@@ -19,6 +23,8 @@ pub struct TimingRow {
     pub full_ms: Option<f64>,
     pub bilinear_ms: f64,
     pub circulant_ms: f64,
+    /// Stacked circulant at k = 2d (two blocks) — the long-code arm.
+    pub stacked2_ms: f64,
 }
 
 pub struct Table2Result {
@@ -46,6 +52,19 @@ pub fn run(dims: &[usize], mem_budget: usize, seed: u64) -> Table2Result {
             std::hint::black_box(circ.project(std::hint::black_box(&x)));
         });
 
+        // Stacked circulant, k = 2d: two blocks, O(2·d log d).
+        let stacked = CbeModel::random_with(
+            &ProjectionSpec::Stacked { blocks: Some(2) },
+            d,
+            2 * d,
+            &mut rng,
+            planner.clone(),
+        )
+        .expect("2d bits fit two stacked blocks");
+        let stacked2_ms = bench.run(&format!("stacked:2 d={d}"), || {
+            std::hint::black_box(stacked.encode(std::hint::black_box(&x), 2 * d));
+        });
+
         // Bilinear: O(d^1.5)
         let bil = BilinearProjection::random(d, d, &mut rng);
         let bilinear_ms = bench.run(&format!("bilinear d={d}"), || {
@@ -69,12 +88,19 @@ pub fn run(dims: &[usize], mem_budget: usize, seed: u64) -> Table2Result {
             full_ms,
             bilinear_ms,
             circulant_ms,
+            stacked2_ms,
         });
     }
 
     let mut t = Table::new(
         "Table 2 — projection time (ms), k = d bits, single core",
-        &["d", "Full proj.", "Bilinear proj.", "Circulant proj."],
+        &[
+            "d",
+            "Full proj.",
+            "Bilinear proj.",
+            "Circulant proj.",
+            "Stacked circ. (2d bits)",
+        ],
     );
     for r in &rows {
         t.row(vec![
@@ -82,6 +108,7 @@ pub fn run(dims: &[usize], mem_budget: usize, seed: u64) -> Table2Result {
             r.full_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
             fmt_ms(r.bilinear_ms),
             fmt_ms(r.circulant_ms),
+            fmt_ms(r.stacked2_ms),
         ]);
     }
     Table2Result {
@@ -112,6 +139,14 @@ mod tests {
         let ratio0 = first.full_ms.unwrap() / first.circulant_ms;
         let ratio1 = full / last.circulant_ms;
         assert!(ratio1 > ratio0, "gap must grow: {ratio0} -> {ratio1}");
+        // Long codes stay cheap: twice the bits of the full projection for
+        // a fraction of its time at scale.
+        assert!(
+            last.stacked2_ms < full,
+            "stacked 2d {} !< full {}",
+            last.stacked2_ms,
+            full
+        );
     }
 
     #[test]

@@ -116,7 +116,7 @@ pub fn run(cfg: &Table3Config) -> Table3Result {
     let cbe = CbeTrainer::new(tf).seed(cfg.seed + 3).planner(planner).train(&xtrain);
     {
         let tr = project_all(&xtrain, &|x| cbe.encode_signs(x));
-        let te = project_all(&xtest, &|x| cbe.proj.project(x));
+        let te = project_all(&xtest, &|x| cbe.model.as_circulant().unwrap().project(x));
         let svm = LinearSvm::train(&tr, &ytrain, cfg.classes, &svm_cfg);
         results.push(("CBE-opt".to_string(), svm.accuracy(&te, &ytest)));
     }

@@ -202,6 +202,17 @@ pub fn model_fingerprint(r: &[f32], signs: &[f32]) -> u64 {
     h | 1
 }
 
+/// Fold one more component (another block's [`model_fingerprint`], a
+/// bit-selection index, a variant tag) into a fingerprint chain. Chaining
+/// is how multi-block models stay collision-distinct from single-block
+/// ones without changing the single-block value: a one-block stacked
+/// model never calls this, so its fingerprint equals the plain circulant
+/// fingerprint of the same parameters — while any extra block or
+/// selection plan perturbs the hash. Never returns 0 (0 = "not stamped").
+pub fn fingerprint_chain(h: u64, component: u64) -> u64 {
+    splitmix64(h ^ component.rotate_left(17)) | 1
+}
+
 fn io_cbe(ctx: &str, e: &io::Error) -> CbeError {
     CbeError::Service(format!("{ctx}: {e}"))
 }
@@ -726,6 +737,22 @@ mod tests {
         r2[1] += 1e-6;
         assert_ne!(a, model_fingerprint(&r2, &signs));
         assert_ne!(a, model_fingerprint(&signs, &r));
+    }
+
+    #[test]
+    fn fingerprint_chain_is_deterministic_nonzero_and_order_sensitive() {
+        let r = [0.5f32, -1.25, 3.0];
+        let signs = [1.0f32, -1.0, 1.0];
+        let a = model_fingerprint(&r, &signs);
+        let b = model_fingerprint(&signs, &r);
+        let ab = fingerprint_chain(a, b);
+        assert_eq!(ab, fingerprint_chain(a, b));
+        assert_ne!(ab, 0);
+        // Chaining must distinguish block order and chain length, or a
+        // stacked model could collide with a permutation of itself.
+        assert_ne!(ab, fingerprint_chain(b, a));
+        assert_ne!(ab, a);
+        assert_ne!(fingerprint_chain(ab, a), ab);
     }
 
     #[test]

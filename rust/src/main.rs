@@ -17,6 +17,7 @@ use cbe::index::persist::{LoadMode, LoadReport, PersistOptions, PersistentIndex}
 use cbe::index::{IndexBackend, IndexKind, RecoveryState};
 use cbe::fft::Planner;
 use cbe::opt::TimeFreqConfig;
+use cbe::projections::{CbeModel, ProjectionSpec};
 use cbe::runtime::Manifest;
 use cbe::util::cli::Args;
 use cbe::util::rng::Pcg64;
@@ -26,6 +27,18 @@ use std::time::Duration;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+/// Projection variant: `--proj SPEC` wins, then the `CBE_PROJ` env var,
+/// then the paper's single-block `circ`. Grammar:
+/// `circ | stacked[:B] | downsampled`.
+fn proj_spec_arg(args: &Args) -> anyhow::Result<ProjectionSpec> {
+    let raw = if args.has("proj") {
+        args.str("proj", "circ")
+    } else {
+        std::env::var("CBE_PROJ").unwrap_or_else(|_| "circ".to_string())
+    };
+    ProjectionSpec::from_spec(&raw).map_err(|e| anyhow::anyhow!("--proj: {e}"))
 }
 
 /// Trainer spectrum-cache budget in bytes: `--cache-budget` wins, then the
@@ -88,6 +101,9 @@ fn print_usage() {
          common flags: --artifacts DIR --d N --bits K --seed S\n\
          \x20             --index SPEC (auto | linear | mih[:m] | mih-sampled[:m] |\n\
          \x20                           sharded:<shards>[:m])\n\
+         \x20             --proj SPEC (circ | stacked[:B] | downsampled; also env\n\
+         \x20                          CBE_PROJ. stacked serves k > d bits,\n\
+         \x20                          downsampled decorrelates k < d bits)\n\
          \x20             --queue-depth N (admission bound; 0 = CBE_QUEUE_DEPTH\n\
          \x20                              env, default 1024)\n\
          serve flags:  --retrain (train from the corpus reservoir and hot-swap\n\
@@ -158,8 +174,10 @@ fn cmd_encode(args: &Args) -> anyhow::Result<()> {
     let count = args.usize("count", 256);
     let bits = args.usize("bits", d.min(256));
     let seed = args.u64("seed", 3);
+    let proj = proj_spec_arg(args)?;
     let mut rng = Pcg64::new(seed);
-    let service = EmbeddingService::start(
+    let model = CbeModel::random_with(&proj, d, bits, &mut rng, Planner::new())?;
+    let service = EmbeddingService::start_with_model(
         &artifacts_dir(args),
         ServiceConfig {
             d,
@@ -172,9 +190,9 @@ fn cmd_encode(args: &Args) -> anyhow::Result<()> {
             retrain: RetrainConfig::default(),
             queue_depth: args.usize("queue-depth", 0),
             load_mode: load_mode_arg(args),
+            proj,
         },
-        rng.normal_vec(d),
-        rng.sign_vec(d),
+        model,
     )?;
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..count)
@@ -202,8 +220,9 @@ fn index_dir(args: &Args) -> PathBuf {
 
 /// Start a service over the *seeded* random projection (no training):
 /// `save-index` and `load-index` runs in separate processes derive the
-/// same parameters from the same `--seed`, so the snapshot's model
-/// fingerprint verifies across them.
+/// same parameters from the same `--seed` (and the same `--proj` spec —
+/// the fingerprint covers all blocks and any selection plan), so the
+/// snapshot's model fingerprint verifies across them.
 fn seeded_service(
     args: &Args,
     d: usize,
@@ -211,8 +230,9 @@ fn seeded_service(
     seed: u64,
     backend: IndexBackend,
 ) -> anyhow::Result<EmbeddingService> {
-    let mut rng = Pcg64::new(seed);
-    EmbeddingService::start(
+    let proj = proj_spec_arg(args)?;
+    let model = CbeModel::random(&proj, d, bits, seed, Planner::new())?;
+    EmbeddingService::start_with_model(
         &artifacts_dir(args),
         ServiceConfig {
             d,
@@ -222,9 +242,9 @@ fn seeded_service(
             retrain: RetrainConfig::default(),
             queue_depth: args.usize("queue-depth", 0),
             load_mode: load_mode_arg(args),
+            proj,
         },
-        rng.normal_vec(d),
-        rng.sign_vec(d),
+        model,
     )
 }
 
@@ -340,17 +360,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64("seed", 5);
     let backend = IndexBackend::from_spec(&args.str("index", "auto"))
         .map_err(|e| anyhow::anyhow!("--index: {e}"))?;
+    let proj = proj_spec_arg(args)?;
     println!(
-        "embedding server demo: d={d} bits={bits} db={n_db} index={}",
-        backend.spec()
+        "embedding server demo: d={d} bits={bits} db={n_db} index={} proj={}",
+        backend.spec(),
+        proj.spec()
     );
 
-    // Train CBE-opt natively, then serve through the parallel batch path.
+    // Train CBE-opt natively (per block for stacked; the downsampled
+    // variant is training-free), then serve through the parallel batch
+    // path.
     let ds = generate(&SynthConfig::flickr(n_db + 100, d, seed));
     let mut tf = TimeFreqConfig::new(bits);
     tf.iters = 5;
     let train = cbe::data::gather(&ds.x, &(0..500.min(n_db)).collect::<Vec<_>>());
-    let enc = CbeTrainer::new(tf).seed(seed).train(&train);
+    let enc = CbeTrainer::new(tf)
+        .seed(seed)
+        .train_model(&proj, &train, None)
+        .map_err(|e| anyhow::anyhow!("train: {e}"))?;
 
     let defaults = RetrainConfig::default();
     let retrain = RetrainConfig {
@@ -359,7 +386,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cache_budget: cache_budget_arg(args),
         ..defaults
     };
-    let service = EmbeddingService::start(
+    let service = EmbeddingService::start_with_model(
         &artifacts_dir(args),
         ServiceConfig {
             d,
@@ -369,9 +396,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             retrain,
             queue_depth: args.usize("queue-depth", 0),
             load_mode: load_mode_arg(args),
+            proj,
         },
-        enc.proj.r.clone(),
-        enc.proj.signs.clone(),
+        enc.model,
     )?;
 
     // --stats-every N: a scoped ticker thread streams stats snapshots to

@@ -46,7 +46,7 @@ pub mod snapshot;
 pub mod span;
 
 pub use histogram::Histogram;
-pub use snapshot::{StageStats, StatsSnapshot};
+pub use snapshot::{ProjectionInfo, StageStats, StatsSnapshot};
 pub use span::{global, Counter, Recorder, Span, Stage};
 
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -52,11 +52,38 @@ impl StageStats {
     }
 }
 
+/// Identity of the live projection model, stamped into every snapshot so
+/// scrapes can tell *what* is serving, not just which version counter.
+#[derive(Clone, Debug, Default)]
+pub struct ProjectionInfo {
+    /// Canonical projection spec (`circ`, `stacked:2`, `downsampled`).
+    pub spec: String,
+    /// Variant name (`circ` | `stacked` | `downsampled`).
+    pub variant: &'static str,
+    /// Circulant blocks in the model (1 except for stacked).
+    pub blocks: usize,
+    /// Total bits served per code.
+    pub bits: usize,
+}
+
+impl ProjectionInfo {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", Json::str(&self.spec)),
+            ("variant", Json::str(self.variant)),
+            ("blocks", Json::num(self.blocks as f64)),
+            ("bits", Json::num(self.bits as f64)),
+        ])
+    }
+}
+
 /// Point-in-time service statistics (see module docs for provenance).
 #[derive(Clone, Debug, Default)]
 pub struct StatsSnapshot {
     /// Live model version of the answering service.
     pub model_version: u64,
+    /// Identity of the live projection model.
+    pub projection: ProjectionInfo,
     /// Requests served through the data plane.
     pub requests: u64,
     /// Batches launched.
@@ -149,6 +176,7 @@ impl StatsSnapshot {
         );
         Json::obj(vec![
             ("model_version", Json::num(self.model_version as f64)),
+            ("projection", self.projection.to_json()),
             ("requests", Json::num(self.requests as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("batch_occupancy", Json::num(self.batch_occupancy)),
@@ -225,6 +253,12 @@ mod tests {
         hist.record(500);
         let snap = StatsSnapshot {
             model_version: 2,
+            projection: ProjectionInfo {
+                spec: "stacked:2".to_string(),
+                variant: "stacked",
+                blocks: 2,
+                bits: 96,
+            },
             requests: 1,
             batches: 1,
             batch_occupancy: 0.5,
@@ -243,6 +277,11 @@ mod tests {
         let text = snap.to_json().to_string();
         let parsed = Json::parse(&text).expect("snapshot JSON must parse");
         assert_eq!(parsed.get("retrains").and_then(Json::as_f64), Some(2.0));
+        let proj = parsed.get("projection").expect("projection block present");
+        assert_eq!(proj.get("spec").and_then(Json::as_str), Some("stacked:2"));
+        assert_eq!(proj.get("variant").and_then(Json::as_str), Some("stacked"));
+        assert_eq!(proj.get("blocks").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(proj.get("bits").and_then(Json::as_f64), Some(96.0));
         assert_eq!(
             parsed
                 .get("index")

@@ -23,6 +23,7 @@ use crate::bits::BitCode;
 use crate::fft::realpack::{RealPackPlan, RealPackScratch};
 use crate::fft::{real, C64, Dir, FftScratch, Plan, Planner};
 use crate::util::rng::Pcg64;
+use crate::CbeError;
 use std::sync::Arc;
 
 // Below a total work (rows × d) of [`crate::tune::min_parallel_work`] —
@@ -67,7 +68,9 @@ impl ScratchPool {
     }
 
     /// Hand out exactly `n` scratch slots (growing the pool if needed).
-    fn slots_mut(&mut self, n: usize) -> &mut [EncodeScratch] {
+    /// Crate-visible so the stacked/downsampled wrappers in this module
+    /// tree drive their batch fan-outs through the same warm pool.
+    pub(crate) fn slots_mut(&mut self, n: usize) -> &mut [EncodeScratch] {
         if self.slots.len() < n {
             self.slots.resize_with(n, EncodeScratch::new);
         }
@@ -201,11 +204,40 @@ impl CirculantProjection {
         }
     }
 
+    /// Typed code-length guard: one circulant block produces at most `d`
+    /// bits, so any `k > d` is `Err(CbeError::BadCodeLength)`. The config
+    /// seams (spec parsing, encoder constructors,
+    /// [`crate::coordinator::EmbeddingService`] startup) call this and
+    /// surface the error to the operator; the encode entry points below
+    /// route their internal invariant through it too, so a violation that
+    /// slips past config validation still names k, d and the cap instead
+    /// of tripping a bare `assert!(k <= d)`.
+    pub fn check_code_length(&self, k: usize) -> Result<(), CbeError> {
+        if k <= self.d {
+            Ok(())
+        } else {
+            Err(CbeError::BadCodeLength {
+                k,
+                d: self.d,
+                max: self.d,
+            })
+        }
+    }
+
+    /// Hot-path form of [`CirculantProjection::check_code_length`]: the
+    /// caller was supposed to validate at config time, so a violation
+    /// here is a bug — but it dies naming the numbers.
+    fn require_code_length(&self, k: usize) {
+        if let Err(e) = self.check_code_length(k) {
+            panic!("{e}");
+        }
+    }
+
     /// k-bit binary code: sign of the first k projections (k ≤ d).
     /// Backed by the same per-thread scratch as
     /// [`CirculantProjection::project`].
     pub fn encode(&self, x: &[f32], k: usize) -> Vec<f32> {
-        assert!(k <= self.d);
+        self.require_code_length(k);
         let mut out = vec![0f32; k];
         WRAPPER_SCRATCH.with(|s| self.encode_into(x, &mut out, &mut s.borrow_mut()));
         out
@@ -215,7 +247,7 @@ impl CirculantProjection {
     /// reuse the scratch across calls).
     pub fn encode_into(&self, x: &[f32], out: &mut [f32], scratch: &mut EncodeScratch) {
         let k = out.len();
-        assert!(k <= self.d);
+        self.require_code_length(k);
         assert_eq!(x.len(), self.d);
         if let Some(h) = &self.half {
             let vals = self.half_project(h, x, scratch);
@@ -243,38 +275,88 @@ impl CirculantProjection {
         words: &mut [u64],
         scratch: &mut EncodeScratch,
     ) {
-        assert!(k <= self.d);
-        assert_eq!(x.len(), self.d);
+        self.require_code_length(k);
         assert_eq!(words.len(), k.div_ceil(64));
+        words.fill(0);
+        self.or_sign_bits(x, k, 0, words, scratch);
+    }
+
+    /// OR the sign bits of projections `0..k` into `words` at bit offset
+    /// `bit0`: bit `bit0 + j` of the window is set iff projection j of
+    /// this block is ≥ 0. This is the shared packing engine behind
+    /// [`CirculantProjection::encode_bits_into`] (offset 0) and the
+    /// multi-block [`super::StackedCirculant`], whose block b writes its
+    /// sign window at `bit0 = b·d` — windows of adjacent blocks may share
+    /// a boundary word, hence OR into caller-zeroed words rather than
+    /// overwrite. The sign decision is identical to
+    /// [`CirculantProjection::encode_into`]: the half path compares the
+    /// same f32 values, the odd-d path compares `c.re` in f64 **before**
+    /// the cast (an f64→f32 cast can round a tiny negative to -0.0, which
+    /// would flip the `>= 0.0` verdict).
+    pub fn or_sign_bits(
+        &self,
+        x: &[f32],
+        k: usize,
+        bit0: usize,
+        words: &mut [u64],
+        scratch: &mut EncodeScratch,
+    ) {
+        self.require_code_length(k);
+        assert_eq!(x.len(), self.d);
+        assert!(words.len() * 64 >= bit0 + k, "word window too short");
         if let Some(h) = &self.half {
             let vals = self.half_project(h, x, scratch);
-            // The sign decision happens on the same f32 values the
-            // per-vector path binarizes — bit-exact by construction.
-            for (w, word) in words.iter_mut().enumerate() {
-                let lo = w * 64;
-                let hi = (lo + 64).min(k);
-                let mut acc = 0u64;
-                for (b, v) in vals[lo..hi].iter().enumerate() {
-                    if *v >= 0.0 {
-                        acc |= 1u64 << b;
-                    }
+            for (j, v) in vals[..k].iter().enumerate() {
+                if *v >= 0.0 {
+                    let bit = bit0 + j;
+                    words[bit >> 6] |= 1u64 << (bit & 63);
                 }
-                *word = acc;
             }
             return;
         }
         self.full_project(x, scratch);
-        // Same decision as encode_into's `c.re >= 0.0` (f64, pre-cast).
-        for (w, word) in words.iter_mut().enumerate() {
-            let lo = w * 64;
-            let hi = (lo + 64).min(k);
-            let mut acc = 0u64;
-            for (b, c) in scratch.cplx[lo..hi].iter().enumerate() {
-                if c.re >= 0.0 {
-                    acc |= 1u64 << b;
+        for (j, c) in scratch.cplx[..k].iter().enumerate() {
+            if c.re >= 0.0 {
+                let bit = bit0 + j;
+                words[bit >> 6] |= 1u64 << (bit & 63);
+            }
+        }
+    }
+
+    /// OR the sign bits of a *selected* subset of projection rows into
+    /// `words` at bit offset `bit0`: bit `bit0 + i` is set iff projection
+    /// `sel[i]` is ≥ 0. One projection (one FFT round-trip) feeds all
+    /// selected bits — this is the engine behind
+    /// [`super::DownsampledCirculant`], where `sel` is a seeded sparse
+    /// row-selection of k ≪ d rows. Every entry of `sel` must be < d.
+    /// Sign decisions match [`CirculantProjection::encode_into`] exactly
+    /// (same f32/f64 comparisons as [`CirculantProjection::or_sign_bits`]).
+    pub fn or_selected_sign_bits(
+        &self,
+        x: &[f32],
+        sel: &[u32],
+        bit0: usize,
+        words: &mut [u64],
+        scratch: &mut EncodeScratch,
+    ) {
+        assert_eq!(x.len(), self.d);
+        assert!(words.len() * 64 >= bit0 + sel.len(), "word window too short");
+        if let Some(h) = &self.half {
+            let vals = self.half_project(h, x, scratch);
+            for (i, &row) in sel.iter().enumerate() {
+                if vals[row as usize] >= 0.0 {
+                    let bit = bit0 + i;
+                    words[bit >> 6] |= 1u64 << (bit & 63);
                 }
             }
-            *word = acc;
+            return;
+        }
+        self.full_project(x, scratch);
+        for (i, &row) in sel.iter().enumerate() {
+            if scratch.cplx[row as usize].re >= 0.0 {
+                let bit = bit0 + i;
+                words[bit >> 6] |= 1u64 << (bit & 63);
+            }
         }
     }
 
@@ -312,7 +394,7 @@ impl CirculantProjection {
         wpc: usize,
         pool: &mut ScratchPool,
     ) {
-        assert!(k <= self.d);
+        self.require_code_length(k);
         assert_eq!(wpc, k.div_ceil(64));
         assert_eq!(words.len(), rows.len() * wpc);
         let n = rows.len();
@@ -519,6 +601,68 @@ mod tests {
                 per_vec.set_row_from_signs(i, &proj.encode(row, k));
             }
             assert_eq!(batch, per_vec, "d={d} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn code_length_guard_is_typed_not_a_bare_assert() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(9);
+        let proj = CirculantProjection::random(16, &mut rng, planner);
+        assert!(proj.check_code_length(16).is_ok());
+        assert_eq!(
+            proj.check_code_length(17),
+            Err(CbeError::BadCodeLength { k: 17, d: 16, max: 16 })
+        );
+        let msg = proj.check_code_length(17).unwrap_err().to_string();
+        assert!(msg.contains("17") && msg.contains("16"), "{msg}");
+    }
+
+    #[test]
+    fn or_sign_bits_at_any_offset_matches_the_packed_encode() {
+        forall("or_sign_bits offset == shifted encode_bits_into", 30, |g| {
+            let d = g.usize_in(2, 80);
+            let k = g.usize_in(1, d);
+            let bit0 = g.usize_in(0, 130);
+            let planner = Planner::new();
+            let proj = CirculantProjection::random(d, g.rng(), planner);
+            let x = g.normal_vec(d);
+            let mut direct = vec![0u64; k.div_ceil(64)];
+            let mut scratch = EncodeScratch::new();
+            proj.encode_bits_into(&x, k, &mut direct, &mut scratch);
+            let mut shifted = vec![0u64; (bit0 + k).div_ceil(64)];
+            proj.or_sign_bits(&x, k, bit0, &mut shifted, &mut scratch);
+            for j in 0..k {
+                let a = direct[j >> 6] >> (j & 63) & 1;
+                let bit = bit0 + j;
+                let b = shifted[bit >> 6] >> (bit & 63) & 1;
+                assert_eq!(a, b, "d={d} k={k} bit0={bit0} j={j}");
+            }
+            // No stray bits outside the window.
+            let set: u32 = shifted.iter().map(|w| w.count_ones()).sum();
+            let expect: u32 = direct.iter().map(|w| w.count_ones()).sum();
+            assert_eq!(set, expect, "d={d} k={k} bit0={bit0}");
+        });
+    }
+
+    #[test]
+    fn selected_sign_bits_match_the_full_code_rows() {
+        forall("or_selected_sign_bits == full-code gather", 30, |g| {
+            let d = g.usize_in(2, 80);
+            let k = g.usize_in(1, d);
+            let planner = Planner::new();
+            let proj = CirculantProjection::random(d, g.rng(), planner);
+            let x = g.normal_vec(d);
+            let sel: Vec<u32> = g.rng().sample_indices(d, k).iter().map(|&i| i as u32).collect();
+            let mut words = vec![0u64; k.div_ceil(64)];
+            let mut scratch = EncodeScratch::new();
+            proj.or_selected_sign_bits(&x, &sel, 0, &mut words, &mut scratch);
+            let full = proj.encode(&x, d);
+            for (i, &row) in sel.iter().enumerate() {
+                let got = words[i >> 6] >> (i & 63) & 1;
+                let want = u64::from(full[row as usize] >= 0.0);
+                assert_eq!(got, want, "d={d} k={k} i={i} row={row}");
+            }
         });
     }
 

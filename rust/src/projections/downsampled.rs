@@ -1,0 +1,312 @@
+//! Downsampled circulant: k ≪ d codes from one circulant block plus a
+//! seeded sparse row-selection (arXiv:1601.06342) — data-independent, no
+//! trainer required.
+//!
+//! A plain circulant at k < d keeps the *first* k rows of circ(r)·D.
+//! Adjacent circulant rows are shifts of one vector, so a contiguous
+//! prefix is the most-correlated subset you can pick. The downsampled
+//! variant instead selects k rows **uniformly at random without
+//! replacement** from all d — decorrelating the kept bits at zero extra
+//! encode cost: the FFT round-trip already produces all d projection
+//! values, selection is a gather.
+//!
+//! The selection plan is drawn once from the model seed and stored
+//! (sorted, for cache-friendly gathers); it is part of the model's
+//! identity, folded into the snapshot fingerprint via
+//! [`crate::index::persist::fingerprint_chain`] so an index built under
+//! one selection can never be served by another.
+
+use super::circulant::{CirculantProjection, EncodeScratch, ScratchPool};
+use crate::bits::BitCode;
+use crate::fft::Planner;
+use crate::util::rng::Pcg64;
+use crate::CbeError;
+
+/// One circulant block + a fixed k-row selection plan. The code length
+/// is baked in at construction: `bits()` is the only k this model
+/// produces (a shorter request takes a prefix of the selected rows).
+#[derive(Clone)]
+pub struct DownsampledCirculant {
+    block: CirculantProjection,
+    /// Selected projection rows, strictly increasing, len = bits().
+    sel: Vec<u32>,
+}
+
+thread_local! {
+    static WRAPPER_SCRATCH: std::cell::RefCell<EncodeScratch> =
+        std::cell::RefCell::new(EncodeScratch::new());
+}
+
+impl DownsampledCirculant {
+    /// Build from an explicit block and selection plan. Entries of `sel`
+    /// must be distinct, sorted ascending and < d.
+    pub fn new(
+        block: CirculantProjection,
+        sel: Vec<u32>,
+    ) -> Result<DownsampledCirculant, CbeError> {
+        let d = block.d;
+        if sel.is_empty() || sel.len() > d {
+            return Err(CbeError::BadCodeLength {
+                k: sel.len(),
+                d,
+                max: d,
+            });
+        }
+        let ordered = sel.windows(2).all(|w| w[0] < w[1]);
+        if !ordered || sel.last().is_some_and(|&i| i as usize >= d) {
+            return Err(CbeError::Service(format!(
+                "downsampled selection must be strictly increasing row indices < d={d}"
+            )));
+        }
+        Ok(DownsampledCirculant { block, sel })
+    }
+
+    /// Seeded model: r ~ N(0,1) and D ~ ±1 drawn exactly like
+    /// [`CirculantProjection::random`], then k of the d rows sampled
+    /// without replacement from the same stream.
+    pub fn random(
+        d: usize,
+        k: usize,
+        rng: &mut Pcg64,
+        planner: Planner,
+    ) -> Result<DownsampledCirculant, CbeError> {
+        if k == 0 || k > d {
+            return Err(CbeError::BadCodeLength { k, d, max: d });
+        }
+        let block = CirculantProjection::random(d, rng, planner);
+        let mut sel: Vec<u32> = rng.sample_indices(d, k).iter().map(|&i| i as u32).collect();
+        sel.sort_unstable();
+        DownsampledCirculant::new(block, sel)
+    }
+
+    /// Input dimension.
+    pub fn d(&self) -> usize {
+        self.block.d
+    }
+
+    /// The underlying circulant block.
+    pub fn block(&self) -> &CirculantProjection {
+        &self.block
+    }
+
+    /// The selection plan (strictly increasing row indices).
+    pub fn selection(&self) -> &[u32] {
+        &self.sel
+    }
+
+    /// Code length the selection plan produces.
+    pub fn max_bits(&self) -> usize {
+        self.sel.len()
+    }
+
+    /// Typed code-length guard: requests past the selection length are
+    /// `Err(CbeError::BadCodeLength)` (the cap is the plan, not d).
+    pub fn check_code_length(&self, k: usize) -> Result<(), CbeError> {
+        if k <= self.sel.len() {
+            Ok(())
+        } else {
+            Err(CbeError::BadCodeLength {
+                k,
+                d: self.block.d,
+                max: self.sel.len(),
+            })
+        }
+    }
+
+    fn require_code_length(&self, k: usize) {
+        if let Err(e) = self.check_code_length(k) {
+            panic!("{e}");
+        }
+    }
+
+    /// k-bit ±1 code: sign of projection `sel[i]` at position i. One
+    /// projection round-trip feeds all k bits.
+    pub fn encode(&self, x: &[f32], k: usize) -> Vec<f32> {
+        self.require_code_length(k);
+        let mut out = vec![0f32; k];
+        // Route the ±1 path through the same packed-bit decision as the
+        // batch engine: for odd d the sign is taken on the f64 real part
+        // *before* the f32 cast (a tiny negative can round to -0.0 and
+        // flip a post-cast `>= 0.0`), so deriving signs from the words
+        // keeps serial ≡ batch bit-exact by construction.
+        WRAPPER_SCRATCH.with(|s| {
+            let scratch = &mut s.borrow_mut();
+            let mut words = vec![0u64; k.div_ceil(64)];
+            self.block
+                .or_selected_sign_bits(x, &self.sel[..k], 0, &mut words, scratch);
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = if words[i >> 6] >> (i & 63) & 1 == 1 {
+                    1.0
+                } else {
+                    -1.0
+                };
+            }
+        });
+        out
+    }
+
+    /// Encode one vector straight into packed words (one `BitCode` row
+    /// of exactly `k.div_ceil(64)` words); pad bits zero.
+    pub fn encode_bits_into(
+        &self,
+        x: &[f32],
+        k: usize,
+        words: &mut [u64],
+        scratch: &mut EncodeScratch,
+    ) {
+        self.require_code_length(k);
+        assert_eq!(words.len(), k.div_ceil(64));
+        words.fill(0);
+        self.block
+            .or_selected_sign_bits(x, &self.sel[..k], 0, words, scratch);
+    }
+
+    /// Batch encode into a `BitCode`, mirroring
+    /// [`CirculantProjection::encode_batch_into`].
+    pub fn encode_batch_into(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        out: &mut BitCode,
+        pool: &mut ScratchPool,
+    ) {
+        assert_eq!(out.n, rows.len());
+        assert_eq!(out.bits, k);
+        self.encode_batch_words(rows, k, &mut out.data, out.words_per_code, pool);
+    }
+
+    /// The batch engine over a bare packed-word window. The per-row work
+    /// is the block's full FFT regardless of k, so the fan-out gates on
+    /// n·d like the single-block engine.
+    pub fn encode_batch_words(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        words: &mut [u64],
+        wpc: usize,
+        pool: &mut ScratchPool,
+    ) {
+        self.require_code_length(k);
+        assert_eq!(wpc, k.div_ceil(64));
+        assert_eq!(words.len(), rows.len() * wpc);
+        let n = rows.len();
+        if n == 0 {
+            return;
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let threads = cores.min(n);
+        if threads <= 1 || n * self.block.d < crate::tune::min_parallel_work() {
+            let scratch = &mut pool.slots_mut(1)[0];
+            for (row, words) in rows.iter().zip(words.chunks_mut(wpc)) {
+                self.encode_bits_into(row, k, words, scratch);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut rest_rows = rows;
+            let mut rest_words = words;
+            for scratch in pool.slots_mut(threads) {
+                if rest_rows.is_empty() {
+                    break;
+                }
+                let take = chunk.min(rest_rows.len());
+                let (row_chunk, tail_rows) = rest_rows.split_at(take);
+                let (word_chunk, tail_words) = rest_words.split_at_mut(take * wpc);
+                rest_rows = tail_rows;
+                rest_words = tail_words;
+                scope.spawn(move || {
+                    for (row, words) in row_chunk.iter().zip(word_chunk.chunks_mut(wpc)) {
+                        self.encode_bits_into(row, k, words, scratch);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::forall;
+
+    #[test]
+    fn selected_bits_are_the_full_codes_rows() {
+        forall("downsampled == gathered full code", 25, |g| {
+            let d = g.usize_in(2, 96);
+            let k = g.usize_in(1, d);
+            let planner = Planner::new();
+            let seed = g.rng().next_u64();
+            let mut rng_a = Pcg64::new(seed);
+            let mut rng_b = Pcg64::new(seed);
+            let ds = DownsampledCirculant::random(d, k, &mut rng_a, planner.clone()).unwrap();
+            let plain = CirculantProjection::random(d, &mut rng_b, planner);
+            let x = g.normal_vec(d);
+            let full = plain.encode(&x, d);
+            let code = ds.encode(&x, k);
+            for (i, &row) in ds.selection().iter().enumerate() {
+                assert_eq!(
+                    code[i], full[row as usize],
+                    "d={d} k={k} i={i} row={row}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn batch_matches_per_vector_and_padding_stays_zero() {
+        forall("downsampled batch == serial", 15, |g| {
+            let d = g.usize_in(2, 80);
+            let k = g.usize_in(1, d);
+            let n = g.usize_in(0, 10);
+            let planner = Planner::new();
+            let ds = DownsampledCirculant::random(d, k, g.rng(), planner).unwrap();
+            let flat: Vec<Vec<f32>> = (0..n).map(|_| g.normal_vec(d)).collect();
+            let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+            let mut batch = BitCode::new(n, k);
+            ds.encode_batch_into(&rows, k, &mut batch, &mut ScratchPool::new());
+            let mut per_vec = BitCode::new(n, k);
+            for (i, row) in rows.iter().enumerate() {
+                per_vec.set_row_from_signs(i, &ds.encode(row, k));
+            }
+            assert_eq!(batch, per_vec, "d={d} k={k} n={n}");
+            assert!(batch.padding_is_zero());
+        });
+    }
+
+    #[test]
+    fn selection_is_seed_deterministic_and_sorted() {
+        let planner = Planner::new();
+        let mut a = Pcg64::new(77);
+        let mut b = Pcg64::new(77);
+        let x = DownsampledCirculant::random(64, 16, &mut a, planner.clone()).unwrap();
+        let y = DownsampledCirculant::random(64, 16, &mut b, planner.clone()).unwrap();
+        assert_eq!(x.selection(), y.selection());
+        assert!(x.selection().windows(2).all(|w| w[0] < w[1]));
+        let mut c = Pcg64::new(78);
+        let z = DownsampledCirculant::random(64, 16, &mut c, planner).unwrap();
+        assert_ne!(x.selection(), z.selection(), "seed must move the plan");
+    }
+
+    #[test]
+    fn bad_shapes_are_typed_errors() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(5);
+        assert_eq!(
+            DownsampledCirculant::random(16, 17, &mut rng, planner.clone()).unwrap_err(),
+            CbeError::BadCodeLength { k: 17, d: 16, max: 16 }
+        );
+        assert!(DownsampledCirculant::random(16, 0, &mut rng, planner.clone()).is_err());
+        let ds = DownsampledCirculant::random(16, 4, &mut rng, planner.clone()).unwrap();
+        assert_eq!(
+            ds.check_code_length(5),
+            Err(CbeError::BadCodeLength { k: 5, d: 16, max: 4 })
+        );
+        // Unsorted or out-of-range plans are rejected.
+        let block = CirculantProjection::random(8, &mut rng, planner.clone());
+        assert!(DownsampledCirculant::new(block.clone(), vec![3, 1]).is_err());
+        assert!(DownsampledCirculant::new(block, vec![7, 8]).is_err());
+    }
+}

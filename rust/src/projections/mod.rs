@@ -1,16 +1,514 @@
 //! The three projection families compared throughout the paper (Table 1/2):
-//! full (dense, O(d²)), bilinear (O(d^1.5)), circulant (O(d log d)).
+//! full (dense, O(d²)), bilinear (O(d^1.5)), circulant (O(d log d)) —
+//! plus the circulant *variants* from the follow-up papers that free the
+//! code length from the single-block `k ≤ d` cap:
+//! [`stacked::StackedCirculant`] (k > d, arXiv:1511.06480) and
+//! [`downsampled::DownsampledCirculant`] (k ≪ d, arXiv:1601.06342).
 //!
 //! The circulant family is the serving hot path; see
 //! [`circulant::CirculantProjection`] for the threading model (shared
 //! `Send + Sync` projection, caller-owned [`circulant::EncodeScratch`],
 //! scoped-thread batch fan-out via
 //! [`circulant::CirculantProjection::encode_batch_into`]).
+//!
+//! # Picking a variant: [`ProjectionSpec`]
+//!
+//! Serving code selects the variant through a spec string, parsed like
+//! [`crate::index::IndexBackend`] backend specs:
+//!
+//! | spec           | model                         | code length |
+//! |----------------|-------------------------------|-------------|
+//! | `circ`         | one circulant block           | k ≤ d       |
+//! | `stacked[:B]`  | B independent blocks (auto: ⌈k/d⌉) | k ≤ B·d |
+//! | `downsampled`  | one block + sparse row-selection | k ≤ d (decorrelated) |
+//!
+//! [`CbeModel`] is the parsed model all three variants serve behind: the
+//! registry, the batch fan-out and the snapshot fingerprint all speak
+//! `CbeModel`, so the serving path is variant-agnostic. A `stacked:1`
+//! model is bit-identical to `circ` — codes, index hits and fingerprints
+//! — enforced by `rust/tests/projection_variants.rs`.
 
 pub mod circulant;
+pub mod downsampled;
 pub mod full;
 pub mod bilinear;
+pub mod stacked;
 
 pub use circulant::{CirculantProjection, EncodeScratch, ScratchPool};
+pub use downsampled::DownsampledCirculant;
 pub use full::FullProjection;
 pub use bilinear::BilinearProjection;
+pub use stacked::StackedCirculant;
+
+use crate::bits::BitCode;
+use crate::fft::Planner;
+use crate::util::rng::Pcg64;
+use crate::CbeError;
+
+/// Which circulant variant a model should be built as. Parsed from the
+/// `circ | stacked[:B] | downsampled` grammar (CLI `--proj`, env
+/// `CBE_PROJ`) exactly like [`crate::index::IndexBackend::from_spec`]
+/// parses index backends.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum ProjectionSpec {
+    /// One circulant block; the paper's core operator. k ≤ d.
+    #[default]
+    Circ,
+    /// B independent circulant blocks concatenated; k ≤ B·d. `None`
+    /// sizes B automatically as ⌈k/d⌉ once k is known.
+    Stacked { blocks: Option<usize> },
+    /// One block + seeded sparse row-selection; k ≤ d, training-free.
+    Downsampled,
+}
+
+impl ProjectionSpec {
+    /// Parse a projection spec: `circ` | `stacked[:B]` | `downsampled`.
+    /// See the type-level docs for the exact grammar.
+    pub fn from_spec(spec: &str) -> Result<ProjectionSpec, String> {
+        let parts: Vec<&str> = spec.trim().split(':').collect();
+        let num = |s: &str| {
+            s.parse::<usize>()
+                .map_err(|_| format!("bad number '{s}' in projection spec '{spec}'"))
+        };
+        let arity = |want: std::ops::RangeInclusive<usize>| {
+            if want.contains(&parts.len()) {
+                Ok(())
+            } else {
+                Err(format!("wrong arity in projection spec '{spec}'"))
+            }
+        };
+        match parts[0] {
+            "circ" | "circulant" => {
+                arity(1..=1)?;
+                Ok(ProjectionSpec::Circ)
+            }
+            "stacked" => {
+                arity(1..=2)?;
+                let blocks = if parts.len() > 1 {
+                    let b = num(parts[1])?;
+                    if b == 0 {
+                        return Err(format!("block count must be >= 1 in '{spec}'"));
+                    }
+                    Some(b)
+                } else {
+                    None
+                };
+                Ok(ProjectionSpec::Stacked { blocks })
+            }
+            "downsampled" | "ds" => {
+                arity(1..=1)?;
+                Ok(ProjectionSpec::Downsampled)
+            }
+            other => Err(format!(
+                "unknown projection '{other}' (want circ | stacked[:B] | downsampled)"
+            )),
+        }
+    }
+
+    /// Canonical spec string (round-trips through
+    /// [`ProjectionSpec::from_spec`]).
+    pub fn spec(&self) -> String {
+        match self {
+            ProjectionSpec::Circ => "circ".to_string(),
+            ProjectionSpec::Stacked { blocks: None } => "stacked".to_string(),
+            ProjectionSpec::Stacked { blocks: Some(b) } => format!("stacked:{b}"),
+            ProjectionSpec::Downsampled => "downsampled".to_string(),
+        }
+    }
+
+    /// Blocks a model built from this spec will carry for a k-bit code
+    /// over d-dim inputs (`Stacked { blocks: None }` auto-sizes ⌈k/d⌉).
+    pub fn blocks_for(&self, k: usize, d: usize) -> usize {
+        match self {
+            ProjectionSpec::Circ | ProjectionSpec::Downsampled => 1,
+            ProjectionSpec::Stacked { blocks: Some(b) } => *b,
+            ProjectionSpec::Stacked { blocks: None } => k.div_ceil(d).max(1),
+        }
+    }
+
+    /// Typed validation of a (k, d) request against this spec — the
+    /// recoverable replacement for the old `assert!(k <= d)` aborts.
+    pub fn validate(&self, k: usize, d: usize) -> Result<(), CbeError> {
+        if d == 0 {
+            return Err(CbeError::Service("projection needs d >= 1".into()));
+        }
+        let max = match self {
+            ProjectionSpec::Circ | ProjectionSpec::Downsampled => d,
+            ProjectionSpec::Stacked { blocks: Some(b) } => b * d,
+            // Auto-sized stacking accepts any k ≥ 1.
+            ProjectionSpec::Stacked { blocks: None } => usize::MAX,
+        };
+        if k == 0 || k > max {
+            return Err(CbeError::BadCodeLength { k, d, max });
+        }
+        Ok(())
+    }
+}
+
+/// A parsed projection model: what [`crate::coordinator::ModelRegistry`]
+/// versions, the batch fan-out encodes with, and the snapshot
+/// fingerprint identifies. All variants expose one encode surface, so
+/// everything downstream of the spec is variant-agnostic.
+#[derive(Clone)]
+pub enum CbeModel {
+    Circ(CirculantProjection),
+    Stacked(StackedCirculant),
+    Downsampled(DownsampledCirculant),
+}
+
+impl CbeModel {
+    /// Wrap a plain circulant block (the `circ` spec).
+    pub fn circulant(r: Vec<f32>, signs: Vec<f32>, planner: Planner) -> CbeModel {
+        CbeModel::Circ(CirculantProjection::new(r, signs, planner))
+    }
+
+    /// Seeded random model for `spec`, sized for k-bit codes over d-dim
+    /// inputs. For `circ` this draws exactly what
+    /// [`CirculantProjection::random`] draws from the same seed, so
+    /// spec-built and legacy-built models are interchangeable.
+    pub fn random(
+        spec: &ProjectionSpec,
+        d: usize,
+        k: usize,
+        seed: u64,
+        planner: Planner,
+    ) -> Result<CbeModel, CbeError> {
+        let mut rng = Pcg64::new(seed);
+        CbeModel::random_with(spec, d, k, &mut rng, planner)
+    }
+
+    /// [`CbeModel::random`] drawing from a caller-owned rng stream.
+    pub fn random_with(
+        spec: &ProjectionSpec,
+        d: usize,
+        k: usize,
+        rng: &mut Pcg64,
+        planner: Planner,
+    ) -> Result<CbeModel, CbeError> {
+        spec.validate(k, d)?;
+        Ok(match spec {
+            ProjectionSpec::Circ => {
+                CbeModel::Circ(CirculantProjection::random(d, rng, planner))
+            }
+            ProjectionSpec::Stacked { .. } => CbeModel::Stacked(StackedCirculant::random(
+                d,
+                spec.blocks_for(k, d),
+                rng,
+                planner,
+            )?),
+            ProjectionSpec::Downsampled => {
+                CbeModel::Downsampled(DownsampledCirculant::random(d, k, rng, planner)?)
+            }
+        })
+    }
+
+    /// Input dimension.
+    pub fn d(&self) -> usize {
+        match self {
+            CbeModel::Circ(p) => p.d,
+            CbeModel::Stacked(s) => s.d(),
+            CbeModel::Downsampled(ds) => ds.d(),
+        }
+    }
+
+    /// Circulant blocks in the model (1 except for stacked).
+    pub fn block_count(&self) -> usize {
+        match self {
+            CbeModel::Circ(_) | CbeModel::Downsampled(_) => 1,
+            CbeModel::Stacked(s) => s.blocks().len(),
+        }
+    }
+
+    /// Longest code this model can produce.
+    pub fn max_bits(&self) -> usize {
+        match self {
+            CbeModel::Circ(p) => p.d,
+            CbeModel::Stacked(s) => s.max_bits(),
+            CbeModel::Downsampled(ds) => ds.max_bits(),
+        }
+    }
+
+    /// Variant name, as shown in stats snapshots.
+    pub fn variant(&self) -> &'static str {
+        match self {
+            CbeModel::Circ(_) => "circ",
+            CbeModel::Stacked(_) => "stacked",
+            CbeModel::Downsampled(_) => "downsampled",
+        }
+    }
+
+    /// The canonical spec this model answers to (block count resolved).
+    pub fn spec(&self) -> ProjectionSpec {
+        match self {
+            CbeModel::Circ(_) => ProjectionSpec::Circ,
+            CbeModel::Stacked(s) => ProjectionSpec::Stacked {
+                blocks: Some(s.blocks().len()),
+            },
+            CbeModel::Downsampled(_) => ProjectionSpec::Downsampled,
+        }
+    }
+
+    /// Canonical spec string (`circ`, `stacked:2`, `downsampled`).
+    pub fn spec_string(&self) -> String {
+        self.spec().spec()
+    }
+
+    /// Whether `other` can replace this model under a registry hot-swap:
+    /// same variant, same input dimension, same code-length cap. In-flight
+    /// indices still get the staleness guard via version stamps; this
+    /// check only keeps a swap from changing the *shape* of the service.
+    pub fn shape_matches(&self, other: &CbeModel) -> bool {
+        self.variant() == other.variant()
+            && self.d() == other.d()
+            && self.max_bits() == other.max_bits()
+    }
+
+    /// Typed code-length guard for this model (see
+    /// [`CirculantProjection::check_code_length`]).
+    pub fn check_code_length(&self, k: usize) -> Result<(), CbeError> {
+        match self {
+            CbeModel::Circ(p) => p.check_code_length(k),
+            CbeModel::Stacked(s) => s.check_code_length(k),
+            CbeModel::Downsampled(ds) => ds.check_code_length(k),
+        }
+    }
+
+    /// The plain circulant block, when the model is one (`circ` spec) —
+    /// the single-block compatibility seam for the trainer and tests.
+    pub fn as_circulant(&self) -> Option<&CirculantProjection> {
+        match self {
+            CbeModel::Circ(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// k-bit ±1 code of one vector.
+    pub fn encode(&self, x: &[f32], k: usize) -> Vec<f32> {
+        match self {
+            CbeModel::Circ(p) => p.encode(x, k),
+            CbeModel::Stacked(s) => s.encode(x, k),
+            CbeModel::Downsampled(ds) => ds.encode(x, k),
+        }
+    }
+
+    /// Encode one vector straight into packed `BitCode` words.
+    pub fn encode_bits_into(
+        &self,
+        x: &[f32],
+        k: usize,
+        words: &mut [u64],
+        scratch: &mut EncodeScratch,
+    ) {
+        match self {
+            CbeModel::Circ(p) => p.encode_bits_into(x, k, words, scratch),
+            CbeModel::Stacked(s) => s.encode_bits_into(x, k, words, scratch),
+            CbeModel::Downsampled(ds) => ds.encode_bits_into(x, k, words, scratch),
+        }
+    }
+
+    /// Batch encode into a `BitCode` (scoped-thread fan-out; see the
+    /// variant methods for the work gating).
+    pub fn encode_batch_into(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        out: &mut BitCode,
+        pool: &mut ScratchPool,
+    ) {
+        match self {
+            CbeModel::Circ(p) => p.encode_batch_into(rows, k, out, pool),
+            CbeModel::Stacked(s) => s.encode_batch_into(rows, k, out, pool),
+            CbeModel::Downsampled(ds) => ds.encode_batch_into(rows, k, out, pool),
+        }
+    }
+
+    /// Batch encode over a bare packed-word window (the slab-streaming
+    /// seam of `EmbeddingService::encode_corpus`).
+    pub fn encode_batch_words(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        words: &mut [u64],
+        wpc: usize,
+        pool: &mut ScratchPool,
+    ) {
+        match self {
+            CbeModel::Circ(p) => p.encode_batch_words(rows, k, words, wpc, pool),
+            CbeModel::Stacked(s) => s.encode_batch_words(rows, k, words, wpc, pool),
+            CbeModel::Downsampled(ds) => ds.encode_batch_words(rows, k, words, wpc, pool),
+        }
+    }
+
+    /// Content fingerprint covering **all** blocks and the bit-selection
+    /// plan, for the snapshot stale-model guard. A one-block stacked
+    /// model hashes to exactly the plain circulant fingerprint of the
+    /// same parameters (the k == d compatibility contract); every extra
+    /// block is chained in, and the downsampled variant additionally
+    /// chains a tag plus its selection plan so it can never collide with
+    /// the plain circulant sharing its block. Never 0 (0 = unstamped).
+    pub fn fingerprint(&self) -> u64 {
+        use crate::index::persist::{fingerprint_chain, model_fingerprint};
+        match self {
+            CbeModel::Circ(p) => model_fingerprint(&p.r, &p.signs),
+            CbeModel::Stacked(s) => {
+                let mut it = s.blocks().iter();
+                let first = it.next().expect("stacked model has >= 1 block");
+                let mut h = model_fingerprint(&first.r, &first.signs);
+                for b in it {
+                    h = fingerprint_chain(h, model_fingerprint(&b.r, &b.signs));
+                }
+                h
+            }
+            CbeModel::Downsampled(ds) => {
+                let b = ds.block();
+                let mut h = model_fingerprint(&b.r, &b.signs);
+                h = fingerprint_chain(h, 0x6473_u64); // "ds" variant tag
+                for &row in ds.selection() {
+                    h = fingerprint_chain(h, u64::from(row));
+                }
+                h
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip() {
+        for s in ["circ", "stacked", "stacked:3", "downsampled"] {
+            let parsed = ProjectionSpec::from_spec(s).unwrap();
+            assert_eq!(parsed.spec(), s, "canonical form changed for {s}");
+            assert_eq!(
+                ProjectionSpec::from_spec(&parsed.spec()).unwrap(),
+                parsed,
+                "{s} does not round-trip"
+            );
+        }
+        // Aliases parse to the same canonical forms.
+        assert_eq!(
+            ProjectionSpec::from_spec("circulant").unwrap(),
+            ProjectionSpec::Circ
+        );
+        assert_eq!(
+            ProjectionSpec::from_spec(" ds ").unwrap(),
+            ProjectionSpec::Downsampled
+        );
+    }
+
+    #[test]
+    fn spec_rejects_malformed() {
+        for bad in [
+            "", "bogus", "circ:2", "stacked:", "stacked:0", "stacked:x",
+            "stacked:2:3", "downsampled:4", "stacked:-1",
+        ] {
+            let err = ProjectionSpec::from_spec(bad).unwrap_err();
+            assert!(!err.is_empty(), "'{bad}' should not parse");
+        }
+        // The unknown-variant message teaches the grammar.
+        let err = ProjectionSpec::from_spec("hadamard").unwrap_err();
+        assert!(err.contains("stacked[:B]"), "{err}");
+    }
+
+    #[test]
+    fn validate_is_the_typed_code_length_guard() {
+        let circ = ProjectionSpec::Circ;
+        assert!(circ.validate(64, 64).is_ok());
+        assert_eq!(
+            circ.validate(65, 64),
+            Err(CbeError::BadCodeLength { k: 65, d: 64, max: 64 })
+        );
+        let st2 = ProjectionSpec::Stacked { blocks: Some(2) };
+        assert!(st2.validate(128, 64).is_ok());
+        assert_eq!(
+            st2.validate(129, 64),
+            Err(CbeError::BadCodeLength { k: 129, d: 64, max: 128 })
+        );
+        let auto = ProjectionSpec::Stacked { blocks: None };
+        assert!(auto.validate(10_000, 64).is_ok());
+        assert_eq!(auto.blocks_for(129, 64), 3);
+        assert_eq!(auto.blocks_for(64, 64), 1);
+        assert!(ProjectionSpec::Downsampled.validate(0, 64).is_err());
+    }
+
+    #[test]
+    fn model_dispatch_matches_the_underlying_variant() {
+        let planner = Planner::new();
+        let seed = 99u64;
+        let d = 32;
+        let model =
+            CbeModel::random(&ProjectionSpec::Circ, d, d, seed, planner.clone()).unwrap();
+        let plain = CirculantProjection::random(d, &mut Pcg64::new(seed), planner);
+        let mut rng = Pcg64::new(1);
+        let x = rng.normal_vec(d);
+        assert_eq!(model.encode(&x, d), plain.encode(&x, d));
+        assert_eq!(model.variant(), "circ");
+        assert_eq!(model.spec_string(), "circ");
+        assert_eq!(model.block_count(), 1);
+        assert_eq!(model.max_bits(), d);
+        assert!(model.as_circulant().is_some());
+    }
+
+    #[test]
+    fn fingerprints_separate_variants_but_not_stacked_1() {
+        let planner = Planner::new();
+        let d = 24;
+        let seed = 7u64;
+        let circ =
+            CbeModel::random(&ProjectionSpec::Circ, d, d, seed, planner.clone()).unwrap();
+        let st1 = CbeModel::random(
+            &ProjectionSpec::Stacked { blocks: Some(1) },
+            d,
+            d,
+            seed,
+            planner.clone(),
+        )
+        .unwrap();
+        let st2 = CbeModel::random(
+            &ProjectionSpec::Stacked { blocks: Some(2) },
+            d,
+            2 * d,
+            seed,
+            planner.clone(),
+        )
+        .unwrap();
+        let ds =
+            CbeModel::random(&ProjectionSpec::Downsampled, d, d, seed, planner).unwrap();
+        // The k == d contract: one stacked block == the plain circulant,
+        // fingerprint included.
+        assert_eq!(circ.fingerprint(), st1.fingerprint());
+        // More blocks, or a selection plan, must move the fingerprint —
+        // even though all share block 0's parameters (same seed stream).
+        assert_ne!(circ.fingerprint(), st2.fingerprint());
+        assert_ne!(circ.fingerprint(), ds.fingerprint());
+        assert_ne!(st2.fingerprint(), ds.fingerprint());
+        for m in [&circ, &st1, &st2, &ds] {
+            assert_ne!(m.fingerprint(), 0);
+            assert_eq!(m.fingerprint(), m.fingerprint());
+        }
+    }
+
+    #[test]
+    fn shape_matching_gates_hot_swaps() {
+        let planner = Planner::new();
+        let circ =
+            CbeModel::random(&ProjectionSpec::Circ, 16, 16, 1, planner.clone()).unwrap();
+        let circ2 =
+            CbeModel::random(&ProjectionSpec::Circ, 16, 16, 2, planner.clone()).unwrap();
+        let wider =
+            CbeModel::random(&ProjectionSpec::Circ, 32, 32, 1, planner.clone()).unwrap();
+        let st2 = CbeModel::random(
+            &ProjectionSpec::Stacked { blocks: Some(2) },
+            16,
+            32,
+            1,
+            planner,
+        )
+        .unwrap();
+        assert!(circ.shape_matches(&circ2));
+        assert!(!circ.shape_matches(&wider));
+        assert!(!circ.shape_matches(&st2));
+    }
+}

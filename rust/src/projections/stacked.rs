@@ -1,0 +1,339 @@
+//! Stacked circulant blocks: k > d codes from B = ⌈k/d⌉ independent
+//! circulant projections (arXiv:1511.06480).
+//!
+//! One circulant block caps useful bits at d — after that the rows of
+//! circ(r) wrap around and bits repeat sign structure. The follow-up
+//! analysis shows the fix is embarrassingly simple: draw B independent
+//! (r_b, D_b) pairs and concatenate their sign windows,
+//!
+//! ```text
+//! h(x) = [ sign(R_0 D_0 x) ∥ sign(R_1 D_1 x) ∥ … ∥ sign(R_{B-1} D_{B-1} x) ]
+//! ```
+//!
+//! which keeps the independent-bit variance behavior of Figure 1 while
+//! costing B half-spectrum FFT round-trips per vector — still
+//! O(k log d), never O(kd).
+//!
+//! # Bit layout and the k == d contract
+//!
+//! Block b owns the bit window `[b·d, min((b+1)·d, k))` of the packed
+//! code; the final block may be truncated. Windows of adjacent blocks
+//! share a boundary word whenever d % 64 ≠ 0, so blocks OR their signs
+//! into pre-zeroed words via [`CirculantProjection::or_sign_bits`]
+//! rather than overwriting whole words. Block 0 writes at offset 0
+//! through exactly the code path `CirculantProjection::encode_bits_into`
+//! uses, so a one-block `StackedCirculant` is **bit-identical** to the
+//! plain circulant — codes, index hits and snapshot fingerprints — which
+//! the differential suite (`rust/tests/projection_variants.rs`) enforces.
+//!
+//! # Threading
+//!
+//! [`StackedCirculant::encode_batch_words`] reuses the row fan-out of the
+//! single-block engine, but sizes the serial cutover and the thread count
+//! by the *total* work n·B·d — rows × blocks — so a short batch of very
+//! long codes still clears [`crate::tune::min_parallel_work`]. Blocks of
+//! one row are not split across threads: adjacent blocks share boundary
+//! words, and a per-(row, block) fan-out would need atomic ORs on the
+//! shared words for no measurable win (the FFTs dominate).
+
+use super::circulant::{CirculantProjection, EncodeScratch, ScratchPool};
+use crate::bits::BitCode;
+use crate::fft::Planner;
+use crate::util::rng::Pcg64;
+use crate::CbeError;
+
+/// B independent circulant blocks concatenated into one long code.
+/// Immutable on the encode path and `Send + Sync`, like the blocks it
+/// holds; share behind an `Arc` across threads.
+#[derive(Clone)]
+pub struct StackedCirculant {
+    d: usize,
+    blocks: Vec<CirculantProjection>,
+}
+
+thread_local! {
+    /// Scratch behind the allocating [`StackedCirculant::encode`]
+    /// wrapper, mirroring the circulant block's own wrapper scratch.
+    static WRAPPER_SCRATCH: std::cell::RefCell<EncodeScratch> =
+        std::cell::RefCell::new(EncodeScratch::new());
+}
+
+impl StackedCirculant {
+    /// Build from explicit blocks. All blocks must share one input
+    /// dimension d; at least one block is required.
+    pub fn new(blocks: Vec<CirculantProjection>) -> Result<StackedCirculant, CbeError> {
+        let d = match blocks.first() {
+            Some(b) => b.d,
+            None => {
+                return Err(CbeError::Service(
+                    "stacked circulant needs at least one block".into(),
+                ))
+            }
+        };
+        if let Some(b) = blocks.iter().find(|b| b.d != d) {
+            return Err(CbeError::Service(format!(
+                "stacked circulant blocks disagree on d: {} vs {}",
+                d, b.d
+            )));
+        }
+        Ok(StackedCirculant { d, blocks })
+    }
+
+    /// CBE-rand stacking: `blocks` independent (r_b ~ N(0,1), D_b ~ ±1)
+    /// pairs drawn from one sequential rng stream. Block 0 consumes the
+    /// rng exactly like [`CirculantProjection::random`], so a one-block
+    /// stack seeded the same way IS the plain circulant model.
+    pub fn random(
+        d: usize,
+        blocks: usize,
+        rng: &mut Pcg64,
+        planner: Planner,
+    ) -> Result<StackedCirculant, CbeError> {
+        if blocks == 0 {
+            return Err(CbeError::Service(
+                "stacked circulant needs at least one block".into(),
+            ));
+        }
+        let blocks = (0..blocks)
+            .map(|_| CirculantProjection::random(d, rng, planner.clone()))
+            .collect();
+        StackedCirculant::new(blocks)
+    }
+
+    /// Input dimension (shared by every block).
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The blocks, in bit-window order.
+    pub fn blocks(&self) -> &[CirculantProjection] {
+        &self.blocks
+    }
+
+    /// Longest code this model can produce: B·d bits.
+    pub fn max_bits(&self) -> usize {
+        self.blocks.len() * self.d
+    }
+
+    /// Typed code-length guard: `Err(CbeError::BadCodeLength)` past B·d.
+    pub fn check_code_length(&self, k: usize) -> Result<(), CbeError> {
+        if k <= self.max_bits() {
+            Ok(())
+        } else {
+            Err(CbeError::BadCodeLength {
+                k,
+                d: self.d,
+                max: self.max_bits(),
+            })
+        }
+    }
+
+    fn require_code_length(&self, k: usize) {
+        if let Err(e) = self.check_code_length(k) {
+            panic!("{e}");
+        }
+    }
+
+    /// k-bit ±1 code (k ≤ B·d): block b fills `out[b·d .. b·d + take]`
+    /// through [`CirculantProjection::encode_into`], so every bit's sign
+    /// decision is the block's own single-block decision.
+    pub fn encode(&self, x: &[f32], k: usize) -> Vec<f32> {
+        self.require_code_length(k);
+        let mut out = vec![0f32; k];
+        WRAPPER_SCRATCH.with(|s| {
+            let scratch = &mut s.borrow_mut();
+            for (b, block) in self.blocks.iter().enumerate() {
+                let base = b * self.d;
+                if base >= k {
+                    break;
+                }
+                let take = self.d.min(k - base);
+                block.encode_into(x, &mut out[base..base + take], scratch);
+            }
+        });
+        out
+    }
+
+    /// Encode one vector straight into packed words (one `BitCode` row of
+    /// exactly `k.div_ceil(64)` words). Bit `b·d + j` is set iff
+    /// projection j of block b is ≥ 0; trailing pad bits are zero.
+    pub fn encode_bits_into(
+        &self,
+        x: &[f32],
+        k: usize,
+        words: &mut [u64],
+        scratch: &mut EncodeScratch,
+    ) {
+        self.require_code_length(k);
+        assert_eq!(words.len(), k.div_ceil(64));
+        words.fill(0);
+        for (b, block) in self.blocks.iter().enumerate() {
+            let base = b * self.d;
+            if base >= k {
+                break;
+            }
+            let take = self.d.min(k - base);
+            block.or_sign_bits(x, take, base, words, scratch);
+        }
+    }
+
+    /// Batch encode into a `BitCode`, mirroring
+    /// [`CirculantProjection::encode_batch_into`].
+    pub fn encode_batch_into(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        out: &mut BitCode,
+        pool: &mut ScratchPool,
+    ) {
+        assert_eq!(out.n, rows.len());
+        assert_eq!(out.bits, k);
+        self.encode_batch_words(rows, k, &mut out.data, out.words_per_code, pool);
+    }
+
+    /// The batch engine over a bare packed-word window (row i into
+    /// `words[i·wpc .. (i+1)·wpc]`). Fan-out is by rows, but the serial
+    /// cutover and thread count weigh the full rows × blocks work n·B·d,
+    /// so long-code batches parallelize even when n alone looks small.
+    pub fn encode_batch_words(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        words: &mut [u64],
+        wpc: usize,
+        pool: &mut ScratchPool,
+    ) {
+        self.require_code_length(k);
+        assert_eq!(wpc, k.div_ceil(64));
+        assert_eq!(words.len(), rows.len() * wpc);
+        let n = rows.len();
+        if n == 0 {
+            return;
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let threads = cores.min(n);
+        let work = n * self.d * self.blocks.len();
+        if threads <= 1 || work < crate::tune::min_parallel_work() {
+            let scratch = &mut pool.slots_mut(1)[0];
+            for (row, words) in rows.iter().zip(words.chunks_mut(wpc)) {
+                self.encode_bits_into(row, k, words, scratch);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut rest_rows = rows;
+            let mut rest_words = words;
+            for scratch in pool.slots_mut(threads) {
+                if rest_rows.is_empty() {
+                    break;
+                }
+                let take = chunk.min(rest_rows.len());
+                let (row_chunk, tail_rows) = rest_rows.split_at(take);
+                let (word_chunk, tail_words) = rest_words.split_at_mut(take * wpc);
+                rest_rows = tail_rows;
+                rest_words = tail_words;
+                scope.spawn(move || {
+                    for (row, words) in row_chunk.iter().zip(word_chunk.chunks_mut(wpc)) {
+                        self.encode_bits_into(row, k, words, scratch);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::forall;
+
+    #[test]
+    fn one_block_is_bit_identical_to_the_plain_circulant() {
+        forall("stacked:1 == circulant", 25, |g| {
+            let d = g.usize_in(2, 96);
+            let k = g.usize_in(1, d);
+            let planner = Planner::new();
+            let seed = g.rng().next_u64();
+            let mut rng_a = Pcg64::new(seed);
+            let mut rng_b = Pcg64::new(seed);
+            let plain = CirculantProjection::random(d, &mut rng_a, planner.clone());
+            let stacked = StackedCirculant::random(d, 1, &mut rng_b, planner).unwrap();
+            let x = g.normal_vec(d);
+            assert_eq!(plain.encode(&x, k), stacked.encode(&x, k), "d={d} k={k}");
+            let mut wa = vec![0u64; k.div_ceil(64)];
+            let mut wb = vec![0u64; k.div_ceil(64)];
+            let mut scratch = EncodeScratch::new();
+            plain.encode_bits_into(&x, k, &mut wa, &mut scratch);
+            stacked.encode_bits_into(&x, k, &mut wb, &mut scratch);
+            assert_eq!(wa, wb, "packed words diverged at d={d} k={k}");
+        });
+    }
+
+    #[test]
+    fn each_bit_window_is_its_blocks_own_code() {
+        forall("stacked windows == per-block codes", 20, |g| {
+            let d = g.usize_in(2, 64);
+            let blocks = g.usize_in(1, 4);
+            let k = g.usize_in(1, blocks * d);
+            let planner = Planner::new();
+            let stacked =
+                StackedCirculant::random(d, blocks, g.rng(), planner).unwrap();
+            let x = g.normal_vec(d);
+            let code = stacked.encode(&x, k);
+            for (b, block) in stacked.blocks().iter().enumerate() {
+                let base = b * d;
+                if base >= k {
+                    break;
+                }
+                let take = d.min(k - base);
+                assert_eq!(
+                    code[base..base + take],
+                    block.encode(&x, take),
+                    "block {b} window diverged (d={d} blocks={blocks} k={k})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn batch_matches_per_vector_at_ragged_lengths() {
+        forall("stacked batch == serial", 15, |g| {
+            let d = g.usize_in(2, 48);
+            let blocks = g.usize_in(1, 3);
+            let k = g.usize_in(1, blocks * d);
+            let n = g.usize_in(0, 10);
+            let planner = Planner::new();
+            let stacked =
+                StackedCirculant::random(d, blocks, g.rng(), planner).unwrap();
+            let flat: Vec<Vec<f32>> = (0..n).map(|_| g.normal_vec(d)).collect();
+            let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+            let mut batch = BitCode::new(n, k);
+            stacked.encode_batch_into(&rows, k, &mut batch, &mut ScratchPool::new());
+            let mut per_vec = BitCode::new(n, k);
+            for (i, row) in rows.iter().enumerate() {
+                per_vec.set_row_from_signs(i, &stacked.encode(row, k));
+            }
+            assert_eq!(batch, per_vec, "d={d} blocks={blocks} k={k} n={n}");
+            assert!(batch.padding_is_zero());
+        });
+    }
+
+    #[test]
+    fn bad_shapes_are_typed_errors() {
+        let planner = Planner::new();
+        let mut rng = Pcg64::new(3);
+        assert!(StackedCirculant::random(8, 0, &mut rng, planner.clone()).is_err());
+        let s = StackedCirculant::random(8, 2, &mut rng, planner.clone()).unwrap();
+        assert_eq!(s.max_bits(), 16);
+        assert_eq!(
+            s.check_code_length(17),
+            Err(CbeError::BadCodeLength { k: 17, d: 8, max: 16 })
+        );
+        let a = CirculantProjection::random(8, &mut rng, planner.clone());
+        let b = CirculantProjection::random(6, &mut rng, planner);
+        assert!(StackedCirculant::new(vec![a, b]).is_err());
+    }
+}

@@ -7,7 +7,7 @@
 use cbe::coordinator::{BatcherConfig, EmbeddingService, RetrainConfig, ServiceConfig};
 use cbe::fft::Planner;
 use cbe::index::IndexBackend;
-use cbe::projections::CirculantProjection;
+use cbe::projections::{CirculantProjection, ProjectionSpec};
 use cbe::proptest_lite::forall;
 use cbe::util::rng::Pcg64;
 use std::path::PathBuf;
@@ -34,6 +34,7 @@ fn service(d: usize, bits: usize, seed: u64) -> (EmbeddingService, Vec<f32>, Vec
             retrain: RetrainConfig::default(),
             queue_depth: 0,
             load_mode: cbe::index::LoadMode::Auto,
+            proj: ProjectionSpec::Circ,
         },
         r.clone(),
         signs.clone(),
@@ -276,6 +277,7 @@ fn stats_snapshot_reflects_served_workload() {
             retrain: RetrainConfig::default(),
             queue_depth: 0,
             load_mode: cbe::index::LoadMode::Auto,
+            proj: ProjectionSpec::Circ,
         },
         rng.normal_vec(64),
         rng.sign_vec(64),
@@ -298,6 +300,11 @@ fn stats_snapshot_reflects_served_workload() {
         .expect_err("stale index must be rejected");
 
     let snap = svc.stats().unwrap();
+    // The live model's identity is stamped into the snapshot.
+    assert_eq!(snap.projection.spec, "circ");
+    assert_eq!(snap.projection.variant, "circ");
+    assert_eq!(snap.projection.blocks, 1);
+    assert_eq!(snap.projection.bits, 32);
     // Service-local counters: 8 search-path encodes (bulk indexing and
     // the refused stale search never enter the request channel).
     assert_eq!(snap.requests, 8);
@@ -358,6 +365,7 @@ fn overload_sheds_with_typed_error_instead_of_buffering_forever() {
             retrain: RetrainConfig::default(),
             queue_depth: 1,
             load_mode: cbe::index::LoadMode::Auto,
+            proj: ProjectionSpec::Circ,
         },
         rng.normal_vec(d),
         rng.sign_vec(d),

@@ -10,7 +10,7 @@ use cbe::bits::BitCode;
 use cbe::encoders::{BinaryEncoder, CbeRand};
 use cbe::fft::Planner;
 use cbe::linalg::Mat;
-use cbe::projections::{CirculantProjection, EncodeScratch, ScratchPool};
+use cbe::projections::{CbeModel, CirculantProjection, EncodeScratch, ProjectionSpec, ScratchPool};
 use cbe::proptest_lite::forall;
 use cbe::util::rng::Pcg64;
 
@@ -105,7 +105,7 @@ fn trait_batch_override_matches_default() {
     // engine; the trait's default serial loop is the reference.
     let mut rng = Pcg64::new(77);
     for (d, k, n) in [(64usize, 64usize, 40usize), (50, 17, 25), (21, 21, 30)] {
-        let enc = CbeRand::new(d, k, 1000 + d as u64, Planner::new());
+        let enc = CbeRand::new(d, k, 1000 + d as u64, Planner::new()).unwrap();
         let x = Mat::randn(n, d, &mut rng);
         let batch = enc.encode_batch(&x);
         let mut reference = BitCode::new(n, k);
@@ -130,4 +130,109 @@ fn empty_and_singleton_batches() {
         batch_codes(&proj, &rows, 8),
         per_vector_codes(&proj, &rows, 8)
     );
+}
+
+// ---------------------------------------------------------------------------
+// Arbitrary code lengths: stacked (k > d) and downsampled (k < d) variants
+// must satisfy the same batch ≡ serial contract, and the packed rows must
+// keep their padding bits zero at every ragged k.
+// ---------------------------------------------------------------------------
+
+fn model_batch(model: &CbeModel, rows: &[&[f32]], k: usize) -> BitCode {
+    let mut bc = BitCode::new(rows.len(), k);
+    model.encode_batch_into(rows, k, &mut bc, &mut ScratchPool::new());
+    bc
+}
+
+/// Serial reference through the sign-vector path (`encode` unpacks the
+/// per-vector packed bits back to ±1, `set_row_from_signs` repacks).
+fn model_serial(model: &CbeModel, rows: &[&[f32]], k: usize) -> BitCode {
+    let mut bc = BitCode::new(rows.len(), k);
+    for (i, row) in rows.iter().enumerate() {
+        bc.set_row_from_signs(i, &model.encode(row, k));
+    }
+    bc
+}
+
+#[test]
+fn ragged_code_lengths_batch_equals_serial_and_padding_zero() {
+    // Satellite grid from the issue: word-boundary straddlers (63/64/65),
+    // the exact-d seam, one past it, and deep multi-block territory —
+    // across both FFT routes (even d realpack, odd d Bluestein).
+    let planner = Planner::new();
+    for d in [96usize, 97] {
+        for k in [63usize, 64, 65, d, d + 1, 2 * d, 3 * d + 17] {
+            let mut specs = vec![ProjectionSpec::Stacked { blocks: None }];
+            if k <= d {
+                specs.push(ProjectionSpec::Downsampled);
+            }
+            for spec in &specs {
+                let mut rng = Pcg64::new(0x5eed ^ (d as u64) ^ ((k as u64) << 20));
+                let model = CbeModel::random_with(spec, d, k, &mut rng, planner.clone())
+                    .expect("grid is within each variant's capacity");
+                let flat: Vec<Vec<f32>> = (0..17).map(|_| rng.normal_vec(d)).collect();
+                let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+                let batch = model_batch(&model, &rows, k);
+                assert!(
+                    batch.padding_is_zero(),
+                    "padding dirty: spec={} d={d} k={k}",
+                    spec.spec()
+                );
+                assert_eq!(
+                    batch,
+                    model_serial(&model, &rows, k),
+                    "spec={} d={d} k={k}",
+                    spec.spec()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_stacked_any_k_batch_bit_exact() {
+    forall("stacked batch == serial at arbitrary k", 15, |g| {
+        let d = g.usize_in(4, 80);
+        let k = g.usize_in(1, 3 * d);
+        let n = g.usize_in(1, 12);
+        let seed = seed_from(g);
+        let mut rng = Pcg64::new(seed);
+        let model = CbeModel::random_with(
+            &ProjectionSpec::Stacked { blocks: None },
+            d,
+            k,
+            &mut rng,
+            Planner::new(),
+        )
+        .unwrap();
+        let flat: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+        let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+        let batch = model_batch(&model, &rows, k);
+        assert!(batch.padding_is_zero(), "d={d} k={k} n={n} seed={seed}");
+        assert_eq!(batch, model_serial(&model, &rows, k), "d={d} k={k} n={n} seed={seed}");
+    });
+}
+
+#[test]
+fn prop_downsampled_k_batch_bit_exact() {
+    forall("downsampled batch == serial at k < d", 15, |g| {
+        let d = g.usize_in(4, 96);
+        let k = g.usize_in(1, d);
+        let n = g.usize_in(1, 12);
+        let seed = seed_from(g);
+        let mut rng = Pcg64::new(seed);
+        let model = CbeModel::random_with(
+            &ProjectionSpec::Downsampled,
+            d,
+            k,
+            &mut rng,
+            Planner::new(),
+        )
+        .unwrap();
+        let flat: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+        let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+        let batch = model_batch(&model, &rows, k);
+        assert!(batch.padding_is_zero(), "d={d} k={k} n={n} seed={seed}");
+        assert_eq!(batch, model_serial(&model, &rows, k), "d={d} k={k} n={n} seed={seed}");
+    });
 }

@@ -198,3 +198,53 @@ fn churn_after_mapped_load_promotes_and_matches_heap_churn() {
         let _ = std::fs::remove_dir_all(&dir2);
     }
 }
+
+#[test]
+fn variant_codes_round_trip_identically_through_both_backings() {
+    // Codes produced by the non-trivial projection variants (stacked at a
+    // ragged k > d, downsampled at k ≪ d) must survive the snapshot
+    // round-trip bit-exactly on both backings, with the model fingerprint
+    // (which covers every block and the selection plan) stamped in.
+    use cbe::fft::Planner;
+    use cbe::projections::{CbeModel, ProjectionSpec, ScratchPool};
+
+    let d = 96;
+    for (tag, spec, k) in [
+        ("stacked", ProjectionSpec::Stacked { blocks: None }, 2 * d + 5),
+        ("downsampled", ProjectionSpec::Downsampled, 29),
+    ] {
+        let mut rng = Pcg64::new(0x60D ^ k as u64);
+        let model = CbeModel::random_with(&spec, d, k, &mut rng, Planner::new())
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let n = 70;
+        let encode = |rows: usize, rng: &mut Pcg64| {
+            let flat: Vec<Vec<f32>> = (0..rows).map(|_| rng.normal_vec(d)).collect();
+            let refs: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+            let mut bc = BitCode::new(rows, k);
+            model.encode_batch_into(&refs, k, &mut bc, &mut ScratchPool::new());
+            bc
+        };
+        let codes = encode(n, &mut rng);
+        assert!(codes.padding_is_zero(), "{tag}: dirty padding at k={k}");
+        let queries = encode(8, &mut rng);
+
+        for (btag, backend) in backends() {
+            let index = build_index_with_ids(codes.clone(), (0..n as u32).collect(), &backend);
+            let dir = temp_dir(&format!("variant_{tag}_{btag}"));
+            let stamp = SnapshotStamp {
+                model_version: Some(1),
+                fingerprint: model.fingerprint(),
+            };
+            persist::save(&dir, &index, &stamp).unwrap();
+            let mapped = assert_backings_agree(&dir, &queries, 5, &format!("{tag}/{btag}"));
+            for qi in 0..queries.n {
+                assert_eq!(
+                    mapped.search(queries.code(qi), 5),
+                    index.search(queries.code(qi), 5),
+                    "{tag}/{btag}: query {qi} diverged from the saved index"
+                );
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}

@@ -496,6 +496,7 @@ fn stale_model_fingerprint_rejected_across_services() {
                 retrain: RetrainConfig::default(),
                 queue_depth: 0,
                 load_mode: persist::LoadMode::Auto,
+                proj: cbe::projections::ProjectionSpec::Circ,
             },
             rng.normal_vec(d),
             rng.sign_vec(d),

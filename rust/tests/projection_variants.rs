@@ -1,0 +1,235 @@
+//! Differential suite for the projection-variant refactor: the k == d
+//! compatibility contract. A one-block stacked model must be **bit
+//! identical** to the plain [`CirculantProjection`] it generalizes —
+//! same codes, same index hits, same snapshot fingerprints — whether the
+//! models are drawn from a shared seed or built from shared parameters,
+//! and whether they are exercised natively or through the full
+//! EmbeddingService. Anything less would make `stacked:1` a silent
+//! model change instead of a refactor.
+
+use cbe::bits::BitCode;
+use cbe::coordinator::{BatcherConfig, EmbeddingService, RetrainConfig, ServiceConfig};
+use cbe::fft::Planner;
+use cbe::index::{build_index, IndexBackend};
+use cbe::projections::{
+    CbeModel, CirculantProjection, ProjectionSpec, ScratchPool, StackedCirculant,
+};
+use cbe::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn batch(model: &CbeModel, rows: &[&[f32]], k: usize) -> BitCode {
+    let mut bc = BitCode::new(rows.len(), k);
+    model.encode_batch_into(rows, k, &mut bc, &mut ScratchPool::new());
+    bc
+}
+
+#[test]
+fn same_seed_stacked_1_equals_circulant_codes_and_fingerprint() {
+    // Both FFT routes (even d realpack, odd d Bluestein), word-boundary
+    // straddling k values included.
+    let planner = Planner::new();
+    for d in [64usize, 97, 128] {
+        let circ = CbeModel::random(&ProjectionSpec::Circ, d, d, 0xD1FF ^ d as u64, planner.clone())
+            .unwrap();
+        let st1 = CbeModel::random(
+            &ProjectionSpec::Stacked { blocks: Some(1) },
+            d,
+            d,
+            0xD1FF ^ d as u64,
+            planner.clone(),
+        )
+        .unwrap();
+        assert_eq!(
+            circ.fingerprint(),
+            st1.fingerprint(),
+            "d={d}: stacked:1 fingerprint must equal the plain circulant's"
+        );
+        let mut rng = Pcg64::new(7 + d as u64);
+        let flat: Vec<Vec<f32>> = (0..23).map(|_| rng.normal_vec(d)).collect();
+        let rows: Vec<&[f32]> = flat.iter().map(|r| r.as_slice()).collect();
+        for k in [1usize, 63.min(d), 64.min(d), 65.min(d), d] {
+            for row in &rows {
+                assert_eq!(circ.encode(row, k), st1.encode(row, k), "d={d} k={k}");
+            }
+            assert_eq!(batch(&circ, &rows, k), batch(&st1, &rows, k), "d={d} k={k} (batch)");
+        }
+    }
+}
+
+#[test]
+fn shared_parameters_stacked_1_equals_circulant() {
+    // Construct both variants from the SAME (r, signs) — no rng in the
+    // loop, so any divergence is in the encode path itself.
+    let d = 100;
+    let planner = Planner::new();
+    let mut rng = Pcg64::new(41);
+    let r = rng.normal_vec(d);
+    let signs = rng.sign_vec(d);
+    let circ = CbeModel::circulant(r.clone(), signs.clone(), planner.clone());
+    let block = CirculantProjection::new(r, signs, planner);
+    let st1 = CbeModel::Stacked(StackedCirculant::new(vec![block]).unwrap());
+    assert_eq!(circ.fingerprint(), st1.fingerprint());
+    for i in 0..12 {
+        let x = rng.normal_vec(d);
+        assert_eq!(circ.encode(&x, d), st1.encode(&x, d), "vector {i}");
+        assert_eq!(circ.encode(&x, 37), st1.encode(&x, 37), "vector {i} (k=37)");
+    }
+}
+
+#[test]
+fn index_hits_are_identical_between_circ_and_stacked_1() {
+    let d = 96;
+    let k = d;
+    let planner = Planner::new();
+    let circ = CbeModel::random(&ProjectionSpec::Circ, d, k, 0xCAB, planner.clone()).unwrap();
+    let st1 = CbeModel::random(&ProjectionSpec::Stacked { blocks: Some(1) }, d, k, 0xCAB, planner)
+        .unwrap();
+    let mut rng = Pcg64::new(43);
+    let db: Vec<Vec<f32>> = (0..80).map(|_| rng.normal_vec(d)).collect();
+    let db_rows: Vec<&[f32]> = db.iter().map(|r| r.as_slice()).collect();
+    let queries: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(d)).collect();
+    let q_rows: Vec<&[f32]> = queries.iter().map(|r| r.as_slice()).collect();
+    for backend in [IndexBackend::Linear, IndexBackend::Mih { m: Some(2) }] {
+        let ic = build_index(batch(&circ, &db_rows, k), &backend);
+        let is = build_index(batch(&st1, &db_rows, k), &backend);
+        let qc = batch(&circ, &q_rows, k);
+        let qs = batch(&st1, &q_rows, k);
+        for qi in 0..q_rows.len() {
+            assert_eq!(
+                ic.search(qc.code(qi), 5),
+                is.search(qs.code(qi), 5),
+                "query {qi} diverged on {}",
+                backend.spec()
+            );
+        }
+    }
+}
+
+#[test]
+fn service_level_stacked_1_serves_the_circulant_bits() {
+    // The full serving stack: `start` with raw (r, signs) vs
+    // `start_with_model` with the one-block stacked wrapper of the same
+    // parameters. Served signs and snapshot fingerprints must agree.
+    let d = 128;
+    let bits = 64;
+    let mut rng = Pcg64::new(0x5e5);
+    let r = rng.normal_vec(d);
+    let signs = rng.sign_vec(d);
+    let cfg = |proj: ProjectionSpec| ServiceConfig {
+        d,
+        bits,
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        },
+        index: IndexBackend::Auto,
+        retrain: RetrainConfig::default(),
+        queue_depth: 0,
+        load_mode: cbe::index::LoadMode::Auto,
+        proj,
+    };
+    let svc_circ = EmbeddingService::start(
+        &artifacts_dir(),
+        cfg(ProjectionSpec::Circ),
+        r.clone(),
+        signs.clone(),
+    )
+    .unwrap();
+    let block = CirculantProjection::new(r, signs, Planner::new());
+    let model = CbeModel::Stacked(StackedCirculant::new(vec![block]).unwrap());
+    let svc_stacked = EmbeddingService::start_with_model(
+        &artifacts_dir(),
+        cfg(ProjectionSpec::Stacked { blocks: Some(1) }),
+        model,
+    )
+    .unwrap();
+
+    assert_eq!(
+        svc_circ.model_fingerprint(),
+        svc_stacked.model_fingerprint(),
+        "snapshot stamps would go stale across the refactor seam"
+    );
+    for _ in 0..8 {
+        let x = rng.normal_vec(d);
+        let a = svc_circ.encode(x.clone()).unwrap();
+        let b = svc_stacked.encode(x).unwrap();
+        assert_eq!(a.signs, b.signs);
+    }
+    // The stats snapshot names each variant honestly even when the bits
+    // are identical.
+    assert_eq!(svc_circ.stats().unwrap().projection.variant, "circ");
+    assert_eq!(svc_stacked.stats().unwrap().projection.variant, "stacked");
+}
+
+#[test]
+fn start_refuses_non_circ_specs() {
+    let d = 32;
+    let mut rng = Pcg64::new(9);
+    let err = EmbeddingService::start(
+        &artifacts_dir(),
+        ServiceConfig {
+            d,
+            bits: 16,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            index: IndexBackend::Auto,
+            retrain: RetrainConfig::default(),
+            queue_depth: 0,
+            load_mode: cbe::index::LoadMode::Auto,
+            proj: ProjectionSpec::Downsampled,
+        },
+        rng.normal_vec(d),
+        rng.sign_vec(d),
+    )
+    .err()
+    .expect("start must reject non-circ specs");
+    assert!(err.to_string().contains("start_with_model"), "got: {err}");
+}
+
+#[test]
+fn downsampled_service_end_to_end() {
+    // k ≪ d through the whole serving stack: encode, index, search.
+    let d = 128;
+    let bits = 24;
+    let model = CbeModel::random(&ProjectionSpec::Downsampled, d, bits, 77, Planner::new())
+        .unwrap();
+    let fp = model.fingerprint();
+    let svc = EmbeddingService::start_with_model(
+        &artifacts_dir(),
+        ServiceConfig {
+            d,
+            bits,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            index: IndexBackend::Linear,
+            retrain: RetrainConfig::default(),
+            queue_depth: 0,
+            load_mode: cbe::index::LoadMode::Auto,
+            proj: ProjectionSpec::Downsampled,
+        },
+        model,
+    )
+    .unwrap();
+    assert_eq!(svc.model_fingerprint(), fp);
+    let mut rng = Pcg64::new(78);
+    let rows: Vec<Vec<f32>> = (0..40).map(|_| rng.normal_vec(d)).collect();
+    let index = svc.build_index(&rows).unwrap();
+    for qi in [0usize, 17, 39] {
+        let hits = svc.search(&index, rows[qi].clone(), 3).unwrap();
+        assert_eq!(hits[0].id, qi as u32, "row must retrieve itself first");
+        assert_eq!(hits[0].dist, 0);
+    }
+    let snap = svc.stats().unwrap();
+    assert_eq!(snap.projection.spec, "downsampled");
+    assert_eq!(snap.projection.bits, bits);
+    assert_eq!(snap.projection.blocks, 1);
+}

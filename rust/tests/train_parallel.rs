@@ -228,11 +228,13 @@ fn budget_tiled_training_matches_cached_end_to_end() {
     assert!(tiled.report.cache_bytes < full.report.cache_bytes);
     assert!(tiled.report.cache_bytes <= 80 * (d / 2 + 1) * 16);
 
-    for (a, b) in full.proj.r.iter().zip(&tiled.proj.r) {
+    let full_p = full.model.as_circulant().unwrap();
+    let tiled_p = tiled.model.as_circulant().unwrap();
+    for (a, b) in full_p.r.iter().zip(&tiled_p.r) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
     for p in &probe {
-        assert_eq!(full.proj.encode(p, d), tiled.proj.encode(p, d));
+        assert_eq!(full_p.encode(p, d), tiled_p.encode(p, d));
     }
 }
 
@@ -297,8 +299,10 @@ fn trained_encoder_is_thread_count_invariant_end_to_end() {
     cfg.threads = 4;
     let parallel = CbeTrainer::new(cfg).seed(9).train(&x);
 
+    let serial_p = serial.model.as_circulant().unwrap();
+    let parallel_p = parallel.model.as_circulant().unwrap();
     for p in &probe {
-        assert_eq!(serial.proj.encode(p, d), parallel.proj.encode(p, d));
+        assert_eq!(serial_p.encode(p, d), parallel_p.encode(p, d));
     }
     assert_eq!(
         serial.report.objective_trace,
